@@ -1,0 +1,114 @@
+"""Shared harness for the paper-replication benchmarks (MNIST-like scale).
+
+Settings mirror Sec. V at CI-friendly size: the paper uses 50 nodes on MNIST;
+we default to 20 nodes on the synthetic MNIST-like set (the qualitative
+orderings — DGD collapse, BRIDGE resilience, ByRDiE communication overhead —
+are scale-stable).  Pass ``--full`` to run.py for 50 nodes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import BridgeConfig, BridgeTrainer, erdos_renyi, replicate
+from repro.data import make_mnist_like, partition_extreme_noniid, partition_iid, partition_moderate_noniid
+from repro.data.partition import stack_node_batches
+from repro.models import small
+
+_DATA = {}
+
+
+def get_data(num_train=4000, num_test=800):
+    key = (num_train, num_test)
+    if key not in _DATA:
+        _DATA[key] = make_mnist_like(num_train, num_test, seed=0)
+    return _DATA[key]
+
+
+def make_grad_fn(model: str):
+    if model == "linear":
+        def fn(params, batch):
+            return jax.value_and_grad(lambda p: small.linear_loss(p, batch))(params)
+        return fn
+    def fn(params, batch):
+        x, y = batch
+        x = x.reshape(-1, 28, 28, 1)
+        return jax.value_and_grad(lambda p: small.cnn_loss(p, (x, y)))(params)
+    return fn
+
+
+def eval_accuracy(model: str, params_stacked, honest_mask, x_test, y_test):
+    """Average test accuracy over honest nodes (paper's metric)."""
+    hm = np.asarray(honest_mask)
+    accs = []
+    for j in np.nonzero(hm)[0]:
+        p = jax.tree_util.tree_map(lambda l: l[j], params_stacked)
+        if model == "linear":
+            accs.append(float(small.linear_accuracy(p, x_test, y_test)))
+        else:
+            accs.append(float(small.cnn_accuracy(p, x_test.reshape(-1, 28, 28, 1), y_test)))
+    return float(np.mean(accs))
+
+
+def run_decentralized(
+    *,
+    model: str = "linear",
+    rule: str = "trimmed_mean",
+    attack: str = "none",
+    num_nodes: int = 20,
+    num_byzantine: int = 0,
+    partition: str = "iid",
+    steps: int = 120,
+    batch: int = 32,
+    lam: float = 1.0,
+    t0: float = 30.0,
+    seed: int = 0,
+    eval_every: int = 0,
+):
+    x, y, xt, yt = get_data()
+    part = {
+        "iid": partition_iid,
+        "extreme": partition_extreme_noniid,
+        "moderate": partition_moderate_noniid,
+    }[partition]
+    shards = part(x, y, num_nodes, seed=seed)
+    batch_fn = stack_node_batches(shards, batch, seed=seed)
+    topo = None
+    for p in (0.5, 0.6, 0.7, 0.8, 0.9, 1.0):  # p=1.0 -> complete graph (bulyan b=4)
+        try:
+            cand = erdos_renyi(num_nodes, p, num_byzantine, seed=seed)
+            cand.validate_for_rule(rule)  # bulyan/krum need larger degrees
+            topo = cand
+            break
+        except (RuntimeError, ValueError):
+            continue
+    if topo is None:
+        raise RuntimeError(f"no graph for rule={rule}, b={num_byzantine}, M={num_nodes}")
+    cfg = BridgeConfig(topology=topo, rule=rule, num_byzantine=num_byzantine,
+                       attack=attack, lam=lam, t0=t0)
+    trainer = BridgeTrainer(cfg, make_grad_fn(model))
+    key = jax.random.PRNGKey(seed)
+    init = small.init_linear(key) if model == "linear" else small.init_cnn(key)
+    params = replicate(init, num_nodes, perturb=0.01, key=key)
+    state = trainer.init(params)
+    t_start = time.perf_counter()
+    curve = []
+    for i in range(steps):
+        bx, by = batch_fn(i)
+        state, metrics = trainer.step(state, (jnp.asarray(bx), jnp.asarray(by)))
+        if eval_every and (i + 1) % eval_every == 0:
+            curve.append((i + 1, eval_accuracy(model, state.params, trainer.honest_mask, jnp.asarray(xt), jnp.asarray(yt))))
+    wall = time.perf_counter() - t_start
+    acc = eval_accuracy(model, state.params, trainer.honest_mask, jnp.asarray(xt), jnp.asarray(yt))
+    return {
+        "accuracy": acc,
+        "consensus": float(metrics["consensus_dist"]),
+        "loss": float(metrics["loss"]),
+        "us_per_step": wall / steps * 1e6,
+        "curve": curve,
+        "trainer": trainer,
+        "state": state,
+    }

@@ -1,0 +1,39 @@
+"""Screening-kernel throughput: Pallas (interpret on CPU; compiled on TPU)
+vs the pure-jnp oracle, swept over model dimension d."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn(*args).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def kernel_throughput(n=25, b=2, dims=(4096, 65536, 1048576)):
+    rows = []
+    rng = np.random.default_rng(0)
+    for d in dims:
+        vals = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        mask = jnp.ones((n,), bool)
+        sv = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+        us_ref = _time(jax.jit(lambda v, m, s: ref.trimmed_mean_ref(v, m, s, b)), vals, mask, sv)
+        mbs = n * d * 4 / (us_ref / 1e6) / 1e6
+        rows.append((f"kernel/trimmed_mean_ref/d{d}", us_ref, f"MB_s={mbs:.0f}"))
+        if d <= 65536:  # interpret mode is python-speed; keep it bounded
+            us_pl = _time(
+                lambda v=vals, m=mask, s=sv: ops.trimmed_mean(v, m, s, b, block_d=512),
+                reps=1,
+            )
+            rows.append((f"kernel/trimmed_mean_pallas_interp/d{d}", us_pl,
+                         "interpret=True (TPU target)"))
+    return rows

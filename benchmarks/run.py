@@ -1,0 +1,50 @@
+"""Benchmark harness — one function per paper table/figure (Sec. V) plus the
+screening-kernel sweep.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,table2] [--full]
+
+``--full`` uses the paper's 50-node network (slower); default is 20 nodes.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated benchmark keys")
+    ap.add_argument("--full", action="store_true", help="50-node networks (paper scale)")
+    args = ap.parse_args()
+
+    from benchmarks import kernels_bench, paper_figs
+
+    m = 50 if args.full else 20
+    benches = {
+        "fig1": lambda: paper_figs.fig1_faultless_convex(num_nodes=m),
+        "fig2": lambda: paper_figs.fig2_byzantine_convex(num_nodes=m),
+        "fig3": lambda: paper_figs.fig3_byrdie_comm(num_nodes=m),
+        "fig45": lambda: paper_figs.fig45_nonconvex(num_nodes=min(m, 10)),
+        "fig67": lambda: paper_figs.fig67_noniid(num_nodes=m),
+        "table2": paper_figs.table2_screening_cost,
+        "kernels": kernels_bench.kernel_throughput,
+    }
+    only = set(args.only.split(",")) if args.only else set(benches)
+    print("name,us_per_call,derived")
+    for key, fn in benches.items():
+        if key not in only:
+            continue
+        t0 = time.time()
+        try:
+            rows = fn()
+        except Exception as e:  # keep the harness running
+            print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        print(f"# {key} took {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Quickstart: Byzantine-resilient decentralized learning in ~40 lines.
+
+Trains a linear classifier over a 12-node decentralized network where 2
+nodes broadcast random garbage every iteration (the paper's attack model),
+with DGD (breaks) vs BRIDGE-T (survives).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BridgeConfig, BridgeTrainer, erdos_renyi, replicate
+from repro.data import make_mnist_like, partition_iid
+from repro.data.partition import stack_node_batches
+from repro.models import small
+
+M, B = 12, 2
+
+x, y, xt, yt = make_mnist_like(3000, 600)
+shards = partition_iid(x, y, M)
+batch_fn = stack_node_batches(shards, 32)
+topo = erdos_renyi(M, 0.6, B, seed=0)
+
+
+def grad_fn(params, batch):
+    return jax.value_and_grad(lambda p: small.linear_loss(p, batch))(params)
+
+
+for rule, label in [("mean", "DGD      "), ("trimmed_mean", "BRIDGE-T ")]:
+    cfg = BridgeConfig(topology=topo, rule=rule, num_byzantine=B, attack="random", t0=30)
+    trainer = BridgeTrainer(cfg, grad_fn)
+    params = replicate(small.init_linear(jax.random.PRNGKey(0)), M, perturb=0.01,
+                       key=jax.random.PRNGKey(1))
+    state = trainer.init(params)
+    for i in range(100):
+        bx, by = batch_fn(i)
+        state, metrics = trainer.step(state, (jnp.asarray(bx), jnp.asarray(by)))
+    # evaluate the first honest node's model
+    j = int(jnp.argmax(trainer.honest_mask))
+    p = jax.tree_util.tree_map(lambda l: l[j], state.params)
+    acc = small.linear_accuracy(p, jnp.asarray(xt), jnp.asarray(yt))
+    print(f"{label} under {B}-node random attack: accuracy {float(acc):.3f}  "
+          f"consensus {float(metrics['consensus_dist']):.3f}")

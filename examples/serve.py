@@ -1,0 +1,59 @@
+"""Batched serving example: prefill a prompt batch, then decode with the
+KV-cache/SSM-state serve path — the same `decode_step` the dry-run lowers
+for decode_32k / long_500k.
+
+    PYTHONPATH=src python examples/serve.py --arch qwen3-4b --tokens 32
+    PYTHONPATH=src python examples/serve.py --arch rwkv6-3b --tokens 32
+"""
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import api as model_api
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen3-4b")
+ap.add_argument("--batch", type=int, default=4)
+ap.add_argument("--prompt-len", type=int, default=32)
+ap.add_argument("--tokens", type=int, default=32)
+args = ap.parse_args()
+
+cfg = get_config(args.arch).reduced()
+api = model_api.build(cfg)
+params = api.init_params(jax.random.PRNGKey(0), cfg)
+rng = np.random.default_rng(0)
+max_len = args.prompt_len + args.tokens
+cache = api.init_cache(cfg, args.batch, max_len)
+
+step = jax.jit(lambda p, c, t: api.decode_step(p, c, t, cfg))
+
+if cfg.family == "encdec":
+    audio = jnp.asarray(rng.normal(size=(args.batch, args.prompt_len, cfg.d_model)), jnp.float32)
+    cache = api.extra["prefill_cache"](params, cache, audio, cfg)
+    tok = jnp.full((args.batch, 1), 1, jnp.int32)
+else:
+    # prefill by stepping the prompt through the decode path (simple host
+    # loop; the dry-run's prefill_step is the batched variant)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
+    for t in range(args.prompt_len):
+        logits, cache = step(params, cache, prompt[:, t : t + 1])
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+out = []
+t0 = time.perf_counter()
+for _ in range(args.tokens):
+    logits, cache = step(params, cache, tok)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out.append(np.asarray(tok)[:, 0])
+dt = (time.perf_counter() - t0) / args.tokens
+seq = np.stack(out, axis=1)
+print(f"arch={cfg.name} decoded {args.tokens} tokens x batch {args.batch} "
+      f"({dt*1000:.1f} ms/token on CPU, reduced config)")
+print("sample token ids:", seq[0][:16].tolist())

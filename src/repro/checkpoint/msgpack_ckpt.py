@@ -1,0 +1,75 @@
+"""Minimal msgpack pytree checkpointing (offline environment; no orbax).
+
+Layout: <dir>/step_<N>.msgpack holding {treedef_repr, leaves: [{dtype, shape,
+bytes}]}.  Restore requires a template pytree with the same structure (the
+standard init-then-restore pattern), which also guards against structure
+drift between code versions.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any
+
+import jax
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x) -> dict:
+    arr = np.asarray(jax.device_get(x))
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape), "data": arr.tobytes()}
+
+
+def _unpack_leaf(d: dict) -> np.ndarray:
+    return np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"].decode())).reshape(d[b"shape"])
+
+
+def save(ckpt_dir: str, step: int, tree: Any) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        "treedef": str(treedef),
+        "num_leaves": len(leaves),
+        "leaves": [_pack_leaf(l) for l in leaves],
+    }
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.msgpack")
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+    os.replace(tmp, path)  # atomic publish
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [
+        int(m.group(1))
+        for f in os.listdir(ckpt_dir)
+        if (m := re.fullmatch(r"step_(\d+)\.msgpack", f))
+    ]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template: Any, step: int | None = None) -> tuple[Any, int]:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.msgpack")
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=True)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    stored = payload[b"leaves"]
+    if len(stored) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(stored)} leaves, template has {len(leaves)}"
+        )
+    new_leaves = []
+    for tmpl, d in zip(leaves, stored):
+        arr = _unpack_leaf(d)
+        if tuple(arr.shape) != tuple(np.shape(tmpl)):
+            raise ValueError(f"shape mismatch: ckpt {arr.shape} vs template {np.shape(tmpl)}")
+        new_leaves.append(arr.astype(tmpl.dtype) if hasattr(tmpl, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

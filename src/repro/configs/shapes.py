@@ -1,0 +1,90 @@
+"""Assigned input shapes and ShapeDtypeStruct builders for the dry-run.
+
+Shapes (from the assignment):
+    train_4k       seq_len=  4,096  global_batch=256   (training)
+    prefill_32k    seq_len= 32,768  global_batch= 32   (inference-prefill)
+    decode_32k     seq_len= 32,768  global_batch=128   (inference-decode)
+    long_500k      seq_len=524,288  global_batch=  1   (long-context-decode)
+
+Training batches carry an explicit node axis [M, B/M, ...] (the BRIDGE
+replica a sample belongs to).  Serving batches are flat [B, ...].
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs only — no
+allocation; the dry-run lowers against them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+N_IMAGE_TOKENS = 256  # VLM stub: patch-embedding prefix length
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# archs allowed to run long_500k (sub-quadratic path; see DESIGN.md)
+LONG_OK = {"zamba2-1.2b", "rwkv6-3b", "gemma3-12b"}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.name not in LONG_OK:
+        return False, "pure full-attention arch; long_500k skipped (DESIGN.md)"
+    if shape.kind == "decode" and cfg.family == "encdec" and shape.name == "long_500k":
+        return False, "whisper: no 500k-frame use case"
+    return True, ""
+
+
+def _sd(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def train_specs(cfg: ModelConfig, shape: InputShape, num_nodes: int):
+    """Per-node training batch: dict of ShapeDtypeStructs, leading [M, B/M]."""
+    assert shape.global_batch % num_nodes == 0, (shape.global_batch, num_nodes)
+    b = shape.global_batch // num_nodes
+    m, s = num_nodes, shape.seq_len
+    dt = cfg.jdtype
+    if cfg.family == "encdec":
+        return {
+            "audio_embeds": _sd((m, b, s, cfg.d_model), dt),
+            "tokens": _sd((m, b, cfg.max_target_len + 1), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": _sd((m, b, s + 1), jnp.int32),
+            "image_embeds": _sd((m, b, N_IMAGE_TOKENS, cfg.d_model), dt),
+        }
+    return {"tokens": _sd((m, b, s + 1), jnp.int32)}
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape):
+    b, s = shape.global_batch, shape.seq_len
+    dt = cfg.jdtype
+    if cfg.family == "encdec":
+        return {"audio_embeds": _sd((b, s, cfg.d_model), dt),
+                "tokens": _sd((b, cfg.max_target_len), jnp.int32)}
+    if cfg.family == "vlm":
+        return {"tokens": _sd((b, s), jnp.int32),
+                "image_embeds": _sd((b, N_IMAGE_TOKENS, cfg.d_model), dt)}
+    return {"tokens": _sd((b, s), jnp.int32)}
+
+
+def decode_token_specs(cfg: ModelConfig, shape: InputShape):
+    return {"tokens": _sd((shape.global_batch, 1), jnp.int32)}

@@ -1,0 +1,172 @@
+"""The BRIDGE trainer — Algorithm 1 of the paper.
+
+Two execution paths share the same screening code:
+
+* **Simulation path** (this module): all M node replicas live on one host as a
+  stacked ``[M, ...]`` pytree; per-iteration we (1) apply the Byzantine attack
+  to the *broadcast* matrix, (2) screen at every honest node, (3) take the
+  local gradient step  w_j(t+1) = y_j(t) - rho(t) * grad f_j(w_j(t)).
+  This is the path used by the paper-replication benchmarks (MNIST-scale).
+
+* **Sharded path** (`repro.core.gossip` + `repro.launch`): the same protocol
+  over a TPU mesh where the node axis is sharded over ("pod","data") and each
+  replica is tensor-parallel over "model".
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import byzantine as byz_lib
+from repro.core import screening
+from repro.core.graph import Topology
+
+
+class BridgeState(NamedTuple):
+    params: Any  # pytree with leading node axis [M, ...]
+    t: jax.Array  # iteration counter
+    key: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class BridgeConfig:
+    topology: Topology
+    rule: str = "trimmed_mean"  # trimmed_mean | median | krum | bulyan | mean
+    num_byzantine: int = 0  # the bound b given to the screening rule
+    attack: str = "none"
+    byzantine_seed: int = 0
+    # step size rho(t) = 1 / (lam * (t0 + t))  (Sec. IV); or constant if lr>0
+    lam: float = 1.0
+    t0: float = 50.0
+    lr: float = 0.0  # if > 0, use constant step size instead
+    screen_chunk: int | None = 1 << 20  # coordinate streaming chunk
+
+    def step_size(self, t: jax.Array) -> jax.Array:
+        if self.lr > 0:
+            return jnp.asarray(self.lr, jnp.float32)
+        return 1.0 / (self.lam * (self.t0 + t))
+
+
+def stack_flatten(params: Any) -> tuple[jax.Array, Callable[[jax.Array], Any]]:
+    """[M, ...] pytree -> ([M, D] matrix, unflatten)."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    m = leaves[0].shape[0]
+    shapes = [l.shape[1:] for l in leaves]
+    sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    flat = jnp.concatenate([l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+    def unflatten(w: jax.Array) -> Any:
+        outs, off = [], 0
+        for shape, size, ref in zip(shapes, sizes, leaves):
+            outs.append(w[:, off : off + size].reshape((m,) + shape).astype(ref.dtype))
+            off += size
+        return jax.tree_util.tree_unflatten(treedef, outs)
+
+    return flat, unflatten
+
+
+class BridgeTrainer:
+    """Drives Algorithm 1.  ``grad_fn(node_params, batch) -> (loss, grads)``
+    computes the *local* empirical-risk gradient of one node."""
+
+    def __init__(self, config: BridgeConfig, grad_fn: Callable):
+        config.topology.validate_for_rule(config.rule)
+        self.config = config
+        self.grad_fn = grad_fn
+        self.adjacency = jnp.asarray(config.topology.adjacency)
+        m = config.topology.num_nodes
+        nbyz = min(config.num_byzantine, m)
+        if config.attack == "none" or nbyz == 0:
+            self.byz_mask = jnp.zeros((m,), dtype=bool)
+        else:
+            self.byz_mask = byz_lib.pick_byzantine_mask(m, nbyz, config.byzantine_seed)
+        self._attack = byz_lib.get_attack(config.attack)
+        self._step = self._build_step()
+
+    @property
+    def honest_mask(self) -> jax.Array:
+        return ~self.byz_mask
+
+    def init(self, params: Any, seed: int = 0) -> BridgeState:
+        m = self.config.topology.num_nodes
+        lead = jax.tree_util.tree_leaves(params)[0].shape[0]
+        if lead != m:
+            raise ValueError(f"params leading axis {lead} != num_nodes {m}")
+        return BridgeState(params=params, t=jnp.zeros((), jnp.int32), key=jax.random.PRNGKey(seed))
+
+    def _build_step(self):
+        cfg = self.config
+
+        @jax.jit
+        def step(state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
+            w, unflatten = stack_flatten(state.params)
+            key, sub = jax.random.split(state.key)
+            # (Step 3-4) broadcast + Byzantine substitution of sent messages
+            w_bcast = self._attack(w, self.byz_mask, sub, state.t)
+            # (Step 5) screening at every node
+            y = screening.screen_all(
+                w_bcast, self.adjacency, rule=cfg.rule, b=cfg.num_byzantine,
+                chunk=cfg.screen_chunk,
+            )
+            # (Step 6) local gradient update at w_j(t)
+            losses, grads = jax.vmap(self.grad_fn)(state.params, batch)
+            g, _ = stack_flatten(grads)
+            rho = cfg.step_size(state.t)
+            w_new = y - rho * g
+            new_params = unflatten(w_new)
+            # consensus diagnostic over honest nodes
+            hm = self.honest_mask
+            cnt = jnp.sum(hm)
+            mu = jnp.sum(jnp.where(hm[:, None], w_new, 0.0), axis=0) / cnt
+            dev = jnp.where(hm[:, None], w_new - mu[None, :], 0.0)
+            cons = jnp.sqrt(jnp.max(jnp.sum(dev * dev, axis=1)))
+            metrics = {
+                "loss": jnp.sum(jnp.where(hm, losses, 0.0)) / cnt,
+                "consensus_dist": cons,
+                "rho": rho,
+            }
+            return BridgeState(new_params, state.t + 1, key), metrics
+
+        return step
+
+    def step(self, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
+        return self._step(state, batch)
+
+    def run(self, state: BridgeState, batch_fn: Callable[[int], Any], num_steps: int,
+            eval_fn: Callable | None = None, eval_every: int = 0) -> tuple[BridgeState, list[dict]]:
+        history = []
+        for i in range(num_steps):
+            state, metrics = self.step(state, batch_fn(i))
+            if eval_fn is not None and eval_every and (i + 1) % eval_every == 0:
+                metrics = dict(metrics)
+                metrics.update(eval_fn(state))
+                metrics["step"] = i + 1
+                history.append(jax.device_get(metrics))
+        return state, history
+
+
+def replicate(params: Any, num_nodes: int, *, perturb: float = 0.0, key=None) -> Any:
+    """Stack one model into [M, ...] node replicas; optional init perturbation
+    (the paper initializes nodes inside a common ball, not identically —
+    unlike ICwTM which *requires* identical initialization)."""
+
+    def rep(leaf):
+        return jnp.broadcast_to(leaf[None], (num_nodes,) + leaf.shape)
+
+    stacked = jax.tree_util.tree_map(rep, params)
+    if perturb > 0.0:
+        if key is None:
+            key = jax.random.PRNGKey(0)
+        leaves, treedef = jax.tree_util.tree_flatten(stacked)
+        keys = jax.random.split(key, len(leaves))
+        leaves = [
+            l + perturb * jax.random.normal(k, l.shape, l.dtype)
+            for l, k in zip(leaves, keys)
+        ]
+        stacked = jax.tree_util.tree_unflatten(treedef, leaves)
+    return stacked

@@ -1,0 +1,111 @@
+"""Byzantine attack models (Definition 1).
+
+A Byzantine node may broadcast *anything*; we model attacks as functions that
+substitute the broadcast rows of the stacked iterate matrix ``w [M, d]`` for
+the nodes marked in ``byz_mask``.  The node's internal state keeps evolving
+normally — only what it *sends* is corrupted, matching the paper's experiments
+("broadcast random vectors to all their neighbors during each iteration").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Attack:
+    name: str
+    fn: Callable  # (w [M,d], byz_mask [M], key, t) -> w_broadcast [M,d]
+
+    def __call__(self, w, byz_mask, key, t):
+        return self.fn(w, byz_mask, key, t)
+
+
+def _none(w, byz_mask, key, t):
+    return w
+
+
+def _random_gaussian(scale: float = 10.0):
+    """The paper's experimental attack: broadcast random vectors."""
+
+    def fn(w, byz_mask, key, t):
+        noise = scale * jax.random.normal(jax.random.fold_in(key, t), w.shape, w.dtype)
+        return jnp.where(byz_mask[:, None], noise, w)
+
+    return fn
+
+
+def _sign_flip(scale: float = 4.0):
+    """Broadcast the negated (scaled) true iterate — pulls consensus backward."""
+
+    def fn(w, byz_mask, key, t):
+        return jnp.where(byz_mask[:, None], -scale * w, w)
+
+    return fn
+
+
+def _same_value(value: float = 100.0):
+    """All Byzantine nodes collude on one large constant vector."""
+
+    def fn(w, byz_mask, key, t):
+        return jnp.where(byz_mask[:, None], jnp.full_like(w, value), w)
+
+    return fn
+
+
+def _alie(z: float = 1.5):
+    """'A Little Is Enough'-style attack: collude on mean + z*std of the honest
+    iterates per coordinate — crafted to hide inside the trimming band."""
+
+    def fn(w, byz_mask, key, t):
+        honest = ~byz_mask
+        cnt = jnp.sum(honest)
+        mu = jnp.sum(jnp.where(honest[:, None], w, 0.0), axis=0) / cnt
+        var = jnp.sum(jnp.where(honest[:, None], (w - mu) ** 2, 0.0), axis=0) / cnt
+        crafted = mu + z * jnp.sqrt(var + 1e-12)
+        return jnp.where(byz_mask[:, None], crafted[None, :], w)
+
+    return fn
+
+
+def _shift(delta: float = 5.0):
+    """Coordinated constant shift of the honest mean."""
+
+    def fn(w, byz_mask, key, t):
+        honest = ~byz_mask
+        cnt = jnp.sum(honest)
+        mu = jnp.sum(jnp.where(honest[:, None], w, 0.0), axis=0) / cnt
+        return jnp.where(byz_mask[:, None], (mu + delta)[None, :], w)
+
+    return fn
+
+
+ATTACKS: dict[str, Attack] = {
+    "none": Attack("none", _none),
+    "random": Attack("random", _random_gaussian()),
+    "sign_flip": Attack("sign_flip", _sign_flip()),
+    "same_value": Attack("same_value", _same_value()),
+    "alie": Attack("alie", _alie()),
+    "shift": Attack("shift", _shift()),
+}
+
+
+def get_attack(name: str) -> Attack:
+    try:
+        return ATTACKS[name]
+    except KeyError:
+        raise ValueError(f"unknown attack {name!r}; options: {sorted(ATTACKS)}")
+
+
+def pick_byzantine_mask(num_nodes: int, num_byzantine: int, seed: int = 0) -> jnp.ndarray:
+    """Deterministically pick which nodes are Byzantine (simulation side)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    idx = rng.choice(num_nodes, size=num_byzantine, replace=False)
+    mask = np.zeros((num_nodes,), dtype=bool)
+    mask[idx] = True
+    return jnp.asarray(mask)

@@ -1,0 +1,9 @@
+from repro.data.mnist_like import make_mnist_like
+from repro.data.partition import partition_extreme_noniid, partition_iid, partition_moderate_noniid
+from repro.data.tokens import TokenPipeline, synthetic_token_batch
+
+__all__ = [
+    "make_mnist_like",
+    "partition_iid", "partition_extreme_noniid", "partition_moderate_noniid",
+    "TokenPipeline", "synthetic_token_batch",
+]

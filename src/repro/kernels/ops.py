@@ -1,0 +1,32 @@
+"""Public jit'd wrappers for the screening kernels.
+
+``use_pallas`` selects the Pallas TPU path (interpret-mode on CPU) vs the
+pure-jnp reference; both produce identical results — the dispatcher lets the
+trainer flip implementations per platform/config.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.krum import pairwise_sq_dists_pallas
+from repro.kernels.median import median_pallas
+from repro.kernels.trimmed_mean import trimmed_mean_pallas
+
+
+def trimmed_mean(values, mask, self_value, b: int, *, use_pallas: bool = True, **kw):
+    if use_pallas:
+        return trimmed_mean_pallas(values, mask, self_value, b, **kw)
+    return ref.trimmed_mean_ref(values, mask, self_value, b)
+
+
+def median(values, mask, *, use_pallas: bool = True, **kw):
+    if use_pallas:
+        return median_pallas(values, mask, **kw)
+    return ref.median_ref(values, mask)
+
+
+def pairwise_sq_dists(stacked, *, use_pallas: bool = True, **kw):
+    if use_pallas:
+        return pairwise_sq_dists_pallas(stacked, **kw)
+    return ref.pairwise_sq_dists_ref(stacked)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas screening kernels (allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BIG = 1e30
+
+
+def trimmed_mean_ref(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int) -> jax.Array:
+    """Sort-based masked trimmed mean — Eqs. (7)-(10)."""
+    n = values.shape[0]
+    v = values.astype(jnp.float32)
+    count = jnp.sum(mask)
+    order = jnp.sort(jnp.where(mask[:, None], v, _BIG), axis=0)
+    idx = jnp.arange(n)[:, None]
+    keep = (idx >= b) & (idx < count - b)
+    total = jnp.sum(jnp.where(keep, order, 0.0), axis=0) + self_value.astype(jnp.float32)
+    return (total / (count - 2 * b + 1)).astype(values.dtype)
+
+
+def median_ref(values: jax.Array, mask: jax.Array) -> jax.Array:
+    """Sort-based masked coordinate-wise median (rows already include self)."""
+    n = values.shape[0]
+    v = values.astype(jnp.float32)
+    count = jnp.sum(mask)
+    order = jnp.sort(jnp.where(mask[:, None], v, _BIG), axis=0)
+    lo, hi = (count - 1) // 2, count // 2
+    idx = jnp.arange(n)[:, None]
+    pick = lambda r: jnp.sum(jnp.where(idx == r, order, 0.0), axis=0)
+    return (0.5 * (pick(lo) + pick(hi))).astype(values.dtype)
+
+
+def pairwise_sq_dists_ref(stacked: jax.Array) -> jax.Array:
+    x = stacked.astype(jnp.float32)
+    sq = jnp.sum(x * x, axis=1)
+    return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)

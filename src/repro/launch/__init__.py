@@ -1,0 +1,3 @@
+from repro.launch.mesh import make_host_mesh, make_production_mesh, node_axes, num_nodes
+
+__all__ = ["make_production_mesh", "make_host_mesh", "node_axes", "num_nodes"]

@@ -1,0 +1,378 @@
+"""Loop-aware cost analysis of optimized HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` reports the FLOPs/bytes of ONE
+iteration of each ``while`` loop (verified in this environment: a 10-step
+scanned matmul reports 1 matmul of FLOPs).  Every model here scans over
+layers / KV chunks / recurrence chunks, so the built-in numbers undercount by
+10-100x.  This module parses ``compiled.as_text()`` (the per-device SPMD
+program), extracts scan trip counts from while-loop conditions, and
+recursively multiplies body costs — giving faithful per-chip totals for
+
+* FLOPs (dot/convolution exactly from dot_dimension_numbers; elementwise and
+  reduce ops as 1 flop/element),
+* HBM bytes (fusion/dot/conv/copy/collective boundaries: operands + result —
+  the XLA fusion model of HBM traffic),
+* collective bytes per category (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute), with ring-algorithm wire multipliers.
+
+Everything is computed per chip (SPMD module == per-device program).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from typing import Iterable
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3b11fnuz": 1, "f8e4m3fnuz": 1, "f8e5m2fnuz": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*([\w\-]+)\((.*)$"
+)
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "power", "maximum", "minimum",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "cbrt", "negate", "abs", "sign", "floor", "ceil",
+    "round-nearest-afz", "round-nearest-even", "logistic", "sine", "cosine",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "atan2",
+    "remainder", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+}
+
+_MEM_OPS = {
+    "fusion", "dot", "convolution", "copy", "dynamic-update-slice",
+    "dynamic-slice", "gather", "scatter", "reduce", "sort", "transpose",
+    "broadcast", "reshape", "concatenate", "slice", "pad", "reverse",
+    "reduce-window", "select-and-scatter", "iota", "convert",
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _first_shape_dims(segment: str) -> tuple[str, list[int]] | None:
+    m = _SHAPE_RE.search(segment)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+    coll_wire: float = 0.0
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        self.coll_wire += other.coll_wire
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(self.flops * k, self.bytes * k,
+                    {a: b * k for a, b in self.coll.items()}, self.coll_wire * k)
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    result_type: str
+    opcode: str
+    rest: str  # operand list + attributes
+
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+
+
+def parse_hlo(text: str) -> dict[str, list[Instruction]]:
+    """Split HLO text into computations -> instruction lists."""
+    comps: dict[str, list[Instruction]] = {}
+    cur: list[Instruction] | None = None
+    for line in text.splitlines():
+        line = _COMMENT_RE.sub("", line)  # strip /*index=N*/ tuple comments
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*{", stripped)
+        if header and not stripped.startswith("ROOT") and "=" not in stripped.split("(")[0]:
+            cur = []
+            comps[header.group(1)] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            cur.append(Instruction(m.group(1), m.group(2).strip(), m.group(3), m.group(4)))
+    return comps
+
+
+_OPERAND_NAME_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _operand_segment(instr: Instruction) -> str:
+    """The operand list of the instruction line (before attributes)."""
+    depth = 0
+    for i, ch in enumerate(instr.rest):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            if depth == 0:
+                return instr.rest[:i]
+            depth -= 1
+    return instr.rest
+
+
+def _operand_names(instr: Instruction) -> list[str]:
+    return _OPERAND_NAME_RE.findall(_operand_segment(instr))
+
+
+def _operand_bytes(instr: Instruction, symbols: dict[str, str]) -> int:
+    return sum(_shape_bytes(symbols.get(n, "")) for n in _operand_names(instr))
+
+
+def _dot_flops(instr: Instruction, symbols: dict[str, str]) -> float:
+    out = _first_shape_dims(instr.result_type)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    names = _operand_names(instr)
+    lhs_dims: list[int] = []
+    if names:
+        lhs = _first_shape_dims(symbols.get(names[0], ""))
+        if lhs:
+            lhs_dims = lhs[1]
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    contract = 1
+    if mc and mc.group(1) and lhs_dims:
+        for d in mc.group(1).split(","):
+            contract *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+    return 2.0 * math.prod(out_dims or [1]) * contract
+
+
+def _conv_flops(instr: Instruction, symbols: dict[str, str]) -> float:
+    out = _first_shape_dims(instr.result_type)
+    names = _operand_names(instr)
+    if out is None or len(names) < 2:
+        return 0.0
+    _, out_dims = out
+    kshape = _first_shape_dims(symbols.get(names[1], ""))
+    kdims = kshape[1] if kshape else []
+    mg = re.search(r"feature_group_count=(\d+)", instr.rest)
+    groups = int(mg.group(1)) if mg else 1
+    out_elems = math.prod(out_dims or [1])
+    kernel_elems = math.prod(kdims or [1])
+    oc = out_dims[-1] if out_dims else 1
+    return 2.0 * out_elems * kernel_elems / max(oc, 1) / max(groups, 1)
+
+
+def _called(instr: Instruction) -> dict[str, list[str]]:
+    refs: dict[str, list[str]] = {}
+    for key in ("body", "condition", "calls", "to_apply"):
+        m = re.search(rf"{key}=%?([\w\.\-]+)", instr.rest)
+        if m:
+            refs.setdefault(key, []).append(m.group(1))
+    m = re.search(r"branch_computations=\{([^}]*)\}", instr.rest)
+    if m:
+        refs["branches"] = [s.strip().lstrip("%") for s in m.group(1).split(",")]
+    return refs
+
+
+def _trip_count(cond_instrs: list[Instruction]) -> int:
+    """Largest s32 constant in the while condition — the scan trip count."""
+    best = 1
+    for ins in cond_instrs:
+        if ins.opcode == "constant" and "s32" in ins.result_type:
+            m = re.search(r"constant\((-?\d+)", "constant(" + ins.rest)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+_WIRE_MULT = {
+    # ring-algorithm wire bytes per chip, as a multiple of the payload
+    "all-gather": 1.0,      # receives (n-1)/n of the result ~ result bytes
+    "all-reduce": 2.0,      # reduce-scatter + all-gather
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def analyze(text: str) -> Cost:
+    comps = parse_hlo(text)
+    entry = None
+    for line in text.splitlines():
+        m = re.match(r"^ENTRY\s+%?([\w\.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        # fall back: the computation named like the module main
+        entry = next(iter(comps))
+
+    symtabs: dict[str, dict[str, str]] = {
+        name: {ins.name: ins.result_type for ins in instrs}
+        for name, instrs in comps.items()
+    }
+    memo: dict[tuple[str, bool], Cost] = {}
+
+    def comp_cost(name: str, in_fusion: bool) -> Cost:
+        key = (name, in_fusion)
+        if key in memo:
+            return memo[key]
+        total = Cost()
+        for ins in comps.get(name, []):
+            total += instr_cost(ins, name, in_fusion)
+        memo[key] = total
+        return total
+
+    def instr_cost(ins: Instruction, comp: str, in_fusion: bool) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        sym = symtabs.get(comp, {})
+        refs = _called(ins)
+        if op == "while":
+            body = refs.get("body", [None])[0]
+            cond = refs.get("condition", [None])[0]
+            trips = _trip_count(comps.get(cond, [])) if cond else 1
+            inner = Cost()
+            if body:
+                inner += comp_cost(body, in_fusion)
+            if cond:
+                inner += comp_cost(cond, in_fusion)
+            return inner.scaled(max(trips, 1))
+        if op == "conditional":
+            branches = refs.get("branches", [])
+            if branches:
+                costs = [comp_cost(b, in_fusion) for b in branches]
+                return max(costs, key=lambda x: x.flops + x.bytes)
+            return c
+        if op == "fusion":
+            for sub in refs.get("calls", []):
+                sub_cost = comp_cost(sub, True)  # FLOPs inside; bytes at boundary
+                c.flops += sub_cost.flops
+                c.coll = {**c.coll, **sub_cost.coll}
+                c.coll_wire += sub_cost.coll_wire
+            if not in_fusion:
+                c.bytes += _shape_bytes(ins.result_type) + _operand_bytes(ins, sym)
+            return c
+        if op in ("call", "custom-call", "async-start"):
+            for sub in refs.get("calls", []) + refs.get("to_apply", []):
+                c += comp_cost(sub, in_fusion)
+            if not in_fusion and op == "custom-call":
+                c.bytes += _shape_bytes(ins.result_type) + _operand_bytes(ins, sym)
+            return c
+
+        # FLOPs
+        if op == "dot":
+            c.flops += _dot_flops(ins, sym)
+        elif op == "convolution":
+            c.flops += _conv_flops(ins, sym)
+        elif op in _ELEMENTWISE:
+            c.flops += _shape_elems(ins.result_type)
+        elif op in ("reduce", "reduce-window"):
+            c.flops += sum(_shape_elems(sym.get(n, "")) for n in _operand_names(ins))
+
+        # collectives (also *-start async forms)
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in _COLLECTIVES:
+            operand_b = _operand_bytes(ins, sym)
+            result_b = _shape_bytes(ins.result_type)
+            payload = max(operand_b, result_b)
+            c.coll[base_op] = c.coll.get(base_op, 0.0) + payload
+            c.coll_wire += _WIRE_MULT[base_op] * (result_b if base_op == "all-gather" else operand_b)
+
+        # HBM bytes at fusion-equivalent boundaries
+        if not in_fusion and op in _MEM_OPS:
+            c.bytes += _shape_bytes(ins.result_type) + _operand_bytes(ins, sym)
+        return c
+
+    return comp_cost(entry, False)
+
+
+# ---------------------------------------------------------------------------
+# roofline
+# ---------------------------------------------------------------------------
+
+PEAK_FLOPS = 197e12  # bf16 per chip (TPU v5e)
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per chip, one direction)
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float
+    bytes: float
+    coll_wire_bytes: float
+    coll_detail: dict
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (perfect overlap) step-time estimate."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def roofline_from_cost(cost: Cost) -> Roofline:
+    return Roofline(
+        compute_s=cost.flops / PEAK_FLOPS,
+        memory_s=cost.bytes / HBM_BW,
+        collective_s=cost.coll_wire / ICI_BW,
+        flops=cost.flops,
+        bytes=cost.bytes,
+        coll_wire_bytes=cost.coll_wire,
+        coll_detail=dict(cost.coll),
+    )

@@ -1,0 +1,111 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m repro.launch.report --dir experiments/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "starcoder2-3b", "zamba2-1.2b", "qwen3-4b", "whisper-medium",
+    "qwen2-vl-2b", "rwkv6-3b", "mistral-nemo-12b", "deepseek-v2-236b",
+    "deepseek-v3-671b", "gemma3-12b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dir_: str):
+    rows = {}
+    for f in glob.glob(os.path.join(dir_, "*.json")):
+        d = json.load(open(f))
+        extra = ""
+        base = os.path.basename(f)[:-5]
+        parts = base.split("_")
+        if base.count("_") > 3 or any(t in base for t in ("all_to_all", "remat_off", "nooverlap")):
+            # variant runs (perf iterations) keyed separately
+            rows[(d["arch"], d["shape"], d["mesh"], base)] = d
+        rows[(d["arch"], d["shape"], d["mesh"])] = d
+    return rows
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1000:.1f}ms"
+
+
+def fmt_b(x):
+    if x is None:
+        return "-"
+    for unit, k in [("TB", 1e12), ("GB", 1e9), ("MB", 1e6)]:
+        if x >= k:
+            return f"{x/k:.1f}{unit}"
+    return f"{x:.0f}B"
+
+
+def roofline_table(rows, mesh="16x16"):
+    lines = [
+        "| arch | shape | peak mem/chip | compute | memory | collective | dominant | MODEL/HLO flops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = rows.get((arch, shape, mesh))
+            if d is None:
+                continue
+            if d["status"] == "skipped":
+                lines.append(f"| {arch} | {shape} | — | — | — | — | skipped: {d['reason'][:40]} | — |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {d['mem_peak_gb']:.1f}GB | "
+                f"{fmt_s(d['compute_s'])} | {fmt_s(d['memory_s'])} | "
+                f"{fmt_s(d['collective_s'])} | **{d['dominant']}** | "
+                f"{d['useful_flops_ratio'] if d['useful_flops_ratio'] else '-'} |"
+            )
+    return "\n".join(lines)
+
+
+def dryrun_table(rows):
+    lines = [
+        "| arch | shape | mesh | status | compile | HLO flops/chip | HBM bytes/chip | collective wire/chip |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("16x16", "2x16x16"):
+                d = rows.get((arch, shape, mesh))
+                if d is None:
+                    continue
+                if d["status"] == "skipped":
+                    lines.append(f"| {arch} | {shape} | {mesh} | skipped | — | — | — | — |")
+                    continue
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {d['status']} | {d['compile_s']}s | "
+                    f"{d['hlo_flops']:.2e} | {fmt_b(d['hlo_bytes'])} | "
+                    f"{fmt_b(d['collective_wire_bytes'])} |"
+                )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--which", default="both", choices=["roofline", "dryrun", "both"])
+    args = ap.parse_args()
+    rows = load(args.dir)
+    if args.which in ("roofline", "both"):
+        print("### Roofline (single-pod 16x16, per chip per step)\n")
+        print(roofline_table(rows))
+        print()
+    if args.which in ("dryrun", "both"):
+        print("### Dry-run matrix (both meshes)\n")
+        print(dryrun_table(rows))
+
+
+if __name__ == "__main__":
+    main()

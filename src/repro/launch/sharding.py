@@ -1,0 +1,160 @@
+"""Sharding-spec builders for parameters, batches and decode caches.
+
+Rules (documented per DESIGN.md §5):
+
+* Training params carry a leading node axis -> sharded over the mesh node
+  axes (("pod","data") multi-pod, ("data",) single-pod).
+* Within a replica, tensor parallelism over "model": MoE expert dims shard
+  over "model" (expert parallelism); otherwise the last dim shards over
+  "model" when it is large enough (>= 512).  Stack/scan leading dims are
+  never sharded.  GSPMD handles non-divisible dims by padding.
+* Serving params have no node axis; same inner rules.
+* Serving caches: the batch dim shards over the node axes when divisible;
+  otherwise the sequence dim does (long_500k B=1 -> sequence-parallel KV);
+  the trailing head/latent dim shards over "model" when divisible.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+_MIN_SHARD = 512
+
+# Row-parallel projections (Megatron pairing): these weights contract against
+# an already-sharded activation, so we shard their INPUT dim; their outputs
+# are then partial sums that XLA reduces with one all-reduce per block —
+# instead of all-gathering the sharded activation before the matmul.
+_ROW_PARALLEL = ("wo", "wd", "out_proj", "cm_v")
+
+
+def _inner_spec(shape: tuple, cfg: ModelConfig, model_axis: str, *, skip_lead: int,
+                row_parallel: bool = False) -> list:
+    """Choose which (non-node) dim to shard over the model axis."""
+    dims = [None] * len(shape)
+    # expert parallelism: shard the expert dim
+    if cfg.num_experts:
+        for i in range(skip_lead, len(shape)):
+            if shape[i] == cfg.num_experts:
+                dims[i] = model_axis
+                return dims
+    if row_parallel and len(shape) - skip_lead >= 2 and shape[-2] >= _MIN_SHARD:
+        dims[-2] = model_axis
+        return dims
+    # column-parallel default: last dim if large
+    for i in reversed(range(skip_lead, len(shape))):
+        if shape[i] >= _MIN_SHARD:
+            dims[i] = model_axis
+            return dims
+    return dims
+
+
+def _n_stack_dims(path: str, cfg: ModelConfig) -> int:
+    """How many leading dims of this param leaf are layer-stack dims."""
+    if "blocks" in path or "groups" in path or "rem" in path:
+        # dense pattern groups are [G, P, ...]; others are [L, ...]
+        return 2 if (cfg.pattern and "blocks" in path and cfg.family in ("dense", "vlm")) else 1
+    if "mtp" in path or "shared_attn" in path:
+        return 0
+    return 0
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def param_specs(cfg: ModelConfig, params_shapes: Any, *, node_axes: tuple | None,
+                model_axis: str = "model", layout: str = "tp") -> Any:
+    """PartitionSpec pytree for a parameter tree (shapes from eval_shape).
+
+    ``node_axes`` None -> serving layout (no node axis); otherwise training
+    layout where every leaf's dim 0 is the node axis.
+
+    ``layout``:
+      * "tp" (default) — tensor parallelism over the model axis inside each
+        node's replica (column/row-parallel pairing, expert parallelism).
+      * "dp" — the replica is REPLICATED across the model axis and the
+        node's batch is sharded over it instead (within-node data
+        parallelism).  Only sensible when params+grads fit one chip; removes
+        all per-layer TP collectives at the cost of per-step grad
+        all-reduces (see EXPERIMENTS.md §Perf).
+    """
+
+    def leaf_spec(path, leaf):
+        shape = tuple(leaf.shape)
+        ps = _path_str(path)
+        if layout == "dp":
+            inner = [None] * (len(shape) - (1 if node_axes is not None else 0))
+        else:
+            rp = any(ps.endswith(k) or f"/{k}" in ps for k in _ROW_PARALLEL)
+            lead = shape[1:] if node_axes is not None else shape
+            inner = _inner_spec(lead, cfg, model_axis,
+                                skip_lead=_n_stack_dims(ps, cfg), row_parallel=rp)
+        if node_axes is not None:
+            return P(node_axes, *inner)
+        return P(*inner)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shapes)
+
+
+def train_batch_specs(batch_shapes: Any, node_axes: tuple, *, layout: str = "tp",
+                      model_axis: str = "model") -> Any:
+    """Training batches are [M, B/M, ...]: node axis sharded; under the "dp"
+    layout the per-node batch dim additionally shards over the model axis."""
+    inner0 = model_axis if layout == "dp" else None
+    return jax.tree_util.tree_map(
+        lambda l: P(node_axes, inner0, *([None] * (len(l.shape) - 2))), batch_shapes
+    )
+
+
+def serve_batch_specs(batch_shapes: Any, node_axes: tuple, global_batch: int,
+                      mesh) -> Any:
+    import math
+
+    n = math.prod(mesh.shape[a] for a in node_axes)
+    lead = node_axes if global_batch % n == 0 and global_batch >= n else None
+    return jax.tree_util.tree_map(
+        lambda l: P(lead, *([None] * (len(l.shape) - 1))), batch_shapes
+    )
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes: Any, *, node_axes: tuple, mesh,
+                batch: int, seq_len: int, model_axis: str = "model") -> Any:
+    import math
+
+    n_nodes = math.prod(mesh.shape[a] for a in node_axes)
+    n_model = mesh.shape[model_axis]
+    batch_ok = batch % n_nodes == 0 and batch >= n_nodes
+
+    def leaf_spec(leaf):
+        shape = tuple(leaf.shape)
+        dims: list = [None] * len(shape)
+        placed_nodes = False
+        for i, s in enumerate(shape):
+            if not placed_nodes and batch_ok and s == batch:
+                dims[i] = node_axes
+                placed_nodes = True
+                break
+        if not placed_nodes:
+            for i, s in enumerate(shape):
+                if s == seq_len and s % n_nodes == 0:
+                    dims[i] = node_axes
+                    placed_nodes = True
+                    break
+        # model axis on the trailing dim when divisible (and not already used)
+        if len(shape) >= 2 and dims[-1] is None and shape[-1] % n_model == 0 and shape[-1] >= n_model:
+            dims[-1] = model_axis
+        return P(*dims)
+
+    return jax.tree_util.tree_map(leaf_spec, cache_shapes)
+
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,93 @@
+"""Fan out the full dry-run matrix (arch x shape x mesh) as subprocesses.
+
+Resumable: existing JSON results are skipped.  Usage:
+
+    PYTHONPATH=src python -m repro.launch.sweep --out experiments/dryrun \
+        [--jobs 4] [--archs a,b] [--shapes s1,s2] [--single-pod-only]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+from concurrent.futures import ThreadPoolExecutor
+
+ARCHS = [
+    "starcoder2-3b", "zamba2-1.2b", "qwen3-4b", "whisper-medium",
+    "qwen2-vl-2b", "rwkv6-3b", "mistral-nemo-12b", "deepseek-v2-236b",
+    "deepseek-v3-671b", "gemma3-12b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def tag_for(arch, shape, multi_pod, extra=""):
+    mesh = "2x16x16" if multi_pod else "16x16"
+    return f"{arch}_{shape}_{mesh}{extra}"
+
+
+def run_job(arch, shape, multi_pod, out_dir, timeout, extra_args=()):
+    tag = tag_for(arch, shape, multi_pod, "".join(f"_{a.lstrip('-').replace('-','_')}" for a in extra_args if not a.startswith("--json")))
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path):
+        return tag, "cached"
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--json", out_dir,
+    ]
+    if shape == "train_4k":
+        cmd.append("--remat")
+    if multi_pod:
+        cmd.append("--multi-pod")
+    cmd.extend(extra_args)
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout)
+        if proc.returncode != 0:
+            fail = {"arch": arch, "shape": shape,
+                    "mesh": "2x16x16" if multi_pod else "16x16",
+                    "status": "failed", "stderr": proc.stderr[-3000:]}
+            with open(path, "w") as f:
+                json.dump(fail, f, indent=2)
+            return tag, f"FAILED ({time.time()-t0:.0f}s)"
+        return tag, f"ok ({time.time()-t0:.0f}s)"
+    except subprocess.TimeoutExpired:
+        fail = {"arch": arch, "shape": shape,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "status": "timeout"}
+        with open(path, "w") as f:
+            json.dump(fail, f, indent=2)
+        return tag, "TIMEOUT"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--jobs", type=int, default=4)
+    ap.add_argument("--timeout", type=int, default=1500)
+    ap.add_argument("--archs", default=None)
+    ap.add_argument("--shapes", default=None)
+    ap.add_argument("--single-pod-only", action="store_true")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    archs = args.archs.split(",") if args.archs else ARCHS
+    shapes = args.shapes.split(",") if args.shapes else SHAPES
+    jobs = []
+    for arch in archs:
+        for shape in shapes:
+            jobs.append((arch, shape, False))
+            if not args.single_pod_only:
+                jobs.append((arch, shape, True))
+    print(f"{len(jobs)} jobs -> {args.out}")
+    with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+        futs = {ex.submit(run_job, a, s, mp, args.out, args.timeout): (a, s, mp)
+                for a, s, mp in jobs}
+        for fut in __import__("concurrent.futures", fromlist=["as_completed"]).as_completed(futs):
+            tag, status = fut.result()
+            print(f"  {tag:60s} {status}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from repro.models.api import ModelApi, build, param_count
+from repro.models.config import ModelConfig
+
+__all__ = ["ModelApi", "ModelConfig", "build", "param_count"]

@@ -1,0 +1,82 @@
+"""Uniform model API: every architecture family exposes
+
+    init_params(key, cfg)               -> params pytree
+    train_loss(params, batch, cfg)      -> scalar loss
+    init_cache(cfg, batch, max_len)     -> decode cache/state pytree
+    decode_step(params, cache, tok, cfg)-> (logits, new cache)
+
+`build(cfg)` returns a ModelApi namespace dispatching on cfg.family; the
+BRIDGE trainer, launcher, dry-run and smoke tests all go through this.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense, encdec, hybrid, moe, ssm, vlm
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init_params: Callable
+    train_loss: Callable
+    init_cache: Callable
+    decode_step: Callable
+    extra: dict
+
+    def grad_fn(self):
+        """(params, batch) -> (loss, grads) — the local f_j gradient for
+        BRIDGE's step 6."""
+        cfg = self.cfg
+        loss = self.train_loss
+
+        def fn(params, batch):
+            return jax.value_and_grad(lambda p: loss(p, batch, cfg))(params)
+
+        return fn
+
+
+_FAMILIES = {
+    "dense": dense,
+    "moe": moe,
+    "rwkv": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+    "vlm": vlm,
+}
+
+
+def build(cfg: ModelConfig) -> ModelApi:
+    mod = _FAMILIES[cfg.family]
+    extra = {}
+    if cfg.family == "encdec":
+        extra["prefill_cache"] = encdec.prefill_cache
+        extra["encode"] = encdec.encode
+    if cfg.family == "vlm":
+        extra["make_mrope_positions"] = vlm.make_mrope_positions
+    if cfg.family == "moe":
+        extra["moe_ffn"] = moe.moe_ffn
+    return ModelApi(
+        cfg=cfg,
+        init_params=mod.init_params,
+        train_loss=mod.train_loss,
+        init_cache=mod.init_cache,
+        decode_step=mod.decode_step,
+        extra=extra,
+    )
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count via eval_shape (no allocation)."""
+    import math
+
+    shapes = jax.eval_shape(lambda k: build(cfg).init_params(k, cfg), jax.random.PRNGKey(0))
+    return sum(
+        math.prod(l.shape) if l.shape else 1
+        for l in jax.tree_util.tree_leaves(shapes)
+    )

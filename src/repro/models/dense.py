@@ -1,0 +1,183 @@
+"""Dense decoder-only transformer family.
+
+Covers: starcoder2-3b (GELU MLP, layernorm, attn bias), qwen3-4b (qk-norm),
+mistral-nemo-12b (128k rope), gemma3-12b (5:1 local:global sliding-window
+pattern, dual rope theta), and the text backbone reused by qwen2-vl (M-RoPE).
+
+Layers are stacked and scanned in *pattern groups*: parameters are shaped
+[G, P, ...] where P = cfg.pattern (1 when uniform); the scan body unrolls the
+P positions statically, so local (sliding-window) and global (full-causal)
+layers each get their own specialized attention HLO — no runtime branching.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+def _pattern(cfg: ModelConfig) -> tuple[int, int]:
+    p = cfg.pattern or 1
+    assert cfg.num_layers % p == 0, (cfg.num_layers, p)
+    return cfg.num_layers // p, p
+
+
+def _is_global(cfg: ModelConfig, pos_in_group: int) -> bool:
+    if cfg.pattern and cfg.sliding_window:
+        return pos_in_group == cfg.pattern - 1  # gemma3: 5 local then 1 global
+    return cfg.sliding_window is None
+
+
+def _layer_theta(cfg: ModelConfig, is_global: bool) -> float:
+    if cfg.rope_theta_local is not None and not is_global:
+        return cfg.rope_theta_local
+    return cfg.rope_theta
+
+
+def init_block(key, cfg: ModelConfig):
+    dt = cfg.jdtype
+    k1, k2 = jax.random.split(key)
+    with_bias = cfg.norm == "layernorm"
+    return {
+        "ln1": L.init_norm(cfg.d_model, dt, with_bias=with_bias),
+        "attn": L.init_attention(
+            k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd, dt,
+            qk_norm=cfg.qk_norm, bias=cfg.attn_bias,
+        ),
+        "ln2": L.init_norm(cfg.d_model, dt, with_bias=with_bias),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dt, act=cfg.act, bias=cfg.attn_bias),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    g, p = _pattern(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    blocks = [init_block(keys[i], cfg) for i in range(cfg.num_layers)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs).reshape((g, p) + xs[0].shape), *blocks)
+    dt = cfg.jdtype
+    params = {
+        "embed": L.dense_init(keys[-1], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "blocks": stacked,
+        "ln_f": L.init_norm(cfg.d_model, dt, with_bias=cfg.norm == "layernorm"),
+        "head": L.dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), dt),
+    }
+    return params
+
+
+def _attention(cfg, p, x, positions, *, is_global, mrope_positions=None):
+    q, k, v = L.qkv_project(p, x, cfg.num_heads, cfg.num_kv_heads, cfg.hd, qk_norm=cfg.qk_norm)
+    theta = _layer_theta(cfg, is_global)
+    if cfg.mrope and mrope_positions is not None:
+        q = L.apply_mrope(q, mrope_positions, theta, cfg.mrope_sections)
+        k = L.apply_mrope(k, mrope_positions, theta, cfg.mrope_sections)
+    else:
+        q = L.apply_rope(q, positions, theta)
+        k = L.apply_rope(k, positions, theta)
+    if is_global or cfg.sliding_window is None:
+        o = L.chunked_attention(q, k, v, causal=True, kv_chunk=cfg.kv_chunk)
+    else:
+        o = L.sliding_window_attention(q, k, v, window=cfg.sliding_window, q_chunk=cfg.q_chunk)
+    return L.attn_output(p, o)
+
+
+def block_apply(cfg, p, x, positions, *, is_global, mrope_positions=None):
+    h = L.apply_norm(p["ln1"], x, cfg.norm)
+    x = x + _attention(cfg, p["attn"], h, positions, is_global=is_global,
+                       mrope_positions=mrope_positions)
+    h = L.apply_norm(p["ln2"], x, cfg.norm)
+    return x + L.mlp(p["mlp"], h, cfg.act)
+
+
+def forward(params, tokens, cfg: ModelConfig, *, input_embeds=None, mrope_positions=None,
+            last_only: bool = False):
+    """tokens [B, S] -> logits [B, S, V] (or [B, 1, V] when ``last_only`` —
+    the prefill step's output).  ``input_embeds`` overrides token embedding
+    lookup (VLM prefix injection)."""
+    x = params["embed"][tokens] if input_embeds is None else input_embeds
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype) if cfg.norm == "rmsnorm" else x
+    s = x.shape[1]
+    positions = jnp.arange(s)
+    g, pat = _pattern(cfg)
+
+    def body(x, lp):
+        for p in range(pat):
+            sub = jax.tree_util.tree_map(lambda a: a[p], lp)
+            x = block_apply(cfg, sub, x, positions,
+                            is_global=_is_global(cfg, p),
+                            mrope_positions=mrope_positions)
+        return x, None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(scan_body, x, params["blocks"])
+    if last_only:
+        x = x[:, -1:]
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    return x @ params["head"]
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inputs, cfg)
+    mask = batch.get("mask")
+    return L.softmax_xent(logits, labels, mask[:, 1:] if mask is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    g, p = _pattern(cfg)
+    dt = dtype or cfg.jdtype
+    shape = (g, p, batch, max_len, cfg.num_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, *, mrope_positions=None):
+    """One-token decode: tokens [B, 1] -> logits [B, 1, V], updated cache."""
+    x = params["embed"][tokens]
+    x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype) if cfg.norm == "rmsnorm" else x
+    pos = cache["pos"]
+    positions = pos[None] + jnp.zeros((1,), jnp.int32)
+    g, pat = _pattern(cfg)
+
+    def body(x, inputs):
+        lp, kc, vc = inputs  # kc/vc [P, B, Smax, Hkv, hd]
+        new_k, new_v = [], []
+        for p in range(pat):
+            sub = jax.tree_util.tree_map(lambda a: a[p], lp)
+            is_global = _is_global(cfg, p)
+            h = L.apply_norm(sub["ln1"], x, cfg.norm)
+            q, k, v = L.qkv_project(sub["attn"], h, cfg.num_heads, cfg.num_kv_heads,
+                                    cfg.hd, qk_norm=cfg.qk_norm)
+            theta = _layer_theta(cfg, is_global)
+            if cfg.mrope and mrope_positions is not None:
+                q = L.apply_mrope(q, mrope_positions, theta, cfg.mrope_sections)
+                k = L.apply_mrope(k, mrope_positions, theta, cfg.mrope_sections)
+            else:
+                q = L.apply_rope(q, positions, theta)
+                k = L.apply_rope(k, positions, theta)
+            kcp = lax.dynamic_update_slice_in_dim(kc[p], k.astype(kc.dtype), pos, axis=1)
+            vcp = lax.dynamic_update_slice_in_dim(vc[p], v.astype(vc.dtype), pos, axis=1)
+            window = None if is_global else cfg.sliding_window
+            o = L.decode_attention(q, kcp, vcp, pos + 1, window=window)
+            x = x + L.attn_output(sub["attn"], o)
+            h2 = L.apply_norm(sub["ln2"], x, cfg.norm)
+            x = x + L.mlp(sub["mlp"], h2, cfg.act)
+            new_k.append(kcp)
+            new_v.append(vcp)
+        return x, (jnp.stack(new_k), jnp.stack(new_v))
+
+    x, (nk, nv) = lax.scan(body, x, (params["blocks"], cache["k"], cache["v"]))
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = x @ params["head"]
+    return logits, {"k": nk, "v": nv, "pos": pos + 1}

@@ -1,0 +1,187 @@
+"""Whisper-style encoder-decoder (audio backbone only).
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor is
+a STUB: ``input_specs`` supplies precomputed frame embeddings [B, S_src, d]
+(a single linear ``frontend_proj`` stands in for the conv stack's output
+projection).  We implement the transformer encoder (bidirectional), the
+causal decoder with cross-attention, learned positional embeddings, GELU
+MLPs, and layernorm — the Whisper recipe.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+MAX_SOURCE_LEN = 32768  # supports the prefill_32k input shape
+
+
+def init_enc_block(key, cfg: ModelConfig):
+    dt = cfg.jdtype
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": L.init_norm(cfg.d_model, dt, with_bias=True),
+        "attn": L.init_attention(k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd, dt, bias=True),
+        "ln2": L.init_norm(cfg.d_model, dt, with_bias=True),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, dt, act="gelu", bias=True),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig):
+    dt = cfg.jdtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_norm(cfg.d_model, dt, with_bias=True),
+        "self_attn": L.init_attention(k1, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd, dt, bias=True),
+        "ln_x": L.init_norm(cfg.d_model, dt, with_bias=True),
+        "cross_attn": L.init_attention(k2, cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd, dt, bias=True),
+        "ln2": L.init_norm(cfg.d_model, dt, with_bias=True),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, dt, act="gelu", bias=True),
+    }
+
+
+def init_params(key, cfg: ModelConfig):
+    ne = cfg.encoder_layers
+    nd = cfg.num_layers
+    keys = jax.random.split(key, ne + nd + 4)
+    enc = [init_enc_block(keys[i], cfg) for i in range(ne)]
+    dec = [init_dec_block(keys[ne + i], cfg) for i in range(nd)]
+    stack = lambda blocks: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    dt = cfg.jdtype
+    return {
+        "frontend_proj": L.dense_init(keys[-1], (cfg.d_model, cfg.d_model), dt),
+        "enc_pos": 0.02 * jax.random.normal(keys[-2], (MAX_SOURCE_LEN, cfg.d_model), jnp.float32).astype(dt),
+        "enc_blocks": stack(enc),
+        "enc_ln": L.init_norm(cfg.d_model, dt, with_bias=True),
+        "embed": L.dense_init(keys[-3], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "dec_pos": 0.02 * jax.random.normal(keys[-4], (cfg.max_target_len, cfg.d_model), jnp.float32).astype(dt),
+        "dec_blocks": stack(dec),
+        "dec_ln": L.init_norm(cfg.d_model, dt, with_bias=True),
+    }
+
+
+def encode(params, audio_embeds, cfg: ModelConfig):
+    s = audio_embeds.shape[1]
+    x = audio_embeds @ params["frontend_proj"] + params["enc_pos"][:s]
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, "layernorm")
+        q, k, v = L.qkv_project(lp["attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.hd)
+        o = L.chunked_attention(q, k, v, causal=False, kv_chunk=cfg.kv_chunk)
+        x = x + L.attn_output(lp["attn"], o)
+        h = L.apply_norm(lp["ln2"], x, "layernorm")
+        return x + L.mlp(lp["mlp"], h, "gelu"), None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(scan_body, x, params["enc_blocks"])
+    return L.apply_norm(params["enc_ln"], x, "layernorm")
+
+
+def _dec_block(lp, x, memory, cfg: ModelConfig, *, self_kv=None, pos=None):
+    """Decoder block; ``self_kv``/``pos`` switch between full-sequence
+    (training) and single-token (decode with cache) self-attention."""
+    h = L.apply_norm(lp["ln1"], x, "layernorm")
+    q, k, v = L.qkv_project(lp["self_attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.hd)
+    if self_kv is None:
+        o = L.chunked_attention(q, k, v, causal=True, kv_chunk=min(cfg.kv_chunk, x.shape[1]))
+        new_kv = None
+    else:
+        kc, vc = self_kv
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), pos, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), pos, axis=1)
+        o = L.decode_attention(q, kc, vc, pos + 1)
+        new_kv = (kc, vc)
+    x = x + L.attn_output(lp["self_attn"], o)
+    # cross attention to encoder memory
+    h = L.apply_norm(lp["ln_x"], x, "layernorm")
+    qx, kx, vx = L.qkv_project(lp["cross_attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.hd)
+    kxm, vxm = memory  # precomputed [B, S_src, H, hd]
+    ox = L.chunked_attention(qx, kxm, vxm, causal=False, kv_chunk=cfg.kv_chunk)
+    x = x + L.attn_output(lp["cross_attn"], ox)
+    h = L.apply_norm(lp["ln2"], x, "layernorm")
+    return x + L.mlp(lp["mlp"], h, "gelu"), new_kv
+
+
+def _cross_kv(lp, enc_out, cfg):
+    b, s, _ = enc_out.shape
+    k = (enc_out @ lp["cross_attn"]["wk"] + lp["cross_attn"]["bk"]).reshape(b, s, cfg.num_kv_heads, cfg.hd)
+    v = (enc_out @ lp["cross_attn"]["wv"] + lp["cross_attn"]["bv"]).reshape(b, s, cfg.num_kv_heads, cfg.hd)
+    return k, v
+
+
+def decode_train(params, enc_out, tokens, cfg: ModelConfig):
+    s = tokens.shape[1]
+    x = params["embed"][tokens] + params["dec_pos"][:s]
+
+    def body(x, lp):
+        memory = _cross_kv(lp, enc_out, cfg)
+        x, _ = _dec_block(lp, x, memory, cfg)
+        return x, None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(scan_body, x, params["dec_blocks"])
+    x = L.apply_norm(params["dec_ln"], x, "layernorm")
+    return x @ params["embed"].T  # tied output head (Whisper)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["audio_embeds"], cfg)
+    return decode_train(params, enc_out, batch["tokens"][:, :-1], cfg)
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    return L.softmax_xent(logits, batch["tokens"][:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# serving: encoder runs once, decoder steps with self-attn + cross caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, src_len: int, dtype=None):
+    dt = dtype or cfg.jdtype
+    nd = cfg.num_layers
+    t = cfg.max_target_len
+    return {
+        "self_k": jnp.zeros((nd, batch, t, cfg.num_kv_heads, cfg.hd), dt),
+        "self_v": jnp.zeros((nd, batch, t, cfg.num_kv_heads, cfg.hd), dt),
+        "cross_k": jnp.zeros((nd, batch, src_len, cfg.num_kv_heads, cfg.hd), dt),
+        "cross_v": jnp.zeros((nd, batch, src_len, cfg.num_kv_heads, cfg.hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_cache(params, cache, audio_embeds, cfg: ModelConfig):
+    """Run the encoder and populate the cross-attention KV cache."""
+    enc_out = encode(params, audio_embeds, cfg)
+
+    def body(_, lp):
+        k, v = _cross_kv(lp, enc_out, cfg)
+        return None, (k, v)
+
+    _, (ck, cv) = lax.scan(body, None, params["dec_blocks"])
+    return dict(cache, cross_k=ck.astype(cache["cross_k"].dtype), cross_v=cv.astype(cache["cross_v"].dtype))
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    pos = cache["pos"]
+    x = params["embed"][tokens] + params["dec_pos"][pos][None, None]
+
+    def body(x, inputs):
+        lp, sk, sv, ck, cv = inputs
+        x, new_kv = _dec_block(lp, x, (ck, cv), cfg, self_kv=(sk, sv), pos=pos)
+        return x, new_kv
+
+    x, (nk, nv) = lax.scan(
+        body, x,
+        (params["dec_blocks"], cache["self_k"], cache["self_v"], cache["cross_k"], cache["cross_v"]),
+    )
+    x = L.apply_norm(params["dec_ln"], x, "layernorm")
+    logits = x @ params["embed"].T
+    return logits, dict(cache, self_k=nk, self_v=nv, pos=pos + 1)

@@ -1,0 +1,156 @@
+"""Zamba2-style hybrid: a stack of Mamba2 blocks with ONE shared
+attention+MLP block invoked periodically (every ``cfg.attn_every`` Mamba
+blocks).  The shared block's weights are reused at every invocation —
+Zamba2's parameter-sharing trick (we omit the per-invocation LoRA deltas;
+noted in DESIGN.md).
+
+Structure: scan over G = num_layers // attn_every groups, each group =
+attn_every Mamba2 blocks followed by one shared-attention call; remainder
+layers (num_layers % attn_every) run as plain Mamba2 blocks after the scan.
+
+long_500k note: the shared attention uses a sliding window at decode time
+(ring-buffer cache of ``cfg.sliding_window``), keeping the hybrid
+sub-quadratic end to end.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import dense, layers as L, ssm
+from repro.models.config import ModelConfig
+
+
+def _attn_cfg(cfg: ModelConfig) -> ModelConfig:
+    return dataclasses.replace(
+        cfg, family="dense", pattern=0, sliding_window=None, attn_every=0,
+        qk_norm=False,
+    )
+
+
+def _groups(cfg: ModelConfig) -> tuple[int, int]:
+    g = cfg.num_layers // cfg.attn_every
+    rem = cfg.num_layers - g * cfg.attn_every
+    return g, rem
+
+
+def init_params(key, cfg: ModelConfig):
+    g, rem = _groups(cfg)
+    keys = jax.random.split(key, cfg.num_layers + 3)
+    mamba = [ssm.init_mamba2(keys[i], cfg) for i in range(g * cfg.attn_every)]
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs).reshape((g, cfg.attn_every) + xs[0].shape), *mamba
+    )
+    rem_blocks = [ssm.init_mamba2(keys[g * cfg.attn_every + i], cfg) for i in range(rem)]
+    dt = cfg.jdtype
+    params = {
+        "embed": L.dense_init(keys[-1], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "mamba_groups": stacked,
+        "mamba_rem": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rem_blocks) if rem else None,
+        "shared_attn": dense.init_block(keys[-3], _attn_cfg(cfg)),
+        "ln_f": L.init_norm(cfg.d_model, dt),
+        "head": L.dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), dt),
+    }
+    return params
+
+
+def forward(params, tokens, cfg: ModelConfig, *, last_only: bool = False):
+    x = params["embed"][tokens]
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+    acfg = _attn_cfg(cfg)
+
+    def body(x, lp):
+        for i in range(cfg.attn_every):
+            sub = jax.tree_util.tree_map(lambda a: a[i], lp)
+            x = ssm.mamba2_forward(sub, x, cfg, chunk=min(128, s))
+        x = dense.block_apply(acfg, params["shared_attn"], x, positions, is_global=True)
+        return x, None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(scan_body, x, params["mamba_groups"])
+    if params.get("mamba_rem") is not None:
+        def rem_body(x, lp):
+            return ssm.mamba2_forward(lp, x, cfg, chunk=min(128, s)), None
+        x, _ = lax.scan(rem_body, x, params["mamba_rem"])
+    if last_only:
+        x = x[:, -1:]
+    return L.rms_norm(x, params["ln_f"]["w"]) @ params["head"]
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    logits = forward(params, tokens[:, :-1], cfg)
+    return L.softmax_xent(logits, tokens[:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    g, rem = _groups(cfg)
+    dt = dtype or cfg.jdtype
+    mstate = ssm.init_mamba_state(cfg, batch)
+    cache_len = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    return {
+        "mamba": jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None, None], (g, cfg.attn_every) + l.shape), mstate
+        ),
+        "mamba_rem": jax.tree_util.tree_map(
+            lambda l: jnp.broadcast_to(l[None], (rem,) + l.shape), mstate
+        ) if rem else None,
+        "attn_k": jnp.zeros((g, batch, cache_len, cfg.num_kv_heads, cfg.hd), dt),
+        "attn_v": jnp.zeros((g, batch, cache_len, cfg.num_kv_heads, cfg.hd), dt),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = params["embed"][tokens]
+    pos = cache["pos"]
+    acfg = _attn_cfg(cfg)
+    cache_len = cache["attn_k"].shape[2]
+    slot = pos % cache_len  # ring buffer (windowed when cache_len < max_len)
+
+    def body(x, inputs):
+        lp, mstates, kc, vc = inputs
+        new_states = []
+        for i in range(cfg.attn_every):
+            sub = jax.tree_util.tree_map(lambda a: a[i], lp)
+            st = jax.tree_util.tree_map(lambda a: a[i], mstates)
+            x, st_new = ssm.mamba2_decode(sub, x, st, cfg)
+            new_states.append(st_new)
+        # shared attention with ring-buffer KV cache
+        sp = params["shared_attn"]
+        h = L.apply_norm(sp["ln1"], x, acfg.norm)
+        q, k, v = L.qkv_project(sp["attn"], h, cfg.num_heads, cfg.num_kv_heads, cfg.hd)
+        positions = pos[None]
+        q = L.apply_rope(q, positions, cfg.rope_theta)
+        k = L.apply_rope(k, positions, cfg.rope_theta)
+        kc = lax.dynamic_update_slice_in_dim(kc, k.astype(kc.dtype), slot, axis=1)
+        vc = lax.dynamic_update_slice_in_dim(vc, v.astype(vc.dtype), slot, axis=1)
+        o = L.decode_attention(q, kc, vc, jnp.minimum(pos + 1, cache_len))
+        x = x + L.attn_output(sp["attn"], o)
+        h2 = L.apply_norm(sp["ln2"], x, acfg.norm)
+        x = x + L.mlp(sp["mlp"], h2, acfg.act)
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *new_states)
+        return x, (stacked, kc, vc)
+
+    x, (mstates, kc, vc) = lax.scan(
+        body, x, (params["mamba_groups"], cache["mamba"], cache["attn_k"], cache["attn_v"])
+    )
+    new_cache = dict(cache, mamba=mstates, attn_k=kc, attn_v=vc, pos=pos + 1)
+    if params.get("mamba_rem") is not None:
+        def rem_body(x, inputs):
+            lp, st = inputs
+            x, st_new = ssm.mamba2_decode(lp, x, st, cfg)
+            return x, st_new
+        x, rem_states = lax.scan(rem_body, x, (params["mamba_rem"], cache["mamba_rem"]))
+        new_cache["mamba_rem"] = rem_states
+    logits = L.rms_norm(x, params["ln_f"]["w"]) @ params["head"]
+    return logits, new_cache

@@ -1,0 +1,321 @@
+"""Shared transformer building blocks (pure JAX, GSPMD-friendly).
+
+Conventions:
+* params are plain dicts of jnp arrays; init_* functions take a PRNG key.
+* activations: x [B, S, D]; attention heads live in the last-but-one axis.
+* attention is chunked (online-softmax over KV blocks) so [S, S] score
+  matrices are never materialized; sliding-window attention additionally
+  restricts compute to a static banded KV slice.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# ---------------------------------------------------------------------------
+# initializers / norms
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    if scale is None:
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)).astype(dtype)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * lax.rsqrt(var + eps)) * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    y = (x - mu) * lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def init_norm(d, dtype, *, with_bias=False):
+    if with_bias:
+        return {"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)}
+    return {"w": jnp.zeros((d,), dtype)}  # rmsnorm stores (weight - 1)
+
+
+def apply_norm(p, x, kind: str):
+    if kind == "layernorm":
+        return layer_norm(x, p["w"], p["b"])
+    return rms_norm(x, p["w"])
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(rot_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+
+
+def apply_rope(x, positions, theta: float, rot_dim: int | None = None):
+    """x [..., S, H, Dh]; positions [..., S] (broadcastable)."""
+    dh = x.shape[-1]
+    rot = rot_dim or dh
+    freqs = rope_freqs(rot, theta)  # [rot/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, rot/2]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]  # [..., S, 1, rot/2]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def apply_mrope(x, positions3, theta: float, sections=(16, 24, 24)):
+    """Qwen2-VL multimodal RoPE: positions3 [3, ..., S] = (t, h, w) position
+    ids; the rotary half-dims are split into three sections, each rotated by
+    its own position stream.  For pure text, t == h == w == position."""
+    dh = x.shape[-1]
+    half = dh // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(dh, theta)  # [half]
+    angs = []
+    off = 0
+    for i, sec in enumerate(sections):
+        f = freqs[off : off + sec]
+        angs.append(positions3[i][..., None].astype(jnp.float32) * f)
+        off += sec
+    ang = jnp.concatenate(angs, axis=-1)[..., None, :]  # [..., S, 1, half]
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked attention (flash-style online softmax, GQA)
+# ---------------------------------------------------------------------------
+
+_NEG = -1e30
+
+
+def _expand_kv(k, heads_q):
+    """GQA: repeat kv heads to match q heads."""
+    hkv = k.shape[-2]
+    if hkv == heads_q:
+        return k
+    rep = heads_q // hkv
+    return jnp.repeat(k, rep, axis=-2)
+
+
+def chunked_attention(q, k, v, *, causal=True, kv_chunk=1024, q_offset=None,
+                      bias_mask=None):
+    """Online-softmax attention over KV chunks.
+
+    q [B, Sq, H, Dh]; k, v [B, Sk, Hkv, Dh].  ``q_offset`` gives the absolute
+    position of q[:, 0] (for decode: Sk_done); default assumes q and k are
+    aligned suffixes (training: q_offset = Sk - Sq = 0).
+    [Sq, Sk] scores are never materialized — peak extra memory is
+    O(Sq * kv_chunk) per head.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    dv = v.shape[-1]  # may differ from dh (MLA)
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = 1.0 / math.sqrt(dh)
+    nchunks = -(-sk // kv_chunk)
+    pad = nchunks * kv_chunk - sk
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = kp.reshape(b, nchunks, kv_chunk, h, dh).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(b, nchunks, kv_chunk, h, dv).transpose(1, 0, 2, 3, 4)
+    qf = (q * scale).astype(jnp.float32)
+    q_pos = jnp.arange(sq) + (q_offset if q_offset is not None else sk - sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kb, vb, ci = inputs
+        kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+        valid = kv_pos[None, :] < sk
+        if causal:
+            valid = valid & (kv_pos[None, :] <= q_pos[:, None])
+        if bias_mask is not None:
+            valid = valid & bias_mask(q_pos, kv_pos)
+        s = jnp.where(valid[None, None], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vb.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, h, sq), _NEG, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    a0 = jnp.zeros((b, h, sq, dv), jnp.float32)
+    (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, jnp.arange(nchunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)  # [B, Sq, H, Dh]
+
+
+def sliding_window_attention(q, k, v, *, window: int, q_chunk: int = 512):
+    """Causal attention restricted to a trailing window.  Scans q chunks and
+    slices a static [q_chunk + window] KV band per chunk, so HLO FLOPs scale
+    with S*window, not S^2.  Requires aligned q/k (training/prefill)."""
+    b, s, h, dh = q.shape
+    k = _expand_kv(k, h)
+    v = _expand_kv(v, h)
+    scale = 1.0 / math.sqrt(dh)
+    q_chunk = min(q_chunk, s)
+    assert s % q_chunk == 0, (s, q_chunk)
+    band = window + q_chunk
+    # left-pad KV so every band slice is in range
+    kp = jnp.pad(k, ((0, 0), (band - q_chunk, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (band - q_chunk, 0), (0, 0), (0, 0)))
+    nq = s // q_chunk
+
+    def body(_, ci):
+        q_start = ci * q_chunk
+        qb = lax.dynamic_slice_in_dim(q, q_start, q_chunk, axis=1)
+        kb = lax.dynamic_slice_in_dim(kp, q_start, band, axis=1)
+        vb = lax.dynamic_slice_in_dim(vp, q_start, band, axis=1)
+        qpos = q_start + jnp.arange(q_chunk)
+        kpos = q_start - window + jnp.arange(band)
+        valid = (kpos[None, :] <= qpos[:, None]) & (kpos[None, :] > qpos[:, None] - window) & (kpos[None, :] >= 0)
+        sco = jnp.einsum("bqhd,bkhd->bhqk", (qb * scale).astype(jnp.float32), kb.astype(jnp.float32))
+        sco = jnp.where(valid[None, None], sco, _NEG)
+        p = jax.nn.softmax(sco, axis=-1)
+        ob = jnp.einsum("bhqk,bkhd->bqhd", p, vb.astype(jnp.float32))
+        return None, ob.astype(q.dtype)
+
+    _, chunks = lax.scan(body, None, jnp.arange(nq))
+    return chunks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, dh)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int | None = None):
+    """Single-token attention against a [B, S, Hkv, Dh] cache.  ``cache_len``
+    is the number of valid cache entries (scalar or [B])."""
+    b, _, h, dh = q.shape
+    k = _expand_kv(k_cache, h)
+    v = _expand_kv(v_cache, h)
+    scale = 1.0 / math.sqrt(dh)
+    s = jnp.einsum("bqhd,bkhd->bhqk", (q * scale).astype(jnp.float32), k.astype(jnp.float32))
+    pos = jnp.arange(k.shape[1])
+    cl = jnp.asarray(cache_len)
+    cl = cl[:, None] if cl.ndim == 1 else cl[None, None]
+    valid = pos[None, :] < cl  # [B or 1, S]
+    if window is not None:
+        valid = valid & (pos[None, :] >= cl - window)
+    s = jnp.where(valid[:, None, None, :], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (GQA + optional qk-norm + RoPE variants)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, d_model, n_heads, n_kv, head_dim, dtype, *, qk_norm=False, bias=False):
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (d_model, n_heads * head_dim), dtype),
+        "wk": dense_init(ks[1], (d_model, n_kv * head_dim), dtype),
+        "wv": dense_init(ks[2], (d_model, n_kv * head_dim), dtype),
+        "wo": dense_init(ks[3], (n_heads * head_dim, d_model), dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bo"] = jnp.zeros((d_model,), dtype)
+    if qk_norm:
+        p["q_norm"] = init_norm(head_dim, dtype)
+        p["k_norm"] = init_norm(head_dim, dtype)
+    return p
+
+
+def qkv_project(p, x, n_heads, n_kv, head_dim, *, qk_norm=False):
+    b, s, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, n_heads, head_dim)
+    k = k.reshape(b, s, n_kv, head_dim)
+    v = v.reshape(b, s, n_kv, head_dim)
+    if qk_norm:
+        q = rms_norm(q, p["q_norm"]["w"])
+        k = rms_norm(k, p["k_norm"]["w"])
+    return q, k, v
+
+
+def attn_output(p, o):
+    b, s, h, dh = o.shape
+    out = o.reshape(b, s, h * dh) @ p["wo"]
+    if "bo" in p:
+        out = out + p["bo"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, dtype, *, act="swiglu", bias=False):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        p = {
+            "wg": dense_init(ks[0], (d_model, d_ff), dtype),
+            "wu": dense_init(ks[1], (d_model, d_ff), dtype),
+            "wd": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    else:
+        p = {
+            "wu": dense_init(ks[0], (d_model, d_ff), dtype),
+            "wd": dense_init(ks[1], (d_ff, d_model), dtype),
+        }
+        if bias:
+            p["bu"] = jnp.zeros((d_ff,), dtype)
+            p["bd"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp(p, x, act="swiglu"):
+    if act == "swiglu":
+        return (jax.nn.silu(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+    h = x @ p["wu"]
+    if "bu" in p:
+        h = h + p["bu"]
+    h = jax.nn.gelu(h)
+    out = h @ p["wd"]
+    if "bd" in p:
+        out = out + p["bd"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits, labels, mask=None):
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

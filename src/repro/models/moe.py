@@ -1,0 +1,342 @@
+"""DeepSeek-style MoE transformer: Multi-head Latent Attention (MLA) +
+shared/routed experts with top-k token-choice routing and capacity dropping.
+
+Covers deepseek-v2-236b (160 routed top-6, 2 shared, kv_lora 512) and
+deepseek-v3-671b (256 routed top-8, 1 shared, + MTP head).
+
+TPU adaptation notes:
+* Routing uses the sort-based dispatch (argsort by expert id + capacity
+  padding) so expert matmuls are dense [E, C, d] x [E, d, ff] einsums that
+  map straight onto the MXU with the expert axis sharded over "model"
+  (expert parallelism).  GSPMD materializes the token shuffle as an
+  all-to-all — exactly the collective the roofline tracks.
+* Decode uses the *absorbed* MLA form: queries are projected into the
+  kv_lora latent space so the cache stays compressed [B, S, r + rope] and
+  no per-step [B, S, H, dh] key/value materialization happens.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+
+# ---------------------------------------------------------------------------
+# MLA attention
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ModelConfig):
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 6)
+    h, dn, dr, dv = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    p = {
+        "wq_a": L.dense_init(ks[0], (cfg.d_model, cfg.q_lora_rank), dt),
+        "q_norm": L.init_norm(cfg.q_lora_rank, dt),
+        "wq_b": L.dense_init(ks[1], (cfg.q_lora_rank, h * (dn + dr)), dt),
+        "wkv_a": L.dense_init(ks[2], (cfg.d_model, cfg.kv_lora_rank + dr), dt),
+        "kv_norm": L.init_norm(cfg.kv_lora_rank, dt),
+        "wk_b": L.dense_init(ks[3], (cfg.kv_lora_rank, h * dn), dt),
+        "wv_b": L.dense_init(ks[4], (cfg.kv_lora_rank, h * dv), dt),
+        "wo": L.dense_init(ks[5], (h * dv, cfg.d_model), dt),
+    }
+    return p
+
+
+def mla_qkv(p, x, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q = L.rms_norm(x @ p["wq_a"], p["q_norm"]["w"]) @ p["wq_b"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+    kv = x @ p["wkv_a"]
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank :]
+    c_kv = L.rms_norm(c_kv, p["kv_norm"]["w"])
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # [B,S,1,dr]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_attention(p, x, cfg: ModelConfig, positions):
+    """Prefill/training MLA: expand the latent back to per-head K/V."""
+    b, s, _ = x.shape
+    h, dn, dr, dv = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = mla_qkv(p, x, cfg, positions)
+    k_nope = (c_kv @ p["wk_b"]).reshape(b, s, h, dn)
+    v = (c_kv @ p["wv_b"]).reshape(b, s, h, dv)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))], axis=-1)
+    o = L.chunked_attention(q, k, v, causal=True, kv_chunk=cfg.kv_chunk)
+    return o.reshape(b, s, h * dv) @ p["wo"]
+
+
+def mla_decode(p, x, cache, pos, cfg: ModelConfig):
+    """Absorbed-form single-token MLA decode against the compressed cache."""
+    b = x.shape[0]
+    h, dn, dr, dv = cfg.num_heads, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r = cfg.kv_lora_rank
+    positions = pos[None]
+    q_nope, q_rope, c_kv_new, k_rope_new = mla_qkv(p, x, cfg, positions)
+    ckv = lax.dynamic_update_slice_in_dim(cache["ckv"], c_kv_new.astype(cache["ckv"].dtype), pos, axis=1)
+    krope = lax.dynamic_update_slice_in_dim(cache["krope"], k_rope_new[:, :, 0].astype(cache["krope"].dtype), pos, axis=1)
+    # absorb W_uk into q:  q_c [B,1,H,r]
+    wk = p["wk_b"].reshape(r, h, dn)
+    q_c = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), wk.astype(jnp.float32))
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dn + dr, jnp.float32))
+    s_c = jnp.einsum("bqhr,bkr->bhqk", q_c, ckv.astype(jnp.float32))
+    s_r = jnp.einsum("bqhd,bkd->bhqk", q_rope.astype(jnp.float32), krope.astype(jnp.float32))
+    s = (s_c + s_r) * scale
+    valid = jnp.arange(ckv.shape[1])[None, :] < (pos + 1)
+    s = jnp.where(valid[:, None, None, :] if valid.ndim == 2 else valid[None, None, None, :], s, -1e30)
+    pr = jax.nn.softmax(s, axis=-1)
+    ctx_c = jnp.einsum("bhqk,bkr->bqhr", pr, ckv.astype(jnp.float32))  # [B,1,H,r]
+    wv = p["wv_b"].reshape(r, h, dv)
+    o = jnp.einsum("bqhr,rhd->bqhd", ctx_c, wv.astype(jnp.float32)).astype(x.dtype)
+    out = o.reshape(b, 1, h * dv) @ p["wo"]
+    return out, {"ckv": ckv, "krope": krope}
+
+
+# ---------------------------------------------------------------------------
+# routed experts
+# ---------------------------------------------------------------------------
+
+
+def init_moe_ffn(key, cfg: ModelConfig):
+    dt = cfg.jdtype
+    ks = jax.random.split(key, 5)
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    p = {
+        "router": L.dense_init(ks[0], (d, e), jnp.float32),
+        "wg": L.dense_init(ks[1], (e, d, f), dt),
+        "wu": L.dense_init(ks[2], (e, d, f), dt),
+        "wd": L.dense_init(ks[3], (e, f, d), dt),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = L.init_mlp(ks[4], d, f * cfg.num_shared_experts, dt, act="swiglu")
+    return p
+
+
+def _capacity(num_tokens: int, cfg: ModelConfig) -> int:
+    c = int(num_tokens * cfg.top_k / cfg.num_experts * cfg.capacity_factor)
+    return max(c, cfg.top_k)
+
+
+def route_topk(router_logits, cfg: ModelConfig):
+    """Token-choice top-k with normalized gates (DeepSeek style)."""
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = lax.top_k(probs, cfg.top_k)  # [T, K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+    return probs, gate_vals, gate_idx
+
+
+def moe_ffn(p, x, cfg: ModelConfig):
+    """x [B, S, d] -> (out [B, S, d], aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.num_experts, cfg.top_k
+    cap = _capacity(t, cfg)
+    xf = x.reshape(t, d)
+    probs, gate_vals, gate_idx = route_topk(xf @ p["router"], cfg)
+
+    # ---- sort-based dispatch -------------------------------------------
+    flat_e = gate_idx.reshape(-1)  # [T*K]
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    lin = jnp.arange(t * k)
+    is_new = jnp.concatenate([jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]])
+    seg_start = lax.cummax(jnp.where(is_new, lin, 0))
+    rank_sorted = lin - seg_start
+    rank = jnp.zeros((t * k,), jnp.int32).at[order].set(rank_sorted.astype(jnp.int32))
+    keep = rank < cap
+    slot = jnp.where(keep, flat_e * cap + rank, e * cap)  # overflow -> scratch slot
+    # slot -> (token, k-choice) inverse map
+    tok_of_choice = jnp.arange(t * k) // k
+    slot_tok = jnp.full((e * cap + 1,), t, jnp.int32).at[slot].set(tok_of_choice.astype(jnp.int32))
+    slot_tok = slot_tok[: e * cap]
+    slot_valid = slot_tok < t
+    xf_pad = jnp.concatenate([xf, jnp.zeros((1, d), xf.dtype)], axis=0)
+    # dispatch in the model dtype: the [E, C, d] buffer is the layer's largest
+    # transient — keeping it bf16 halves MoE HBM traffic (EXPERIMENTS §Perf)
+    expert_in = xf_pad[slot_tok].reshape(e, cap, d).astype(cfg.jdtype)  # [E, C, d]
+
+    # ---- expert computation (MXU batched over the sharded expert axis) --
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", expert_in, p["wu"]
+    )
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["wd"]).reshape(e * cap, d)
+
+    # ---- combine ---------------------------------------------------------
+    gate_flat = gate_vals.reshape(-1)  # [T*K]
+    slot_gate = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(jnp.where(keep, gate_flat, 0.0))
+    slot_gate = slot_gate[: e * cap]
+    contrib = expert_out.astype(jnp.float32) * (slot_gate * slot_valid)[:, None]
+    out = jnp.zeros((t + 1, d), jnp.float32).at[slot_tok].add(contrib)[:t]
+    out = out.astype(x.dtype).reshape(b, s, d)
+
+    # ---- auxiliary load-balance loss (Switch/DeepSeek style) ------------
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    ce = jnp.mean(jax.nn.one_hot(gate_idx, e).sum(axis=1), axis=0)  # token frac
+    aux = e * jnp.sum(me * ce)
+
+    if "shared" in p:
+        out = out + L.mlp(p["shared"], x, "swiglu")
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, *, dense_ffn: bool):
+    dt = cfg.jdtype
+    k1, k2 = jax.random.split(key)
+    p = {
+        "ln1": L.init_norm(cfg.d_model, dt),
+        "attn": init_mla(k1, cfg),
+        "ln2": L.init_norm(cfg.d_model, dt),
+    }
+    if dense_ffn:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, dt, act="swiglu")
+    else:
+        p["moe"] = init_moe_ffn(k2, cfg)
+    return p
+
+
+def init_params(key, cfg: ModelConfig):
+    nd = cfg.first_dense_layers
+    keys = jax.random.split(key, cfg.num_layers + 4)
+    dense_blocks = [init_block(keys[i], cfg, dense_ffn=True) for i in range(nd)]
+    moe_blocks = [init_block(keys[i], cfg, dense_ffn=False) for i in range(nd, cfg.num_layers)]
+    stack = lambda blocks: jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    dt = cfg.jdtype
+    params = {
+        "embed": L.dense_init(keys[-1], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "dense_blocks": stack(dense_blocks) if dense_blocks else None,
+        "moe_blocks": stack(moe_blocks),
+        "ln_f": L.init_norm(cfg.d_model, dt),
+        "head": L.dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), dt),
+    }
+    if cfg.mtp:
+        k1, k2 = jax.random.split(keys[-3])
+        params["mtp"] = {
+            "proj": L.dense_init(k1, (2 * cfg.d_model, cfg.d_model), dt),
+            "block": init_block(k2, cfg, dense_ffn=True),
+            "ln": L.init_norm(cfg.d_model, dt),
+        }
+    return params
+
+
+def _block_fwd(cfg, p, x, positions, *, dense_ffn: bool):
+    h = L.rms_norm(x, p["ln1"]["w"])
+    x = x + mla_attention(p["attn"], h, cfg, positions)
+    h = L.rms_norm(x, p["ln2"]["w"])
+    if dense_ffn:
+        return x + L.mlp(p["mlp"], h, "swiglu"), 0.0
+    out, aux = moe_ffn(p["moe"], h, cfg)
+    return x + out, aux
+
+
+def forward(params, tokens, cfg: ModelConfig, *, return_hidden=False, last_only: bool = False):
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, cfg.jdtype)
+    s = tokens.shape[1]
+    positions = jnp.arange(s)
+    aux_total = jnp.zeros((), jnp.float32)
+    if params.get("dense_blocks") is not None:
+        def dbody(carry, lp):
+            x, aux = carry
+            x, a = _block_fwd(cfg, lp, x, positions, dense_ffn=True)
+            return (x, aux + a), None
+        dbody = jax.checkpoint(dbody) if cfg.remat else dbody
+        (x, aux_total), _ = lax.scan(dbody, (x, aux_total), params["dense_blocks"])
+
+    def mbody(carry, lp):
+        x, aux = carry
+        x, a = _block_fwd(cfg, lp, x, positions, dense_ffn=False)
+        return (x, aux + a), None
+
+    mbody = jax.checkpoint(mbody) if cfg.remat else mbody
+    (x, aux_total), _ = lax.scan(mbody, (x, aux_total), params["moe_blocks"])
+    if last_only:
+        x = x[:, -1:]
+    h_final = L.rms_norm(x, params["ln_f"]["w"])
+    logits = h_final @ params["head"]
+    if return_hidden:
+        return logits, aux_total, x
+    return logits, aux_total
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    if cfg.mtp:
+        logits, aux, hidden = forward(params, inputs, cfg, return_hidden=True)
+        loss = L.softmax_xent(logits, labels)
+        # MTP: predict token t+2 from hidden_t combined with emb(token_{t+1})
+        emb_next = params["embed"][inputs[:, 1:]] * jnp.asarray(cfg.d_model ** 0.5, cfg.jdtype)
+        h_in = jnp.concatenate(
+            [L.rms_norm(hidden[:, :-1], params["mtp"]["ln"]["w"]), emb_next], axis=-1
+        ) @ params["mtp"]["proj"]
+        positions = jnp.arange(h_in.shape[1])
+        h_mtp, _ = _block_fwd(cfg, params["mtp"]["block"], h_in, positions, dense_ffn=True)
+        logits2 = L.rms_norm(h_mtp, params["ln_f"]["w"]) @ params["head"]
+        mtp_loss = L.softmax_xent(logits2[:, :-1], labels[:, 2:] if labels.shape[1] > 2 else labels[:, -1:])
+        loss = loss + cfg.mtp_weight * mtp_loss
+    else:
+        logits, aux = forward(params, inputs, cfg)
+        loss = L.softmax_xent(logits, labels)
+    return loss + cfg.router_aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.jdtype
+    nd = cfg.first_dense_layers
+    nm = cfg.num_layers - nd
+    mk = lambda n: {
+        "ckv": jnp.zeros((n, batch, max_len, cfg.kv_lora_rank), dt),
+        "krope": jnp.zeros((n, batch, max_len, cfg.qk_rope_head_dim), dt),
+    }
+    return {"dense": mk(nd) if nd else None, "moe": mk(nm), "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, cfg.jdtype)
+    pos = cache["pos"]
+
+    def make_body(dense_ffn):
+        def body(x, inputs):
+            lp, ckv, krope = inputs
+            h = L.rms_norm(x, lp["ln1"]["w"])
+            att, newc = mla_decode(lp["attn"], h, {"ckv": ckv, "krope": krope}, pos, cfg)
+            x = x + att
+            h = L.rms_norm(x, lp["ln2"]["w"])
+            if dense_ffn:
+                x = x + L.mlp(lp["mlp"], h, "swiglu")
+            else:
+                out, _ = moe_ffn(lp["moe"], h, cfg)
+                x = x + out
+            return x, (newc["ckv"], newc["krope"])
+        return body
+
+    new_cache = {"pos": pos + 1, "dense": None}
+    if params.get("dense_blocks") is not None:
+        x, (ck, kr) = lax.scan(
+            make_body(True), x,
+            (params["dense_blocks"], cache["dense"]["ckv"], cache["dense"]["krope"]),
+        )
+        new_cache["dense"] = {"ckv": ck, "krope": kr}
+    x, (ck, kr) = lax.scan(
+        make_body(False), x,
+        (params["moe_blocks"], cache["moe"]["ckv"], cache["moe"]["krope"]),
+    )
+    new_cache["moe"] = {"ckv": ck, "krope": kr}
+    logits = L.rms_norm(x, params["ln_f"]["w"]) @ params["head"]
+    return logits, new_cache

@@ -1,0 +1,89 @@
+"""Small models for the paper's own MNIST experiments (Sec. V):
+the one-vs-all linear classifier with squared hinge loss (V-A, convex) and a
+small CNN (V-B, nonconvex).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+# ---------------------------------------------------------------------------
+# linear classifier, squared hinge (strictly convex with L2 reg)
+# ---------------------------------------------------------------------------
+
+
+def init_linear(key, d_in: int = 784, n_classes: int = 10):
+    return {
+        "w": 0.01 * jax.random.normal(key, (d_in, n_classes), jnp.float32),
+        "b": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def linear_loss(params, batch, *, l2: float = 1e-4):
+    """One-vs-all squared hinge: batch = (x [N, d], y [N] int labels)."""
+    x, y = batch
+    scores = x @ params["w"] + params["b"]  # [N, C]
+    targets = 2.0 * jax.nn.one_hot(y, scores.shape[1]) - 1.0  # +-1
+    margins = jnp.maximum(0.0, 1.0 - targets * scores)
+    loss = jnp.mean(jnp.sum(margins**2, axis=1))
+    reg = l2 * (jnp.sum(params["w"] ** 2) + jnp.sum(params["b"] ** 2))
+    return loss + reg
+
+
+def linear_accuracy(params, x, y):
+    pred = jnp.argmax(x @ params["w"] + params["b"], axis=1)
+    return jnp.mean((pred == y).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# small CNN (2 conv + 2 fc), nonconvex
+# ---------------------------------------------------------------------------
+
+
+def init_cnn(key, n_classes: int = 10, c1: int = 8, c2: int = 16, fc: int = 64):
+    ks = jax.random.split(key, 4)
+    he = lambda k, shape, fan: (jnp.sqrt(2.0 / fan) * jax.random.normal(k, shape, jnp.float32))
+    return {
+        "conv1": he(ks[0], (3, 3, 1, c1), 9),
+        "conv2": he(ks[1], (3, 3, c1, c2), 9 * c1),
+        "fc1": he(ks[2], (7 * 7 * c2, fc), 7 * 7 * c2),
+        "b1": jnp.zeros((fc,), jnp.float32),
+        "fc2": he(ks[3], (fc, n_classes), fc),
+        "b2": jnp.zeros((n_classes,), jnp.float32),
+    }
+
+
+def _conv(x, w):
+    return lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def _maxpool(x):
+    return lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_logits(params, x):
+    """x [N, 28, 28, 1] -> [N, C]."""
+    h = jax.nn.relu(_conv(x, params["conv1"]))
+    h = _maxpool(h)
+    h = jax.nn.relu(_conv(h, params["conv2"]))
+    h = _maxpool(h)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"] + params["b1"])
+    return h @ params["fc2"] + params["b2"]
+
+
+def cnn_loss(params, batch):
+    x, y = batch
+    logits = cnn_logits(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def cnn_accuracy(params, x, y):
+    pred = jnp.argmax(cnn_logits(params, x), axis=1)
+    return jnp.mean((pred == y).astype(jnp.float32))

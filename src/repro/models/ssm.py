@@ -1,0 +1,392 @@
+"""State-space / linear-recurrence families: Mamba2 blocks and RWKV6 (Finch).
+
+Both use chunked recurrences: the heavy intra-chunk work is expressed as
+batched matmuls *outside* any sequential loop (vectorized over chunks), and
+only the tiny inter-chunk state carry runs in a lax.scan — this keeps HLO
+FLOPs attributable and makes the MXU do the work, which is the TPU-native
+formulation of the SSD duality (Mamba2 paper) and of RWKV's WKV kernel.
+
+Decode is O(1) in sequence length: the state tensor is the whole cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    dt = cfg.jdtype
+    d = cfg.d_model
+    din = cfg.mamba_expand * d
+    nh = din // cfg.mamba_headdim
+    n = cfg.ssm_state
+    ks = jax.random.split(key, 4)
+    conv_dim = din + 2 * n
+    return {
+        "norm": L.init_norm(d, dt),
+        "in_proj": L.dense_init(ks[0], (d, 2 * din + 2 * n + nh), dt),
+        "conv_w": 0.1 * jax.random.normal(ks[1], (cfg.conv_kernel, conv_dim), jnp.float32).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_norm": L.init_norm(din, dt),
+        "out_proj": L.dense_init(ks[2], (din, d), dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """Depthwise causal conv along time.  x [B, S, C]; w [K, C].
+    If ``state`` [B, K-1, C] is given (decode), uses it as left context and
+    returns the updated state."""
+    k = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i : i + x.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    new_state = xp[:, -(k - 1) :] if k > 1 else None
+    return jax.nn.silu(out).astype(x.dtype), new_state
+
+
+def ssd_chunked(xh, bmat, cmat, dt_a, chunk: int):
+    """Chunked SSD linear recurrence.
+
+    xh [B, S, H, P] inputs, bmat/cmat [B, S, N] (single group), dt_a [B, S, H]
+    log-decay per step (negative).  Returns y [B, S, H, P].
+
+    Within a chunk:   y_t = C_t . sum_{s<=t} (prod decay) B_s x_s
+    expressed as a masked [c, c] attention-like matmul; across chunks the
+    state h [B, H, P, N] carries with a tiny scan.
+    """
+    b, s, h, p = xh.shape
+    n = bmat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    xc = xh.reshape(b, nc, chunk, h, p)
+    bc = bmat.reshape(b, nc, chunk, n)
+    cc = cmat.reshape(b, nc, chunk, n)
+    ac = dt_a.reshape(b, nc, chunk, h)  # log decay per step (<= 0)
+    cum = jnp.cumsum(ac, axis=2)  # [B,nc,c,H] within-chunk cumulative log decay
+
+    # intra-chunk (vectorized over chunks; mask = causal with decay ratios)
+    li = cum[:, :, :, None, :]  # [B,nc,c,1,H] at t
+    lj = cum[:, :, None, :, :]  # [B,nc,1,c,H] at s
+    decay = jnp.exp(jnp.minimum(li - lj, 0.0))  # exp(cum_t - cum_s)
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    g = jnp.einsum("bktn,bksn->bkts", cc, bc)  # [B,nc,c,c]
+    w = g[..., None] * decay * causal[None, None, :, :, None]  # [B,nc,t,s,H]
+    y_intra = jnp.einsum("bktsh,bkshp->bkthp", w, xc.astype(jnp.float32))
+
+    # chunk-final states and inter-chunk carry
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)  # decay from step to chunk end
+    bx = jnp.einsum("bksn,bkshp,bksh->bkhpn", bc, xc.astype(jnp.float32), tail)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nc,H] total chunk decay
+
+    def carry_body(hstate, inp):
+        bx_k, dec_k = inp  # [B,H,P,N], [B,H]
+        h_in = hstate
+        hstate = hstate * dec_k[..., None, None] + bx_k
+        return hstate, h_in
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    _, h_prev = lax.scan(
+        carry_body, h0,
+        (bx.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N] state entering chunk
+
+    # inter-chunk contribution: y_t += C_t . (decay to t) h_prev
+    head_decay = jnp.exp(cum)  # [B,nc,c,H] decay from chunk start to t
+    y_inter = jnp.einsum("bktn,bkhpn,bkth->bkthp", cc, h_prev, head_decay)
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y
+
+
+def mamba2_forward(p, x, cfg: ModelConfig, chunk: int = 128):
+    b, s, d = x.shape
+    din = cfg.mamba_expand * d
+    nh = din // cfg.mamba_headdim
+    hp = cfg.mamba_headdim
+    n = cfg.ssm_state
+    h = L.rms_norm(x, p["norm"]["w"])
+    proj = h @ p["in_proj"]
+    z, xi, bmat, cmat, dt = jnp.split(proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xi, bmat, cmat], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"], p["conv_b"])
+    xi, bmat, cmat = jnp.split(conv_out, [din, din + n], axis=-1)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(p["a_log"])  # [H] negative
+    dt_a = dtv * a  # log decay
+    xh = (xi.astype(jnp.float32) * dtv[..., None].repeat(hp, axis=-1).reshape(b, s, din)).reshape(b, s, nh, hp)
+    y = ssd_chunked(xh, bmat.astype(jnp.float32), cmat.astype(jnp.float32), dt_a, chunk)
+    y = y + p["d_skip"][None, None, :, None] * xi.reshape(b, s, nh, hp).astype(jnp.float32)
+    y = y.reshape(b, s, din).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["out_norm"]["w"])
+    return x + y @ p["out_proj"]
+
+
+def mamba2_decode(p, x, state, cfg: ModelConfig):
+    """One-step Mamba2.  state = {"h": [B,H,P,N], "conv": [B,K-1,C]}."""
+    b, _, d = x.shape
+    din = cfg.mamba_expand * d
+    nh = din // cfg.mamba_headdim
+    hp = cfg.mamba_headdim
+    n = cfg.ssm_state
+    h = L.rms_norm(x, p["norm"]["w"])
+    proj = h @ p["in_proj"]
+    z, xi, bmat, cmat, dt = jnp.split(proj, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xi, bmat, cmat], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"], p["conv_b"], state["conv"])
+    xi, bmat, cmat = jnp.split(conv_out, [din, din + n], axis=-1)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["a_log"])
+    dec = jnp.exp(dtv * a)  # [B,H]
+    xh = (xi[:, 0].astype(jnp.float32) * dtv.repeat(hp, axis=-1).reshape(b, din)).reshape(b, nh, hp)
+    hs = state["h"] * dec[..., None, None] + jnp.einsum("bn,bhp->bhpn", bmat[:, 0].astype(jnp.float32), xh)
+    y = jnp.einsum("bn,bhpn->bhp", cmat[:, 0].astype(jnp.float32), hs)
+    y = y + p["d_skip"][None, :, None] * xi[:, 0].reshape(b, nh, hp).astype(jnp.float32)
+    y = y.reshape(b, 1, din).astype(x.dtype)
+    y = L.rms_norm(y * jax.nn.silu(z), p["out_norm"]["w"])
+    return x + y @ p["out_proj"], {"h": hs, "conv": conv_state}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    din = cfg.mamba_expand * d
+    nh = din // cfg.mamba_headdim
+    return {
+        "h": jnp.zeros((batch, nh, cfg.mamba_headdim, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_kernel - 1, din + 2 * cfg.ssm_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) block
+# ---------------------------------------------------------------------------
+
+
+def init_rwkv6(key, cfg: ModelConfig):
+    dt = cfg.jdtype
+    d = cfg.d_model
+    nh = d // cfg.mamba_headdim  # head_dim reuse: rwkv head size
+    ks = jax.random.split(key, 10)
+    lora = 64
+    return {
+        "ln1": L.init_norm(d, dt),
+        "mu": 0.5 * jnp.ones((5, d), dt),  # token-shift mixes for r,k,v,g,w
+        "wr": L.dense_init(ks[0], (d, d), dt),
+        "wk": L.dense_init(ks[1], (d, d), dt),
+        "wv": L.dense_init(ks[2], (d, d), dt),
+        "wg": L.dense_init(ks[3], (d, d), dt),
+        "w0": -6.0 * jnp.ones((d,), jnp.float32),  # base log-log decay
+        "w_lora_a": L.dense_init(ks[4], (d, lora), dt),
+        "w_lora_b": L.dense_init(ks[5], (lora, d), dt, scale=0.01),
+        "bonus": jnp.zeros((nh, cfg.mamba_headdim), jnp.float32),
+        "gn": L.init_norm(d, dt),
+        "wo": L.dense_init(ks[6], (d, d), dt),
+        "ln2": L.init_norm(d, dt),
+        "cm_mu": 0.5 * jnp.ones((2, d), dt),  # channel-mix token shift (k, r)
+        "cm_k": L.dense_init(ks[7], (d, cfg.d_ff), dt),
+        "cm_v": L.dense_init(ks[8], (cfg.d_ff, d), dt),
+        "cm_r": L.dense_init(ks[9], (d, d), dt),
+    }
+
+
+def _token_shift(x, prev=None):
+    """x [B,S,D] -> previous-token tensor (zero or given left context)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def wkv6_chunked(r, k, v, w_log, bonus, nh: int, chunk: int = 64):
+    """Chunked WKV6: per-head linear attention with data-dependent per-channel
+    decay.  r,k,v [B,S,D]; w_log [B,S,D] (log decay); bonus [H, hd].
+
+    Recurrence (matches ``rwkv6_decode``):
+        y_t = r_t . ( S_{t-1} + exp(u) ⊙ k_t v_t^T ),
+        S_t = diag(exp(w_t)) S_{t-1} + k_t v_t^T
+    so the s<t coefficient is exp(cum_{t-1} - cum_s) per channel.  We factor it
+    as A_t = r_t exp(cum_{t-1}) (<= e since cum <= 0) and
+    B_s = k_s exp(-cum_s) (<= exp(chunk * |w|_max)); w_log is clamped to
+    >= -1 and chunk <= 64 keeps |cum| <= 64 < log(fp32_max) ~ 88, so the
+    factored MXU form cannot overflow.  Returns [B,S,D] (fp32).
+    """
+    b, s, d = r.shape
+    hd = d // nh
+    w_log = jnp.clip(w_log, -1.0, -1e-6)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    shp = (b, nc, chunk, nh, hd)
+    rc, kc, vc, wc = (t.astype(jnp.float32).reshape(shp) for t in (r, k, v, w_log))
+    cum = jnp.cumsum(wc, axis=2)  # [b,nc,c,h,hd], decreasing, <= 0
+
+    # intra-chunk:  att[t,s] = sum_d r_t exp(cum_{t-1}) . k_s exp(-cum_s)
+    a_t = rc * jnp.exp(cum - wc)  # exp(cum_{t-1}) = exp(cum_t - w_t)
+    b_s = kc * jnp.exp(-cum)
+    att = jnp.einsum("bkthd,bkshd->bkhts", a_t, b_s)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)  # strictly past
+    att = jnp.where(mask[None, None, None], att, 0.0)
+    y_intra = jnp.einsum("bkhts,bkshd->bkthd", att, vc)
+
+    # diagonal bonus term: (r_t . exp(u) k_t) v_t
+    diag = jnp.einsum("bkthd,bkthd->bkth", rc, kc * jnp.exp(bonus)[None, None, None])
+    y_diag = diag[..., None] * vc
+
+    # inter-chunk state carry: S [B,H,hd_k,hd_v]
+    tail = jnp.exp(cum[:, :, -1:] - cum)  # decay from s to chunk end, <= 1
+    kx = jnp.einsum("bkshd,bkshe->bkhde", kc * tail, vc)
+    chunk_dec = jnp.exp(cum[:, :, -1])  # [b,nc,h,hd]
+
+    def carry(hstate, inp):
+        kx_k, dec_k = inp
+        h_in = hstate
+        hstate = hstate * dec_k[..., None] + kx_k
+        return hstate, h_in
+
+    h0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+    _, h_prev = lax.scan(carry, h0, (kx.transpose(1, 0, 2, 3, 4), chunk_dec.transpose(1, 0, 2, 3)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)  # [b,nc,h,hd,hd] state entering chunk
+    y_inter = jnp.einsum("bkthd,bkhde->bkthe", a_t, h_prev)
+    y = (y_intra + y_diag + y_inter).reshape(b, s, d)
+    return y
+
+
+def rwkv6_block(p, x, cfg: ModelConfig, chunk: int = 128):
+    b, s, d = x.shape
+    nh = d // cfg.mamba_headdim
+    h = L.rms_norm(x, p["ln1"]["w"])
+    prev = _token_shift(h)
+    mix = lambda i: h + (prev - h) * p["mu"][i]
+    r = mix(0) @ p["wr"]
+    k = mix(1) @ p["wk"]
+    v = mix(2) @ p["wv"]
+    g = jax.nn.silu(mix(3) @ p["wg"])
+    w_log = -jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + (jnp.tanh(mix(4) @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    )  # [B,S,D], <= 0
+    y = wkv6_chunked(r, k, v, w_log, p["bonus"], nh, chunk=min(chunk, s))
+    y = L.rms_norm(y.astype(x.dtype), p["gn"]["w"]) * g
+    x = x + y @ p["wo"]
+    # channel mix
+    h2 = L.rms_norm(x, p["ln2"]["w"])
+    prev2 = _token_shift(h2)
+    km = h2 + (prev2 - h2) * p["cm_mu"][0]
+    rm = h2 + (prev2 - h2) * p["cm_mu"][1]
+    vv = jnp.square(jax.nn.relu(km @ p["cm_k"])) @ p["cm_v"]
+    return x + jax.nn.sigmoid(rm @ p["cm_r"]) * vv
+
+
+def rwkv6_decode(p, x, state, cfg: ModelConfig):
+    """One-step RWKV6.  state = {"wkv": [B,H,hd,hd], "shift1": [B,D],
+    "shift2": [B,D]}."""
+    b, _, d = x.shape
+    nh = d // cfg.mamba_headdim
+    hd = cfg.mamba_headdim
+    h = L.rms_norm(x, p["ln1"]["w"])[:, 0]  # [B,D]
+    prev = state["shift1"]
+    mix = lambda i: h + (prev - h) * p["mu"][i]
+    r = (mix(0) @ p["wr"]).reshape(b, nh, hd)
+    k = (mix(1) @ p["wk"]).reshape(b, nh, hd)
+    v = (mix(2) @ p["wv"]).reshape(b, nh, hd)
+    g = jax.nn.silu(mix(3) @ p["wg"])
+    w_log = -jnp.exp(
+        p["w0"].astype(jnp.float32)
+        + (jnp.tanh(mix(4) @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    ).reshape(b, nh, hd)
+    w_log = jnp.clip(w_log, -1.0, -1e-6)  # match wkv6_chunked
+    u = p["bonus"].reshape(nh, hd)
+    kv = jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhde->bhe", r.astype(jnp.float32), state["wkv"] + jnp.exp(u)[None, ..., None] * kv)
+    wkv_new = state["wkv"] * jnp.exp(w_log)[..., None] + kv
+    y = y.reshape(b, 1, d).astype(x.dtype)
+    y = L.rms_norm(y, p["gn"]["w"]) * g[:, None]
+    x = x + y @ p["wo"]
+    h2 = L.rms_norm(x, p["ln2"]["w"])[:, 0]
+    prev2 = state["shift2"]
+    km = h2 + (prev2 - h2) * p["cm_mu"][0]
+    rm = h2 + (prev2 - h2) * p["cm_mu"][1]
+    vv = jnp.square(jax.nn.relu(km @ p["cm_k"])) @ p["cm_v"]
+    x = x + (jax.nn.sigmoid(rm @ p["cm_r"]) * vv)[:, None]
+    return x, {"wkv": wkv_new, "shift1": h, "shift2": h2}
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    nh = d // cfg.mamba_headdim
+    return {
+        "wkv": jnp.zeros((batch, nh, cfg.mamba_headdim, cfg.mamba_headdim), jnp.float32),
+        "shift1": jnp.zeros((batch, d), cfg.jdtype),
+        "shift2": jnp.zeros((batch, d), cfg.jdtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# full RWKV6 model
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig):
+    keys = jax.random.split(key, cfg.num_layers + 2)
+    blocks = [init_rwkv6(keys[i], cfg) for i in range(cfg.num_layers)]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *blocks)
+    dt = cfg.jdtype
+    return {
+        "embed": L.dense_init(keys[-1], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+        "blocks": stacked,
+        "ln_f": L.init_norm(cfg.d_model, dt),
+        "head": L.dense_init(keys[-2], (cfg.d_model, cfg.vocab_size), dt),
+    }
+
+
+def forward(params, tokens, cfg: ModelConfig, *, last_only: bool = False):
+    x = params["embed"][tokens]
+
+    def body(x, lp):
+        return rwkv6_block(lp, x, cfg), None
+
+    scan_body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = lax.scan(scan_body, x, params["blocks"])
+    if last_only:
+        x = x[:, -1:]
+    return L.rms_norm(x, params["ln_f"]["w"]) @ params["head"]
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    logits = forward(params, tokens[:, :-1], cfg)
+    return L.softmax_xent(logits, tokens[:, 1:])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0, dtype=None):
+    state = init_rwkv_state(cfg, batch)
+    stacked = jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l[None], (cfg.num_layers,) + l.shape), state
+    )
+    return {"state": stacked, "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = params["embed"][tokens]
+
+    def body(x, inputs):
+        lp, st = inputs
+        x, st_new = rwkv6_decode(lp, x, st, cfg)
+        return x, st_new
+
+    x, new_state = lax.scan(body, x, (params["blocks"], cache["state"]))
+    logits = L.rms_norm(x, params["ln_f"]["w"]) @ params["head"]
+    return logits, {"state": new_state, "pos": cache["pos"] + 1}

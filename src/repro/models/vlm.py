@@ -1,0 +1,68 @@
+"""Qwen2-VL-style vision-language model (language backbone only).
+
+Per the assignment carve-out, the ViT vision encoder + projector is a STUB:
+``input_specs`` supplies precomputed patch embeddings [B, N_img, d] which are
+prefix-injected in place of the first N_img token embeddings.  The backbone
+is the dense decoder with M-RoPE — three rotary sections (t, h, w) driven by
+3-component position ids (text tokens advance all three together; image
+patches advance h/w over the grid at a constant t).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import dense, layers as L
+from repro.models.config import ModelConfig
+
+init_params = dense.init_params
+init_cache = dense.init_cache
+
+
+def make_mrope_positions(batch: int, seq: int, n_img: int, grid: int | None = None):
+    """Default M-RoPE position ids [3, B, S]: image patches occupy a
+    sqrt(N)xsqrt(N) grid at t=0; text follows with t=h=w advancing."""
+    import math
+
+    if grid is None:
+        grid = max(int(math.isqrt(max(n_img, 1))), 1)
+    t = jnp.concatenate([jnp.zeros((n_img,), jnp.int32), jnp.arange(seq - n_img, dtype=jnp.int32) + 1])
+    hh = jnp.concatenate([jnp.arange(n_img, dtype=jnp.int32) // grid, jnp.arange(seq - n_img, dtype=jnp.int32) + grid])
+    ww = jnp.concatenate([jnp.arange(n_img, dtype=jnp.int32) % grid, jnp.arange(seq - n_img, dtype=jnp.int32) + grid])
+    pos = jnp.stack([t, hh, ww])  # [3, S]
+    return jnp.broadcast_to(pos[:, None], (3, batch, seq))
+
+
+def merge_embeds(params, tokens, image_embeds, cfg: ModelConfig):
+    emb = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5, cfg.jdtype)
+    n_img = image_embeds.shape[1]
+    return jnp.concatenate([image_embeds.astype(emb.dtype), emb[:, n_img:]], axis=1)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    x = merge_embeds(params, tokens, batch["image_embeds"], cfg)
+    mpos = batch.get("mrope_positions")
+    if mpos is None:
+        mpos = make_mrope_positions(tokens.shape[0], tokens.shape[1], batch["image_embeds"].shape[1])
+    return dense.forward(params, tokens, cfg, input_embeds=x, mrope_positions=mpos)
+
+
+def train_loss(params, batch, cfg: ModelConfig):
+    tokens = batch["tokens"]
+    inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    n_img = batch["image_embeds"].shape[1]
+    sub = dict(batch, tokens=inputs)
+    if "mrope_positions" in batch:
+        sub["mrope_positions"] = batch["mrope_positions"][:, :, :-1]
+    logits = forward(params, sub, cfg)
+    # only text positions contribute to the LM loss
+    mask = (jnp.arange(labels.shape[1])[None, :] >= n_img).astype(jnp.float32)
+    mask = jnp.broadcast_to(mask, labels.shape)
+    return L.softmax_xent(logits, labels, mask)
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    pos = cache["pos"]
+    mpos = jnp.broadcast_to(pos[None, None, None], (3, tokens.shape[0], 1)).astype(jnp.int32)
+    return dense.decode_step(params, cache, tokens, cfg, mrope_positions=mpos)

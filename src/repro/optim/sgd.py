@@ -1,0 +1,93 @@
+"""Optimizers and step-size schedules.
+
+The paper's analyzed setting is plain (sub)gradient descent with the
+decreasing schedule rho(t) = 1/(lam (t0 + t)) — ``bridge_schedule``.  The
+BRIDGE update itself is y - rho*g (no optimizer state); momentum and AdamW
+are provided as beyond-paper options for the LLM examples (applied to the
+*post-screening* iterate, preserving the screen-then-step structure).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def bridge_schedule(lam: float = 1.0, t0: float = 50.0):
+    def rho(t):
+        return 1.0 / (lam * (t0 + t))
+
+    return rho
+
+
+def constant_schedule(lr: float):
+    def rho(t):
+        return jnp.asarray(lr, jnp.float32)
+
+    return rho
+
+
+def cosine_schedule(peak: float, total_steps: int, warmup: int = 0):
+    def rho(t):
+        t = jnp.asarray(t, jnp.float32)
+        warm = peak * t / jnp.maximum(warmup, 1)
+        frac = jnp.clip((t - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * peak * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(t < warmup, warm, cos)
+
+    return rho
+
+
+# ---------------------------------------------------------------------------
+# momentum
+# ---------------------------------------------------------------------------
+
+
+def momentum_init(params: Any) -> Any:
+    return jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def momentum_update(grads, state, *, beta: float = 0.9):
+    new_state = jax.tree_util.tree_map(
+        lambda m, g: beta * m + g.astype(jnp.float32), state, grads
+    )
+    return new_state, new_state
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jax.Array
+
+
+def adamw_init(params: Any) -> AdamWState:
+    z = lambda p: jnp.zeros_like(p, jnp.float32)
+    return AdamWState(
+        mu=jax.tree_util.tree_map(z, params),
+        nu=jax.tree_util.tree_map(z, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(params, grads, state: AdamWState, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.0):
+    count = state.count + 1
+    mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+    nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, m, v):
+        step = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+        if weight_decay:
+            step = step + lr * weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+    return new_params, AdamWState(mu, nu, count)

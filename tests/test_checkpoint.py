@@ -1,0 +1,40 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.asarray([1, 2], jnp.int32)},
+            "t": jnp.asarray(7, jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    tree = _tree()
+    checkpoint.save(str(tmp_path), 3, tree)
+    out, step = checkpoint.restore(str(tmp_path), jax.tree_util.tree_map(jnp.zeros_like, tree))
+    assert step == 3
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_latest_step(tmp_path):
+    assert checkpoint.latest_step(str(tmp_path)) is None
+    checkpoint.save(str(tmp_path), 1, _tree())
+    checkpoint.save(str(tmp_path), 12, _tree())
+    assert checkpoint.latest_step(str(tmp_path)) == 12
+
+
+def test_shape_mismatch_raises(tmp_path):
+    checkpoint.save(str(tmp_path), 1, _tree())
+    bad = {"a": jnp.zeros((3, 3)), "b": {"c": jnp.zeros(2, jnp.int32)}, "t": jnp.zeros((), jnp.int32)}
+    with pytest.raises(ValueError):
+        checkpoint.restore(str(tmp_path), bad)
+
+
+def test_missing_dir_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        checkpoint.restore(str(tmp_path / "nope"), _tree())

@@ -1,0 +1,76 @@
+"""Extra screening rules (geometric median, centered clipping) and the
+int8-quantized gossip: robustness + rank-preservation properties."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BridgeConfig, BridgeTrainer, complete_graph, erdos_renyi, replicate, screen_all
+from repro.core.gossip import _quantize_int8
+
+
+def test_geomedian_resists_outliers():
+    m, b = 15, 2
+    topo = complete_graph(m, b)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(0, 0.1, (m, 6)), jnp.float32)
+    w = w.at[3].set(1e3).at[7].set(-1e3)
+    honest = np.setdiff1d(np.arange(m), [3, 7])
+    y = np.asarray(screen_all(w, jnp.asarray(topo.adjacency), rule="geomedian", b=b))[honest]
+    # geometric median stays near the honest cluster despite huge outliers
+    assert np.abs(y).max() < 1.0
+
+
+def test_clipped_mean_bounds_influence():
+    m = 10
+    topo = complete_graph(m, 1)
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(0, 0.1, (m, 4)), jnp.float32)
+    w_attacked = w.at[2].set(1e4)
+    y0 = np.asarray(screen_all(w, jnp.asarray(topo.adjacency), rule="clipped_mean", b=1))
+    y1 = np.asarray(screen_all(w_attacked, jnp.asarray(topo.adjacency), rule="clipped_mean", b=1))
+    # a single byzantine neighbor swaps its clipped delta (norm <= tau) for
+    # another (norm <= tau): output moves by at most 2*tau/|N_j|
+    honest = [i for i in range(m) if i != 2]
+    assert np.linalg.norm(y1[honest] - y0[honest], axis=1).max() <= 2.0 / 9 + 1e-5
+
+
+@pytest.mark.parametrize("rule", ["geomedian", "clipped_mean"])
+def test_extra_rules_train_quadratic(rule):
+    m, b, d = 12, 2, 5
+    topo = erdos_renyi(m, 0.8, b, seed=1)
+    rng = np.random.default_rng(0)
+    targets = jnp.asarray(rng.normal(size=(m, d)), jnp.float32)
+
+    def grad_fn(params, batch):
+        w, c = params["w"], batch
+        return 0.5 * jnp.sum((w - c) ** 2), {"w": w - c}
+
+    cfg = BridgeConfig(topology=topo, rule=rule, num_byzantine=b, attack="random", t0=10)
+    tr = BridgeTrainer(cfg, grad_fn)
+    params = replicate({"w": jnp.zeros(d)}, m, perturb=0.1, key=jax.random.PRNGKey(0))
+    st = tr.init(params)
+    for _ in range(300):
+        st, metrics = tr.step(st, targets)
+    hm = np.asarray(tr.honest_mask)
+    w_fin = np.asarray(st.params["w"])[hm].mean(0)
+    t = np.asarray(targets)[hm]
+    assert np.linalg.norm(w_fin - t.mean(0)) < 1.5
+    assert float(metrics["consensus_dist"]) < 1.0
+
+
+def test_int8_quantization_rank_preserving():
+    """The gossip quantizer is monotone per chunk: sort order (and hence
+    trimmed-mean/median survivor SETS) is preserved up to ties."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16, 64)), jnp.float32)
+    q, scale = _quantize_int8(x)
+    xq = q.astype(jnp.float32) * scale
+    # order preserved where quantized values are distinct
+    o1 = np.argsort(np.asarray(x), axis=0, kind="stable")
+    o2 = np.argsort(np.asarray(xq), axis=0, kind="stable")
+    qv = np.asarray(q)
+    disagree = (np.take_along_axis(qv, o1, 0) != np.take_along_axis(qv, o2, 0))
+    assert not disagree.any()
+    # reconstruction error bounded by scale/2
+    assert float(jnp.max(jnp.abs(xq - x))) <= float(scale) * 0.5 + 1e-6

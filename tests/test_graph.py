@@ -1,0 +1,52 @@
+"""Topology generation and Assumption 4 checking."""
+import numpy as np
+import pytest
+
+from repro.core import (
+    Topology,
+    check_assumption4,
+    complete_graph,
+    erdos_renyi,
+    metropolis_weights,
+    ring_of_cliques,
+)
+
+
+def test_er_satisfies_paper_recipe():
+    topo = erdos_renyi(20, 0.5, 2, seed=0)
+    assert topo.min_in_degree > 4  # > 2b
+    assert check_assumption4(topo, num_samples=10, seed=1)
+
+
+def test_complete_graph_assumption4():
+    topo = complete_graph(10, 2)
+    assert check_assumption4(topo, num_samples=10)
+
+
+def test_ring_of_cliques_fails_assumption4():
+    # bottleneck single links: removing b incoming edges disconnects
+    topo = ring_of_cliques(4, 4, num_byzantine=2)
+    assert not check_assumption4(topo, num_samples=40, seed=0)
+
+
+def test_rule_neighborhood_requirements():
+    topo = complete_graph(6, 2)  # degree 5
+    topo.validate_for_rule("trimmed_mean")  # needs 5 ✓
+    with pytest.raises(ValueError):
+        topo.validate_for_rule("bulyan")  # needs max(8, 8)+1 = 9
+    with pytest.raises(ValueError):
+        Topology(adjacency=np.eye(3, dtype=bool), num_byzantine=0)  # self loops
+
+
+def test_metropolis_weights_doubly_stochastic():
+    topo = erdos_renyi(12, 0.6, 1, seed=2)
+    w = metropolis_weights(topo)
+    np.testing.assert_allclose(w.sum(0), 1.0, atol=1e-9)
+    np.testing.assert_allclose(w.sum(1), 1.0, atol=1e-9)
+    assert (w >= 0).all()
+
+
+def test_no_self_loops_and_symmetry():
+    topo = erdos_renyi(10, 0.7, 1, seed=5)
+    assert not topo.adjacency.diagonal().any()
+    assert (topo.adjacency == topo.adjacency.T).all()

@@ -1,0 +1,73 @@
+"""Loop-aware HLO analyzer: trip-count multiplication and collective bytes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch import hlo_analysis as H
+
+
+def test_scan_flops_multiplied():
+    def f(x, w):
+        def body(c, wi):
+            return c @ wi, None
+        out, _ = jax.lax.scan(body, x, w)
+        return out
+
+    x = jnp.zeros((64, 64))
+    w = jnp.zeros((10, 64, 64))
+    compiled = jax.jit(f).lower(x, w).compile()
+    cost = H.analyze(compiled.as_text())
+    expect = 10 * 2 * 64**3
+    assert 0.95 * expect < cost.flops < 1.2 * expect
+
+
+def test_nested_scan_multiplied():
+    def f(x, w):
+        def outer(c, wi):
+            def inner(ci, _):
+                return ci @ wi, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, w)
+        return out
+
+    x = jnp.zeros((32, 32))
+    w = jnp.zeros((5, 32, 32))
+    compiled = jax.jit(f).lower(x, w).compile()
+    cost = H.analyze(compiled.as_text())
+    expect = 5 * 3 * 2 * 32**3
+    assert 0.9 * expect < cost.flops < 1.3 * expect
+
+
+def test_dot_flops_exact():
+    compiled = jax.jit(lambda a, b: a @ b).lower(
+        jnp.zeros((128, 256)), jnp.zeros((256, 64))).compile()
+    cost = H.analyze(compiled.as_text())
+    expect = 2 * 128 * 256 * 64
+    assert abs(cost.flops - expect) / expect < 0.05
+
+
+def test_roofline_terms():
+    c = H.Cost(flops=197e12, bytes=819e9, coll_wire=50e9)
+    rl = H.roofline_from_cost(c)
+    assert abs(rl.compute_s - 1.0) < 1e-9
+    assert abs(rl.memory_s - 1.0) < 1e-9
+    assert abs(rl.collective_s - 1.0) < 1e-9
+    assert rl.step_time_s == pytest.approx(1.0)
+
+
+def test_parse_handles_tuple_comments():
+    text = """
+HloModule test
+
+ENTRY %main (p: f32[4]) -> (f32[4], s32[]) {
+  %p = f32[4]{0} parameter(0)
+  %c = s32[] constant(3)
+  ROOT %t = (f32[4]{0}, /*index=1*/s32[]) tuple(%p, %c)
+}
+"""
+    comps = H.parse_hlo(text)
+    assert "main" in comps
+    ops = [i.opcode for i in comps["main"]]
+    assert "tuple" in ops

@@ -1,0 +1,171 @@
+"""Per-architecture smoke tests (reduced configs) + layer-level checks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import build, param_count
+from repro.models import layers as L
+
+B, S = 2, 64
+KEY = jax.random.PRNGKey(0)
+
+
+def _batch(cfg, rng):
+    if cfg.family == "encdec":
+        return {
+            "audio_embeds": jnp.asarray(rng.normal(size=(B, S, cfg.d_model)), jnp.float32),
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 33)), jnp.int32),
+        }
+    if cfg.family == "vlm":
+        return {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32),
+            "image_embeds": jnp.asarray(rng.normal(size=(B, 16, cfg.d_model)), jnp.float32),
+        }
+    return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_train_step(arch, rng):
+    """Reduced variant: one forward/backward step, finite loss and grads."""
+    cfg = get_config(arch).reduced()
+    api = build(cfg)
+    params = api.init_params(KEY, cfg)
+    loss, grads = jax.jit(api.grad_fn())(params, _batch(cfg, rng))
+    assert jnp.isfinite(loss), arch
+    gn = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree_util.tree_leaves(grads))
+    assert jnp.isfinite(gn) and float(gn) > 0, arch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_arch_smoke_decode_step(arch, rng):
+    cfg = get_config(arch).reduced()
+    api = build(cfg)
+    params = api.init_params(KEY, cfg)
+    cache = api.init_cache(cfg, B, 32)
+    if cfg.family == "encdec":
+        ae = jnp.asarray(rng.normal(size=(B, 32, cfg.d_model)), jnp.float32)
+        cache = api.extra["prefill_cache"](params, cache, ae, cfg)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, 1)), jnp.int32)
+    step = jax.jit(lambda p, c, t: api.decode_step(p, c, t, cfg))
+    logits, cache = step(params, cache, tok)
+    logits, cache = step(params, cache, tok)
+    assert logits.shape == (B, 1, cfg.vocab_size), arch
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "gemma3-12b", "rwkv6-3b", "zamba2-1.2b"])
+def test_prefill_decode_consistency(arch, rng):
+    """Chunked training-time recurrences must equal step-by-step decode."""
+    cfg = get_config(arch).reduced()
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(1), cfg)
+    T = 12
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    from repro.models import dense, hybrid, ssm
+
+    fwd = {"dense": dense.forward, "rwkv": ssm.forward, "hybrid": hybrid.forward}[cfg.family]
+    full = fwd(params, toks, cfg)
+    cache = api.init_cache(cfg, B, T)
+    outs = []
+    step = jax.jit(lambda p, c, t: api.decode_step(p, c, t, cfg))
+    for t in range(T):
+        lg, cache = step(params, cache, toks[:, t : t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    scale = float(jnp.max(jnp.abs(full))) + 1e-9
+    assert float(jnp.max(jnp.abs(full - dec))) / scale < 2e-4, arch
+
+
+def test_moe_prefill_decode_consistency(rng):
+    """MoE: with generous capacity (no drops) decode must match prefill."""
+    cfg = dataclasses.replace(get_config("deepseek-v2-236b").reduced(), capacity_factor=8.0)
+    api = build(cfg)
+    params = api.init_params(jax.random.PRNGKey(1), cfg)
+    T = 10
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, T)), jnp.int32)
+    from repro.models import moe
+
+    full, _ = moe.forward(params, toks, cfg)
+    cache = api.init_cache(cfg, B, T)
+    outs = []
+    for t in range(T):
+        lg, cache = api.decode_step(params, cache, toks[:, t : t + 1], cfg)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    scale = float(jnp.max(jnp.abs(full))) + 1e-9
+    assert float(jnp.max(jnp.abs(full - dec))) / scale < 2e-4
+
+
+def test_chunked_attention_vs_naive(rng):
+    b, s, h, dh = 2, 48, 4, 16
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, 2, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, 2, dh)), jnp.float32)
+    out = L.chunked_attention(q, k, v, causal=True, kv_chunk=16)
+    # naive reference
+    kk = jnp.repeat(k, 2, axis=2)
+    vv = jnp.repeat(v, 2, axis=2)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q / jnp.sqrt(dh), kk)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    sc = jnp.where(mask[None, None], sc, -1e30)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(sc, -1), vv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_equals_full_when_wide(rng):
+    b, s, h, dh = 1, 64, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    full = L.chunked_attention(q, k, v, causal=True, kv_chunk=16)
+    win = L.sliding_window_attention(q, k, v, window=s, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(win), np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+def test_sliding_window_restricts(rng):
+    """Tokens beyond the window must not influence the output."""
+    b, s, h, dh, w = 1, 64, 2, 8, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, dh)), jnp.float32)
+    out1 = L.sliding_window_attention(q, k, v, window=w, q_chunk=16)
+    k2 = k.at[:, :8].set(100.0)  # clobber tokens far outside the last window
+    v2 = v.at[:, :8].set(-100.0)
+    out2 = L.sliding_window_attention(q, k2, v2, window=w, q_chunk=16)
+    np.testing.assert_allclose(np.asarray(out1[:, -16:]), np.asarray(out2[:, -16:]), rtol=1e-5)
+
+
+def test_rope_rotation_property(rng):
+    """RoPE: scores depend only on relative positions."""
+    dh = 16
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, 1, dh)), jnp.float32)
+    def score(pq, pk):
+        qr = L.apply_rope(q, jnp.asarray([pq]), 1e4)
+        kr = L.apply_rope(k, jnp.asarray([pk]), 1e4)
+        return float(jnp.sum(qr * kr))
+    assert abs(score(3, 1) - score(10, 8)) < 1e-4
+    assert abs(score(3, 1) - score(5, 1)) > 1e-5
+
+
+def test_param_count_positive_and_scales():
+    n_small = param_count(get_config("qwen3-4b").reduced())
+    n_full = param_count(get_config("qwen3-4b"))
+    assert 0 < n_small < n_full
+    assert n_full > 3e9  # ~4B params
+    assert param_count(get_config("deepseek-v3-671b")) > 5e11
+
+
+def test_mtp_loss_differs(rng):
+    cfg = get_config("deepseek-v3-671b").reduced()
+    api = build(cfg)
+    params = api.init_params(KEY, cfg)
+    batch = _batch(cfg, rng)
+    loss_mtp = api.train_loss(params, batch, cfg)
+    cfg2 = dataclasses.replace(cfg, mtp=False)
+    loss_plain = build(cfg2).train_loss(params, batch, cfg2)
+    assert abs(float(loss_mtp) - float(loss_plain)) > 1e-6

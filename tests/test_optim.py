@@ -1,0 +1,39 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+
+
+def test_bridge_schedule_properties():
+    rho = optim.bridge_schedule(lam=2.0, t0=10)
+    ts = np.arange(0, 100)
+    vals = np.asarray([rho(t) for t in ts])
+    assert (np.diff(vals) < 0).all()  # decreasing
+    assert abs(vals[0] - 1 / 20) < 1e-7
+    # divergent sum / convergent square-sum behavior (sampled proxy)
+    assert vals.sum() > 10 * vals[0]
+
+
+def test_cosine_schedule():
+    rho = optim.cosine_schedule(1.0, 100, warmup=10)
+    assert float(rho(0)) < 0.2
+    assert abs(float(rho(10)) - 1.0) < 1e-5
+    assert float(rho(100)) < 1e-6 + 0.0 + 1e-3
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = optim.adamw_init(params)
+    for _ in range(300):
+        grads = {"w": params["w"] - jnp.asarray([1.0, 2.0])}
+        params, state = optim.adamw_update(params, grads, state, lr=0.05)
+    np.testing.assert_allclose(np.asarray(params["w"]), [1.0, 2.0], atol=0.05)
+
+
+def test_momentum():
+    state = optim.momentum_init({"w": jnp.zeros(2)})
+    g = {"w": jnp.ones(2)}
+    state, upd = optim.momentum_update(g, state, beta=0.5)
+    state, upd = optim.momentum_update(g, state, beta=0.5)
+    np.testing.assert_allclose(np.asarray(upd["w"]), 1.5)

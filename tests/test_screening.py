@@ -1,0 +1,115 @@
+"""Unit + property tests for the BRIDGE screening rules (paper Sec. III)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import complete_graph, erdos_renyi, screen_all, screening
+
+RULES = ["trimmed_mean", "median", "krum", "bulyan"]
+
+
+def _setup(m=15, d=6, b=2, seed=0):
+    rng = np.random.default_rng(seed)
+    topo = complete_graph(m, b)
+    w = jnp.asarray(rng.random((m, d)), jnp.float32)
+    return topo, w, rng
+
+
+@pytest.mark.parametrize("rule", RULES)
+def test_hull_invariant(rule):
+    """The core robustness property (basis of Eq. 14): honest nodes' screened
+    outputs stay inside the convex hull (per-coordinate) of honest values, no
+    matter what the <=b Byzantine nodes broadcast."""
+    m, b = 15, 2
+    topo, w, rng = _setup(m=m, b=b)
+    byz = [3, 7]
+    w = w.at[3].set(1e4).at[7].set(-1e4)
+    honest = np.setdiff1d(np.arange(m), byz)
+    hv = np.asarray(w)[honest]
+    topo.validate_for_rule(rule)
+    y = np.asarray(screen_all(w, jnp.asarray(topo.adjacency), rule=rule, b=b))[honest]
+    assert (y >= hv.min(0) - 1e-4).all() and (y <= hv.max(0) + 1e-4).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    vals=st.lists(st.floats(-100, 100, width=32), min_size=7, max_size=15),
+    b=st.integers(0, 2),
+)
+def test_trimmed_mean_matches_numpy(vals, b):
+    n = len(vals)
+    hypothesis.assume(n >= 2 * b + 1)
+    v = jnp.asarray(vals, jnp.float32)[:, None]
+    mask = jnp.ones((n,), bool)
+    self_v = jnp.asarray([0.0], jnp.float32)
+    out = screening.trimmed_mean(v, mask, self_v, b)
+    s = np.sort(np.asarray(vals, np.float32))
+    kept = s[b : n - b] if b else s
+    expected = (kept.sum() + 0.0) / (n - 2 * b + 1)
+    np.testing.assert_allclose(np.asarray(out)[0], expected, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(vals=st.lists(st.floats(-50, 50, width=32), min_size=3, max_size=14))
+def test_median_matches_numpy(vals):
+    n = len(vals)
+    v = jnp.asarray(vals, jnp.float32)[:, None]
+    mask = jnp.ones((n,), bool)
+    self_v = jnp.asarray([vals[0]], jnp.float32)
+    out = screening.coordinate_median(v, mask, self_v)
+    expected = np.median(np.asarray(vals + [vals[0]], np.float32))
+    np.testing.assert_allclose(np.asarray(out)[0], expected, rtol=1e-5, atol=1e-5)
+
+
+def test_trimmed_mean_b0_is_dgd_mean():
+    """BRIDGE-T reduces to (uniform-weight) DGD when b=0 (Sec. III)."""
+    topo, w, _ = _setup(b=0)
+    adj = jnp.asarray(topo.adjacency)
+    yt = screen_all(w, adj, rule="trimmed_mean", b=0)
+    ym = screen_all(w, adj, rule="mean", b=0)
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(ym), rtol=1e-5)
+
+
+def test_median_affine_equivariance():
+    """Rank-based rules commute with positive affine maps per coordinate."""
+    topo, w, _ = _setup()
+    adj = jnp.asarray(topo.adjacency)
+    a, c = 2.5, -1.0
+    y1 = screen_all(a * w + c, adj, rule="median", b=2)
+    y2 = a * screen_all(w, adj, rule="median", b=2) + c
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-4, atol=1e-4)
+
+
+def test_krum_selects_inlier():
+    """Krum must never output the obvious outlier vector."""
+    m, b = 10, 1
+    topo = complete_graph(m, b)
+    rng = np.random.default_rng(1)
+    w = jnp.asarray(rng.normal(0, 0.1, (m, 8)), jnp.float32)
+    w = w.at[4].set(50.0)
+    y = np.asarray(screen_all(w, jnp.asarray(topo.adjacency), rule="krum", b=b))
+    honest = [i for i in range(m) if i != 4]
+    assert np.abs(y[honest]).max() < 1.0
+
+
+def test_varying_degrees_masked_correctly():
+    """ER graph (varying |N_j|): output dims/finiteness + hull invariant."""
+    topo = erdos_renyi(12, 0.8, 2, seed=3)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.random((12, 5)), jnp.float32)
+    for rule in ["trimmed_mean", "median"]:
+        y = np.asarray(screen_all(w, jnp.asarray(topo.adjacency), rule=rule, b=2))
+        assert np.isfinite(y).all()
+        assert (y >= 0 - 1e-5).all() and (y <= 1 + 1e-5).all()
+
+
+def test_chunked_screening_matches():
+    topo, w, _ = _setup(d=137)
+    adj = jnp.asarray(topo.adjacency)
+    full = screen_all(w, adj, rule="trimmed_mean", b=2)
+    chunked = screen_all(w, adj, rule="trimmed_mean", b=2, chunk=32)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked), rtol=1e-5)
