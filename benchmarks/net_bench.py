@@ -1,0 +1,99 @@
+"""Network-runtime benchmarks: the ``--scenario async_lossy`` axis.
+
+Times the `repro.net` scan-over-ticks hot path (mailbox ring + channel
+sampling + asynchronous screening + gradient step, all inside one jitted
+``lax.scan``) across network conditions, on the same MNIST-like linear task
+the paper-figure benchmarks use.  Emits CSV rows for the `benchmarks.run`
+harness and dumps ``BENCH_net.json`` so later PRs can track the runtime's
+perf trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import eval_accuracy, get_data, make_grad_fn
+from repro.core import erdos_renyi, replicate
+from repro.data import partition_iid
+from repro.data.partition import stack_node_batches
+from repro.models import small
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                          "BENCH_net.json")
+
+# scenario -> (ChannelConfig kwargs, dynamic.scenario_schedule kind, staleness
+# bound).  Names and conditions mirror launch.sweep.NET_SCENARIOS so a
+# scenario label means the same thing in sweep results and BENCH_net.json.
+SCENARIOS = {
+    "ideal": ({}, None, 0),
+    "lossy": ({"drop_prob": 0.2}, None, 5),
+    "laggy": ({"latency_max": 3}, None, 5),
+    "lossy_laggy": ({"drop_prob": 0.2, "latency_max": 3}, None, 5),
+    "bandwidth64": ({"bandwidth_cap": 64}, None, 5),
+    "churn": ({}, "churn", 5),
+    "partition": ({}, "partition", 5),
+}
+
+
+def _schedule(kind, topo, ticks, seed):
+    from repro.net.dynamic import scenario_schedule
+
+    return scenario_schedule(kind, topo, ticks, seed=seed)
+
+
+def async_lossy_scenarios(num_nodes: int = 20, ticks: int = 120, *,
+                          rule: str = "trimmed_mean", attack: str = "alie",
+                          num_byzantine: int = 2, seed: int = 0):
+    """rule x attack fixed, network-condition axis swept; returns CSV rows and
+    writes BENCH_net.json."""
+    from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
+
+    x, y, xt, yt = get_data()
+    shards = partition_iid(x, y, num_nodes, seed=seed)
+    batch_fn = stack_node_batches(shards, 32, seed=seed)
+    topo = erdos_renyi(num_nodes, 0.5, num_byzantine, seed=seed)
+    key = jax.random.PRNGKey(seed)
+    params = replicate(small.init_linear(key), num_nodes, perturb=0.01, key=key)
+    grad_fn = make_grad_fn("linear")
+
+    batches = [batch_fn(i) for i in range(ticks)]
+    stacked = tuple(jnp.asarray(np.stack([b[i] for b in batches])) for i in range(2))
+
+    rows, record = [], {}
+    for name, (ch_kwargs, sched_kind, bound) in SCENARIOS.items():
+        cfg = AsyncBridgeConfig(
+            topology=topo, rule=rule, num_byzantine=num_byzantine, attack=attack,
+            lam=1.0, t0=30.0, channel=ChannelConfig(**ch_kwargs),
+            staleness_bound=bound,
+            schedule=_schedule(sched_kind, topo, ticks, seed),
+        )
+        tr = AsyncBridgeTrainer(cfg, grad_fn)
+        state = tr.init(params)
+        # compile once, then time the steady-state scan
+        st, ms = tr.run_scan(state, stacked)
+        jax.block_until_ready(st.params)
+        t0 = time.perf_counter()
+        st, ms = tr.run_scan(state, stacked)
+        jax.block_until_ready(st.params)
+        us_per_tick = (time.perf_counter() - t0) / ticks * 1e6
+        acc = eval_accuracy("linear", st.params, tr.honest_mask,
+                            jnp.asarray(xt), jnp.asarray(yt))
+        record[name] = {
+            "us_per_tick": us_per_tick,
+            "accuracy": acc,
+            "final_loss": float(ms["loss"][-1]),
+            "delivered_frac": float(np.mean(np.asarray(ms["delivered_frac"]))),
+            "mean_staleness": float(np.mean(np.asarray(ms["mean_staleness"]))),
+            "rule": rule, "attack": attack, "num_nodes": num_nodes,
+            "ticks": ticks,
+        }
+        rows.append((f"net/{name}", us_per_tick,
+                     f"acc={acc:.4f};delivered={record[name]['delivered_frac']:.2f}"))
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    return rows

@@ -1,9 +1,13 @@
 """Benchmark harness — one function per paper table/figure (Sec. V) plus the
 screening-kernel sweep.  Prints ``name,us_per_call,derived`` CSV.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig1,table2] [--full]
+    PYTHONPATH=src python -m benchmarks.run [--only fig1,table2] [--full] \
+        [--scenario sync|async_lossy]
 
 ``--full`` uses the paper's 50-node network (slower); default is 20 nodes.
+``--scenario async_lossy`` runs the `repro.net` network-condition axis (drop,
+latency, bandwidth caps, churn, partition-and-heal) and writes
+``BENCH_net.json`` alongside the CSV.
 """
 from __future__ import annotations
 
@@ -16,9 +20,11 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated benchmark keys")
     ap.add_argument("--full", action="store_true", help="50-node networks (paper scale)")
+    ap.add_argument("--scenario", default="sync", choices=["sync", "async_lossy"],
+                    help="network model: sync broadcast or repro.net scenarios")
     args = ap.parse_args()
 
-    from benchmarks import kernels_bench, paper_figs
+    from benchmarks import kernels_bench, net_bench, paper_figs
 
     m = 50 if args.full else 20
     benches = {
@@ -29,8 +35,14 @@ def main() -> None:
         "fig67": lambda: paper_figs.fig67_noniid(num_nodes=m),
         "table2": paper_figs.table2_screening_cost,
         "kernels": kernels_bench.kernel_throughput,
+        "net": lambda: net_bench.async_lossy_scenarios(num_nodes=m),
     }
-    only = set(args.only.split(",")) if args.only else set(benches)
+    if args.scenario == "async_lossy":
+        only = {"net"}
+    else:
+        only = set(benches) - {"net"}
+    if args.only:
+        only = set(args.only.split(","))
     print("name,us_per_call,derived")
     for key, fn in benches.items():
         if key not in only:

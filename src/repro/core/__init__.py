@@ -2,7 +2,14 @@
 from repro.core.bridge import BridgeConfig, BridgeState, BridgeTrainer, replicate, stack_flatten
 from repro.core.brdso import BrdsoConfig, BrdsoTrainer
 from repro.core.byrdie import ByrdieConfig, ByrdieTrainer
-from repro.core.byzantine import ATTACKS, get_attack, pick_byzantine_mask
+from repro.core.byzantine import (
+    ATTACKS,
+    MESSAGE_ATTACKS,
+    attack_names,
+    get_attack,
+    get_message_attack,
+    pick_byzantine_mask,
+)
 from repro.core.graph import (
     Topology,
     check_assumption4,
@@ -12,14 +19,15 @@ from repro.core.graph import (
     ring_of_cliques,
 )
 from repro.core.gossip import coordwise_gossip_leaf, gossip_screen_params, vector_rule_select
-from repro.core.screening import RULES, get_rule, screen_all
+from repro.core.screening import RULES, get_rule, min_neighbors, screen_all, screen_views
 
 __all__ = [
     "BridgeConfig", "BridgeState", "BridgeTrainer", "replicate", "stack_flatten",
     "BrdsoConfig", "BrdsoTrainer", "ByrdieConfig", "ByrdieTrainer",
-    "ATTACKS", "get_attack", "pick_byzantine_mask",
+    "ATTACKS", "MESSAGE_ATTACKS", "attack_names", "get_attack",
+    "get_message_attack", "pick_byzantine_mask",
     "Topology", "check_assumption4", "complete_graph", "erdos_renyi",
     "metropolis_weights", "ring_of_cliques",
     "coordwise_gossip_leaf", "gossip_screen_params", "vector_rule_select",
-    "RULES", "get_rule", "screen_all",
+    "RULES", "get_rule", "min_neighbors", "screen_all", "screen_views",
 ]

@@ -31,6 +31,7 @@ class BridgeState(NamedTuple):
     params: Any  # pytree with leading node axis [M, ...]
     t: jax.Array  # iteration counter
     key: jax.Array
+    net: Any = None  # network-runtime state (mailboxes etc.); None when synchronous
 
 
 @dataclasses.dataclass(frozen=True)
@@ -72,12 +73,22 @@ def stack_flatten(params: Any) -> tuple[jax.Array, Callable[[jax.Array], Any]]:
 
 class BridgeTrainer:
     """Drives Algorithm 1.  ``grad_fn(node_params, batch) -> (loss, grads)``
-    computes the *local* empirical-risk gradient of one node."""
+    computes the *local* empirical-risk gradient of one node.
 
-    def __init__(self, config: BridgeConfig, grad_fn: Callable):
+    ``runtime`` plugs in a message-exchange model (see `repro.net.runtime`):
+    ``None`` is the classic synchronous broadcast simulation; an
+    `UnreliableRuntime` yields asynchronous BRIDGE over a lossy, delayed,
+    time-varying network, screening whatever messages have arrived (within
+    the runtime's staleness bound) and falling back to the node's own iterate
+    whenever too few usable messages are present for the rule's Table-II
+    minimum.  With an ideal channel and a static schedule the runtime path
+    reproduces the synchronous path bit-for-bit."""
+
+    def __init__(self, config: BridgeConfig, grad_fn: Callable, runtime=None):
         config.topology.validate_for_rule(config.rule)
         self.config = config
         self.grad_fn = grad_fn
+        self.runtime = runtime
         self.adjacency = jnp.asarray(config.topology.adjacency)
         m = config.topology.num_nodes
         nbyz = min(config.num_byzantine, m)
@@ -85,8 +96,13 @@ class BridgeTrainer:
             self.byz_mask = jnp.zeros((m,), dtype=bool)
         else:
             self.byz_mask = byz_lib.pick_byzantine_mask(m, nbyz, config.byzantine_seed)
-        self._attack = byz_lib.get_attack(config.attack)
-        self._step = self._build_step()
+        if runtime is None:
+            self._attack = byz_lib.get_attack(config.attack)
+            self._step_core = self._build_step_core()
+        else:
+            self._message_attack = byz_lib.get_message_attack(config.attack)
+            self._step_core = self._build_runtime_step_core()
+        self._step = jax.jit(self._step_core)
 
     @property
     def honest_mask(self) -> jax.Array:
@@ -97,12 +113,37 @@ class BridgeTrainer:
         lead = jax.tree_util.tree_leaves(params)[0].shape[0]
         if lead != m:
             raise ValueError(f"params leading axis {lead} != num_nodes {m}")
-        return BridgeState(params=params, t=jnp.zeros((), jnp.int32), key=jax.random.PRNGKey(seed))
+        net = None
+        if self.runtime is not None:
+            w, _ = stack_flatten(params)
+            net = self.runtime.init(m, w.shape[1])
+        return BridgeState(params=params, t=jnp.zeros((), jnp.int32),
+                           key=jax.random.PRNGKey(seed), net=net)
 
-    def _build_step(self):
+    def _grad_update_and_metrics(self, state, batch, y, unflatten):
+        """(Step 6) local gradient update at w_j(t) + shared diagnostics."""
+        cfg = self.config
+        losses, grads = jax.vmap(self.grad_fn)(state.params, batch)
+        g, _ = stack_flatten(grads)
+        rho = cfg.step_size(state.t)
+        w_new = y - rho * g
+        new_params = unflatten(w_new)
+        # consensus diagnostic over honest nodes
+        hm = self.honest_mask
+        cnt = jnp.sum(hm)
+        mu = jnp.sum(jnp.where(hm[:, None], w_new, 0.0), axis=0) / cnt
+        dev = jnp.where(hm[:, None], w_new - mu[None, :], 0.0)
+        cons = jnp.sqrt(jnp.max(jnp.sum(dev * dev, axis=1)))
+        metrics = {
+            "loss": jnp.sum(jnp.where(hm, losses, 0.0)) / cnt,
+            "consensus_dist": cons,
+            "rho": rho,
+        }
+        return new_params, metrics
+
+    def _build_step_core(self):
         cfg = self.config
 
-        @jax.jit
         def step(state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
             w, unflatten = stack_flatten(state.params)
             key, sub = jax.random.split(state.key)
@@ -113,24 +154,48 @@ class BridgeTrainer:
                 w_bcast, self.adjacency, rule=cfg.rule, b=cfg.num_byzantine,
                 chunk=cfg.screen_chunk,
             )
-            # (Step 6) local gradient update at w_j(t)
-            losses, grads = jax.vmap(self.grad_fn)(state.params, batch)
-            g, _ = stack_flatten(grads)
-            rho = cfg.step_size(state.t)
-            w_new = y - rho * g
-            new_params = unflatten(w_new)
-            # consensus diagnostic over honest nodes
-            hm = self.honest_mask
-            cnt = jnp.sum(hm)
-            mu = jnp.sum(jnp.where(hm[:, None], w_new, 0.0), axis=0) / cnt
-            dev = jnp.where(hm[:, None], w_new - mu[None, :], 0.0)
-            cons = jnp.sqrt(jnp.max(jnp.sum(dev * dev, axis=1)))
-            metrics = {
-                "loss": jnp.sum(jnp.where(hm, losses, 0.0)) / cnt,
-                "consensus_dist": cons,
-                "rho": rho,
-            }
+            new_params, metrics = self._grad_update_and_metrics(state, batch, y, unflatten)
             return BridgeState(new_params, state.t + 1, key), metrics
+
+        return step
+
+    # Salt decorrelating the channel PRNG stream from the attack stream (both
+    # derive from the same per-step subkey).
+    _NET_SALT = 0x6E657430
+
+    def _build_runtime_step_core(self):
+        cfg = self.config
+        runtime = self.runtime
+        need = screening.min_neighbors(cfg.rule, cfg.num_byzantine)
+
+        def step(state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
+            w, unflatten = stack_flatten(state.params)
+            key, sub = jax.random.split(state.key)
+            adj_t = runtime.adjacency_at(state.t)
+            # (Step 3-4) per-link transmissions with Byzantine substitution.
+            msgs = self._message_attack(w, self.byz_mask, adj_t, sub, state.t)
+            # Byzantine nodes screen with the same self-view they broadcast
+            # (matching the synchronous path); message-only attacks have no
+            # single broadcast value, so nodes screen with their true iterate.
+            battack = self._message_attack.broadcast
+            w_self = battack(w, self.byz_mask, sub, state.t) if battack else w
+            net_key = jax.random.fold_in(sub, self._NET_SALT)
+            net, views, mask, net_stats = runtime.exchange(
+                state.net, msgs, w_self, adj_t, net_key, state.t
+            )
+            # (Step 5) asynchronous screening over whatever usable (arrived,
+            # fresh) messages each node holds; nodes starved below the rule's
+            # minimum usable count keep their own iterate this tick.
+            y_rule = screening.screen_views(
+                views, mask, w_self, rule=cfg.rule, b=cfg.num_byzantine,
+                chunk=cfg.screen_chunk,
+            )
+            enough = jnp.sum(mask, axis=1) >= need
+            y = jnp.where(enough[:, None], y_rule, w_self)
+            new_params, metrics = self._grad_update_and_metrics(state, batch, y, unflatten)
+            metrics.update(net_stats)
+            metrics["screened_frac"] = jnp.mean(enough.astype(jnp.float32))
+            return BridgeState(new_params, state.t + 1, key, net), metrics
 
         return step
 

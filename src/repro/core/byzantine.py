@@ -5,6 +5,19 @@ substitute the broadcast rows of the stacked iterate matrix ``w [M, d]`` for
 the nodes marked in ``byz_mask``.  The node's internal state keeps evolving
 normally — only what it *sends* is corrupted, matching the paper's experiments
 ("broadcast random vectors to all their neighbors during each iteration").
+
+Two attack granularities:
+
+* **Broadcast attacks** (`Attack`, the seed model): the adversary substitutes
+  one row per Byzantine node — every receiver sees the same corrupted value.
+  This is all Definition 1 permits over a broadcast medium.
+* **Message attacks** (`MessageAttack`, used by the `repro.net` runtime): the
+  adversary crafts the full ``[receiver, sender, d]`` message tensor, so a
+  Byzantine node can tell *different* lies to different neighbors — e.g. the
+  `selective_victim` attack, which stays truthful to well-connected receivers
+  while feeding crafted values only to low-degree ones, hiding from any
+  detector that cross-checks reports between neighbors.  Every broadcast
+  attack lifts to a message attack (same value tiled to all receivers).
 """
 from __future__ import annotations
 
@@ -93,11 +106,101 @@ ATTACKS: dict[str, Attack] = {
 }
 
 
+# ---------------------------------------------------------------------------
+# Message-level attacks (per-link lies, require the repro.net runtime)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MessageAttack:
+    """An attack on the per-link message tensor.
+
+    ``fn(w [M,d], byz_mask [M], adjacency [M,M], key, t) -> msgs [M,M,d]``
+    where ``msgs[j, i]`` is what node i sends node j this tick (rows for
+    non-edges are ignored by the runtime).  ``broadcast`` is the equivalent
+    broadcast-granularity `Attack` when one exists (lifted attacks keep it so
+    the runtime path can reproduce the broadcast path bit-for-bit — including
+    the attacked self-view Byzantine nodes screen with).
+    """
+
+    name: str
+    fn: Callable
+    broadcast: Attack | None = None
+
+    def __call__(self, w, byz_mask, adjacency, key, t):
+        return self.fn(w, byz_mask, adjacency, key, t)
+
+
+def lift_broadcast_attack(attack: Attack) -> MessageAttack:
+    """Tile a broadcast attack to message granularity: every receiver gets the
+    same (possibly corrupted) row."""
+
+    def fn(w, byz_mask, adjacency, key, t):
+        w_bcast = attack(w, byz_mask, key, t)
+        m = w.shape[0]
+        return jnp.broadcast_to(w_bcast[None, :, :], (m,) + w.shape)
+
+    return MessageAttack(attack.name, fn, broadcast=attack)
+
+
+def _selective_victim(z: float = 1.5):
+    """Per-neighbor selective-victim attack (only expressible on messages).
+
+    Byzantine nodes send their *true* iterate to high-in-degree receivers —
+    who could out-vote the lie anyway and whose honest neighbors might notice
+    inconsistent reports — and an ALIE-style crafted value (honest mean +
+    z * per-coordinate std, tuned to hide inside the trimming band) only to
+    receivers whose in-degree is at most the network median.  Topology-aware:
+    the victim set is recomputed from the tick's adjacency, so edge churn
+    shifts the blast radius."""
+
+    def fn(w, byz_mask, adjacency, key, t):
+        m = w.shape[0]
+        honest = ~byz_mask
+        cnt = jnp.sum(honest)
+        mu = jnp.sum(jnp.where(honest[:, None], w, 0.0), axis=0) / cnt
+        var = jnp.sum(jnp.where(honest[:, None], (w - mu) ** 2, 0.0), axis=0) / cnt
+        crafted = mu + z * jnp.sqrt(var + 1e-12)
+        in_deg = jnp.sum(adjacency, axis=1)
+        victim = in_deg <= jnp.median(in_deg)  # [M] receivers
+        lie_edge = victim[:, None] & byz_mask[None, :]  # [receiver, sender]
+        msgs = jnp.broadcast_to(w[None, :, :], (m,) + w.shape)
+        return jnp.where(lie_edge[:, :, None], crafted[None, None, :], msgs)
+
+    return fn
+
+
+MESSAGE_ATTACKS: dict[str, MessageAttack] = {
+    name: lift_broadcast_attack(a) for name, a in ATTACKS.items()
+}
+MESSAGE_ATTACKS["selective_victim"] = MessageAttack(
+    "selective_victim", _selective_victim()
+)
+
+
+def attack_names() -> list[str]:
+    """All registered attack names (broadcast + message-only)."""
+    return sorted(set(ATTACKS) | set(MESSAGE_ATTACKS))
+
+
 def get_attack(name: str) -> Attack:
     try:
         return ATTACKS[name]
     except KeyError:
-        raise ValueError(f"unknown attack {name!r}; options: {sorted(ATTACKS)}")
+        if name in MESSAGE_ATTACKS:
+            raise ValueError(
+                f"attack {name!r} crafts per-link messages and needs the network "
+                f"runtime (repro.net / BridgeTrainer(runtime=...)); broadcast-path "
+                f"options: {sorted(ATTACKS)}"
+            )
+        raise ValueError(f"unknown attack {name!r}; options: {attack_names()}")
+
+
+def get_message_attack(name: str) -> MessageAttack:
+    try:
+        return MESSAGE_ATTACKS[name]
+    except KeyError:
+        raise ValueError(f"unknown attack {name!r}; options: {attack_names()}")
 
 
 def pick_byzantine_mask(num_nodes: int, num_byzantine: int, seed: int = 0) -> jnp.ndarray:

@@ -63,23 +63,13 @@ class Topology:
 
     def validate_for_rule(self, rule: str) -> None:
         """Check the per-rule minimum neighborhood sizes of Table II."""
-        b = self.num_byzantine
-        mins = {
-            "trimmed_mean": 2 * b + 1,
-            "median": 1,
-            "krum": b + 3,
-            "bulyan": max(4 * b, 3 * b + 2) + 1,
-            "geomedian": 2 * b + 1,  # breakdown 1/2 of the neighborhood
-            "clipped_mean": 1,
-            "mean": 0,  # plain DGD
-        }
-        if rule not in mins:
-            raise ValueError(f"unknown screening rule {rule!r}")
-        need = mins[rule]
+        from repro.core.screening import min_neighbors
+
+        need = min_neighbors(rule, self.num_byzantine)
         if self.min_in_degree < need:
             raise ValueError(
-                f"rule {rule!r} with b={b} needs min in-degree >= {need}, "
-                f"graph has {self.min_in_degree}"
+                f"rule {rule!r} with b={self.num_byzantine} needs min in-degree "
+                f">= {need}, graph has {self.min_in_degree}"
             )
 
 

@@ -207,9 +207,51 @@ def get_rule(name: str) -> Callable:
         raise ValueError(f"unknown screening rule {name!r}; options: {sorted(RULES)}")
 
 
+# Minimum in-neighborhood size each rule needs to tolerate b Byzantine nodes
+# (Table II).  Shared by `graph.Topology.validate_for_rule` and the network
+# runtime, which falls back to the node's own iterate whenever fewer usable
+# (arrived, fresh) messages are available at a tick.
+MIN_NEIGHBORS: dict[str, Callable[[int], int]] = {
+    "trimmed_mean": lambda b: 2 * b + 1,
+    "median": lambda b: 1,
+    "krum": lambda b: b + 3,
+    "bulyan": lambda b: max(4 * b, 3 * b + 2) + 1,
+    "geomedian": lambda b: 2 * b + 1,
+    "clipped_mean": lambda b: 1,
+    "mean": lambda b: 0,
+}
+
+
+def min_neighbors(rule: str, b: int) -> int:
+    try:
+        return MIN_NEIGHBORS[rule](b)
+    except KeyError:
+        raise ValueError(f"unknown screening rule {rule!r}; options: {sorted(MIN_NEIGHBORS)}")
+
+
 # ---------------------------------------------------------------------------
 # Network-wide application (simulation path, single host)
 # ---------------------------------------------------------------------------
+
+
+def _apply_rule(fn, rule, values, mask_j, self_j, b, chunk):
+    """One node's screening over its received value matrix ``values [n, d]``,
+    optionally streaming coordinate-wise rules over chunks of the coordinate
+    dimension.  Shared by `screen_all` (one broadcast matrix for everyone) and
+    `screen_views` (per-node mailbox views) so the two paths are numerically
+    identical."""
+    d = values.shape[1]
+    if rule in ("krum", "bulyan") or chunk is None or d <= chunk:
+        return fn(values, mask_j, self_j, b)
+    # coordinate-wise rules can stream over coordinate chunks
+    pad = (-d) % chunk
+    wp = jnp.pad(values, ((0, 0), (0, pad)))
+    sp = jnp.pad(self_j, (0, pad))
+    nchunks = wp.shape[1] // chunk
+    wc = wp.reshape(values.shape[0], nchunks, chunk).transpose(1, 0, 2)
+    sc = sp.reshape(nchunks, chunk)
+    out = jax.lax.map(lambda vs: fn(vs[0], mask_j, vs[1], b), (wc, sc))
+    return out.reshape(-1)[:d]
 
 
 @functools.partial(jax.jit, static_argnames=("rule", "b", "chunk"))
@@ -230,20 +272,38 @@ def screen_all(
     ``chunk`` optionally splits the coordinate dimension for very large d.
     """
     fn = get_rule(rule)
-    d = w.shape[1]
 
     def per_node(args):
         mask_j, self_j = args
-        if rule in ("krum", "bulyan") or chunk is None or d <= chunk:
-            return fn(w, mask_j, self_j, b)
-        # coordinate-wise rules can stream over coordinate chunks
-        pad = (-d) % chunk
-        wp = jnp.pad(w, ((0, 0), (0, pad)))
-        sp = jnp.pad(self_j, (0, pad))
-        nchunks = wp.shape[1] // chunk
-        wc = wp.reshape(w.shape[0], nchunks, chunk).transpose(1, 0, 2)
-        sc = sp.reshape(nchunks, chunk)
-        out = jax.lax.map(lambda vs: fn(vs[0], mask_j, vs[1], b), (wc, sc))
-        return out.reshape(-1)[:d]
+        return _apply_rule(fn, rule, w, mask_j, self_j, b, chunk)
 
     return jax.lax.map(per_node, (adjacency, w))
+
+
+@functools.partial(jax.jit, static_argnames=("rule", "b", "chunk"))
+def screen_views(
+    views: jax.Array,
+    mask: jax.Array,
+    self_vals: jax.Array,
+    *,
+    rule: str,
+    b: int,
+    chunk: int | None = None,
+) -> jax.Array:
+    """Apply a screening rule at every node over *per-node* value views.
+
+    Unlike `screen_all`, where every node screens rows of one shared broadcast
+    matrix, here node j screens its own ``views[j] [M, d]`` — e.g. mailbox
+    contents delivered by an unreliable network (`repro.net`), where different
+    nodes hold different (possibly stale) versions of a sender's iterate and a
+    Byzantine sender may have told different receivers different things.
+    ``mask[j, i]`` marks the (j, i) entry as usable (arrived and fresh);
+    ``self_vals[j]`` is node j's own iterate.  Returns ``[M, d]`` outputs y_j.
+    """
+    fn = get_rule(rule)
+
+    def per_node(args):
+        view_j, mask_j, self_j = args
+        return _apply_rule(fn, rule, view_j, mask_j, self_j, b, chunk)
+
+    return jax.lax.map(per_node, (views, mask, self_vals))

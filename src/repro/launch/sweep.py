@@ -1,9 +1,18 @@
-"""Fan out the full dry-run matrix (arch x shape x mesh) as subprocesses.
+"""Fan out experiment matrices as subprocesses.
 
-Resumable: existing JSON results are skipped.  Usage:
+Two modes, both resumable (existing results are skipped):
+
+* ``--mode dryrun`` (default) — the arch x shape x mesh lowering matrix:
 
     PYTHONPATH=src python -m repro.launch.sweep --out experiments/dryrun \
         [--jobs 4] [--archs a,b] [--shapes s1,s2] [--single-pod-only]
+
+* ``--mode net`` — the rule x attack x network-condition scenario matrix via
+  `repro.launch.train --net` (reduced configs, CPU-runnable):
+
+    PYTHONPATH=src python -m repro.launch.sweep --mode net \
+        --out experiments/net [--rules trimmed_mean,median] \
+        [--attacks random,alie,selective_victim] [--scenarios ideal,lossy]
 """
 from __future__ import annotations
 
@@ -62,16 +71,78 @@ def run_job(arch, shape, multi_pod, out_dir, timeout, extra_args=()):
         return tag, "TIMEOUT"
 
 
+# Network-condition axis of the scenario matrix (--mode net); each maps to
+# repro.launch.train --net flags.
+NET_SCENARIOS = {
+    "ideal": ["--net"],
+    "lossy": ["--net", "--net-drop", "0.2"],
+    "laggy": ["--net", "--net-latency", "3"],
+    "lossy_laggy": ["--net", "--net-drop", "0.2", "--net-latency", "3"],
+    "bandwidth64": ["--net", "--net-cap", "64"],
+    "churn": ["--net", "--net-schedule", "churn", "--net-churn-prob", "0.3"],
+    "partition": ["--net", "--net-schedule", "partition"],
+}
+
+
+def run_net_job(rule, attack, scenario, out_dir, timeout, arch, steps):
+    tag = f"net_{rule}_{attack}_{scenario}"
+    path = os.path.join(out_dir, tag + ".json")
+    if os.path.exists(path):
+        return tag, "cached"
+    cmd = [
+        sys.executable, "-m", "repro.launch.train",
+        "--arch", arch, "--reduce", "--nodes", "6", "--byzantine", "1",
+        "--rule", rule, "--attack", attack, "--steps", str(steps),
+        "--batch", "2", "--seq", "32", "--log-every", str(steps),
+    ] + NET_SCENARIOS[scenario]
+    t0 = time.time()
+    try:
+        proc = subprocess.run(cmd, capture_output=True, text=True, timeout=timeout)
+        status = "ok" if proc.returncode == 0 else "failed"
+        with open(path, "w") as f:
+            json.dump({"rule": rule, "attack": attack, "scenario": scenario,
+                       "status": status, "stdout": proc.stdout[-3000:],
+                       "stderr": proc.stderr[-3000:] if status == "failed" else ""},
+                      f, indent=2)
+        return tag, f"{status.upper() if status != 'ok' else status} ({time.time()-t0:.0f}s)"
+    except subprocess.TimeoutExpired:
+        with open(path, "w") as f:
+            json.dump({"rule": rule, "attack": attack, "scenario": scenario,
+                       "status": "timeout"}, f, indent=2)
+        return tag, "TIMEOUT"
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--mode", default="dryrun", choices=["dryrun", "net"])
+    ap.add_argument("--out", default=None)
     ap.add_argument("--jobs", type=int, default=4)
     ap.add_argument("--timeout", type=int, default=1500)
     ap.add_argument("--archs", default=None)
     ap.add_argument("--shapes", default=None)
     ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--rules", default="trimmed_mean,median")
+    ap.add_argument("--attacks", default="random,alie,selective_victim")
+    ap.add_argument("--scenarios", default=",".join(NET_SCENARIOS))
+    ap.add_argument("--net-arch", default="qwen3-4b")
+    ap.add_argument("--net-steps", type=int, default=30)
     args = ap.parse_args(argv)
+    if args.out is None:
+        args.out = "experiments/net" if args.mode == "net" else "experiments/dryrun"
     os.makedirs(args.out, exist_ok=True)
+    if args.mode == "net":
+        jobs = [(r, a, s)
+                for r in args.rules.split(",")
+                for a in args.attacks.split(",")
+                for s in args.scenarios.split(",")]
+        print(f"{len(jobs)} net-scenario jobs -> {args.out}")
+        with ThreadPoolExecutor(max_workers=args.jobs) as ex:
+            futs = [ex.submit(run_net_job, r, a, s, args.out, args.timeout,
+                              args.net_arch, args.net_steps) for r, a, s in jobs]
+            for fut in futs:
+                tag, status = fut.result()
+                print(f"  {tag:60s} {status}", flush=True)
+        return
     archs = args.archs.split(",") if args.archs else ARCHS
     shapes = args.shapes.split(",") if args.shapes else SHAPES
     jobs = []

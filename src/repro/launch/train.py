@@ -6,6 +6,11 @@
 
 ``--reduce`` swaps in the reduced config (CPU-runnable); without it the full
 config is used (requires a real cluster).  Supports checkpoint save/resume.
+
+Network scenarios (repro.net): ``--net`` routes training through the
+unreliable-network runtime; combine with ``--net-drop 0.2 --net-latency 3
+--net-schedule churn`` etc.  Message-granularity attacks (selective_victim)
+imply ``--net``.
 """
 from __future__ import annotations
 
@@ -19,8 +24,37 @@ import numpy as np
 from repro import checkpoint
 from repro.configs import get_config
 from repro.core import BridgeConfig, BridgeTrainer, erdos_renyi, replicate
+from repro.core.byzantine import ATTACKS
 from repro.data.tokens import TokenPipeline
 from repro.models import api as model_api
+
+
+def build_trainer(args, topo, grad_fn):
+    """BridgeTrainer (synchronous) or AsyncBridgeTrainer (--net scenarios)."""
+    use_net = args.net or args.attack not in ATTACKS
+    if not use_net:
+        bcfg = BridgeConfig(
+            topology=topo, rule=args.rule, num_byzantine=args.byzantine,
+            attack=args.attack, lam=args.lam, t0=args.t0, lr=args.lr,
+        )
+        return BridgeTrainer(bcfg, grad_fn)
+    from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
+    from repro.net.dynamic import scenario_schedule
+
+    channel = ChannelConfig(
+        drop_prob=args.net_drop,
+        latency_min=args.net_latency_min,
+        latency_max=args.net_latency,
+        bandwidth_cap=args.net_cap,
+    )
+    acfg = AsyncBridgeConfig(
+        topology=topo, rule=args.rule, num_byzantine=args.byzantine,
+        attack=args.attack, lam=args.lam, t0=args.t0, lr=args.lr,
+        channel=channel, staleness_bound=args.net_staleness,
+        schedule=scenario_schedule(args.net_schedule, topo, args.steps,
+                                   seed=args.seed, churn_prob=args.net_churn_prob),
+    )
+    return AsyncBridgeTrainer(acfg, grad_fn)
 
 
 def main(argv=None):
@@ -42,6 +76,18 @@ def main(argv=None):
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
+    # network-scenario flags (repro.net)
+    ap.add_argument("--net", action="store_true",
+                    help="route training through the unreliable-network runtime")
+    ap.add_argument("--net-drop", type=float, default=0.0, help="per-link drop probability")
+    ap.add_argument("--net-latency", type=int, default=0, help="max link latency (ticks)")
+    ap.add_argument("--net-latency-min", type=int, default=0)
+    ap.add_argument("--net-cap", type=int, default=None, help="bandwidth cap (coordinates)")
+    ap.add_argument("--net-staleness", type=int, default=5,
+                    help="max usable message age (ticks)")
+    ap.add_argument("--net-schedule", default="static",
+                    choices=["static", "churn", "partition", "join_leave"])
+    ap.add_argument("--net-churn-prob", type=float, default=0.2)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -52,18 +98,25 @@ def main(argv=None):
           f"{model_api.param_count(cfg):,}")
 
     topo = erdos_renyi(args.nodes, args.graph_p, args.byzantine, seed=args.seed)
-    bcfg = BridgeConfig(
-        topology=topo, rule=args.rule, num_byzantine=args.byzantine,
-        attack=args.attack, lam=args.lam, t0=args.t0, lr=args.lr,
-    )
-    trainer = BridgeTrainer(bcfg, api.grad_fn())
+    trainer = build_trainer(args, topo, api.grad_fn())
     key = jax.random.PRNGKey(args.seed)
     params = replicate(api.init_params(key, cfg), args.nodes, perturb=0.01, key=key)
     state = trainer.init(params, seed=args.seed)
     start = 0
     if args.ckpt and checkpoint.latest_step(args.ckpt) is not None:
-        (p, t), start = checkpoint.restore(args.ckpt, (state.params, state.t))
-        state = state._replace(params=p, t=jnp.asarray(t))
+        # Checkpoint the *full* BridgeState — including the PRNG key and any
+        # network-runtime state (in-flight mailboxes) — so a resumed lossy run
+        # replays the exact channel/attack trace of an uninterrupted one.
+        try:
+            restored, start = checkpoint.restore(args.ckpt, tuple(state))
+            state = type(state)(*jax.tree_util.tree_map(jnp.asarray, restored))
+        except ValueError:
+            # legacy (params, t) checkpoints: resume params but warn that the
+            # PRNG/network state restarts (loss trace won't replay exactly)
+            (p, t), start = checkpoint.restore(args.ckpt, (state.params, state.t))
+            state = state._replace(params=jax.tree_util.tree_map(jnp.asarray, p),
+                                   t=jnp.asarray(t))
+            print("legacy checkpoint format: PRNG key / network state reinitialized")
         print(f"resumed from step {start}")
 
     pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, args.nodes, seed=args.seed)
@@ -75,14 +128,18 @@ def main(argv=None):
         if (step + 1) % args.log_every == 0:
             dt = time.time() - t_last
             t_last = time.time()
+            net = ""
+            if "delivered_frac" in metrics:
+                net = (f"  delivered {float(metrics['delivered_frac']):.2f}"
+                       f"  stale {float(metrics['mean_staleness']):.1f}")
             print(
                 f"step {step+1:5d}  loss {float(metrics['loss']):.4f}  "
                 f"consensus {float(metrics['consensus_dist']):.4f}  "
-                f"rho {float(metrics['rho']):.5f}  {dt/args.log_every:.2f}s/step",
+                f"rho {float(metrics['rho']):.5f}{net}  {dt/args.log_every:.2f}s/step",
                 flush=True,
             )
         if args.ckpt and (step + 1) % args.ckpt_every == 0:
-            checkpoint.save(args.ckpt, step + 1, (state.params, state.t))
+            checkpoint.save(args.ckpt, step + 1, tuple(state))
     print("done.")
 
 

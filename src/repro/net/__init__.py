@@ -1,0 +1,39 @@
+"""repro.net — event-driven unreliable-network runtime for asynchronous BRIDGE.
+
+Layers (each usable standalone):
+
+* `channel` — per-link stochastic models: drop probability, integer latency
+  distributions, bandwidth-capped payload truncation.
+* `dynamic` — ``[T, M, M]`` time-varying topology schedules: edge churn, node
+  join/leave, partition-and-heal, built from `repro.core.graph.Topology`.
+* `mailbox` — fixed-capacity per-node mailboxes with an in-flight ring buffer
+  (scan-over-ticks friendly; no Python event loop inside jit).
+* `runtime` — `SynchronousRuntime` (the trivial ideal network) and
+  `UnreliableRuntime` (channel + schedule + mailboxes), pluggable into
+  `BridgeTrainer` via its ``runtime=`` hook.
+* `async_bridge` — `AsyncBridgeTrainer`: BRIDGE screening whatever messages
+  have arrived, with a configurable staleness bound and a jitted
+  ``lax.scan``-over-ticks hot path.
+"""
+from repro.net.async_bridge import AsyncBridgeConfig, AsyncBridgeTrainer
+from repro.net.channel import ChannelConfig
+from repro.net.dynamic import (
+    edge_churn,
+    node_join_leave,
+    node_presence_schedule,
+    partition_and_heal,
+    scenario_schedule,
+    schedule_stats,
+    static_schedule,
+)
+from repro.net.mailbox import MailboxState, deliver, init_mailbox, push, staleness, usable_mask
+from repro.net.runtime import SynchronousRuntime, UnreliableRuntime
+
+__all__ = [
+    "AsyncBridgeConfig", "AsyncBridgeTrainer",
+    "ChannelConfig",
+    "edge_churn", "node_join_leave", "node_presence_schedule",
+    "partition_and_heal", "scenario_schedule", "schedule_stats", "static_schedule",
+    "MailboxState", "deliver", "init_mailbox", "push", "staleness", "usable_mask",
+    "SynchronousRuntime", "UnreliableRuntime",
+]

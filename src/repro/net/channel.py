@@ -1,0 +1,90 @@
+"""Per-link channel models for the unreliable-network runtime.
+
+A channel decides, for every directed edge (i -> j) at every tick, whether the
+message is dropped, how many ticks it spends in flight, and how much of the
+payload survives a bandwidth cap.  Everything is sampled from a per-tick PRNG
+key, so a fixed seed reproduces the exact same loss/latency trace — the
+determinism the repro benchmarks and tests rely on.
+
+All sampling is shape-static (``[M, M]`` tensors regardless of how many edges
+are live), so channels compose with ``lax.scan`` over ticks without any
+Python-level event loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Stochastic properties of every link.
+
+    ``drop_prob``: i.i.d. per-edge per-tick probability the message is lost.
+    ``latency_min``/``latency_max``: message delay in ticks, sampled uniformly
+    from the inclusive integer range (0 means delivery the same tick it was
+    sent, i.e. the synchronous ideal).
+    ``bandwidth_cap``: if set, only the first ``bandwidth_cap`` coordinates of
+    a payload are transmitted; the receiver substitutes its own current value
+    for the untransmitted tail at screening time (partial-update semantics).
+    """
+
+    drop_prob: float = 0.0
+    latency_min: int = 0
+    latency_max: int = 0
+    bandwidth_cap: int | None = None
+
+    def __post_init__(self):
+        if not 0.0 <= self.drop_prob <= 1.0:
+            raise ValueError(f"drop_prob must be in [0, 1], got {self.drop_prob}")
+        if self.latency_min < 0 or self.latency_max < self.latency_min:
+            raise ValueError(
+                f"need 0 <= latency_min <= latency_max, got "
+                f"[{self.latency_min}, {self.latency_max}]"
+            )
+        if self.bandwidth_cap is not None and self.bandwidth_cap < 1:
+            raise ValueError(f"bandwidth_cap must be >= 1, got {self.bandwidth_cap}")
+
+    @classmethod
+    def ideal(cls) -> "ChannelConfig":
+        """Zero latency, zero drop, unlimited bandwidth — the channel under
+        which the async runtime reproduces the synchronous path bit-for-bit."""
+        return cls()
+
+    @property
+    def is_ideal(self) -> bool:
+        return (
+            self.drop_prob == 0.0
+            and self.latency_max == 0
+            and self.bandwidth_cap is None
+        )
+
+    @property
+    def max_latency(self) -> int:
+        return self.latency_max
+
+    def sample(self, key: jax.Array, num_nodes: int) -> tuple[jax.Array, jax.Array]:
+        """Draw one tick of channel events: ``(delay [M,M] int32, drop [M,M]
+        bool)``.  Entries for non-edges are sampled too (shape-static) and
+        simply never used."""
+        k_delay, k_drop = jax.random.split(key)
+        if self.latency_max > self.latency_min:
+            delay = jax.random.randint(
+                k_delay, (num_nodes, num_nodes), self.latency_min, self.latency_max + 1,
+                dtype=jnp.int32,
+            )
+        else:
+            delay = jnp.full((num_nodes, num_nodes), self.latency_min, jnp.int32)
+        if self.drop_prob > 0.0:
+            drop = jax.random.uniform(k_drop, (num_nodes, num_nodes)) < self.drop_prob
+        else:
+            drop = jnp.zeros((num_nodes, num_nodes), bool)
+        return delay, drop
+
+    def coord_mask(self, d: int) -> jax.Array | None:
+        """[d] bool marking transmitted coordinates, or None when uncapped."""
+        if self.bandwidth_cap is None or self.bandwidth_cap >= d:
+            return None
+        return jnp.arange(d) < self.bandwidth_cap

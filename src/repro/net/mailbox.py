@@ -1,0 +1,107 @@
+"""Fixed-capacity per-node mailboxes with in-flight message tracking.
+
+State is a pytree of fixed-shape arrays so the whole exchange threads through
+``lax.scan`` as a carry — no Python queues, no dynamic allocation:
+
+* ``values[j, i]`` / ``send_tick[j, i]`` — the *mailbox*: the most recent
+  payload node j has received from sender i, tagged with the tick it was
+  sent (staleness at tick t is ``t - send_tick``; `NEVER` marks empty slots).
+* ``ring_*[j, i, s]`` — in-flight messages.  A message sent at tick t with
+  delay δ is written to ring slot ``(t + δ) mod L`` where ``L = max_delay + 1``;
+  at tick t the runtime delivers slot ``t mod L``.  One slot per (edge,
+  arrival tick) suffices because a sender emits at most one message per tick,
+  and L bounds how far ahead any message can land (a later send to the same
+  slot would be delivered first).
+
+Memory is ``O(M^2 * L * d)`` — the price of per-link payloads, which is what
+makes selective-victim attacks and per-edge loss expressible.  At simulation
+scale (M tens, d up to ~10^4, L a few ticks) this is tens of MB.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Sentinel send-tick for "nothing ever delivered on this edge"; large negative
+# so staleness comes out huge (and any finite bound masks it) without risking
+# int32 overflow when ticks are added.
+NEVER = -(2**30)
+
+
+class MailboxState(NamedTuple):
+    values: jax.Array  # [M, M, d] newest delivered payload per (receiver, sender)
+    send_tick: jax.Array  # [M, M] int32 tick the stored payload was sent
+    ring_vals: jax.Array  # [M, M, L, d] in-flight payloads by arrival slot
+    ring_send: jax.Array  # [M, M, L] int32 send ticks of in-flight payloads
+    ring_valid: jax.Array  # [M, M, L] bool slot occupancy
+
+    @property
+    def capacity(self) -> int:
+        return self.ring_vals.shape[2]
+
+
+def init_mailbox(num_nodes: int, dim: int, max_delay: int, dtype=jnp.float32) -> MailboxState:
+    m, L = num_nodes, max_delay + 1
+    return MailboxState(
+        values=jnp.zeros((m, m, dim), dtype),
+        send_tick=jnp.full((m, m), NEVER, jnp.int32),
+        ring_vals=jnp.zeros((m, m, L, dim), dtype),
+        ring_send=jnp.full((m, m, L), NEVER, jnp.int32),
+        ring_valid=jnp.zeros((m, m, L), bool),
+    )
+
+
+def push(
+    state: MailboxState,
+    msgs: jax.Array,
+    send_mask: jax.Array,
+    delay: jax.Array,
+    tick: jax.Array,
+) -> MailboxState:
+    """Enqueue this tick's transmissions.  ``msgs[j, i]`` is the payload from
+    i to j, sent iff ``send_mask[j, i]`` (edge live and not dropped), arriving
+    ``delay[j, i]`` ticks later."""
+    L = state.capacity
+    slot = (tick + delay) % L  # [M, M]
+    hit = send_mask[:, :, None] & (slot[:, :, None] == jnp.arange(L)[None, None, :])
+    return state._replace(
+        ring_vals=jnp.where(hit[..., None], msgs[:, :, None, :], state.ring_vals),
+        ring_send=jnp.where(hit, tick, state.ring_send),
+        ring_valid=state.ring_valid | hit,
+    )
+
+
+def deliver(state: MailboxState, tick: jax.Array) -> tuple[MailboxState, jax.Array]:
+    """Move every message whose arrival slot is ``tick`` into the mailbox.
+    Returns the updated state and the ``[M, M]`` arrival mask."""
+    L = state.capacity
+    cur = (tick % L) == jnp.arange(L)  # [L]
+    hit = state.ring_valid & cur[None, None, :]  # [M, M, L]
+    arrived = jnp.any(hit, axis=2)
+    payload = jnp.sum(jnp.where(hit[..., None], state.ring_vals, 0.0), axis=2)
+    sent_at = jnp.sum(jnp.where(hit, state.ring_send, 0), axis=2)
+    # Variable latency reorders messages; keep only arrivals *sent* later than
+    # the current mailbox entry (send_tick doubles as a sequence number), so a
+    # delayed stale copy never clobbers a fresher one.
+    newer = arrived & (sent_at > state.send_tick)
+    return (
+        state._replace(
+            values=jnp.where(newer[..., None], payload, state.values),
+            send_tick=jnp.where(newer, sent_at, state.send_tick),
+            ring_valid=state.ring_valid & ~hit,
+        ),
+        arrived,
+    )
+
+
+def staleness(state: MailboxState, tick: jax.Array) -> jax.Array:
+    """[M, M] ticks since each mailbox entry was *sent* (huge where empty)."""
+    return tick - state.send_tick
+
+
+def usable_mask(state: MailboxState, tick: jax.Array, bound: int) -> jax.Array:
+    """[M, M] entries that have ever arrived and are at most ``bound`` ticks
+    stale — the mask asynchronous screening feeds to the rules."""
+    return (state.send_tick > NEVER) & (staleness(state, tick) <= bound)

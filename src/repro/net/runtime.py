@@ -1,0 +1,140 @@
+"""Network runtimes: how messages move between BRIDGE nodes each tick.
+
+A runtime is the pluggable object `repro.core.bridge.BridgeTrainer` accepts
+via its ``runtime=`` hook.  The contract (duck-typed, jit-traceable):
+
+* ``init(num_nodes, dim) -> net_state`` — pytree carried through the step/scan.
+* ``adjacency_at(t) -> [M, M] bool`` — the tick's live edges.
+* ``exchange(net_state, msgs, self_vals, adjacency, key, t)
+  -> (net_state, views [M, M, d], mask [M, M], stats dict)`` — moves this
+  tick's message tensor ``msgs[receiver, sender]`` through the network and
+  returns each node's current view of its senders plus the usable-entry mask.
+
+`SynchronousRuntime` is the trivial instance — every edge delivers instantly,
+every tick — and reproduces the classic broadcast simulation exactly.
+`UnreliableRuntime` composes a `ChannelConfig` (drop/latency/bandwidth), a
+``[T, M, M]`` topology schedule (`repro.net.dynamic`), and per-node mailboxes
+(`repro.net.mailbox`), exposing stale-but-bounded views for asynchronous
+screening.  Both are scan-over-ticks friendly: fixed shapes, no host control
+flow inside the step.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.net import mailbox as mb
+from repro.net.channel import ChannelConfig
+from repro.net.dynamic import static_schedule
+
+
+def _as_schedule(topology_or_schedule) -> jnp.ndarray:
+    """Accept a Topology, a [M, M] adjacency, or a [T, M, M] schedule."""
+    arr = getattr(topology_or_schedule, "adjacency", topology_or_schedule)
+    arr = np.asarray(arr, dtype=bool)
+    if arr.ndim == 2:
+        arr = static_schedule(arr, 1)
+    if arr.ndim != 3 or arr.shape[1] != arr.shape[2]:
+        raise ValueError(f"schedule must be [T, M, M], got {arr.shape}")
+    return jnp.asarray(arr)
+
+
+class SynchronousRuntime:
+    """The ideal network: every live edge delivers the fresh message within
+    the tick.  ``BridgeTrainer(cfg, fn, runtime=SynchronousRuntime(topo))``
+    matches ``BridgeTrainer(cfg, fn)`` bit-for-bit (same rules, same masks);
+    it exists so dynamic topologies can be driven without any channel noise.
+    """
+
+    def __init__(self, topology_or_schedule):
+        self._schedule = _as_schedule(topology_or_schedule)
+
+    @property
+    def num_ticks(self) -> int:
+        return self._schedule.shape[0]
+
+    def adjacency_at(self, t: jax.Array) -> jax.Array:
+        return self._schedule[t % self.num_ticks]
+
+    def init(self, num_nodes: int, dim: int):
+        del num_nodes, dim
+        return None
+
+    def exchange(self, net_state, msgs, self_vals, adjacency, key, t):
+        del self_vals, key, t
+        m = adjacency.shape[0]
+        links = jnp.sum(adjacency).astype(jnp.float32) / max(m, 1)
+        stats = {
+            "delivered_frac": jnp.ones((), jnp.float32),
+            "mean_staleness": jnp.zeros((), jnp.float32),
+            "active_links": links,  # live in-edges per node this tick
+            "usable_in": links,  # usable mailbox entries per node (== links here)
+        }
+        return net_state, msgs, adjacency, stats
+
+
+class UnreliableRuntime:
+    """Lossy, delayed, bandwidth-capped, time-varying message exchange.
+
+    Per tick: (1) sample per-edge drop/delay from the channel, (2) enqueue the
+    surviving messages into the in-flight ring, (3) deliver everything whose
+    arrival tick is now, (4) expose mailbox contents no staler than
+    ``staleness_bound`` ticks (sender-side timestamps) as the screening views.
+    Untransmitted coordinates under a bandwidth cap are backfilled with the
+    receiver's own iterate.
+    """
+
+    def __init__(
+        self,
+        topology_or_schedule,
+        channel: ChannelConfig = ChannelConfig.ideal(),
+        *,
+        staleness_bound: int = 5,
+    ):
+        if staleness_bound < 0:
+            raise ValueError(f"staleness_bound must be >= 0, got {staleness_bound}")
+        self._schedule = _as_schedule(topology_or_schedule)
+        self.channel = channel
+        self.staleness_bound = staleness_bound
+
+    @property
+    def num_ticks(self) -> int:
+        return self._schedule.shape[0]
+
+    def adjacency_at(self, t: jax.Array) -> jax.Array:
+        return self._schedule[t % self.num_ticks]
+
+    def init(self, num_nodes: int, dim: int) -> mb.MailboxState:
+        if num_nodes != self._schedule.shape[1]:
+            raise ValueError(
+                f"runtime schedule is for {self._schedule.shape[1]} nodes, "
+                f"trainer has {num_nodes}"
+            )
+        return mb.init_mailbox(num_nodes, dim, self.channel.max_latency)
+
+    def exchange(self, net_state, msgs, self_vals, adjacency, key, t):
+        m = adjacency.shape[0]
+        delay, drop = self.channel.sample(key, m)
+        send_mask = adjacency & ~drop
+        net_state = mb.push(net_state, msgs, send_mask, delay, t)
+        net_state, arrived = mb.deliver(net_state, t)
+        mask = mb.usable_mask(net_state, t, self.staleness_bound)
+        views = net_state.values
+        cm = self.channel.coord_mask(views.shape[-1])
+        if cm is not None:
+            views = jnp.where(cm[None, None, :], views, self_vals[:, None, :])
+        n_edges = jnp.maximum(jnp.sum(adjacency), 1)
+        n_usable = jnp.maximum(jnp.sum(mask), 1)
+        stats = {
+            "delivered_frac": jnp.sum(arrived & adjacency) / n_edges.astype(jnp.float32),
+            "mean_staleness": jnp.sum(
+                jnp.where(mask, mb.staleness(net_state, t), 0)
+            ) / n_usable.astype(jnp.float32),
+            "active_links": jnp.sum(adjacency).astype(jnp.float32) / max(m, 1),
+            # usable entries can exceed active_links: fresh mailbox values from
+            # edges that churned away still count until they go stale
+            "usable_in": jnp.sum(mask).astype(jnp.float32) / max(m, 1),
+        }
+        return net_state, views, mask, stats

@@ -1,0 +1,281 @@
+"""repro.net: mailboxes, channels, schedules, and asynchronous BRIDGE.
+
+Covers the subsystem's contract surface:
+* mailbox staleness masking and out-of-order delivery;
+* determinism of drop/latency traces under a fixed PRNG key;
+* bit-for-bit equivalence with the synchronous `core.bridge` path under an
+  ideal channel (the acceptance bar for the runtime refactor);
+* resilience through partition-and-heal and lossy channels (async BRIDGE-T
+  beats the no-screening mean baseline under the ALIE attack);
+* message-attack registry validation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    BridgeConfig,
+    BridgeTrainer,
+    erdos_renyi,
+    get_attack,
+    get_message_attack,
+    replicate,
+    ring_of_cliques,
+)
+from repro.net import (
+    AsyncBridgeConfig,
+    AsyncBridgeTrainer,
+    ChannelConfig,
+    SynchronousRuntime,
+    UnreliableRuntime,
+    edge_churn,
+    init_mailbox,
+    node_join_leave,
+    partition_and_heal,
+    schedule_stats,
+    static_schedule,
+    usable_mask,
+)
+from repro.net import mailbox as mb
+
+M, D = 16, 5
+
+
+def quad_grad_fn(params, batch):
+    w, c = params["w"], batch
+    loss = 0.5 * jnp.sum((w - c) ** 2)
+    return loss, {"w": w - c}
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return ring_of_cliques(4, 4, 1)
+
+
+@pytest.fixture(scope="module")
+def targets():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+
+
+def _make(topo, rule, attack, *, channel, staleness_bound=5, schedule=None,
+          b=1, lam=1.0, t0=10):
+    cfg = AsyncBridgeConfig(
+        topology=topo, rule=rule, num_byzantine=b, attack=attack, lam=lam,
+        t0=t0, channel=channel, staleness_bound=staleness_bound, schedule=schedule,
+    )
+    tr = AsyncBridgeTrainer(cfg, quad_grad_fn)
+    params = replicate({"w": jnp.zeros(D)}, topo.num_nodes, perturb=0.1,
+                       key=jax.random.PRNGKey(0))
+    return tr, tr.init(params)
+
+
+# ---------------------------------------------------------------------------
+# Mailbox semantics
+# ---------------------------------------------------------------------------
+
+
+def test_mailbox_staleness_masking():
+    state = init_mailbox(3, 2, max_delay=2)
+    msgs = jnp.arange(3 * 3 * 2, dtype=jnp.float32).reshape(3, 3, 2)
+    send = jnp.ones((3, 3), bool)
+    delay = jnp.full((3, 3), 2, jnp.int32)
+    state = mb.push(state, msgs, send, delay, jnp.int32(0))
+    # nothing delivered yet -> nothing usable
+    state, arrived = mb.deliver(state, jnp.int32(0))
+    assert not bool(arrived.any())
+    assert not bool(usable_mask(state, jnp.int32(0), 10).any())
+    # delivery happens at t=2; staleness counts from the *send* tick
+    state, arrived = mb.deliver(state, jnp.int32(2))
+    assert bool(arrived.all())
+    np.testing.assert_array_equal(np.asarray(state.values), np.asarray(msgs))
+    assert bool(usable_mask(state, jnp.int32(2), 2).all())
+    # at t=5 the entries are 5 ticks past their send -> bound 5 keeps them,
+    # bound 4 masks them all
+    assert bool(usable_mask(state, jnp.int32(5), 5).all())
+    assert not bool(usable_mask(state, jnp.int32(5), 4).any())
+
+
+def test_mailbox_out_of_order_keeps_newest():
+    state = init_mailbox(1, 1, max_delay=3)
+    ones = jnp.ones((1, 1), bool)
+    old = jnp.full((1, 1, 1), 10.0)
+    new = jnp.full((1, 1, 1), 20.0)
+    state = mb.push(state, old, ones, jnp.full((1, 1), 3, jnp.int32), jnp.int32(0))
+    state = mb.push(state, new, ones, jnp.full((1, 1), 0, jnp.int32), jnp.int32(1))
+    state, _ = mb.deliver(state, jnp.int32(1))  # newer message lands first
+    assert float(state.values[0, 0, 0]) == 20.0
+    state, arrived = mb.deliver(state, jnp.int32(3))  # stale copy arrives late
+    assert bool(arrived[0, 0])
+    assert float(state.values[0, 0, 0]) == 20.0  # not clobbered
+    assert int(state.send_tick[0, 0]) == 1
+
+
+def test_bandwidth_cap_backfills_self(topo):
+    ch = ChannelConfig(bandwidth_cap=2)
+    rt = UnreliableRuntime(topo, ch, staleness_bound=5)
+    m = topo.num_nodes
+    net = rt.init(m, D)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(m, D)), jnp.float32)
+    msgs = jnp.broadcast_to(w[None], (m, m, D))
+    adj = jnp.asarray(topo.adjacency)
+    net, views, mask, _ = rt.exchange(net, msgs, w, adj, jax.random.PRNGKey(0), jnp.int32(0))
+    views = np.asarray(views)
+    # transmitted prefix is the sender's value, untransmitted tail the receiver's
+    j, i = map(int, np.argwhere(np.asarray(adj))[0])
+    np.testing.assert_allclose(views[j, i, :2], np.asarray(w)[i, :2])
+    np.testing.assert_allclose(views[j, i, 2:], np.asarray(w)[j, 2:])
+
+
+# ---------------------------------------------------------------------------
+# Determinism
+# ---------------------------------------------------------------------------
+
+
+def test_drop_latency_determinism(topo, targets):
+    ch = ChannelConfig(drop_prob=0.3, latency_min=0, latency_max=3)
+
+    def run(seed):
+        tr, st = _make(topo, "trimmed_mean", "random", channel=ch)
+        st = st._replace(key=jax.random.PRNGKey(seed))
+        st, ms = tr.run_ticks(st, lambda i: targets, 40)
+        return np.asarray(st.params["w"]), np.asarray(ms["delivered_frac"])
+
+    w1, d1 = run(0)
+    w2, d2 = run(0)
+    w3, d3 = run(1)
+    np.testing.assert_array_equal(w1, w2)
+    np.testing.assert_array_equal(d1, d2)
+    assert not np.array_equal(d1, d3)  # different key -> different loss trace
+
+
+# ---------------------------------------------------------------------------
+# Equivalence with the synchronous path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", ["trimmed_mean", "median"])
+def test_ideal_channel_matches_core_bridge_bitwise(targets, rule):
+    """Acceptance bar: zero latency, zero drop, static graph -> the async
+    runtime reproduces `core.bridge` iterates bit-for-bit over >= 50 ticks."""
+    topo = erdos_renyi(M, 0.8, 2, seed=1)
+    cfg = BridgeConfig(topology=topo, rule=rule, num_byzantine=2,
+                       attack="random", lam=1.0, t0=10)
+    sync = BridgeTrainer(cfg, quad_grad_fn)
+    atr, ast = _make(topo, rule, "random", channel=ChannelConfig.ideal(),
+                     staleness_bound=0, b=2)
+    params = replicate({"w": jnp.zeros(D)}, M, perturb=0.1, key=jax.random.PRNGKey(0))
+    st = sync.init(params)
+    for _ in range(55):
+        st, _ = sync.step(st, targets)
+        ast, _ = atr.step(ast, targets)
+        np.testing.assert_array_equal(np.asarray(st.params["w"]),
+                                      np.asarray(ast.params["w"]))
+
+
+def test_synchronous_runtime_matches_default_path(targets):
+    """The runtime= hook with the trivial runtime is the identity refactor."""
+    topo = erdos_renyi(M, 0.8, 2, seed=1)
+    cfg = BridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                       attack="alie", lam=1.0, t0=10)
+    base = BridgeTrainer(cfg, quad_grad_fn)
+    hooked = BridgeTrainer(cfg, quad_grad_fn, runtime=SynchronousRuntime(topo))
+    params = replicate({"w": jnp.zeros(D)}, M, perturb=0.1, key=jax.random.PRNGKey(0))
+    s1, s2 = base.init(params), hooked.init(params)
+    for _ in range(30):
+        s1, _ = base.step(s1, targets)
+        s2, _ = hooked.step(s2, targets)
+    np.testing.assert_array_equal(np.asarray(s1.params["w"]),
+                                  np.asarray(s2.params["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Resilience under network stress (paper claims x network conditions)
+# ---------------------------------------------------------------------------
+
+
+def _honest_stats(tr, targets):
+    hm = np.asarray(tr.honest_mask)
+    t = np.asarray(targets)[hm]
+    c = t.mean(0)
+    opt = 0.5 * float(np.mean(np.sum((t - c) ** 2, axis=1)))
+    return hm, c, opt
+
+
+def test_partition_and_heal_convergence(topo, targets):
+    """Async BRIDGE-T rides out a partition (two halves of the clique ring
+    severed for 70 ticks) and still reaches consensus near the honest mean
+    after the network heals."""
+    groups = np.repeat(np.arange(2), M // 2)
+    sched = partition_and_heal(topo, 400, groups, cut_start=50, cut_end=120)
+    ch = ChannelConfig(drop_prob=0.1, latency_min=0, latency_max=2)
+    tr, st = _make(topo, "trimmed_mean", "random", channel=ch, schedule=sched)
+    st, ms = tr.run_ticks(st, lambda i: targets, 400)
+    hm, c, opt = _honest_stats(tr, targets)
+    w_fin = np.asarray(st.params["w"])[hm]
+    assert float(ms["consensus_dist"][-1]) < 0.5
+    assert np.linalg.norm(w_fin.mean(0) - c) < 0.8
+    assert float(ms["loss"][-1]) < opt + 1.0
+
+
+def test_lossy_alie_bridge_beats_mean_baseline(topo, targets):
+    """Acceptance bar: 20% drop + staleness bound 5 on ring-of-cliques under
+    the ALIE attack — async BRIDGE-T drives train loss below the
+    no-screening mean baseline."""
+    ch = ChannelConfig(drop_prob=0.2)
+    tr_t, st_t = _make(topo, "trimmed_mean", "alie", channel=ch, staleness_bound=5)
+    st_t, ms_t = tr_t.run_ticks(st_t, lambda i: targets, 300)
+    tr_m, st_m = _make(topo, "mean", "alie", channel=ch, staleness_bound=5)
+    st_m, ms_m = tr_m.run_ticks(st_m, lambda i: targets, 300)
+    assert float(ms_t["loss"][-1]) < float(ms_m["loss"][-1])
+    # and BRIDGE-T itself lands near the honest optimum
+    _, _, opt = _honest_stats(tr_t, targets)
+    assert float(ms_t["loss"][-1]) < opt + 1.0
+
+
+def test_selective_victim_screened(topo, targets):
+    """The per-neighbor selective-victim attack (message granularity) is still
+    screened by async BRIDGE-T."""
+    ch = ChannelConfig(drop_prob=0.1, latency_min=0, latency_max=1)
+    tr, st = _make(topo, "trimmed_mean", "selective_victim", channel=ch)
+    st, ms = tr.run_ticks(st, lambda i: targets, 300)
+    hm, c, opt = _honest_stats(tr, targets)
+    w_fin = np.asarray(st.params["w"])[hm]
+    assert np.linalg.norm(w_fin.mean(0) - c) < 1.0
+    assert float(ms["loss"][-1]) < opt + 1.0
+
+
+# ---------------------------------------------------------------------------
+# Schedules + registry validation
+# ---------------------------------------------------------------------------
+
+
+def test_schedule_generators_shapes(topo):
+    T, m = 30, topo.num_nodes
+    s = static_schedule(topo, T)
+    assert s.shape == (T, m, m) and s.all(axis=0).sum() == topo.adjacency.sum()
+    churn = edge_churn(topo, T, 0.4, seed=0)
+    assert churn.shape == (T, m, m)
+    assert (churn <= s).all()  # churn only removes edges
+    assert (churn == churn.transpose(0, 2, 1)).all()  # symmetric churn
+    jl = node_join_leave(topo, T, {0: (5, 15)})
+    assert not jl[5:15, 0].any() and not jl[5:15, :, 0].any()
+    assert jl[4, 0].any() and jl[15, 0].any()
+    stats = schedule_stats(churn)
+    assert 0.0 < stats["edge_uptime"] < 1.0
+    assert stats["min_in_degree"] <= stats["mean_in_degree"]
+
+
+def test_attack_registry_validation():
+    assert get_message_attack("selective_victim").name == "selective_victim"
+    # every broadcast attack lifts to a message attack
+    for name in ["none", "random", "alie"]:
+        assert get_message_attack(name).broadcast is not None
+    with pytest.raises(ValueError, match="network runtime"):
+        get_attack("selective_victim")
+    with pytest.raises(ValueError, match="selective_victim"):
+        get_message_attack("definitely_not_an_attack")
+    with pytest.raises(ValueError, match="options"):
+        get_attack("definitely_not_an_attack")

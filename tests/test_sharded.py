@@ -29,7 +29,8 @@ def test_sharded_gossip_matches_reference():
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.core import complete_graph, screen_all, gossip_screen_params
         from repro.core.bridge import stack_flatten
-        mesh = jax.make_mesh((4,2), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4,2), ("data","model"))
         M = 4
         topo = complete_graph(M, 1)
         adj = jnp.asarray(topo.adjacency)
@@ -59,7 +60,8 @@ def test_sharded_byzantine_attack_screened():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P, NamedSharding
         from repro.core import complete_graph, gossip_screen_params
-        mesh = jax.make_mesh((8,1), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,1), ("data","model"))
         M = 8
         topo = complete_graph(M, 2)
         adj = jnp.asarray(topo.adjacency)
@@ -93,8 +95,8 @@ def test_mini_multipod_dryrun_lowers():
         from repro.launch.steps import make_train_step
         from repro.models import api as model_api
 
-        mesh = jax.make_mesh((2,2,2), ("pod","data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*3)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((2,2,2), ("pod","data","model"))
         nax = ("pod","data")
         cfg = get_config("qwen3-4b").reduced()
         api = model_api.build(cfg)
@@ -131,8 +133,8 @@ def test_serve_step_lowers_with_cache_sharding():
         from repro.launch.steps import make_serve_step
         from repro.models import api as model_api
 
-        mesh = jax.make_mesh((4,2), ("data","model"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((4,2), ("data","model"))
         nax = ("data",)
         cfg = get_config("mistral-nemo-12b").reduced()
         api = model_api.build(cfg)
