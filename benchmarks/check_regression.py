@@ -1,0 +1,132 @@
+"""Benchmark regression gate: compare fresh ``BENCH_*.json`` files against
+committed baselines and fail (exit 1) on wall-time regression.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        [--fresh-dir .] [--baseline-dir benchmarks/baselines] \
+        [--names BENCH_grid.json,BENCH_net.json] [--tol 1.5] [--update]
+
+Metrics are discovered recursively by key name: keys ending in one of the
+time suffixes (``us_per_tick``, ``us_per_step``, ``us_per_cell``, ``wall_s``,
+``seconds_per_cell``) are *lower-is-better*; ``cells_per_sec`` is
+*higher-is-better*.  A metric regresses when it is worse than the committed
+baseline by more than ``--tol`` (default 1.5x, i.e. 50% slower; override per
+run or via the ``BENCH_TOL`` env var — CI runners are noisy, paper over a
+flaky gate by bumping the tolerance, not by deleting the step).
+
+Re-baselining (after an intentional perf change, or to adopt a new runner
+class): run the benchmarks, eyeball the fresh numbers, then either
+``--update`` (copies fresh over the baselines) or commit the fresh files to
+``benchmarks/baselines/`` by hand.  Baselines are per-file: a missing
+baseline is reported and skipped, never failed, so adding a new benchmark
+does not break the gate before its first baseline lands.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+LOWER_IS_BETTER = ("us_per_tick", "us_per_step", "us_per_cell", "wall_s")
+# speedup_vs_subprocess compares two measurements from the SAME machine, so it
+# is environment-relative — the most portable signal across runner classes
+HIGHER_IS_BETTER = ("cells_per_sec", "speedup_vs_subprocess")
+# environment measurements, not properties of the code under test (interpreter
+# start-up, import cost, reference-machine extrapolations) — never gated
+SKIP = ("extrapolated_wall_s_all_cells", "seconds_per_cell")
+SKIP_PREFIXES = ("subprocess_baseline.", "sequential_inprocess_baseline.")
+
+DEFAULT_NAMES = ("BENCH_grid.json", "BENCH_net.json")
+
+
+def _walk(prefix: str, obj, out: dict):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            _walk(f"{prefix}.{k}" if prefix else k, v, out)
+    elif isinstance(obj, (int, float)) and not isinstance(obj, bool):
+        out[prefix] = float(obj)
+
+
+def _metrics(path: str) -> dict[str, float]:
+    with open(path) as f:
+        flat: dict[str, float] = {}
+        _walk("", json.load(f), flat)
+    picked = {}
+    for key, val in flat.items():
+        leaf = key.rsplit(".", 1)[-1]
+        if leaf in SKIP or key.startswith(SKIP_PREFIXES) or val <= 0:
+            continue
+        if leaf.endswith(LOWER_IS_BETTER) or leaf in HIGHER_IS_BETTER:
+            picked[key] = val
+    return picked
+
+
+def compare(fresh_path: str, baseline_path: str, tol: float) -> list[str]:
+    """Human-readable regression descriptions (empty = pass)."""
+    fresh = _metrics(fresh_path)
+    base = _metrics(baseline_path)
+    problems = []
+    for key in sorted(set(fresh) & set(base)):
+        leaf = key.rsplit(".", 1)[-1]
+        f, b = fresh[key], base[key]
+        if leaf in HIGHER_IS_BETTER or key in HIGHER_IS_BETTER:
+            if f < b / tol:
+                problems.append(
+                    f"{key}: {f:.4g} < baseline {b:.4g} / {tol:g} (higher is better)")
+        elif f > b * tol:
+            problems.append(
+                f"{key}: {f:.4g} > baseline {b:.4g} * {tol:g} (lower is better)")
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh-dir", default=".")
+    ap.add_argument("--baseline-dir", default=os.path.join("benchmarks", "baselines"))
+    ap.add_argument("--names", default=",".join(DEFAULT_NAMES),
+                    help="comma-separated BENCH_*.json file names to check")
+    ap.add_argument("--tol", type=float,
+                    default=float(os.environ.get("BENCH_TOL", "1.5")),
+                    help="allowed slowdown factor (default 1.5, env BENCH_TOL)")
+    ap.add_argument("--update", action="store_true",
+                    help="re-baseline: copy fresh files over the baselines")
+    args = ap.parse_args(argv)
+
+    failed = False
+    checked = 0
+    for name in args.names.split(","):
+        fresh = os.path.join(args.fresh_dir, name)
+        base = os.path.join(args.baseline_dir, name)
+        if not os.path.exists(fresh):
+            print(f"[skip] {name}: no fresh result at {fresh}")
+            continue
+        if args.update:
+            os.makedirs(args.baseline_dir, exist_ok=True)
+            shutil.copyfile(fresh, base)
+            print(f"[rebaselined] {name} -> {base}")
+            continue
+        if not os.path.exists(base):
+            print(f"[skip] {name}: no committed baseline at {base} "
+                  f"(run with --update to create one)")
+            continue
+        problems = compare(fresh, base, args.tol)
+        checked += 1
+        if problems:
+            failed = True
+            print(f"[FAIL] {name} (tol {args.tol:g}x):")
+            for p in problems:
+                print(f"    {p}")
+        else:
+            print(f"[ok] {name} within {args.tol:g}x of baseline")
+    if failed:
+        print("benchmark regression detected — see docstring for how to "
+              "re-baseline if this change is intentional")
+        return 1
+    if not args.update and checked == 0:
+        print("nothing checked (no fresh result + baseline pairs found)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

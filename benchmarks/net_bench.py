@@ -26,32 +26,16 @@ from repro.models import small
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
                           "BENCH_net.json")
 
-# scenario -> (ChannelConfig kwargs, dynamic.scenario_schedule kind, staleness
-# bound).  Names and conditions mirror launch.sweep.NET_SCENARIOS so a
-# scenario label means the same thing in sweep results and BENCH_net.json.
-SCENARIOS = {
-    "ideal": ({}, None, 0),
-    "lossy": ({"drop_prob": 0.2}, None, 5),
-    "laggy": ({"latency_max": 3}, None, 5),
-    "lossy_laggy": ({"drop_prob": 0.2, "latency_max": 3}, None, 5),
-    "bandwidth64": ({"bandwidth_cap": 64}, None, 5),
-    "churn": ({}, "churn", 5),
-    "partition": ({}, "partition", 5),
-}
-
-
-def _schedule(kind, topo, ticks, seed):
-    from repro.net.dynamic import scenario_schedule
-
-    return scenario_schedule(kind, topo, ticks, seed=seed)
-
 
 def async_lossy_scenarios(num_nodes: int = 20, ticks: int = 120, *,
                           rule: str = "trimmed_mean", attack: str = "alie",
                           num_byzantine: int = 2, seed: int = 0):
-    """rule x attack fixed, network-condition axis swept; returns CSV rows and
-    writes BENCH_net.json."""
-    from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
+    """rule x attack fixed, network-condition axis swept (the canonical
+    `repro.net.scenarios` registry); returns CSV rows and writes
+    BENCH_net.json."""
+    from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer
+    from repro.net.dynamic import scenario_schedule
+    from repro.net.scenarios import NET_SCENARIOS
 
     x, y, xt, yt = get_data()
     shards = partition_iid(x, y, num_nodes, seed=seed)
@@ -65,12 +49,13 @@ def async_lossy_scenarios(num_nodes: int = 20, ticks: int = 120, *,
     stacked = tuple(jnp.asarray(np.stack([b[i] for b in batches])) for i in range(2))
 
     rows, record = [], {}
-    for name, (ch_kwargs, sched_kind, bound) in SCENARIOS.items():
+    for name, spec in NET_SCENARIOS.items():
         cfg = AsyncBridgeConfig(
             topology=topo, rule=rule, num_byzantine=num_byzantine, attack=attack,
-            lam=1.0, t0=30.0, channel=ChannelConfig(**ch_kwargs),
-            staleness_bound=bound,
-            schedule=_schedule(sched_kind, topo, ticks, seed),
+            lam=1.0, t0=30.0, channel=spec.channel,
+            staleness_bound=spec.staleness_bound,
+            schedule=scenario_schedule(spec.schedule_kind, topo, ticks, seed=seed,
+                                       churn_prob=spec.churn_prob),
         )
         tr = AsyncBridgeTrainer(cfg, grad_fn)
         state = tr.init(params)

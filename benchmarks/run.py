@@ -7,7 +7,11 @@ screening-kernel sweep.  Prints ``name,us_per_call,derived`` CSV.
 ``--full`` uses the paper's 50-node network (slower); default is 20 nodes.
 ``--scenario async_lossy`` runs the `repro.net` network-condition axis (drop,
 latency, bandwidth caps, churn, partition-and-heal) and writes
-``BENCH_net.json`` alongside the CSV.
+``BENCH_net.json`` alongside the CSV.  ``--only grid`` times the batched
+grid engine against the subprocess sweep baseline and writes
+``BENCH_grid.json`` (also runnable directly: ``python -m
+benchmarks.grid_bench``); ``--only fig2_grid`` reproduces Fig. 2 through the
+grid engine in one compiled program.
 """
 from __future__ import annotations
 
@@ -24,23 +28,26 @@ def main() -> None:
                     help="network model: sync broadcast or repro.net scenarios")
     args = ap.parse_args()
 
-    from benchmarks import kernels_bench, net_bench, paper_figs
+    from benchmarks import grid_bench, kernels_bench, net_bench, paper_figs
 
     m = 50 if args.full else 20
     benches = {
         "fig1": lambda: paper_figs.fig1_faultless_convex(num_nodes=m),
         "fig2": lambda: paper_figs.fig2_byzantine_convex(num_nodes=m),
+        "fig2_grid": lambda: paper_figs.fig2_byzantine_convex_grid(num_nodes=m),
         "fig3": lambda: paper_figs.fig3_byrdie_comm(num_nodes=m),
         "fig45": lambda: paper_figs.fig45_nonconvex(num_nodes=min(m, 10)),
         "fig67": lambda: paper_figs.fig67_noniid(num_nodes=m),
         "table2": paper_figs.table2_screening_cost,
         "kernels": kernels_bench.kernel_throughput,
         "net": lambda: net_bench.async_lossy_scenarios(num_nodes=m),
+        "grid": grid_bench.grid_throughput,
     }
     if args.scenario == "async_lossy":
         only = {"net"}
     else:
-        only = set(benches) - {"net"}
+        # net/grid have their own CI jobs + JSON records; opt in via --only
+        only = set(benches) - {"net", "grid"}
     if args.only:
         only = set(args.only.split(","))
     print("name,us_per_call,derived")

@@ -15,7 +15,6 @@ Two execution paths share the same screening code:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -32,6 +31,35 @@ class BridgeState(NamedTuple):
     t: jax.Array  # iteration counter
     key: jax.Array
     net: Any = None  # network-runtime state (mailboxes etc.); None when synchronous
+
+
+class CellParams(NamedTuple):
+    """One experiment cell's runtime-switchable parameters.
+
+    `BridgeTrainer` binds a single constant cell from its config; the batched
+    grid engine (`repro.sim`) stacks one row per experiment and ``vmap``s the
+    shared step over the leading axis.  Rule/attack selection is *data* — an
+    int32 index into a static bank resolved by ``lax.switch`` — so E
+    experiments with different rules, attacks, Byzantine counts, and step-size
+    schedules share one compiled program.
+    """
+
+    rule_idx: jax.Array  # int32 index into the step's static rule bank
+    attack_idx: jax.Array  # int32 index into the step's static attack bank
+    b: jax.Array  # int32 Byzantine bound fed to the screening rule
+    byz_mask: jax.Array  # [M] bool — which nodes actually attack
+    lam: jax.Array  # f32 step-size decay rate
+    t0: jax.Array  # f32 step-size offset
+    lr: jax.Array  # f32 constant step size; 0 -> decaying 1/(lam*(t0+t))
+    # int32 index into a scenario-banked runtime's bank (grid net path);
+    # None on the single-runtime trainer path (no scenario axis).
+    scenario_idx: Any = None
+
+
+def cell_step_size(cell: CellParams, t: jax.Array) -> jax.Array:
+    """rho(t) = lr if lr > 0 else 1 / (lam * (t0 + t))  (Sec. IV)."""
+    decayed = 1.0 / (cell.lam * (cell.t0 + t))
+    return jnp.where(cell.lr > 0, cell.lr, decayed)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,6 +81,17 @@ class BridgeConfig:
         return 1.0 / (self.lam * (self.t0 + t))
 
 
+def stack_batches(batch_fn: Callable[[int], Any], num_ticks: int) -> Any:
+    """Materialize ``num_ticks`` batches on a new leading axis — the ``xs``
+    the scan-over-ticks paths consume.  The single definition shared by
+    `AsyncBridgeTrainer.run_ticks` and the grid engine, so both scan
+    identical inputs (part of their bit-identity contract)."""
+    batches = [batch_fn(i) for i in range(num_ticks)]
+    return jax.tree_util.tree_map(
+        lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *batches
+    )
+
+
 def stack_flatten(params: Any) -> tuple[jax.Array, Callable[[jax.Array], Any]]:
     """[M, ...] pytree -> ([M, D] matrix, unflatten)."""
     leaves, treedef = jax.tree_util.tree_flatten(params)
@@ -69,6 +108,115 @@ def stack_flatten(params: Any) -> tuple[jax.Array, Callable[[jax.Array], Any]]:
         return jax.tree_util.tree_unflatten(treedef, outs)
 
     return flat, unflatten
+
+
+# ---------------------------------------------------------------------------
+# Cell-parameterized step builders
+# ---------------------------------------------------------------------------
+#
+# One BRIDGE iteration, parameterized by a `CellParams` row plus static banks
+# of rules/attacks.  `BridgeTrainer` binds a constant single-entry-bank cell
+# (bit-identical to dedicated dispatch — the switches are elided); the grid
+# engine vmaps the same function over stacked cells.  This is the single
+# definition of Algorithm 1's iteration — the batched path reuses it rather
+# than forking it.
+
+# Salt decorrelating the channel PRNG stream from the attack stream (both
+# derive from the same per-step subkey).
+NET_SALT = 0x6E657430
+
+
+def _grad_update_and_metrics(grad_fn, cell: CellParams, state: BridgeState, batch, y, unflatten):
+    """(Step 6) local gradient update at w_j(t) + shared diagnostics."""
+    losses, grads = jax.vmap(grad_fn)(state.params, batch)
+    g, _ = stack_flatten(grads)
+    rho = cell_step_size(cell, state.t)
+    w_new = y - rho * g
+    new_params = unflatten(w_new)
+    # consensus diagnostic over honest nodes
+    hm = ~cell.byz_mask
+    cnt = jnp.sum(hm)
+    mu = jnp.sum(jnp.where(hm[:, None], w_new, 0.0), axis=0) / cnt
+    dev = jnp.where(hm[:, None], w_new - mu[None, :], 0.0)
+    cons = jnp.sqrt(jnp.max(jnp.sum(dev * dev, axis=1)))
+    metrics = {
+        "loss": jnp.sum(jnp.where(hm, losses, 0.0)) / cnt,
+        "consensus_dist": cons,
+        "rho": rho,
+    }
+    return new_params, metrics
+
+
+def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *, screen_chunk=None):
+    """The synchronous-broadcast iteration: ``step(cell, state, batch)``.
+
+    ``rules`` is a static bank of screening-rule names and ``attacks`` a
+    static bank of `byzantine.Attack`s; ``cell`` selects into both.
+    """
+
+    def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
+        w, unflatten = stack_flatten(state.params)
+        key, sub = jax.random.split(state.key)
+        # (Step 3-4) broadcast + Byzantine substitution of sent messages
+        w_bcast = byz_lib.apply_attack_bank(attacks, cell.attack_idx, w, cell.byz_mask, sub, state.t)
+        # (Step 5) screening at every node
+        y = screening.screen_all_banked(
+            w_bcast, adjacency, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
+        )
+        new_params, metrics = _grad_update_and_metrics(grad_fn, cell, state, batch, y, unflatten)
+        return BridgeState(new_params, state.t + 1, key), metrics
+
+    return step
+
+
+def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_attacks, *, screen_chunk=None):
+    """The network-runtime iteration: ``step(cell, state, batch)``.
+
+    ``message_attacks`` is a static bank of `byzantine.MessageAttack`s.  A
+    runtime exposing ``cell_aware = True`` (the grid engine's scenario-banked
+    runtime) additionally receives the cell so it can switch channel/schedule
+    per experiment; the standard runtimes keep their two-argument contract.
+    """
+    cell_aware = bool(getattr(runtime, "cell_aware", False))
+
+    def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
+        w, unflatten = stack_flatten(state.params)
+        key, sub = jax.random.split(state.key)
+        adj_t = runtime.adjacency_at(state.t, cell) if cell_aware else runtime.adjacency_at(state.t)
+        # (Step 3-4) per-link transmissions with Byzantine substitution.
+        msgs = byz_lib.apply_message_attack_bank(
+            message_attacks, cell.attack_idx, w, cell.byz_mask, adj_t, sub, state.t
+        )
+        # Byzantine nodes screen with the same self-view they broadcast
+        # (matching the synchronous path); message-only attacks have no
+        # single broadcast value, so nodes screen with their true iterate.
+        w_self = byz_lib.apply_self_view_bank(
+            message_attacks, cell.attack_idx, w, cell.byz_mask, sub, state.t
+        )
+        net_key = jax.random.fold_in(sub, NET_SALT)
+        if cell_aware:
+            net, views, mask, net_stats = runtime.exchange(
+                state.net, msgs, w_self, adj_t, net_key, state.t, cell
+            )
+        else:
+            net, views, mask, net_stats = runtime.exchange(
+                state.net, msgs, w_self, adj_t, net_key, state.t
+            )
+        # (Step 5) asynchronous screening over whatever usable (arrived,
+        # fresh) messages each node holds; nodes starved below the rule's
+        # minimum usable count keep their own iterate this tick.
+        y_rule = screening.screen_views_banked(
+            views, mask, w_self, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
+        )
+        need = screening.min_neighbors_banked(rules, cell.rule_idx, cell.b)
+        enough = jnp.sum(mask, axis=1) >= need
+        y = jnp.where(enough[:, None], y_rule, w_self)
+        new_params, metrics = _grad_update_and_metrics(grad_fn, cell, state, batch, y, unflatten)
+        metrics.update(net_stats)
+        metrics["screened_frac"] = jnp.mean(enough.astype(jnp.float32))
+        return BridgeState(new_params, state.t + 1, key, net), metrics
+
+    return step
 
 
 class BridgeTrainer:
@@ -98,11 +246,37 @@ class BridgeTrainer:
             self.byz_mask = byz_lib.pick_byzantine_mask(m, nbyz, config.byzantine_seed)
         if runtime is None:
             self._attack = byz_lib.get_attack(config.attack)
-            self._step_core = self._build_step_core()
+            step = build_cell_step(
+                grad_fn, self.adjacency, (config.rule,), (self._attack,),
+                screen_chunk=config.screen_chunk,
+            )
         else:
             self._message_attack = byz_lib.get_message_attack(config.attack)
-            self._step_core = self._build_runtime_step_core()
-        self._step = jax.jit(self._step_core)
+            step = build_cell_runtime_step(
+                grad_fn, runtime, (config.rule,), (self._message_attack,),
+                screen_chunk=config.screen_chunk,
+            )
+        # The cell rides along as a jit *operand*, not a closure constant, so
+        # the compiled program is shape-identical to the batched grid engine's
+        # (constant-folding a baked-in cell perturbs fusion at ULP level,
+        # breaking the bit-for-bit grid<->trainer equivalence contract).
+        self._cell = self.cell_params()
+        self._raw_step = step
+        self._jit_step = jax.jit(step)
+
+    def cell_params(self) -> CellParams:
+        """The constant single-cell parameters equivalent to this config
+        (bank indices are 0 — the trainer's banks have one entry each)."""
+        cfg = self.config
+        return CellParams(
+            rule_idx=jnp.zeros((), jnp.int32),
+            attack_idx=jnp.zeros((), jnp.int32),
+            b=jnp.asarray(cfg.num_byzantine, jnp.int32),
+            byz_mask=self.byz_mask,
+            lam=jnp.asarray(cfg.lam, jnp.float32),
+            t0=jnp.asarray(cfg.t0, jnp.float32),
+            lr=jnp.asarray(cfg.lr, jnp.float32),
+        )
 
     @property
     def honest_mask(self) -> jax.Array:
@@ -120,87 +294,8 @@ class BridgeTrainer:
         return BridgeState(params=params, t=jnp.zeros((), jnp.int32),
                            key=jax.random.PRNGKey(seed), net=net)
 
-    def _grad_update_and_metrics(self, state, batch, y, unflatten):
-        """(Step 6) local gradient update at w_j(t) + shared diagnostics."""
-        cfg = self.config
-        losses, grads = jax.vmap(self.grad_fn)(state.params, batch)
-        g, _ = stack_flatten(grads)
-        rho = cfg.step_size(state.t)
-        w_new = y - rho * g
-        new_params = unflatten(w_new)
-        # consensus diagnostic over honest nodes
-        hm = self.honest_mask
-        cnt = jnp.sum(hm)
-        mu = jnp.sum(jnp.where(hm[:, None], w_new, 0.0), axis=0) / cnt
-        dev = jnp.where(hm[:, None], w_new - mu[None, :], 0.0)
-        cons = jnp.sqrt(jnp.max(jnp.sum(dev * dev, axis=1)))
-        metrics = {
-            "loss": jnp.sum(jnp.where(hm, losses, 0.0)) / cnt,
-            "consensus_dist": cons,
-            "rho": rho,
-        }
-        return new_params, metrics
-
-    def _build_step_core(self):
-        cfg = self.config
-
-        def step(state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
-            w, unflatten = stack_flatten(state.params)
-            key, sub = jax.random.split(state.key)
-            # (Step 3-4) broadcast + Byzantine substitution of sent messages
-            w_bcast = self._attack(w, self.byz_mask, sub, state.t)
-            # (Step 5) screening at every node
-            y = screening.screen_all(
-                w_bcast, self.adjacency, rule=cfg.rule, b=cfg.num_byzantine,
-                chunk=cfg.screen_chunk,
-            )
-            new_params, metrics = self._grad_update_and_metrics(state, batch, y, unflatten)
-            return BridgeState(new_params, state.t + 1, key), metrics
-
-        return step
-
-    # Salt decorrelating the channel PRNG stream from the attack stream (both
-    # derive from the same per-step subkey).
-    _NET_SALT = 0x6E657430
-
-    def _build_runtime_step_core(self):
-        cfg = self.config
-        runtime = self.runtime
-        need = screening.min_neighbors(cfg.rule, cfg.num_byzantine)
-
-        def step(state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
-            w, unflatten = stack_flatten(state.params)
-            key, sub = jax.random.split(state.key)
-            adj_t = runtime.adjacency_at(state.t)
-            # (Step 3-4) per-link transmissions with Byzantine substitution.
-            msgs = self._message_attack(w, self.byz_mask, adj_t, sub, state.t)
-            # Byzantine nodes screen with the same self-view they broadcast
-            # (matching the synchronous path); message-only attacks have no
-            # single broadcast value, so nodes screen with their true iterate.
-            battack = self._message_attack.broadcast
-            w_self = battack(w, self.byz_mask, sub, state.t) if battack else w
-            net_key = jax.random.fold_in(sub, self._NET_SALT)
-            net, views, mask, net_stats = runtime.exchange(
-                state.net, msgs, w_self, adj_t, net_key, state.t
-            )
-            # (Step 5) asynchronous screening over whatever usable (arrived,
-            # fresh) messages each node holds; nodes starved below the rule's
-            # minimum usable count keep their own iterate this tick.
-            y_rule = screening.screen_views(
-                views, mask, w_self, rule=cfg.rule, b=cfg.num_byzantine,
-                chunk=cfg.screen_chunk,
-            )
-            enough = jnp.sum(mask, axis=1) >= need
-            y = jnp.where(enough[:, None], y_rule, w_self)
-            new_params, metrics = self._grad_update_and_metrics(state, batch, y, unflatten)
-            metrics.update(net_stats)
-            metrics["screened_frac"] = jnp.mean(enough.astype(jnp.float32))
-            return BridgeState(new_params, state.t + 1, key, net), metrics
-
-        return step
-
     def step(self, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
-        return self._step(state, batch)
+        return self._jit_step(self._cell, state, batch)
 
     def run(self, state: BridgeState, batch_fn: Callable[[int], Any], num_steps: int,
             eval_fn: Callable | None = None, eval_every: int = 0) -> tuple[BridgeState, list[dict]]:

@@ -22,7 +22,7 @@ Two attack granularities:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -181,6 +181,61 @@ MESSAGE_ATTACKS["selective_victim"] = MessageAttack(
 def attack_names() -> list[str]:
     """All registered attack names (broadcast + message-only)."""
     return sorted(set(ATTACKS) | set(MESSAGE_ATTACKS))
+
+
+# ---------------------------------------------------------------------------
+# Banked (branchless) dispatch — attack selection as data
+# ---------------------------------------------------------------------------
+#
+# The batched grid engine runs experiments with *different* attacks inside one
+# jitted program, so attack selection is a ``lax.switch`` over a static bank
+# of registered attacks, indexed by a traced int32 carried in the experiment's
+# `CellParams`.  Under ``vmap`` the switch lowers to compute-all-and-select;
+# banks should contain only the distinct attacks a grid actually uses.  A
+# single-entry bank elides the switch entirely, which is how `BridgeTrainer`
+# drives these helpers — the per-experiment and batched paths stay
+# bit-identical.
+
+
+def attack_bank(names: Sequence[str]) -> tuple[Attack, ...]:
+    """Resolve broadcast-attack names to a static bank (order preserved)."""
+    return tuple(get_attack(n) for n in names)
+
+
+def message_attack_bank(names: Sequence[str]) -> tuple[MessageAttack, ...]:
+    """Resolve attack names to a static message-granularity bank."""
+    return tuple(get_message_attack(n) for n in names)
+
+
+def apply_attack_bank(bank: tuple[Attack, ...], attack_idx, w, byz_mask, key, t):
+    """Broadcast-substitution by the bank entry selected by ``attack_idx``."""
+    if len(bank) == 1:
+        return bank[0](w, byz_mask, key, t)
+    return jax.lax.switch(attack_idx, [a.fn for a in bank], w, byz_mask, key, t)
+
+
+def apply_message_attack_bank(bank: tuple[MessageAttack, ...], attack_idx, w, byz_mask, adjacency, key, t):
+    """Per-link message crafting by the selected bank entry."""
+    if len(bank) == 1:
+        return bank[0](w, byz_mask, adjacency, key, t)
+    return jax.lax.switch(attack_idx, [a.fn for a in bank], w, byz_mask, adjacency, key, t)
+
+
+def apply_self_view_bank(bank: tuple[MessageAttack, ...], attack_idx, w, byz_mask, key, t):
+    """The self-view Byzantine nodes screen with, per selected attack: the
+    lifted broadcast value when one exists (so the runtime path reproduces the
+    broadcast path bit-for-bit), else the true iterate (message-only attacks
+    have no single broadcast value)."""
+
+    def branch(a: MessageAttack):
+        if a.broadcast is not None:
+            return a.broadcast.fn
+        return lambda w, byz_mask, key, t: w
+
+    fns = [branch(a) for a in bank]
+    if len(fns) == 1:
+        return fns[0](w, byz_mask, key, t)
+    return jax.lax.switch(attack_idx, fns, w, byz_mask, key, t)
 
 
 def get_attack(name: str) -> Attack:

@@ -18,16 +18,72 @@ Numerics note: trimmed-mean / median are rank-based, so they are invariant to
 any monotone per-coordinate transform of the Byzantine entries — the basis of
 the paper's resilience argument (Eq. 14: every surviving Byzantine value is a
 convex combination of honest values).
+
+Masked entries use a ``+inf`` sentinel, NOT a large finite constant: a finite
+sentinel silently corrupts the rank windows whenever legitimate (or attacked)
+values exceed it — e.g. fp32 payloads in the 1e30..3e38 range, or bf16
+overflow products — because data then sorts *past* the sentinel rows.  With
+``+inf`` every finite value ranks strictly before the sentinels.  Non-finite
+*payloads* still rank correctly (-inf trims from the bottom, +inf from the
+top); NaN payloads would poison the sort order and are explicitly guarded to
+``+inf`` so they are trimmed with the other top-magnitude outliers.
 """
 from __future__ import annotations
 
 import functools
-from typing import Callable
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 
-_BIG = 1e30  # sentinel for masked entries; fp32-safe
+_MASKED = jnp.inf  # sentinel for masked entries; see module docstring
+
+
+def _sanitize(values: jax.Array) -> jax.Array:
+    """NaN payloads -> +inf so rank-based rules treat them as maximal outliers
+    (the explicit finite-payload guard for the inf-sentinel masking)."""
+    return jnp.where(jnp.isnan(values), _MASKED, values)
+
+
+@functools.lru_cache(maxsize=None)
+def _batcher_pairs(n: int) -> tuple[tuple[int, int], ...]:
+    """Batcher odd-even mergesort compare-exchange schedule for n elements
+    (works for arbitrary n, ~n/2 log^2 n pairs)."""
+    pairs = []
+    p = 1
+    while p < n:
+        k = p
+        while k >= 1:
+            for j in range(k % p, n - k, 2 * k):
+                for i in range(min(k, n - j - k)):
+                    if (i + j) // (2 * p) == (i + j + k) // (2 * p):
+                        pairs.append((i + j, i + j + k))
+            k //= 2
+        p *= 2
+    return tuple(pairs)
+
+
+def sort_rows(values: jax.Array) -> jax.Array:
+    """Ascending sort of ``values [n, d]`` along the (small) neighbor axis.
+
+    XLA's CPU sort lowers to a scalar per-column loop — ~1us per 12-element
+    column, which makes screening the step's hot spot.  For the neighbor
+    counts BRIDGE actually sees (n <= a few dozen) a Batcher odd-even merge
+    network of element-wise ``minimum``/``maximum`` over whole [d] rows
+    vectorizes instead, an order of magnitude faster, and produces the exact
+    sorted array (values are unique-by-rank, so the output is identical to
+    ``jnp.sort``).  Large n falls back to ``jnp.sort``.  NaNs must already be
+    sanitized (min/max would propagate them through the network).
+    """
+    n = values.shape[0]
+    if n > 64:
+        return jnp.sort(values, axis=0)
+    rows = list(values)
+    for a, b in _batcher_pairs(n):
+        lo = jnp.minimum(rows[a], rows[b])
+        hi = jnp.maximum(rows[a], rows[b])
+        rows[a], rows[b] = lo, hi
+    return jnp.stack(rows)
 
 
 # ---------------------------------------------------------------------------
@@ -44,8 +100,8 @@ def trimmed_mean(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: i
     """
     n = values.shape[0]
     count = jnp.sum(mask)  # |N_j|, traced scalar
-    neg_masked = jnp.where(mask[:, None], values, _BIG)
-    order = jnp.sort(neg_masked, axis=0)  # ascending; masked at the end
+    masked = jnp.where(mask[:, None], _sanitize(values), _MASKED)
+    order = sort_rows(masked)  # ascending; masked at the end
     idx = jnp.arange(n)[:, None]
     keep = (idx >= b) & (idx < count - b)  # ranks [b, |N_j| - b)
     total = jnp.sum(jnp.where(keep, order, 0.0), axis=0) + self_value
@@ -62,7 +118,7 @@ def coordinate_median(values: jax.Array, mask: jax.Array, self_value: jax.Array,
     full_mask = jnp.concatenate([mask, jnp.ones((1,), dtype=bool)], axis=0)
     n1 = stacked.shape[0]
     count = jnp.sum(full_mask)
-    order = jnp.sort(jnp.where(full_mask[:, None], stacked, _BIG), axis=0)
+    order = sort_rows(jnp.where(full_mask[:, None], _sanitize(stacked), _MASKED))
     lo = (count - 1) // 2
     hi = count // 2
     idx = jnp.arange(n1)[:, None]
@@ -87,7 +143,7 @@ def pairwise_sq_dists(values: jax.Array, mask: jax.Array, self_value: jax.Array)
     d2 = sq[:, None] + sq[None, :] - 2.0 * (stacked @ stacked.T)
     d2 = jnp.maximum(d2, 0.0)
     valid = full_mask[:, None] & full_mask[None, :]
-    d2 = jnp.where(valid, d2, _BIG)
+    d2 = jnp.where(valid, d2, _MASKED)
     return d2, full_mask
 
 
@@ -99,7 +155,7 @@ def _krum_scores(d2: jax.Array, full_mask: jax.Array, count: jax.Array, b: int) 
     """
     n1 = d2.shape[0]
     eye = jnp.eye(n1, dtype=bool)
-    d2 = jnp.where(eye, _BIG, d2)  # exclude self-distance
+    d2 = jnp.where(eye, _MASKED, d2)  # exclude self-distance
     order = jnp.sort(d2, axis=1)  # ascending per candidate
     k = count - b - 2  # number of nearest peers to sum (traced)
     idx = jnp.arange(n1)[None, :]
@@ -133,7 +189,7 @@ def bulyan(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int) ->
         cnt = jnp.sum(cand_mask)
         fm = jnp.concatenate([cand_mask, jnp.ones((1,), dtype=bool)])
         valid = fm[:, None] & fm[None, :]
-        d2s = jnp.where(valid, d2, _BIG)
+        d2s = jnp.where(valid, d2, _MASKED)
         scores = _krum_scores(d2s, fm, cnt, b)
         cand_scores = jnp.where(cand_mask, scores[:-1], jnp.inf)
         i_star = jnp.argmin(cand_scores)
@@ -229,15 +285,50 @@ def min_neighbors(rule: str, b: int) -> int:
         raise ValueError(f"unknown screening rule {rule!r}; options: {sorted(MIN_NEIGHBORS)}")
 
 
+# Traceable twins of MIN_NEIGHBORS: ``b`` may be a traced int32 scalar (the
+# batched grid engine carries the Byzantine bound as per-experiment data), so
+# Python ``max`` is replaced by ``jnp.maximum`` and constants are anchored to
+# ``b`` to keep every branch shape/dtype-uniform under ``lax.switch``.
+_MIN_NEIGHBORS_TRACEABLE: dict[str, Callable] = {
+    "trimmed_mean": lambda b: 2 * b + 1,
+    "median": lambda b: 0 * b + 1,
+    "krum": lambda b: b + 3,
+    "bulyan": lambda b: jnp.maximum(4 * b, 3 * b + 2) + 1,
+    "geomedian": lambda b: 2 * b + 1,
+    "clipped_mean": lambda b: 0 * b + 1,
+    "mean": lambda b: 0 * b,
+}
+
+
+def min_neighbors_banked(rules: Sequence[str], rule_idx, b) -> jax.Array:
+    """Table-II minimum usable in-neighborhood for the rule selected by the
+    traced index ``rule_idx`` into the static bank ``rules``; ``b`` may be a
+    traced int32 scalar."""
+    fns = [_MIN_NEIGHBORS_TRACEABLE[r] for r in rules]
+    bi = jnp.asarray(b, jnp.int32)
+    if len(fns) == 1:
+        return jnp.asarray(fns[0](bi), jnp.int32)
+    branches = [lambda bb, fn=fn: jnp.asarray(fn(bb), jnp.int32) for fn in fns]
+    return jax.lax.switch(rule_idx, branches, bi)
+
+
 # ---------------------------------------------------------------------------
 # Network-wide application (simulation path, single host)
 # ---------------------------------------------------------------------------
 
 
+def _streams(rule: str, d: int, chunk: int | None) -> bool:
+    """True when coordinate streaming engages: then the node axis must be
+    iterated sequentially (lax.map) to keep peak memory at [n, chunk] per
+    node instead of vmap's [M, n, chunk]."""
+    return rule not in ("krum", "bulyan") and chunk is not None and d > chunk
+
+
 def _apply_rule(fn, rule, values, mask_j, self_j, b, chunk):
     """One node's screening over its received value matrix ``values [n, d]``,
     optionally streaming coordinate-wise rules over chunks of the coordinate
-    dimension.  Shared by `screen_all` (one broadcast matrix for everyone) and
+    dimension (bounding peak memory at ``[n, chunk]`` intermediates per node).
+    Shared by `screen_all` (one broadcast matrix for everyone) and
     `screen_views` (per-node mailbox views) so the two paths are numerically
     identical."""
     d = values.shape[1]
@@ -268,16 +359,20 @@ def screen_all(
     Definition 1 concerns what nodes *broadcast*), ``adjacency[j, i]`` marks i
     as an in-neighbor of j.  Returns the ``[M, d]`` screened outputs y_j.
 
-    Memory: materializes [n, d] per node via lax.map (sequential over nodes);
-    ``chunk`` optionally splits the coordinate dimension for very large d.
+    Nodes are screened via ``vmap`` (one fused program over the node axis —
+    a sequential ``lax.map`` pays ~ms of while-loop overhead per node on
+    CPU).  When ``chunk`` engages (coordinate-wise rule, d > chunk), nodes
+    fall back to a sequential ``lax.map`` so peak intermediates stay at
+    ``[n, chunk]`` per node — the memory contract huge-d training relies on.
     """
     fn = get_rule(rule)
 
-    def per_node(args):
-        mask_j, self_j = args
+    def per_node(mask_j, self_j):
         return _apply_rule(fn, rule, w, mask_j, self_j, b, chunk)
 
-    return jax.lax.map(per_node, (adjacency, w))
+    if _streams(rule, w.shape[1], chunk):
+        return jax.lax.map(lambda args: per_node(*args), (adjacency, w))
+    return jax.vmap(per_node)(adjacency, w)
 
 
 @functools.partial(jax.jit, static_argnames=("rule", "b", "chunk"))
@@ -302,8 +397,90 @@ def screen_views(
     """
     fn = get_rule(rule)
 
-    def per_node(args):
-        view_j, mask_j, self_j = args
+    def per_node(view_j, mask_j, self_j):
         return _apply_rule(fn, rule, view_j, mask_j, self_j, b, chunk)
 
-    return jax.lax.map(per_node, (views, mask, self_vals))
+    if _streams(rule, views.shape[-1], chunk):
+        return jax.lax.map(lambda args: per_node(*args), (views, mask, self_vals))
+    return jax.vmap(per_node)(views, mask, self_vals)
+
+
+# ---------------------------------------------------------------------------
+# Banked (branchless) dispatch — the batched-grid hot path
+# ---------------------------------------------------------------------------
+#
+# The grid engine runs E experiments with *different* rules inside one jitted
+# program, so rule selection cannot be a Python-level ``get_rule``: it is a
+# ``lax.switch`` over a static bank of rule names, indexed by a traced int32.
+# Under ``vmap`` the switch lowers to "compute every bank entry, select one"
+# — branchless, one compilation, no per-cell retracing.  Banks should
+# therefore contain only the distinct rules a grid actually uses.  With a
+# single-entry bank these degenerate to exactly `screen_all` / `screen_views`
+# (the switch is elided), which is how `BridgeTrainer` calls them — keeping
+# the per-experiment and batched paths bit-identical.
+
+
+def _rule_branch(rule: str, chunk):
+    fn = get_rule(rule)
+
+    def run(values_per_node, mask_per_node, self_vals, b):
+        def per_node(values_j, mask_j, self_j):
+            return _apply_rule(fn, rule, values_j, mask_j, self_j, b, chunk)
+
+        if _streams(rule, values_per_node.shape[-1], chunk):
+            return jax.lax.map(lambda args: per_node(*args),
+                               (values_per_node, mask_per_node, self_vals))
+        return jax.vmap(per_node)(values_per_node, mask_per_node, self_vals)
+
+    return run
+
+
+def _rule_branch_broadcast(rule: str, chunk):
+    # like _rule_branch, but every node screens rows of ONE shared matrix —
+    # closed over, never materialized per node, so the streaming path keeps
+    # its O(M*d + n*chunk) peak instead of an [M, M, d] broadcast
+    fn = get_rule(rule)
+
+    def run(w, adjacency, b):
+        def per_node(mask_j, self_j):
+            return _apply_rule(fn, rule, w, mask_j, self_j, b, chunk)
+
+        if _streams(rule, w.shape[1], chunk):
+            return jax.lax.map(lambda args: per_node(*args), (adjacency, w))
+        return jax.vmap(per_node)(adjacency, w)
+
+    return run
+
+
+def screen_all_banked(
+    w: jax.Array,
+    adjacency: jax.Array,
+    rules: Sequence[str],
+    rule_idx,
+    b,
+    *,
+    chunk: int | None = None,
+) -> jax.Array:
+    """`screen_all` with the rule chosen by a traced ``rule_idx`` into the
+    static ``rules`` bank and a (possibly traced) Byzantine bound ``b``."""
+    branches = [_rule_branch_broadcast(r, chunk) for r in rules]
+    if len(branches) == 1:
+        return branches[0](w, adjacency, b)
+    return jax.lax.switch(rule_idx, branches, w, adjacency, b)
+
+
+def screen_views_banked(
+    views: jax.Array,
+    mask: jax.Array,
+    self_vals: jax.Array,
+    rules: Sequence[str],
+    rule_idx,
+    b,
+    *,
+    chunk: int | None = None,
+) -> jax.Array:
+    """`screen_views` with banked rule dispatch (see `screen_all_banked`)."""
+    branches = [_rule_branch(r, chunk) for r in rules]
+    if len(branches) == 1:
+        return branches[0](views, mask, self_vals, b)
+    return jax.lax.switch(rule_idx, branches, views, mask, self_vals, b)

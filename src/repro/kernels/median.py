@@ -10,6 +10,13 @@ cross-lane shuffles.
 
 Input rows INCLUDE the node's own value (mask row set accordingly) — the
 median in Eq. (11) ranges over N_j ∪ {j}.
+
+A leading *experiment* axis is accepted — ``values [E, n, d]``, ``mask
+[E, n]`` -> ``out [E, d]`` — mapped onto the first Pallas grid dimension so
+batched sweeps (`repro.sim`) screen every experiment in one launch.
+
+Masked lanes use a ``+inf`` sentinel (matching `repro.core.screening`): a
+finite sentinel mis-ranks legitimately huge payloads.
 """
 from __future__ import annotations
 
@@ -19,7 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_BIG = 1e30
+_INF = float("inf")
 
 
 def _median_block(values, valid):
@@ -28,7 +35,7 @@ def _median_block(values, valid):
     count = jnp.sum(valid[:, :1].astype(jnp.int32))  # cardinality (per-row mask)
     lo = (count - 1) // 2
     hi = count // 2
-    v = jnp.where(valid, values, _BIG)
+    v = jnp.where(valid, values, _INF)
     acc_lo = jnp.zeros_like(values[0])
     acc_hi = jnp.zeros_like(values[0])
     for i in range(n):
@@ -48,10 +55,13 @@ def _median_block(values, valid):
 
 
 def _kernel(values_ref, mask_ref, out_ref):
-    values = values_ref[...].astype(jnp.float32)
-    mask = mask_ref[...]
+    values = values_ref[0].astype(jnp.float32)
+    # NaN payloads -> +inf so rank-counting stays total-ordered (matches
+    # repro.core.screening's guard)
+    values = jnp.where(jnp.isnan(values), _INF, values)
+    mask = mask_ref[0]
     valid = (mask > 0.5) & jnp.ones_like(values, dtype=bool)
-    out_ref[...] = _median_block(values, valid).astype(out_ref.dtype)[None]
+    out_ref[0] = _median_block(values, valid).astype(out_ref.dtype)[None]
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
@@ -62,23 +72,28 @@ def median_pallas(
     block_d: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Masked coordinate-wise median of ``values [n, d]`` over axis 0."""
+    """Masked coordinate-wise median of ``values [n, d]`` (or ``[E, n, d]``)
+    over the neighbor axis."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    n, d = values.shape
+    squeeze = values.ndim == 2
+    if squeeze:
+        values, mask = values[None], mask[None]
+    e, n, d = values.shape
     pad_d = (-d) % block_d
-    vp = jnp.pad(values, ((0, 0), (0, pad_d)))
-    mp = mask.astype(jnp.float32)[:, None]
+    vp = jnp.pad(values, ((0, 0), (0, 0), (0, pad_d)))
+    mp = mask.astype(jnp.float32)[:, :, None]  # [E, n, 1]
     dp = d + pad_d
     out = pl.pallas_call(
         _kernel,
-        grid=(dp // block_d,),
+        grid=(e, dp // block_d),
         in_specs=[
-            pl.BlockSpec((n, block_d), lambda i: (0, i)),
-            pl.BlockSpec((n, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, n, block_d), lambda ei, i: (ei, 0, i)),
+            pl.BlockSpec((1, n, 1), lambda ei, i: (ei, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, dp), values.dtype),
+        out_specs=pl.BlockSpec((1, 1, block_d), lambda ei, i: (ei, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((e, 1, dp), values.dtype),
         interpret=interpret,
     )(vp, mp)
-    return out[0, :d]
+    out = out[:, 0, :d]
+    return out[0] if squeeze else out

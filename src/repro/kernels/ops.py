@@ -6,7 +6,6 @@ trainer flip implementations per platform/config.
 """
 from __future__ import annotations
 
-import jax
 
 from repro.kernels import ref
 from repro.kernels.krum import pairwise_sq_dists_pallas

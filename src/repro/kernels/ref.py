@@ -1,34 +1,55 @@
-"""Pure-jnp oracles for the Pallas screening kernels (allclose targets)."""
+"""Pure-jnp oracles for the Pallas screening kernels (allclose targets).
+
+Like the kernels, the coordinate-wise oracles accept an optional leading
+experiment axis (``[E, n, d]`` values with ``[E, n]`` masks) via vmap.
+Masked entries use the ``+inf`` sentinel (see `repro.core.screening`).
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-_BIG = 1e30
+_INF = jnp.inf
+
+
+def _maybe_batch(fn, values, *args):
+    if values.ndim == 3:
+        return jax.vmap(fn)(values, *args)
+    return fn(values, *args)
 
 
 def trimmed_mean_ref(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int) -> jax.Array:
     """Sort-based masked trimmed mean — Eqs. (7)-(10)."""
-    n = values.shape[0]
-    v = values.astype(jnp.float32)
-    count = jnp.sum(mask)
-    order = jnp.sort(jnp.where(mask[:, None], v, _BIG), axis=0)
-    idx = jnp.arange(n)[:, None]
-    keep = (idx >= b) & (idx < count - b)
-    total = jnp.sum(jnp.where(keep, order, 0.0), axis=0) + self_value.astype(jnp.float32)
-    return (total / (count - 2 * b + 1)).astype(values.dtype)
+
+    def one(values, mask, self_value):
+        n = values.shape[0]
+        v = values.astype(jnp.float32)
+        v = jnp.where(jnp.isnan(v), _INF, v)  # NaN guard, matches core screening
+        count = jnp.sum(mask)
+        order = jnp.sort(jnp.where(mask[:, None], v, _INF), axis=0)
+        idx = jnp.arange(n)[:, None]
+        keep = (idx >= b) & (idx < count - b)
+        total = jnp.sum(jnp.where(keep, order, 0.0), axis=0) + self_value.astype(jnp.float32)
+        return (total / (count - 2 * b + 1)).astype(values.dtype)
+
+    return _maybe_batch(one, values, mask, self_value)
 
 
 def median_ref(values: jax.Array, mask: jax.Array) -> jax.Array:
     """Sort-based masked coordinate-wise median (rows already include self)."""
-    n = values.shape[0]
-    v = values.astype(jnp.float32)
-    count = jnp.sum(mask)
-    order = jnp.sort(jnp.where(mask[:, None], v, _BIG), axis=0)
-    lo, hi = (count - 1) // 2, count // 2
-    idx = jnp.arange(n)[:, None]
-    pick = lambda r: jnp.sum(jnp.where(idx == r, order, 0.0), axis=0)
-    return (0.5 * (pick(lo) + pick(hi))).astype(values.dtype)
+
+    def one(values, mask):
+        n = values.shape[0]
+        v = values.astype(jnp.float32)
+        v = jnp.where(jnp.isnan(v), _INF, v)  # NaN guard, matches core screening
+        count = jnp.sum(mask)
+        order = jnp.sort(jnp.where(mask[:, None], v, _INF), axis=0)
+        lo, hi = (count - 1) // 2, count // 2
+        idx = jnp.arange(n)[:, None]
+        pick = lambda r: jnp.sum(jnp.where(idx == r, order, 0.0), axis=0)
+        return (0.5 * (pick(lo) + pick(hi))).astype(values.dtype)
+
+    return _maybe_batch(one, values, mask)
 
 
 def pairwise_sq_dists_ref(stacked: jax.Array) -> jax.Array:

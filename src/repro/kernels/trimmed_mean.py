@@ -8,8 +8,16 @@ aligned) neighbor axis, which is a pure element-wise/reduce pattern the VPU
 pipelines well.  The coordinate dimension is tiled into 128-lane-aligned VMEM
 blocks; each grid step screens one block of coordinates for one node.
 
-Shapes: values [n, d] (n = padded neighborhood), mask [n] marks real
-neighbors, self_value [d]; out [d].  b is static.
+Shapes: values ``[n, d]`` (n = padded neighborhood), mask ``[n]`` marks real
+neighbors, self_value ``[d]``; out ``[d]``.  A leading *experiment* axis is
+also accepted — ``values [E, n, d]``, ``mask [E, n]``, ``self_value [E, d]``
+-> ``out [E, d]`` — mapping E onto the first Pallas grid dimension so batched
+rule x attack x seed sweeps (`repro.sim`) screen every experiment in one
+kernel launch.  b is static and shared across the batch.
+
+Masked lanes use ±inf sentinels (matching `repro.core.screening`): a finite
+sentinel mis-ranks legitimately huge payloads (>1e30 fp32 values, bf16
+overflow products).
 """
 from __future__ import annotations
 
@@ -19,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-_BIG = 1e30
+_INF = float("inf")
 
 
 def _first_true(flags: jax.Array) -> jax.Array:
@@ -44,11 +52,11 @@ def _trimmed_mean_block(values, valid, self_value, b: int):
     m = valid
     v = values
     for _ in range(b):  # drop b maxima
-        cur = jnp.max(jnp.where(m, v, -_BIG), axis=0, keepdims=True)
+        cur = jnp.max(jnp.where(m, v, -_INF), axis=0, keepdims=True)
         hit = _first_true((v == cur) & m)
         m = m & ~hit
     for _ in range(b):  # drop b minima
-        cur = jnp.min(jnp.where(m, v, _BIG), axis=0, keepdims=True)
+        cur = jnp.min(jnp.where(m, v, _INF), axis=0, keepdims=True)
         hit = _first_true((v == cur) & m)
         m = m & ~hit
     total = jnp.sum(jnp.where(m, v, 0.0), axis=0) + self_value
@@ -56,12 +64,15 @@ def _trimmed_mean_block(values, valid, self_value, b: int):
 
 
 def _kernel(values_ref, mask_ref, self_ref, out_ref, *, b: int):
-    values = values_ref[...]  # [n, blk]
-    mask = mask_ref[...]  # [n, 1] float (0/1)
-    self_value = self_ref[...]  # [1, blk]
+    values = values_ref[0].astype(jnp.float32)  # [n, blk]
+    # NaN payloads -> +inf so they are trimmed as maximal outliers instead of
+    # poisoning the max/min extraction (matches repro.core.screening)
+    values = jnp.where(jnp.isnan(values), _INF, values)
+    mask = mask_ref[0]  # [n, 1] float (0/1)
+    self_value = self_ref[0]  # [1, blk]
     valid = (mask > 0.5) & jnp.ones_like(values, dtype=bool)
-    out_ref[...] = _trimmed_mean_block(
-        values.astype(jnp.float32), valid, self_value[0].astype(jnp.float32), b
+    out_ref[0] = _trimmed_mean_block(
+        values, valid, self_value[0].astype(jnp.float32), b
     ).astype(out_ref.dtype)[None]
 
 
@@ -75,26 +86,31 @@ def trimmed_mean_pallas(
     block_d: int = 512,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Trimmed-mean screening of ``values [n, d]`` against ``self_value [d]``."""
+    """Trimmed-mean screening of ``values [n, d]`` (or ``[E, n, d]``) against
+    ``self_value [d]`` (or ``[E, d]``)."""
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
-    n, d = values.shape
+    squeeze = values.ndim == 2
+    if squeeze:
+        values, mask, self_value = values[None], mask[None], self_value[None]
+    e, n, d = values.shape
     pad_d = (-d) % block_d
-    vp = jnp.pad(values, ((0, 0), (0, pad_d)))
-    sp = jnp.pad(self_value, (0, pad_d))[None]  # [1, dpad]
-    mp = mask.astype(jnp.float32)[:, None]  # [n, 1]
+    vp = jnp.pad(values, ((0, 0), (0, 0), (0, pad_d)))
+    sp = jnp.pad(self_value, ((0, 0), (0, pad_d)))[:, None, :]  # [E, 1, dpad]
+    mp = mask.astype(jnp.float32)[:, :, None]  # [E, n, 1]
     dp = d + pad_d
-    grid = (dp // block_d,)
+    grid = (e, dp // block_d)
     out = pl.pallas_call(
         functools.partial(_kernel, b=b),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((n, block_d), lambda i: (0, i)),
-            pl.BlockSpec((n, 1), lambda i: (0, 0)),
-            pl.BlockSpec((1, block_d), lambda i: (0, i)),
+            pl.BlockSpec((1, n, block_d), lambda ei, i: (ei, 0, i)),
+            pl.BlockSpec((1, n, 1), lambda ei, i: (ei, 0, 0)),
+            pl.BlockSpec((1, 1, block_d), lambda ei, i: (ei, 0, i)),
         ],
-        out_specs=pl.BlockSpec((1, block_d), lambda i: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, dp), values.dtype),
+        out_specs=pl.BlockSpec((1, 1, block_d), lambda ei, i: (ei, 0, i)),
+        out_shape=jax.ShapeDtypeStruct((e, 1, dp), values.dtype),
         interpret=interpret,
     )(vp, mp, sp)
-    return out[0, :d]
+    out = out[:, 0, :d]
+    return out[0] if squeeze else out

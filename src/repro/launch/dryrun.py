@@ -17,7 +17,6 @@ import os  # noqa: E402
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
-import dataclasses
 import json
 import math
 import sys

@@ -9,7 +9,6 @@
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Callable
 
 import jax

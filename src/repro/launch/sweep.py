@@ -1,14 +1,27 @@
-"""Fan out experiment matrices as subprocesses.
+"""Fan out experiment matrices — batched in one compiled program, or as
+subprocesses.  All modes are resumable (existing results are skipped).
 
-Two modes, both resumable (existing results are skipped):
+* ``--mode grid`` — the rule x attack x b x seed (x network scenario) matrix
+  through the batched grid engine (`repro.sim`): every pending cell runs
+  inside ONE jitted vmapped ``lax.scan`` on the paper's MNIST-like linear
+  task — no per-cell subprocess, retrace, or recompile.  Per-cell JSONs land
+  in the result store exactly like the subprocess modes, so interrupted
+  sweeps resume at the missing cells:
 
-* ``--mode dryrun`` (default) — the arch x shape x mesh lowering matrix:
+    PYTHONPATH=src python -m repro.launch.sweep --mode grid \
+        --out experiments/grid [--rules trimmed_mean,median] \
+        [--attacks random,alie] [--byz 1,2] [--seeds 0,1,2,3] \
+        [--scenarios sync | ideal,lossy,...] [--grid-chunk 16]
+
+* ``--mode dryrun`` (default) — the arch x shape x mesh lowering matrix as
+  subprocesses:
 
     PYTHONPATH=src python -m repro.launch.sweep --out experiments/dryrun \
         [--jobs 4] [--archs a,b] [--shapes s1,s2] [--single-pod-only]
 
-* ``--mode net`` — the rule x attack x network-condition scenario matrix via
-  `repro.launch.train --net` (reduced configs, CPU-runnable):
+* ``--mode net`` — the legacy subprocess path for the scenario matrix via
+  `repro.launch.train --net` (full training CLI per cell; prefer ``grid``
+  for paper-scale sweeps):
 
     PYTHONPATH=src python -m repro.launch.sweep --mode net \
         --out experiments/net [--rules trimmed_mean,median] \
@@ -112,9 +125,91 @@ def run_net_job(rule, attack, scenario, out_dir, timeout, arch, steps):
         return tag, "TIMEOUT"
 
 
+def run_grid_mode(args) -> None:
+    """One-compile batched sweep over rule x attack x b x seed (x scenario) on
+    the paper's MNIST-like linear task, resuming from the per-cell store."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import replicate
+    from repro.data import make_mnist_like, partition_iid
+    from repro.data.partition import stack_node_batches
+    from repro.models import small
+    from repro.sim import ExperimentGrid, GridEngine, default_topology
+    from repro.sim import results as results_lib
+    from repro.sim.engine import stack_batches
+
+    rules = args.rules.split(",")
+    attacks = args.attacks.split(",")
+    byz = [int(x) for x in args.byz.split(",")]
+    seeds = [int(x) for x in args.seeds.split(",")]
+    scenarios = None
+    if args.scenarios not in ("sync", "none", ""):
+        scenarios = args.scenarios.split(",")
+    m, ticks = args.grid_nodes, args.grid_ticks
+    topo = default_topology(m, rules, byz, seed=0)
+    grid = ExperimentGrid(topo, rules, attacks, byz, seeds, scenarios=scenarios,
+                          lam=1.0, t0=30.0)
+    done = results_lib.existing_tags(args.out)
+    pending = [c for c in grid.cells() if c.tag not in done]
+    print(f"{grid.num_cells} grid cells ({len(done & {c.tag for c in grid.cells()})} cached) "
+          f"-> {args.out}")
+    if not pending:
+        return
+
+    def grad_fn(params, batch):
+        return jax.value_and_grad(lambda p: small.linear_loss(p, batch))(params)
+
+    x, y, xt, yt = make_mnist_like(args.grid_train, args.grid_test, seed=0)
+    shards = partition_iid(x, y, m, seed=0)
+    batch_fn = stack_node_batches(shards, args.grid_batch, seed=0)
+    batches = stack_batches(lambda i: jax.tree_util.tree_map(jnp.asarray, batch_fn(i)), ticks)
+
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        return replicate(small.init_linear(key), m, perturb=0.01, key=key)
+
+    engine = GridEngine(grid, grad_fn, cells=pending,
+                        num_ticks=ticks if scenarios else None)
+    t0 = time.time()
+    state = engine.init(init_fn)
+    state, metrics = engine.run(state, batches, chunk=args.grid_chunk)
+    jax.block_until_ready(state.params)
+    wall = time.time() - t0
+    result = results_lib.collect(pending, metrics, meta={
+        "num_nodes": m, "ticks": ticks, "wall_s": wall,
+        "cells_per_sec": len(pending) / wall, "us_per_cell": wall / len(pending) * 1e6,
+        "trace_count": engine.trace_count, "chunk": args.grid_chunk,
+        "rules": engine.rule_bank, "attacks": engine.attack_bank,
+        "scenarios": engine.scenario_bank,
+    })
+    # per-cell honest test accuracy (the paper's metric), evaluated host-side
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt)
+    for i, rec in enumerate(result.cells):
+        hm = ~engine.byz_masks[i]
+        accs = [
+            float(small.linear_accuracy(
+                jax.tree_util.tree_map(lambda leaf: leaf[i, j], state.params), xt, yt))
+            for j in hm.nonzero()[0]
+        ]
+        rec["accuracy"] = float(sum(accs) / max(len(accs), 1))
+    result.save_cells(args.out)
+    # the aggregate covers the WHOLE store (earlier runs' cells included),
+    # so a resumed sweep never truncates GridResult.json to the tail run
+    full = results_lib.load_cell_store(args.out)
+    full.meta.update(result.meta)
+    full.meta["computed_this_run"] = len(pending)
+    full.save(os.path.join(args.out, "GridResult.json"))
+    print(f"{len(pending)} cells in {wall:.1f}s "
+          f"({result.meta['cells_per_sec']:.2f} cells/s, "
+          f"{engine.trace_count} compilation(s))")
+    for rec, row in zip(result.cells, result.rows()):
+        print(f"  {row[0]:60s} acc={rec['accuracy']:.4f} loss={rec['final_loss']:.4f}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="dryrun", choices=["dryrun", "net"])
+    ap.add_argument("--mode", default="dryrun", choices=["dryrun", "net", "grid"])
     ap.add_argument("--out", default=None)
     ap.add_argument("--jobs", type=int, default=4)
     ap.add_argument("--timeout", type=int, default=1500)
@@ -122,14 +217,44 @@ def main(argv=None):
     ap.add_argument("--shapes", default=None)
     ap.add_argument("--single-pod-only", action="store_true")
     ap.add_argument("--rules", default="trimmed_mean,median")
-    ap.add_argument("--attacks", default="random,alie,selective_victim")
-    ap.add_argument("--scenarios", default=",".join(NET_SCENARIOS))
+    # None sentinels: the per-mode defaults differ (net sweeps every scenario,
+    # grid defaults to the broadcast path) and an explicitly-passed value must
+    # never be second-guessed
+    ap.add_argument("--attacks", default=None,
+                    help="default: random,alie,selective_victim (net) / random,alie (sync grid)")
+    ap.add_argument("--scenarios", default=None,
+                    help=f"default: all of {','.join(NET_SCENARIOS)} (net) / sync (grid)")
     ap.add_argument("--net-arch", default="qwen3-4b")
     ap.add_argument("--net-steps", type=int, default=30)
+    # --mode grid knobs (batched engine on the MNIST-like linear task)
+    ap.add_argument("--byz", default="1", help="comma-separated Byzantine counts (grid mode)")
+    ap.add_argument("--seeds", default="0", help="comma-separated seeds (grid mode)")
+    ap.add_argument("--grid-nodes", type=int, default=12)
+    ap.add_argument("--grid-ticks", type=int, default=60)
+    ap.add_argument("--grid-batch", type=int, default=32)
+    ap.add_argument("--grid-train", type=int, default=2000)
+    ap.add_argument("--grid-test", type=int, default=400)
+    ap.add_argument("--grid-chunk", type=int, default=None,
+                    help="max experiments per compiled call (memory bound); "
+                         "default runs the whole grid in one call")
     args = ap.parse_args(argv)
     if args.out is None:
-        args.out = "experiments/net" if args.mode == "net" else "experiments/dryrun"
+        args.out = {"net": "experiments/net", "grid": "experiments/grid"}.get(
+            args.mode, "experiments/dryrun")
     os.makedirs(args.out, exist_ok=True)
+    if args.mode == "grid":
+        if args.scenarios is None:
+            args.scenarios = "sync"  # default grid mode is the broadcast path
+        if args.attacks is None:
+            # selective_victim needs the net runtime; default per path
+            sync = args.scenarios in ("sync", "none", "")
+            args.attacks = "random,alie" if sync else "random,alie,selective_victim"
+        run_grid_mode(args)
+        return
+    if args.scenarios is None:
+        args.scenarios = ",".join(NET_SCENARIOS)
+    if args.attacks is None:
+        args.attacks = "random,alie,selective_victim"
     if args.mode == "net":
         jobs = [(r, a, s)
                 for r in args.rules.split(",")

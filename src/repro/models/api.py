@@ -11,10 +11,9 @@ BRIDGE trainer, launcher, dry-run and smoke tests all go through this.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Callable
 
 import jax
-import jax.numpy as jnp
 
 from repro.models import dense, encdec, hybrid, moe, ssm, vlm
 from repro.models.config import ModelConfig

@@ -11,8 +11,6 @@ layers each get their own specialized attention HLO — no runtime branching.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ MLPs, and layernorm — the Whisper recipe.
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -14,6 +14,8 @@ Layers (each usable standalone):
 * `async_bridge` — `AsyncBridgeTrainer`: BRIDGE screening whatever messages
   have arrived, with a configurable staleness bound and a jitted
   ``lax.scan``-over-ticks hot path.
+* `scenarios` — the canonical named network conditions (channel x dynamics x
+  staleness) shared by benchmarks, sweeps, and the batched grid engine.
 """
 from repro.net.async_bridge import AsyncBridgeConfig, AsyncBridgeTrainer
 from repro.net.channel import ChannelConfig
@@ -28,6 +30,7 @@ from repro.net.dynamic import (
 )
 from repro.net.mailbox import MailboxState, deliver, init_mailbox, push, staleness, usable_mask
 from repro.net.runtime import SynchronousRuntime, UnreliableRuntime
+from repro.net.scenarios import NET_SCENARIOS, NetScenario, build_schedule, get_scenario
 
 __all__ = [
     "AsyncBridgeConfig", "AsyncBridgeTrainer",
@@ -36,4 +39,5 @@ __all__ = [
     "partition_and_heal", "scenario_schedule", "schedule_stats", "static_schedule",
     "MailboxState", "deliver", "init_mailbox", "push", "staleness", "usable_mask",
     "SynchronousRuntime", "UnreliableRuntime",
+    "NET_SCENARIOS", "NetScenario", "build_schedule", "get_scenario",
 ]

@@ -25,10 +25,9 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bridge import BridgeConfig, BridgeState, BridgeTrainer
+from repro.core.bridge import BridgeConfig, BridgeState, BridgeTrainer, stack_batches
 from repro.net.channel import ChannelConfig
 from repro.net.runtime import UnreliableRuntime
 
@@ -63,10 +62,14 @@ class AsyncBridgeTrainer(BridgeTrainer):
         ``[T, ...]`` arrays) as a single jitted ``lax.scan``.  Returns the
         final state and the per-tick metrics stacked to ``[T]`` arrays."""
         if self._scan is None:
+            # the cell is a scan-invariant operand (not a closure constant)
+            # for program-shape parity with the grid engine — see BridgeTrainer
             self._scan = jax.jit(
-                lambda st, xs: jax.lax.scan(self._step_core, st, xs)
+                lambda cell, st, xs: jax.lax.scan(
+                    lambda s, x: self._raw_step(cell, s, x), st, xs
+                )
             )
-        return self._scan(state, batches)
+        return self._scan(self._cell, state, batches)
 
     def run_ticks(
         self,
@@ -76,8 +79,4 @@ class AsyncBridgeTrainer(BridgeTrainer):
     ) -> tuple[BridgeState, dict]:
         """`run_scan` convenience: materialize ``num_ticks`` batches from
         ``batch_fn`` (stacked on a new leading axis) and scan over them."""
-        batches = [batch_fn(i) for i in range(num_ticks)]
-        stacked = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *batches
-        )
-        return self.run_scan(state, stacked)
+        return self.run_scan(state, stack_batches(batch_fn, num_ticks))

@@ -1,0 +1,62 @@
+"""Canonical network-condition scenario registry.
+
+A *scenario* names one point on the network-condition axis of the experiment
+cube: a `ChannelConfig` (drop / latency / bandwidth), an optional topology
+dynamics kind (`repro.net.dynamic.scenario_schedule`), and the staleness bound
+asynchronous screening tolerates.  `benchmarks.net_bench`, the batched grid
+engine (`repro.sim`), and `launch.sweep --mode grid` all resolve scenario
+labels here, so "lossy" means the same channel everywhere a result is
+recorded.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.net.channel import ChannelConfig
+from repro.net.dynamic import scenario_schedule, static_schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class NetScenario:
+    """One named network condition (channel x topology dynamics)."""
+
+    name: str
+    channel: ChannelConfig = ChannelConfig.ideal()
+    schedule_kind: str | None = None  # dynamic.scenario_schedule kind; None = static
+    staleness_bound: int = 5
+    churn_prob: float = 0.3
+
+
+NET_SCENARIOS: dict[str, NetScenario] = {
+    s.name: s
+    for s in (
+        NetScenario("ideal", ChannelConfig.ideal(), None, 0),
+        NetScenario("lossy", ChannelConfig(drop_prob=0.2)),
+        NetScenario("laggy", ChannelConfig(latency_max=3)),
+        NetScenario("lossy_laggy", ChannelConfig(drop_prob=0.2, latency_max=3)),
+        NetScenario("bandwidth64", ChannelConfig(bandwidth_cap=64)),
+        NetScenario("churn", schedule_kind="churn"),
+        NetScenario("partition", schedule_kind="partition"),
+    )
+}
+
+
+def get_scenario(name: str) -> NetScenario:
+    try:
+        return NET_SCENARIOS[name]
+    except KeyError:
+        raise ValueError(f"unknown net scenario {name!r}; options: {sorted(NET_SCENARIOS)}")
+
+
+def build_schedule(scenario: NetScenario, topology, num_ticks: int, *, seed: int = 0) -> np.ndarray:
+    """The scenario's full-length ``[num_ticks, M, M]`` topology schedule
+    (static scenarios are expanded so schedules of different scenarios stack
+    into one ``[S, T, M, M]`` array for the grid runtime)."""
+    sched = scenario_schedule(
+        scenario.schedule_kind, topology, num_ticks, seed=seed, churn_prob=scenario.churn_prob
+    )
+    if sched is None:
+        sched = static_schedule(topology, num_ticks)
+    return sched

@@ -1,0 +1,23 @@
+"""repro.sim — the batched experiment-grid engine.
+
+The paper's evidence is a *grid* (screening rule x attack x Byzantine count x
+seed x network scenario); this package runs E grid cells as **one compiled
+program** instead of E subprocesses:
+
+* `grid` — `ExperimentGrid` / `Cell` specs (axes, tags, topology helpers).
+* `engine` — `GridEngine`: stacked ``[E, M, D]`` state driven by a single
+  ``lax.scan`` with ``vmap`` over the experiment axis, reusing the
+  cell-parameterized `repro.core.bridge` step functions; `GridNetRuntime`
+  stacks `repro.net` channel/mailbox state over E; ``chunk`` bounds memory.
+* `results` — `GridResult`: the structured record benchmarks, paper figures,
+  and the resumable sweep store consume.
+"""
+from repro.sim.engine import GridEngine, GridNetRuntime, stack_batches
+from repro.sim.grid import Cell, ExperimentGrid, default_topology, pick_byz_mask
+from repro.sim.results import GridResult, cell_of, collect, existing_tags, load_cell_store
+
+__all__ = [
+    "GridEngine", "GridNetRuntime", "stack_batches",
+    "Cell", "ExperimentGrid", "default_topology", "pick_byz_mask",
+    "GridResult", "cell_of", "collect", "existing_tags", "load_cell_store",
+]

@@ -1,0 +1,344 @@
+"""Batched experiment-grid engine: E experiments as one compiled program.
+
+`repro.launch.sweep --mode net` historically ran each (rule, attack, scenario)
+cell as a subprocess — re-tracing, re-compiling, and re-loading data per cell,
+orders of magnitude slower than the math requires.  `GridEngine` instead
+lowers a list of `Cell`s to stacked ``[E, M, D]`` state and drives a single
+``lax.scan`` whose body is the *same* cell-parameterized step function
+`BridgeTrainer` / `AsyncBridgeTrainer` bind (`repro.core.bridge`), ``vmap``-ed
+over the experiment axis:
+
+* rule / attack / scenario selection is **data** — int32 indices into static
+  banks resolved by ``lax.switch`` (branchless under vmap; banks contain only
+  the distinct names the cells use);
+* the Byzantine bound ``b``, node masks, seeds, and step-size schedules ride
+  along as per-cell arrays;
+* network scenarios stack their `repro.net` channel/mailbox state over E
+  (`GridNetRuntime` — one mailbox ring sized for the slowest scenario).
+
+Banked switches make *arbitrary* cell mixtures correct, but under vmap a
+switch computes every branch for every cell — an R-rule bank does R times the
+screening work.  Since real sweeps are (near-)products, the engine also
+**groups** cells with equal (rule, attack) and unrolls the groups statically
+inside the same compiled program (``group=True``, the default): each group
+runs the single-entry-bank step — zero bank waste — while scenario selection
+and any leftover heterogeneity stay banked.  Cells are re-ordered group-major
+internally and results are returned in the caller's order.
+
+``chunk`` bounds peak memory: each group's cells are run ``chunk`` at a time,
+padded so chunks of a group share one compilation (compilations scale with
+the number of groups, never with E — asserted by ``tests/test_grid.py``).
+Correctness anchor: any single cell is bit-identical to the corresponding
+per-experiment trainer run.
+"""
+from __future__ import annotations
+
+from typing import Callable, Iterable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import byzantine as byz_lib
+from repro.core.bridge import (
+    BridgeState,
+    CellParams,
+    build_cell_runtime_step,
+    build_cell_step,
+    stack_batches,
+    stack_flatten,
+)
+
+__all__ = ["GridEngine", "GridNetRuntime", "stack_batches"]
+from repro.sim import grid as grid_lib
+from repro.sim.grid import Cell, ExperimentGrid
+
+
+def _dedup(names: Iterable) -> list:
+    out = []
+    for n in names:
+        if n not in out:
+            out.append(n)
+    return out
+
+
+class GridNetRuntime:
+    """A scenario-banked network runtime: `UnreliableRuntime`s stacked over
+    the experiment axis.
+
+    Holds one `repro.net.runtime.UnreliableRuntime` per distinct scenario
+    (full-length ``[T, M, M]`` schedules so they stack) and dispatches
+    `exchange` through ``lax.switch`` on the cell's scenario index — under
+    the engine's vmap every cell carries its own mailbox state, channel
+    randomness, and staleness bound.  The shared mailbox ring is sized for
+    the largest latency in the bank (ring semantics are invariant to extra
+    capacity, so each cell remains bit-identical to its dedicated runtime).
+    """
+
+    cell_aware = True  # step passes the cell through (see build_cell_runtime_step)
+
+    def __init__(self, topology, scenarios: Sequence[str], num_ticks: int, *, seed: int = 0):
+        from repro.net.runtime import UnreliableRuntime
+        from repro.net.scenarios import build_schedule, get_scenario
+
+        if not scenarios:
+            raise ValueError("GridNetRuntime needs at least one scenario")
+        self.scenario_names = tuple(scenarios)
+        specs = [get_scenario(n) for n in self.scenario_names]
+        self.num_ticks = int(num_ticks)
+        self._L = 1 + max(s.channel.max_latency for s in specs)
+        scheds, runtimes = [], []
+        for s in specs:
+            sched = build_schedule(s, topology, self.num_ticks, seed=seed)
+            scheds.append(sched)
+            runtimes.append(
+                UnreliableRuntime(sched, s.channel, staleness_bound=s.staleness_bound)
+            )
+        self._schedules = jnp.asarray(np.stack(scheds))  # [S, T, M, M]
+        self._runtimes = tuple(runtimes)
+
+    def schedule_for(self, name: str) -> np.ndarray:
+        """The exact ``[T, M, M]`` schedule a sequential comparator run must
+        use to reproduce this runtime's cell bit-for-bit."""
+        return np.asarray(self._schedules[self.scenario_names.index(name)])
+
+    def adjacency_at(self, t: jax.Array, cell: CellParams) -> jax.Array:
+        return self._schedules[cell.scenario_idx, t % self.num_ticks]
+
+    def init(self, num_nodes: int, dim: int):
+        from repro.net import mailbox as mb
+
+        return mb.init_mailbox(num_nodes, dim, self._L - 1)
+
+    def exchange(self, net_state, msgs, self_vals, adjacency, key, t, cell: CellParams):
+        if len(self._runtimes) == 1:
+            return self._runtimes[0].exchange(net_state, msgs, self_vals, adjacency, key, t)
+        branches = [
+            (lambda rt: lambda ns, ms, sv, adj, k, tt: rt.exchange(ns, ms, sv, adj, k, tt))(rt)
+            for rt in self._runtimes
+        ]
+        return jax.lax.switch(
+            cell.scenario_idx, branches, net_state, msgs, self_vals, adjacency, key, t
+        )
+
+
+class GridEngine:
+    """Runs a list of grid `Cell`s as one jitted, vmapped ``lax.scan``.
+
+    ``cells`` defaults to the grid's full cross product; a resumable sweep
+    passes the not-yet-computed subset.  All cells must be on the same side
+    of the sync/net split (their state pytrees differ).  ``num_ticks`` is
+    required for net grids (schedule length); sync grids take their length
+    from the scanned batches.
+
+    ``group=True`` (default) statically unrolls one vmapped sub-scan per
+    distinct (rule, attack) inside the compiled program, eliminating the
+    compute-every-branch cost of the banked switches for product grids;
+    ``group=False`` forces the fully banked single-scan path (same results —
+    asserted bit-for-bit by the tests).
+    """
+
+    def __init__(
+        self,
+        grid: ExperimentGrid,
+        grad_fn: Callable,
+        *,
+        cells: Sequence[Cell] | None = None,
+        num_ticks: int | None = None,
+        screen_chunk: int | None = None,
+        scenario_seed: int = 0,
+        group: bool = True,
+    ):
+        self.grid = grid
+        self.cells = list(cells) if cells is not None else grid.cells()
+        if not self.cells:
+            raise ValueError("no cells to run")
+        scen = [c.scenario for c in self.cells]
+        if any(s is None for s in scen) != all(s is None for s in scen):
+            raise ValueError(
+                "cannot mix synchronous and net-scenario cells in one grid batch "
+                "(their carried state differs); split into two grids"
+            )
+        self.net_mode = scen[0] is not None
+        topo = grid.topology
+        m = topo.num_nodes
+        self.rule_bank = _dedup(c.rule for c in self.cells)
+        self.attack_bank = _dedup(c.attack for c in self.cells)
+        self.scenario_bank = _dedup(s for s in scen if s is not None)
+        e = len(self.cells)
+        self.byz_masks = np.stack(
+            [grid_lib.pick_byz_mask(m, c, grid.byzantine_seed) for c in self.cells]
+        )
+        self._cell_stack = CellParams(
+            rule_idx=jnp.asarray([self.rule_bank.index(c.rule) for c in self.cells], jnp.int32),
+            attack_idx=jnp.asarray([self.attack_bank.index(c.attack) for c in self.cells], jnp.int32),
+            b=jnp.asarray([c.b for c in self.cells], jnp.int32),
+            byz_mask=jnp.asarray(self.byz_masks),
+            lam=jnp.full((e,), grid.lam, jnp.float32),
+            t0=jnp.full((e,), grid.t0, jnp.float32),
+            lr=jnp.full((e,), grid.lr, jnp.float32),
+            scenario_idx=jnp.asarray(
+                [self.scenario_bank.index(c.scenario) if c.scenario else 0 for c in self.cells],
+                jnp.int32,
+            ),
+        )
+        if self.net_mode:
+            if num_ticks is None:
+                raise ValueError("num_ticks is required for net-scenario grids (schedule length)")
+            self.runtime = GridNetRuntime(topo, self.scenario_bank, num_ticks, seed=scenario_seed)
+        else:
+            self.runtime = None
+        self._screen_chunk = screen_chunk
+        self._grad_fn = grad_fn
+        self._adjacency = jnp.asarray(topo.adjacency)
+
+        # Execution order: group-major (stable), identity when group=False.
+        # Results are always returned in the caller's cell order via _inv.
+        if group:
+            gkey = [(self.rule_bank.index(c.rule), self.attack_bank.index(c.attack))
+                    for c in self.cells]
+        else:
+            gkey = [(0, 0)] * e
+        self._perm = np.asarray(sorted(range(e), key=lambda i: gkey[i]), np.int64)
+        self._inv = np.argsort(self._perm)
+        # group boundaries (over the permuted order) + one step per group
+        self._bounds: list[tuple[int, int]] = []
+        self._vsteps: list = []
+        lo = 0
+        for i in range(1, e + 1):
+            if i == e or gkey[self._perm[i]] != gkey[self._perm[lo]]:
+                head = self.cells[self._perm[lo]]
+                if group:
+                    rules, attacks = (head.rule,), (head.attack,)
+                else:
+                    rules, attacks = tuple(self.rule_bank), tuple(self.attack_bank)
+                self._vsteps.append(jax.vmap(self._build_step(rules, attacks), in_axes=(0, 0, None)))
+                self._bounds.append((lo, i))
+                lo = i
+        self._cell_perm = jax.tree_util.tree_map(lambda x: x[self._perm], self._cell_stack)
+        self.trace_count = 0  # incremented once per scan (re)compilation
+
+        def scan_all(cells_p, state_p, batches):
+            # ONE compiled program: the group loop is statically unrolled.
+            self.trace_count += 1  # Python side effect: runs only while tracing
+            tree = jax.tree_util.tree_map
+            finals, mss = [], []
+            for vstep, (glo, ghi) in zip(self._vsteps, self._bounds):
+                cp = tree(lambda x: x[glo:ghi], cells_p)
+                st = tree(lambda x: x[glo:ghi], state_p)
+                f, ms = jax.lax.scan(lambda s, b: vstep(cp, s, b), st, batches)
+                finals.append(f)
+                mss.append(ms)
+            final = tree(lambda *xs: jnp.concatenate(xs, axis=0), *finals)
+            ms = tree(lambda *xs: jnp.concatenate(xs, axis=1), *mss)
+            return final, ms
+
+        self._scan_all = jax.jit(scan_all)
+        self._group_scans: dict[int, Callable] = {}
+
+    def _build_step(self, rules: tuple[str, ...], attacks: tuple[str, ...]):
+        if self.net_mode:
+            return build_cell_runtime_step(
+                self._grad_fn, self.runtime, rules, byz_lib.message_attack_bank(attacks),
+                screen_chunk=self._screen_chunk,
+            )
+        return build_cell_step(
+            self._grad_fn, self._adjacency, rules, byz_lib.attack_bank(attacks),
+            screen_chunk=self._screen_chunk,
+        )
+
+    def _group_scan(self, gi: int) -> Callable:
+        """Lazily-jitted per-group scan for the chunked path (one trace per
+        group, shared by all of the group's equally-shaped chunks)."""
+        if gi not in self._group_scans:
+            vstep = self._vsteps[gi]
+
+            def core(cp, st, xs):
+                self.trace_count += 1
+                return jax.lax.scan(lambda s, b: vstep(cp, s, b), st, xs)
+
+            self._group_scans[gi] = jax.jit(core)
+        return self._group_scans[gi]
+
+    @property
+    def num_cells(self) -> int:
+        return len(self.cells)
+
+    def init(self, init_fn: Callable[[int], object]) -> BridgeState:
+        """Stack per-cell initial states.  ``init_fn(seed) -> [M, ...]``
+        pytree must be exactly what the sequential trainer would be handed —
+        cells with equal seeds share initial replicas, and ``PRNGKey(seed)``
+        matches ``BridgeTrainer.init(params, seed=seed)``."""
+        m = self.grid.topology.num_nodes
+        params = [init_fn(c.seed) for c in self.cells]
+        lead = jax.tree_util.tree_leaves(params[0])[0].shape[0]
+        if lead != m:
+            raise ValueError(f"init_fn params leading axis {lead} != num_nodes {m}")
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *params
+        )
+        keys = jnp.stack([jax.random.PRNGKey(c.seed) for c in self.cells])
+        t = jnp.zeros((len(self.cells),), jnp.int32)
+        net = None
+        if self.runtime is not None:
+            w, _ = stack_flatten(params[0])
+            one = self.runtime.init(m, w.shape[1])
+            net = jax.tree_util.tree_map(
+                lambda leaf: jnp.broadcast_to(leaf[None], (len(self.cells),) + leaf.shape), one
+            )
+        return BridgeState(params=stacked, t=t, key=keys, net=net)
+
+    def run(self, state: BridgeState, batches, *, chunk: int | None = None):
+        """Scan all cells over ``batches`` (a pytree of ``[T, ...]`` arrays,
+        shared across cells).  Returns ``(final_state, metrics)`` with state
+        leaves ``[E, ...]`` and metric leaves ``[E, T]``, in the order of
+        ``self.cells``.
+
+        ``chunk`` runs at most that many cells per compiled call (memory
+        bound): each group's ragged last chunk is padded with copies of its
+        final cell so all of a group's chunks share one compilation, then
+        trimmed — compilations scale with the number of groups, never E.
+        """
+        e = self.num_cells
+        tree = jax.tree_util.tree_map
+        perm, inv = self._perm, self._inv
+        cells_p = self._cell_perm
+        state_p = tree(lambda x: x[perm], state)
+        if chunk is None or chunk >= e:
+            final_p, ms_p = self._scan_all(cells_p, state_p, batches)
+        else:
+            if chunk < 1:
+                raise ValueError(f"chunk must be >= 1, got {chunk}")
+            finals, mss = [], []
+            for gi, (glo, ghi) in enumerate(self._bounds):
+                gscan = self._group_scan(gi)
+                n = ghi - glo
+                width = min(chunk, n)  # one trace per group; pad ragged tails
+
+                def padded(x, lo, hi):
+                    sl = x[lo:hi]
+                    pad = width - (hi - lo)
+                    if not pad:
+                        return sl
+                    return jnp.concatenate(
+                        [sl, jnp.broadcast_to(sl[-1:], (pad,) + sl.shape[1:])])
+
+                for lo in range(glo, ghi, width):
+                    hi = min(lo + width, ghi)
+                    f, ms = gscan(
+                        tree(lambda x: padded(x, lo, hi), cells_p),
+                        tree(lambda x: padded(x, lo, hi), state_p),
+                        batches,
+                    )
+                    valid = hi - lo
+                    finals.append(tree(lambda x: x[:valid], f))
+                    mss.append(tree(lambda x: x[:, :valid], ms))
+            final_p = tree(lambda *xs: jnp.concatenate(xs, axis=0), *finals)
+            ms_p = tree(lambda *xs: jnp.concatenate(xs, axis=1), *mss)
+        final = tree(lambda x: x[inv], final_p)
+        ms = tree(lambda x: jnp.swapaxes(x[:, inv], 0, 1), ms_p)
+        return final, ms
+
+    def cell_params_of(self, i: int) -> CellParams:
+        """Row ``i`` of the stacked cell parameters (diagnostics/tests)."""
+        return jax.tree_util.tree_map(lambda x: x[i], self._cell_stack)

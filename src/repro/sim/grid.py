@@ -1,0 +1,135 @@
+"""Experiment-grid specifications.
+
+The paper's headline results (Figs. 2-5, Sec. V) are *grids* — screening rule
+x attack x Byzantine count x seed (x network scenario).  An `ExperimentGrid`
+names the axes; `cells()` expands the cross product into `Cell`s, each a
+single experiment identical in meaning to one `BridgeTrainer` /
+`AsyncBridgeTrainer` run.  `repro.sim.engine.GridEngine` lowers a list of
+cells (the full product, or the not-yet-computed subset of a resumable sweep)
+into one compiled program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import NamedTuple, Sequence
+
+import numpy as np
+
+from repro.core import byzantine as byz_lib
+from repro.core import screening
+from repro.core.graph import Topology, erdos_renyi
+
+
+class Cell(NamedTuple):
+    """One experiment: a single point of the grid's cross product.
+
+    ``scenario`` is ``None`` for the synchronous broadcast path, or a
+    `repro.net.scenarios` name for the unreliable-network path.
+    """
+
+    rule: str
+    attack: str
+    b: int
+    seed: int
+    scenario: str | None = None
+
+    @property
+    def tag(self) -> str:
+        """Stable result-store key (file stem) for this cell."""
+        base = f"{self.rule}_{self.attack}_b{self.b}_s{self.seed}"
+        return f"{base}_{self.scenario}" if self.scenario else base
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentGrid:
+    """The cross product rules x attacks x byzantine_counts x seeds
+    (x scenarios), over one shared topology and step-size schedule.
+
+    ``scenarios=None`` runs the synchronous broadcast simulation; otherwise
+    every cell runs through the unreliable-network runtime (the two paths
+    carry different state and cannot mix inside one batch — split them into
+    two grids).
+    """
+
+    topology: Topology
+    rules: Sequence[str]
+    attacks: Sequence[str]
+    byzantine_counts: Sequence[int] = (1,)
+    seeds: Sequence[int] = (0,)
+    scenarios: Sequence[str] | None = None
+    lam: float = 1.0
+    t0: float = 50.0
+    lr: float = 0.0
+    byzantine_seed: int = 0
+
+    def __post_init__(self):
+        for axis in ("rules", "attacks", "byzantine_counts", "seeds", "scenarios"):
+            vals = getattr(self, axis)
+            if vals is not None and len(vals) != len(set(vals)):
+                raise ValueError(f"duplicate entries on grid axis {axis}: {vals}")
+        for rule in self.rules:
+            screening.get_rule(rule)
+        for attack in self.attacks:
+            if self.scenarios is None:
+                byz_lib.get_attack(attack)  # raises for message-only attacks
+            else:
+                byz_lib.get_message_attack(attack)
+        if self.scenarios is not None:
+            from repro.net.scenarios import get_scenario
+
+            for s in self.scenarios:
+                get_scenario(s)
+        for rule in self.rules:
+            for b in self.byzantine_counts:
+                need = screening.min_neighbors(rule, b)
+                if self.topology.min_in_degree < need:
+                    raise ValueError(
+                        f"rule {rule!r} with b={b} needs min in-degree >= {need}, "
+                        f"grid topology has {self.topology.min_in_degree}"
+                    )
+
+    @property
+    def num_cells(self) -> int:
+        s = len(self.scenarios) if self.scenarios else 1
+        return len(self.rules) * len(self.attacks) * len(self.byzantine_counts) * len(self.seeds) * s
+
+    def cells(self) -> list[Cell]:
+        """Rule-major expansion of the cross product."""
+        scen = self.scenarios if self.scenarios is not None else (None,)
+        return [
+            Cell(r, a, b, s, sc)
+            for r, a, b, s, sc in itertools.product(
+                self.rules, self.attacks, self.byzantine_counts, self.seeds, scen
+            )
+        ]
+
+
+def default_topology(num_nodes: int, rules: Sequence[str], byzantine_counts: Sequence[int],
+                     *, seed: int = 0) -> Topology:
+    """An ER topology dense enough for every (rule, b) cell of a grid —
+    escalating edge probability until Table-II minimum degrees hold (p = 1.0
+    is the complete graph, which satisfies every rule at paper scale)."""
+    b_max = max(byzantine_counts)
+    need = max(screening.min_neighbors(r, b) for r in rules for b in byzantine_counts)
+    for p in (0.5, 0.6, 0.7, 0.8, 0.9, 1.0):
+        try:
+            topo = erdos_renyi(num_nodes, p, b_max, seed=seed)
+        except RuntimeError:
+            continue
+        if topo.min_in_degree >= need:
+            return topo
+    raise RuntimeError(
+        f"no ER({num_nodes}) topology supports rules={list(rules)} with b up to {b_max} "
+        f"(need min in-degree >= {need}; use more nodes)"
+    )
+
+
+def pick_byz_mask(num_nodes: int, cell: Cell, byzantine_seed: int = 0) -> np.ndarray:
+    """The cell's attacking-node mask — exactly `BridgeTrainer.__init__`'s
+    rule: no attackers when the attack is 'none' or b == 0, else a seeded
+    draw of b nodes (shared across cells with equal b)."""
+    if cell.attack == "none" or cell.b == 0:
+        return np.zeros((num_nodes,), dtype=bool)
+    nbyz = min(cell.b, num_nodes)
+    return np.asarray(byz_lib.pick_byzantine_mask(num_nodes, nbyz, byzantine_seed))

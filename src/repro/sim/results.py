@@ -1,0 +1,110 @@
+"""Structured grid results — the contract between the engine, the resumable
+sweep store, and the benchmark/figure consumers.
+
+A `GridResult` is the host-side record of one engine run: a list of per-cell
+records (axes + final/averaged metrics) plus run metadata (wall time,
+cells/sec, trace count, banks).  It serializes to one aggregate JSON
+(`save`) and, for resumable sweeps, to one JSON per cell keyed by the cell's
+stable tag (`save_cells` / `existing_tags`) — re-running a sweep only
+computes the cells whose files are missing.  `rows()` renders the CSV rows
+`benchmarks.run` prints, so `benchmarks/paper_figs.py` and
+`benchmarks/grid_bench.py` consume grid runs through one type.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Sequence
+
+import numpy as np
+
+from repro.sim.grid import Cell
+
+# Per-tick metric streams summarized into cell records: (key, reducer).
+_FINAL_KEYS = ("loss", "consensus_dist")
+_MEAN_KEYS = ("delivered_frac", "mean_staleness", "screened_frac", "usable_in")
+
+
+def collect(cells: Sequence[Cell], metrics: dict, *, meta: dict | None = None) -> "GridResult":
+    """Summarize engine metrics (``[E, T]`` leaves) into a `GridResult`."""
+    host = {k: np.asarray(v) for k, v in metrics.items()}
+    records = []
+    for i, c in enumerate(cells):
+        rec = {
+            "rule": c.rule, "attack": c.attack, "b": int(c.b), "seed": int(c.seed),
+            "scenario": c.scenario,
+        }
+        for k in _FINAL_KEYS:
+            if k in host:
+                rec[f"final_{k}"] = float(host[k][i, -1])
+        for k in _MEAN_KEYS:
+            if k in host:
+                rec[f"mean_{k}" if not k.startswith("mean_") else k] = float(host[k][i].mean())
+        records.append(rec)
+    return GridResult(cells=records, meta=dict(meta or {}))
+
+
+def cell_of(record: dict) -> Cell:
+    """The grid `Cell` a record describes (tag round-trips through this)."""
+    return Cell(record["rule"], record["attack"], int(record["b"]), int(record["seed"]),
+                record.get("scenario"))
+
+
+@dataclasses.dataclass
+class GridResult:
+    """One grid run: per-cell records + run metadata."""
+
+    cells: list[dict]
+    meta: dict
+
+    def save(self, path: str) -> None:
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            json.dump({"meta": self.meta, "cells": self.cells}, f, indent=2, sort_keys=True)
+
+    @classmethod
+    def load(cls, path: str) -> "GridResult":
+        with open(path) as f:
+            data = json.load(f)
+        return cls(cells=data["cells"], meta=data.get("meta", {}))
+
+    def save_cells(self, out_dir: str) -> None:
+        """Per-cell files for the resumable sweep store (one JSON per tag)."""
+        os.makedirs(out_dir, exist_ok=True)
+        for rec in self.cells:
+            with open(os.path.join(out_dir, cell_of(rec).tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=2, sort_keys=True)
+
+    def rows(self, prefix: str = "grid") -> list[tuple[str, float, str]]:
+        """CSV rows for the `benchmarks.run` harness: one row per cell, timed
+        at the run's amortized us/cell."""
+        us_per_cell = float(self.meta.get("us_per_cell", 0.0))
+        rows = []
+        for rec in self.cells:
+            derived = ";".join(
+                f"{k.replace('final_', '').replace('mean_', '')}={rec[k]:.4f}"
+                for k in ("accuracy", "final_loss", "final_consensus_dist", "mean_delivered_frac")
+                if k in rec
+            )
+            rows.append((f"{prefix}/{cell_of(rec).tag}", us_per_cell, derived))
+        return rows
+
+
+def existing_tags(out_dir: str) -> set[str]:
+    """Tags already present in a per-cell result store (sweep resumability)."""
+    if not os.path.isdir(out_dir):
+        return set()
+    return {f[:-5] for f in os.listdir(out_dir)
+            if f.endswith(".json") and f != "GridResult.json"}
+
+
+def load_cell_store(out_dir: str) -> GridResult:
+    """Assemble a `GridResult` from every per-cell file in a store — the
+    on-disk records are the source of truth, so aggregates rebuilt after a
+    resumed sweep cover all runs, not just the latest."""
+    records = []
+    for tag in sorted(existing_tags(out_dir)):
+        with open(os.path.join(out_dir, tag + ".json")) as f:
+            records.append(json.load(f))
+    return GridResult(cells=records, meta={"total_cells": len(records)})

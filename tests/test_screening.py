@@ -116,3 +116,83 @@ def test_chunked_screening_matches():
     full = screen_all(w, adj, rule="trimmed_mean", b=2)
     chunked = screen_all(w, adj, rule="trimmed_mean", b=2, chunk=32)
     np.testing.assert_allclose(np.asarray(full), np.asarray(chunked), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Extreme magnitudes: the inf-sentinel regression suite
+# ---------------------------------------------------------------------------
+#
+# The old masking used a finite 1e30 sentinel: any legitimate value beyond it
+# (fp32 goes to 3.4e38; bf16 overflow products routinely land there) sorted
+# *past* the sentinel rows, so masked slots leaked into the trim window and
+# silently corrupted the output.  Masking is now +inf with a NaN guard.
+
+
+def test_trimmed_mean_huge_honest_values_not_corrupted():
+    """Honest values in the 1e31..1e32 range (beyond the old sentinel) must
+    still produce the exact trimmed mean."""
+    n, b = 9, 2
+    rng = np.random.default_rng(0)
+    vals = (rng.uniform(1.0, 9.0, size=n) * 1e31).astype(np.float32)
+    v = jnp.asarray(vals)[:, None]
+    mask = jnp.ones((n,), bool)
+    self_v = jnp.asarray([np.float32(5e31)])
+    out = float(np.asarray(screening.trimmed_mean(v, mask, self_v, b))[0])
+    s = np.sort(vals.astype(np.float64))
+    expected = (s[b: n - b].sum() + 5e31) / (n - 2 * b + 1)
+    np.testing.assert_allclose(out, expected, rtol=1e-5)
+
+
+def test_trimmed_mean_extreme_attack_values_trimmed():
+    """A colluding attacker broadcasting 1e38 / -1e38 / +-inf payloads is
+    fully trimmed; honest values survive untouched."""
+    m, b, d = 11, 2, 3
+    honest_vals = np.linspace(1.0, 7.0, m - b).astype(np.float32)
+    for bad in (3.4e38, -3.4e38, np.inf, -np.inf):
+        vals = np.concatenate([honest_vals, np.full((b,), bad, np.float32)])
+        v = jnp.asarray(np.broadcast_to(vals[:, None], (m, d)).copy())
+        out = np.asarray(screening.trimmed_mean(v, jnp.ones((m,), bool),
+                                                jnp.full((d,), 4.0, jnp.float32), b))
+        assert np.isfinite(out).all(), f"attack value {bad} leaked"
+        expected = (np.sort(vals.astype(np.float64))[b: m - b].sum() + 4.0) / (m - 2 * b + 1)
+        np.testing.assert_allclose(out, expected, rtol=1e-5)
+
+
+def test_median_huge_magnitudes_exact():
+    n = 8
+    vals = np.array([1e31, 2e31, 3e31, -4e31, 5e31, 2.5e31, 1.5e31, 4e31], np.float32)
+    v = jnp.asarray(vals)[:, None]
+    out = float(np.asarray(screening.coordinate_median(v, jnp.ones((n,), bool),
+                                                       jnp.asarray([2.2e31], jnp.float32)))[0])
+    expected = float(np.median(np.concatenate([vals, [np.float32(2.2e31)]]).astype(np.float64)))
+    np.testing.assert_allclose(out, expected, rtol=1e-6)
+
+
+def test_nan_payloads_guarded():
+    """NaN payloads (the finite-count guard) are treated as maximal outliers:
+    trimmed away, never propagated into honest outputs."""
+    m, b, d = 11, 2, 4
+    vals = np.linspace(-2.0, 2.0, m).astype(np.float32)
+    v = np.broadcast_to(vals[:, None], (m, d)).copy()
+    v[3] = np.nan
+    v[7] = np.nan
+    out_t = np.asarray(screening.trimmed_mean(jnp.asarray(v), jnp.ones((m,), bool),
+                                              jnp.zeros((d,), jnp.float32), b))
+    out_m = np.asarray(screening.coordinate_median(jnp.asarray(v), jnp.ones((m,), bool),
+                                                   jnp.zeros((d,), jnp.float32)))
+    assert np.isfinite(out_t).all() and np.isfinite(out_m).all()
+    honest = np.delete(vals, [3, 7])
+    assert (out_t >= honest.min() - 1e-5).all() and (out_t <= honest.max() + 1e-5).all()
+
+
+def test_hull_invariant_under_extreme_attack():
+    """Eq. 14's hull property holds even when the attack magnitude dwarfs the
+    old finite sentinel."""
+    m, b = 15, 2
+    topo, w, _ = _setup(m=m, b=b)
+    w = w.at[3].set(2.9e38).at[7].set(-2.9e38)
+    honest = np.setdiff1d(np.arange(m), [3, 7])
+    hv = np.asarray(w)[honest]
+    for rule in ("trimmed_mean", "median"):
+        y = np.asarray(screen_all(w, jnp.asarray(topo.adjacency), rule=rule, b=b))[honest]
+        assert (y >= hv.min(0) - 1e-4).all() and (y <= hv.max(0) + 1e-4).all()

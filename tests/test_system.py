@@ -4,7 +4,6 @@ qualitative claims at CPU scale."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import get_config
 from repro.core import BridgeConfig, BridgeTrainer, erdos_renyi, replicate
