@@ -3,22 +3,26 @@ committed baselines and fail (exit 1) on wall-time regression.
 
     PYTHONPATH=src python -m benchmarks.check_regression \
         [--fresh-dir .] [--baseline-dir benchmarks/baselines] \
-        [--names BENCH_grid.json,BENCH_net.json] [--tol 1.5] [--update]
+        [--names BENCH_grid.json,BENCH_net.json] [--tol 1.5] \
+        [--update [BENCH_comm.json ...]]
 
 Metrics are discovered recursively by key name: keys ending in one of the
-time suffixes (``us_per_tick``, ``us_per_step``, ``us_per_cell``, ``wall_s``,
-``seconds_per_cell``) are *lower-is-better*; ``cells_per_sec`` is
-*higher-is-better*.  A metric regresses when it is worse than the committed
-baseline by more than ``--tol`` (default 1.5x, i.e. 50% slower; override per
-run or via the ``BENCH_TOL`` env var — CI runners are noisy, paper over a
-flaky gate by bumping the tolerance, not by deleting the step).
+time suffixes (``us_per_tick``, ``us_per_step``, ``us_per_cell``,
+``us_per_call``, ``wall_s``, ``seconds_per_cell``) are *lower-is-better*;
+``cells_per_sec`` and anything containing ``speedup`` (same-machine ratios,
+the most portable signal across runner classes) are *higher-is-better*.  A
+metric regresses when it is worse than the committed baseline by more than
+``--tol`` (default 1.5x, i.e. 50% slower; override per run or via the
+``BENCH_TOL`` env var — CI runners are noisy, paper over a flaky gate by
+bumping the tolerance, not by deleting the step).
 
 Re-baselining (after an intentional perf change, or to adopt a new runner
-class): run the benchmarks, eyeball the fresh numbers, then either
-``--update`` (copies fresh over the baselines) or commit the fresh files to
+class): run the benchmarks, eyeball the fresh numbers, then ``--update``
+(bare: copies every fresh file over its baseline) or ``--update
+BENCH_comm.json`` (only the named files), or commit the fresh files to
 ``benchmarks/baselines/`` by hand.  Baselines are per-file: a missing
-baseline is reported and skipped, never failed, so adding a new benchmark
-does not break the gate before its first baseline lands.
+baseline is a WARNING and a skip, never a failure, so a new ``BENCH_*.json``
+can land (and be gated in CI) in the same PR that first baselines it.
 """
 from __future__ import annotations
 
@@ -28,16 +32,21 @@ import os
 import shutil
 import sys
 
-LOWER_IS_BETTER = ("us_per_tick", "us_per_step", "us_per_cell", "wall_s")
-# speedup_vs_subprocess compares two measurements from the SAME machine, so it
-# is environment-relative — the most portable signal across runner classes
-HIGHER_IS_BETTER = ("cells_per_sec", "speedup_vs_subprocess")
+LOWER_IS_BETTER = ("us_per_tick", "us_per_step", "us_per_cell", "us_per_call", "wall_s")
+# "speedup" metrics compare two measurements from the SAME machine, so they
+# are environment-relative — the most portable signal across runner classes
+HIGHER_IS_BETTER = ("cells_per_sec", "ticks_per_sec")
 # environment measurements, not properties of the code under test (interpreter
 # start-up, import cost, reference-machine extrapolations) — never gated
 SKIP = ("extrapolated_wall_s_all_cells", "seconds_per_cell")
 SKIP_PREFIXES = ("subprocess_baseline.", "sequential_inprocess_baseline.")
 
-DEFAULT_NAMES = ("BENCH_grid.json", "BENCH_net.json")
+DEFAULT_NAMES = ("BENCH_grid.json", "BENCH_net.json", "BENCH_comm.json",
+                 "BENCH_kernels.json")
+
+
+def _higher_is_better(leaf: str) -> bool:
+    return leaf in HIGHER_IS_BETTER or "speedup" in leaf
 
 
 def _walk(prefix: str, obj, out: dict):
@@ -57,7 +66,7 @@ def _metrics(path: str) -> dict[str, float]:
         leaf = key.rsplit(".", 1)[-1]
         if leaf in SKIP or key.startswith(SKIP_PREFIXES) or val <= 0:
             continue
-        if leaf.endswith(LOWER_IS_BETTER) or leaf in HIGHER_IS_BETTER:
+        if leaf.endswith(LOWER_IS_BETTER) or _higher_is_better(leaf):
             picked[key] = val
     return picked
 
@@ -67,10 +76,17 @@ def compare(fresh_path: str, baseline_path: str, tol: float) -> list[str]:
     fresh = _metrics(fresh_path)
     base = _metrics(baseline_path)
     problems = []
+    # gate-able metrics present only in the fresh file (a benchmark grew a
+    # new scenario/kernel) are not silently ungated forever: surface them so
+    # the next --update re-baseline picks them up
+    only_fresh = sorted(set(fresh) - set(base))
+    if only_fresh:
+        print(f"    [note] {len(only_fresh)} fresh metric(s) missing from the "
+              f"baseline (not gated until re-baselined): {', '.join(only_fresh)}")
     for key in sorted(set(fresh) & set(base)):
         leaf = key.rsplit(".", 1)[-1]
         f, b = fresh[key], base[key]
-        if leaf in HIGHER_IS_BETTER or key in HIGHER_IS_BETTER:
+        if _higher_is_better(leaf):
             if f < b / tol:
                 problems.append(
                     f"{key}: {f:.4g} < baseline {b:.4g} / {tol:g} (higher is better)")
@@ -89,10 +105,22 @@ def main(argv=None) -> int:
     ap.add_argument("--tol", type=float,
                     default=float(os.environ.get("BENCH_TOL", "1.5")),
                     help="allowed slowdown factor (default 1.5, env BENCH_TOL)")
-    ap.add_argument("--update", action="store_true",
-                    help="re-baseline: copy fresh files over the baselines")
+    ap.add_argument("--update", nargs="*", default=None, metavar="BENCH_FILE",
+                    help="re-baseline: copy fresh files over the baselines — "
+                         "bare updates every --names file, or list specific "
+                         "files (e.g. --update BENCH_comm.json)")
     args = ap.parse_args(argv)
 
+    update_names = None
+    if args.update is not None:
+        update_names = set(args.update) if args.update else set(args.names.split(","))
+        unknown = update_names - set(args.names.split(","))
+        if unknown:
+            # a typo must not exit 0 looking like a successful re-baseline
+            for name in sorted(unknown):
+                print(f"[error] --update {name}: not among --names "
+                      f"({args.names}) — nothing re-baselined for it")
+            return 1
     failed = False
     checked = 0
     for name in args.names.split(","):
@@ -101,14 +129,16 @@ def main(argv=None) -> int:
         if not os.path.exists(fresh):
             print(f"[skip] {name}: no fresh result at {fresh}")
             continue
-        if args.update:
-            os.makedirs(args.baseline_dir, exist_ok=True)
-            shutil.copyfile(fresh, base)
-            print(f"[rebaselined] {name} -> {base}")
+        if update_names is not None:
+            if name in update_names:
+                os.makedirs(args.baseline_dir, exist_ok=True)
+                shutil.copyfile(fresh, base)
+                print(f"[rebaselined] {name} -> {base}")
             continue
         if not os.path.exists(base):
-            print(f"[skip] {name}: no committed baseline at {base} "
-                  f"(run with --update to create one)")
+            print(f"[warn-skip] {name}: no committed baseline at {base} — not "
+                  f"gated this run (re-baseline with --update {name} and "
+                  f"commit the file to make the gate bite)")
             continue
         problems = compare(fresh, base, args.tol)
         checked += 1
@@ -123,7 +153,7 @@ def main(argv=None) -> int:
         print("benchmark regression detected — see docstring for how to "
               "re-baseline if this change is intentional")
         return 1
-    if not args.update and checked == 0:
+    if update_names is None and checked == 0:
         print("nothing checked (no fresh result + baseline pairs found)")
     return 0
 

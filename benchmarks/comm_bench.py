@@ -1,0 +1,248 @@
+"""Compressed-exchange benchmark: bytes on the wire, accuracy at a bit
+budget, and the fused dequant->screen kernel — writes ``BENCH_comm.json``.
+
+Three measurements on the paper's MNIST-like linear task (d = 7850):
+
+* **wire accounting** — exact bytes/edge/tick per codec (`Codec.wire_bits`),
+  and the compression factor vs the float32 payload;
+* **accuracy at a bit budget** — one codec x seed grid (`repro.sim`, ONE
+  compiled program — the codec axis rides the same banked/grouped machinery
+  as rules and attacks) under the random Byzantine attack: final loss and
+  honest-node accuracy per codec, plus engine throughput vs an
+  identity-only (uncompressed) engine of the same shape;
+* **fused kernel** — `repro.kernels.dequant_screen` (dequantize inside the
+  block) vs the staged decode-then-screen pipeline (dequant kernel
+  materializing float32 [n, d], then the screening kernel), same execution
+  mode for both sides, plus the jnp reference for context.
+
+Acceptance (ISSUE 3): int8+top-k >= 4x fewer bytes/edge/tick with final loss
+within 5% of uncompressed, and fused > staged.  The JSON records the
+booleans; `tests/test_comm.py` pins the properties at test scale and CI
+gates the timing metrics against ``benchmarks/baselines/BENCH_comm.json``.
+
+    PYTHONPATH=src python -m benchmarks.comm_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import eval_accuracy, get_data, make_grad_fn
+from repro.comm import get_codec
+from repro.core import replicate
+from repro.data import partition_iid
+from repro.data.partition import stack_node_batches
+from repro.kernels import ops, ref
+from repro.models import small
+from repro.sim import ExperimentGrid, GridEngine
+from repro.sim.engine import stack_batches
+from repro.sim.grid import default_topology
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_comm.json")
+
+CODECS = ("identity", "int8", "int4", "topk25_int8", "topk50_int8")
+# the ISSUE's int8+top-k acceptance cell: k = d/2 keeps the loss inside the
+# 5% band (sparser top-k trades accuracy for bits — the curve the figure
+# shows) while enumerative index coding keeps the wire >= 4x smaller
+ACCEPT_CODEC = "topk50_int8"
+
+
+def codec_accuracy_grid(
+    num_nodes: int = 12,
+    ticks: int = 300,
+    *,
+    codecs=CODECS,
+    rule: str = "trimmed_mean",
+    attack: str = "random",
+    num_byzantine: int = 2,
+    seeds=(0,),
+    seed: int = 0,
+    loss_tail: int = 20,
+    uncompressed_baseline: bool = True,
+):
+    """Run the codec axis as one compiled grid; returns (per-codec records,
+    run meta).  Shared with `benchmarks.paper_figs.fig_comm_accuracy_vs_bits`
+    so the figure and the gate run the same configuration through the same
+    code path.  ``uncompressed_baseline=False`` skips the identity-only
+    throughput engine (consumers that only want the accuracy-vs-bits curve)."""
+    x, y, xt, yt = get_data()
+    shards = partition_iid(x, y, num_nodes, seed=seed)
+    batch_fn = stack_node_batches(shards, 32, seed=seed)
+    topo = default_topology(num_nodes, (rule,), (num_byzantine,), seed=seed)
+    grad_fn = make_grad_fn("linear")
+    batches = stack_batches(
+        lambda i: jax.tree_util.tree_map(jnp.asarray, batch_fn(i)), ticks)
+
+    def init_fn(s):
+        key = jax.random.PRNGKey(s)
+        return replicate(small.init_linear(key), num_nodes, perturb=0.01, key=key)
+
+    grid = ExperimentGrid(topo, (rule,), (attack,), (num_byzantine,), seeds,
+                          codecs=tuple(codecs), lam=1.0, t0=30.0)
+    engine = GridEngine(grid, grad_fn)
+    t0 = time.perf_counter()
+    state = engine.init(init_fn)
+    state, metrics = engine.run(state, batches)
+    jax.block_until_ready(state.params)
+    wall = time.perf_counter() - t0
+
+    wall_base = base_cells = None
+    if uncompressed_baseline:
+        # identity-only engine of the same shape: the uncompressed throughput bar
+        base_grid = ExperimentGrid(topo, (rule,), (attack,), (num_byzantine,), seeds,
+                                   codecs=("identity",), lam=1.0, t0=30.0)
+        base_engine = GridEngine(base_grid, grad_fn)
+        t0 = time.perf_counter()
+        bstate = base_engine.init(init_fn)
+        bstate, _ = base_engine.run(bstate, batches)
+        jax.block_until_ready(bstate.params)
+        wall_base = time.perf_counter() - t0
+        base_cells = base_engine.num_cells
+
+    # the wire-accounting dimension is whatever the model actually flattens
+    # to — derived, not pinned, so a model change can't desync the bits math
+    from repro.core import stack_flatten
+
+    one = jax.tree_util.tree_map(lambda leaf: leaf[0], state.params)
+    d = int(stack_flatten(one)[0].shape[-1])
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt)
+    per_codec: dict[str, dict] = {}
+    for i, cell in enumerate(engine.cells):
+        acc = eval_accuracy(
+            "linear", jax.tree_util.tree_map(lambda leaf: leaf[i], state.params),
+            ~engine.byz_masks[i], xt, yt)
+        rec = per_codec.setdefault(cell.codec, {"losses": [], "accs": []})
+        # mean over the trailing ticks: single-batch final losses are noisy
+        # and the acceptance ratio should not ride one batch draw
+        rec["losses"].append(float(np.asarray(metrics["loss"])[i, -loss_tail:].mean()))
+        rec["accs"].append(float(acc))
+    ident_bits = get_codec("identity").wire_bits(d)
+    records = {}
+    for name, rec in per_codec.items():
+        bits = get_codec(name).wire_bits(d)
+        records[name] = {
+            "wire_bits_per_msg": bits,
+            "bytes_per_edge_per_tick": bits / 8.0,
+            "compression_x": ident_bits / bits,
+            "final_loss": float(np.mean(rec["losses"])),
+            "accuracy": float(np.mean(rec["accs"])),
+        }
+    ident_loss = records["identity"]["final_loss"]
+    for rec in records.values():
+        rec["loss_ratio_vs_identity"] = rec["final_loss"] / ident_loss
+    meta = {
+        "cells": engine.num_cells, "ticks": ticks, "num_nodes": num_nodes,
+        "dim": d, "wall_s": wall, "trace_count": engine.trace_count,
+        "cells_per_sec": engine.num_cells / wall,
+        "ticks_per_sec": engine.num_cells * ticks / wall,
+    }
+    if uncompressed_baseline:
+        meta["uncompressed"] = {
+            "cells": base_cells, "wall_s": wall_base,
+            "ticks_per_sec": base_cells * ticks / wall_base,
+        }
+        # throughput per cell relative to the uncompressed engine (the codec
+        # axis pays encode/decode compute in exchange for the wire savings)
+        meta["cell_throughput_vs_uncompressed"] = (
+            (engine.num_cells / wall) / (base_cells / wall_base))
+    return records, meta
+
+
+def fused_kernel_bench(n: int = 25, d: int = 16384, b: int = 2, reps: int = 1):
+    """Fused dequant->screen vs the staged decode-then-screen pipeline, both
+    as Pallas kernels in the same execution mode (compiled on TPU, interpret
+    on CPU), plus the jitted jnp reference for context."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    msg = get_codec("int8").encode(jax.random.PRNGKey(0), x)
+    q, scale = msg.payload, msg.scale
+    mask = jnp.ones((n,), bool)
+    sv = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+
+    def timeit(fn):
+        fn().block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fn().block_until_ready()
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    us_fused = timeit(lambda: ops.dequant_trimmed_mean(q, scale, mask, sv, b, block_d=512))
+    us_staged = timeit(lambda: ops.trimmed_mean(
+        ops.dequant(q, scale, block_d=512), mask, sv, b, block_d=512))
+    us_ref = timeit(jax.jit(
+        lambda: ref.dequant_trimmed_mean_ref(q, scale, mask, sv, b)).lower().compile())
+    out_f = np.asarray(ops.dequant_trimmed_mean(q, scale, mask, sv, b, block_d=512))
+    out_r = np.asarray(ref.dequant_trimmed_mean_ref(q, scale, mask, sv, b))
+    agree = bool(np.allclose(out_f, out_r, rtol=1e-5, atol=1e-5))
+    return {
+        "n": n, "d": d, "b": b, "backend": jax.default_backend(),
+        "fused_us": us_fused, "staged_us": us_staged,
+        "ref_decode_screen_us": us_ref,
+        "fused_speedup_vs_staged": us_staged / us_fused,
+        "fused_matches_reference": agree,
+        "float32_bytes_avoided": 4 * n * d,
+    }
+
+
+def comm_throughput(smoke: bool = False):
+    """Returns CSV rows and writes BENCH_comm.json."""
+    # the loss-parity claim needs the compressed cells past their delta
+    # warm-up: 300 ticks full, 120 smoke (smoke checks plumbing, not parity)
+    kw = dict(ticks=120, codecs=("identity", "int8", "topk50_int8")) if smoke else dict(ticks=300)
+    records, meta = codec_accuracy_grid(**kw)
+    kernel = fused_kernel_bench(d=4096 if smoke else 16384)
+
+    accept_rec = records[ACCEPT_CODEC]
+    acceptance = {
+        "int8_topk_codec": ACCEPT_CODEC,
+        "int8_topk_compression_x": accept_rec["compression_x"],
+        "int8_topk_ge_4x_fewer_bytes": bool(accept_rec["compression_x"] >= 4.0),
+        "int8_topk_loss_within_5pct": bool(accept_rec["loss_ratio_vs_identity"] <= 1.05),
+        "fused_beats_staged": bool(kernel["fused_speedup_vs_staged"] > 1.0),
+    }
+    record = {"codecs": records, "grid": meta, "kernel": kernel,
+              "acceptance": acceptance}
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+
+    rows = []
+    for name, rec in sorted(records.items()):
+        rows.append((f"comm/codec/{name}", meta["wall_s"] / meta["cells"] * 1e6,
+                     f"bytes_per_edge_tick={rec['bytes_per_edge_per_tick']:.0f};"
+                     f"compression={rec['compression_x']:.2f}x;"
+                     f"acc={rec['accuracy']:.4f};"
+                     f"loss_ratio={rec['loss_ratio_vs_identity']:.4f}"))
+    rows.append(("comm/grid", meta["wall_s"] * 1e6 / meta["cells"],
+                 f"cells={meta['cells']};trace_count={meta['trace_count']};"
+                 f"throughput_vs_uncompressed={meta['cell_throughput_vs_uncompressed']:.2f}x"))
+    rows.append(("comm/kernel_fused", kernel["fused_us"],
+                 f"staged_us={kernel['staged_us']:.0f};"
+                 f"fused_speedup={kernel['fused_speedup_vs_staged']:.2f}x;"
+                 f"matches_ref={kernel['fused_matches_reference']}"))
+    if meta["trace_count"] != 1:
+        raise RuntimeError(
+            f"codec grid compiled {meta['trace_count']} times — the codec axis "
+            f"broke the one-compile property (see repro.sim.engine)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid + smaller kernel dims for quick runs")
+    args = ap.parse_args(argv)
+    print("name,us_per_call,derived")
+    for name, us, derived in comm_throughput(smoke=args.smoke):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+    print(f"wrote {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -58,6 +58,7 @@ def run_decentralized(
     model: str = "linear",
     rule: str = "trimmed_mean",
     attack: str = "none",
+    codec: str = "identity",
     num_nodes: int = 20,
     num_byzantine: int = 0,
     partition: str = "iid",
@@ -88,7 +89,7 @@ def run_decentralized(
     if topo is None:
         raise RuntimeError(f"no graph for rule={rule}, b={num_byzantine}, M={num_nodes}")
     cfg = BridgeConfig(topology=topo, rule=rule, num_byzantine=num_byzantine,
-                       attack=attack, lam=lam, t0=t0)
+                       attack=attack, codec=codec, lam=lam, t0=t0)
     trainer = BridgeTrainer(cfg, make_grad_fn(model))
     key = jax.random.PRNGKey(seed)
     init = small.init_linear(key) if model == "linear" else small.init_cnn(key)
@@ -108,6 +109,7 @@ def run_decentralized(
         "consensus": float(metrics["consensus_dist"]),
         "loss": float(metrics["loss"]),
         "us_per_step": wall / steps * 1e6,
+        "wire_bits_per_edge": float(metrics["wire_bits_per_edge"]),
         "curve": curve,
         "trainer": trainer,
         "state": state,

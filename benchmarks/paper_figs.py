@@ -192,6 +192,26 @@ def fig67_noniid(num_nodes=M_DEFAULT, steps=150):
     return rows
 
 
+def fig_comm_accuracy_vs_bits(num_nodes=12, ticks=300):
+    """Accuracy vs bits-on-wire: the codec axis (identity -> int8 -> int4 ->
+    top-k+int8) as one compiled grid, each point a (bytes/edge/tick,
+    accuracy, loss-vs-uncompressed) triple — the compressed-exchange
+    trade-off curve `BENCH_comm.json` gates.  Runs the same configuration
+    through the same `benchmarks.comm_bench` code path as the gate (minus
+    the gate-only uncompressed-throughput engine)."""
+    from benchmarks.comm_bench import codec_accuracy_grid
+
+    records, meta = codec_accuracy_grid(num_nodes=num_nodes, ticks=ticks,
+                                        uncompressed_baseline=False)
+    rows = []
+    for name, rec in sorted(records.items(), key=lambda kv: -kv[1]["wire_bits_per_msg"]):
+        rows.append((f"fig_comm/{name}", meta["wall_s"] / meta["cells"] * 1e6,
+                     f"bytes_per_edge_tick={rec['bytes_per_edge_per_tick']:.0f};"
+                     f"acc={rec['accuracy']:.4f};"
+                     f"loss_ratio={rec['loss_ratio_vs_identity']:.4f}"))
+    return rows
+
+
 def table2_screening_cost(d=100_000, n=25, b=2, reps=5):
     """Table II: per-call screening cost — BRIDGE-T/M are O(nd), K/B O(n^2 d)."""
     rng = np.random.default_rng(0)

@@ -28,7 +28,7 @@ def main() -> None:
                     help="network model: sync broadcast or repro.net scenarios")
     args = ap.parse_args()
 
-    from benchmarks import grid_bench, kernels_bench, net_bench, paper_figs
+    from benchmarks import comm_bench, grid_bench, kernels_bench, net_bench, paper_figs
 
     m = 50 if args.full else 20
     benches = {
@@ -39,15 +39,18 @@ def main() -> None:
         "fig45": lambda: paper_figs.fig45_nonconvex(num_nodes=min(m, 10)),
         "fig67": lambda: paper_figs.fig67_noniid(num_nodes=m),
         "table2": paper_figs.table2_screening_cost,
+        "fig_comm": paper_figs.fig_comm_accuracy_vs_bits,
         "kernels": kernels_bench.kernel_throughput,
         "net": lambda: net_bench.async_lossy_scenarios(num_nodes=m),
         "grid": grid_bench.grid_throughput,
+        "comm": comm_bench.comm_throughput,
     }
     if args.scenario == "async_lossy":
         only = {"net"}
     else:
-        # net/grid have their own CI jobs + JSON records; opt in via --only
-        only = set(benches) - {"net", "grid"}
+        # net/grid/comm/kernels have their own CI jobs + JSON records (and
+        # overwrite the repo-root BENCH_*.json); opt in via --only
+        only = set(benches) - {"net", "grid", "comm", "fig_comm", "kernels"}
     if args.only:
         only = set(args.only.split(","))
     print("name,us_per_call,derived")

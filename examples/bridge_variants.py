@@ -2,6 +2,13 @@
 reproduces the shape of the paper's Fig. 2 on the synthetic MNIST-like set.
 
     PYTHONPATH=src python examples/bridge_variants.py [--byzantine 2] [--attack random]
+
+``--codec`` routes every broadcast through a `repro.comm` wire codec and
+prints bytes/edge/step next to accuracy — e.g. ``--codec int4`` sends 4-bit
+stochastic codewords whose delta-tracking + error feedback matches the
+uncompressed run's accuracy at ~1/8 of the bytes:
+
+    PYTHONPATH=src python examples/bridge_variants.py --codec int4
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -12,20 +19,27 @@ import argparse
 ap = argparse.ArgumentParser()
 ap.add_argument("--byzantine", type=int, default=2)
 ap.add_argument("--attack", default="random",
-                choices=["random", "sign_flip", "same_value", "alie", "shift"])
+                choices=["random", "sign_flip", "same_value", "alie", "shift",
+                         "garbage_codeword", "scale_abuse", "index_lie"])
+ap.add_argument("--codec", default=None,
+                help="wire codec (repro.comm): int8, int4, topk50_int8, ... ; "
+                     "when set, each variant runs uncompressed AND compressed")
 ap.add_argument("--nodes", type=int, default=20)
 ap.add_argument("--steps", type=int, default=120)
 args = ap.parse_args()
 
 from benchmarks.common import run_decentralized
 
+codecs = ["identity"] + ([args.codec] if args.codec and args.codec != "identity" else [])
 print(f"{args.nodes} nodes, {args.byzantine} byzantine, attack={args.attack}")
-print(f"{'variant':12s} {'accuracy':>9s} {'consensus':>10s} {'ms/step':>8s}")
+print(f"{'variant':12s} {'codec':12s} {'accuracy':>9s} {'consensus':>10s} "
+      f"{'B/edge/step':>12s} {'ms/step':>8s}")
 for rule, label in [("mean", "DGD"), ("trimmed_mean", "BRIDGE-T"),
                     ("median", "BRIDGE-M"), ("krum", "BRIDGE-K"),
                     ("bulyan", "BRIDGE-B")]:
-    r = run_decentralized(model="linear", rule=rule, attack=args.attack,
-                          num_nodes=args.nodes, num_byzantine=args.byzantine,
-                          steps=args.steps)
-    print(f"{label:12s} {r['accuracy']:9.4f} {r['consensus']:10.4f} "
-          f"{r['us_per_step']/1000:8.1f}")
+    for codec in codecs:
+        r = run_decentralized(model="linear", rule=rule, attack=args.attack,
+                              codec=codec, num_nodes=args.nodes,
+                              num_byzantine=args.byzantine, steps=args.steps)
+        print(f"{label:12s} {codec:12s} {r['accuracy']:9.4f} {r['consensus']:10.4f} "
+              f"{r['wire_bits_per_edge']/8:12.0f} {r['us_per_step']/1000:8.1f}")

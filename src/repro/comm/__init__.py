@@ -1,0 +1,30 @@
+"""repro.comm — compressed Byzantine-resilient exchange (wire formats).
+
+What travels on an edge is a first-class design axis: a `Codec` maps the
+flattened iterate to an attackable `WireMsg` codeword (quantized / sparsified
+/ both) and back, with exact bits-on-wire accounting; `exchange` applies
+codecs as banked ``lax.switch`` data with per-link error feedback so
+compressed BRIDGE still converges.  `repro.core.bridge` threads the codec
+through both the broadcast and network-runtime steps, `repro.net` charges
+serialization latency from ``wire_bits()``, `repro.sim` sweeps codec as a
+grid axis, and `repro.kernels.dequant_screen` screens int8 codewords without
+materializing ``float32[n, d]``.
+"""
+from repro.comm.codec import SCALE_BLOCK, Codec, WireMsg, codec_bank, codec_names, get_codec
+from repro.comm.exchange import (
+    CommState,
+    bank_is_lossless,
+    bank_sizes,
+    decode_bank,
+    encode_bank,
+    init_residual,
+    max_wire_bits,
+    wire_bits_bank,
+)
+
+__all__ = [
+    "SCALE_BLOCK", "Codec", "CommState", "WireMsg", "codec_bank", "codec_names",
+    "get_codec",
+    "bank_is_lossless", "bank_sizes", "decode_bank", "encode_bank",
+    "init_residual", "max_wire_bits", "wire_bits_bank",
+]

@@ -1,0 +1,342 @@
+"""Wire codecs: what actually travels on an edge per tick.
+
+BRIDGE's scalability argument (Sec. V) is about large model dimension ``d``,
+but a simulated exchange that ships ``float32[d]`` per edge per tick makes
+*communication* the binding constraint long before compute.  A `Codec` turns
+the flattened iterate into a compact `WireMsg` — the attackable codeword the
+network moves — and back:
+
+* ``encode(key, x) -> WireMsg`` — quantize / sparsify ``x [..., d]`` into a
+  byte payload plus dequantization metadata.  Stochastic rounding draws from
+  ``key``, so a fixed seed reproduces the exact wire trace.
+* ``decode(msg, d) -> x_hat`` — what receivers actually see.  Decoders are
+  total functions of the codeword: malicious payload bytes, abused scale
+  fields, or lying sparse indices (`repro.core.byzantine` wire attacks) decode
+  to *something*, and screening is evaluated against that something.
+* ``wire_bits(d)`` — the exact bits-on-wire per message, the unit `repro.net`
+  channels charge serialization latency in and benchmarks account bytes with.
+
+Every codec in a bank encodes to one uniform `WireMsg` layout (payload /
+scale / idx padded to the bank maxima), so codec selection is banked
+``lax.switch`` *data* exactly like screening rules and attacks — a codec ×
+rule × attack grid still compiles once.  Lossy codecs compose with per-link
+error feedback (`repro.comm.exchange`); the ``identity`` codec is an exact
+float32 bitcast round-trip, which is what makes the default path bit-identical
+to the uncompressed trainer.
+
+Registry names: ``identity``, ``int8``, ``int4`` (dense stochastic
+quantization), ``topk<P>`` / ``randk<P>`` (keep P percent of coordinates,
+float32 values), and quantized-sparse combos ``topk<P>_int8`` etc.  ``randk``
+draws its surviving set from the shared per-tick PRNG, so it ships **no index
+bits** — the receiver re-derives the indices (classic shared-randomness
+trick); ``topk`` ships its k-subset as a combinatorial-number-system rank —
+``ceil(log2 C(d, k))`` bits exactly, the subset's information content (a
+fixed-size enumerative code, ~2.5x tighter than naive per-index addressing
+at k/d = 1/2).  Sparsifiers are *contractive*, not unbiased (no ``d/k``
+rescale) — the delta/error-feedback carry (`repro.comm.exchange`), not
+inflation, recovers what they drop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+import re
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+# Coordinates per quantization-scale block.  A single per-message scale
+# couples every coordinate's quantization step to the payload's GLOBAL
+# dynamic range — at d ~ 10^4 a handful of large coordinates (bias terms)
+# inflate the noise on every small one until error feedback can't keep up.
+# One affine pair per 128 coordinates keeps the step locally adaptive for
+# ~0.25 bits/coordinate of overhead; for top-k payloads (magnitude-sorted)
+# the blocks are naturally range-graded.
+SCALE_BLOCK = 128
+
+
+class WireMsg(NamedTuple):
+    """One codeword: the unit the simulated network transmits.
+
+    ``payload`` is the quantized byte stream (raw float bits for lossless
+    codecs, one int8 per coordinate for ``int8``, two packed nibbles per byte
+    for ``int4``), ``scale`` the per-block affine dequantization pairs
+    ``(scale, zero)`` — one per `SCALE_BLOCK` payload coordinates — applied
+    as ``q * scale + zero``, and ``idx`` the surviving coordinate indices of
+    sparse codecs (empty trailing axis for dense banks).  Leading axes are
+    free: ``[M, ...]`` per-sender on the broadcast path, ``[M, M, ...]``
+    per-link on the network-runtime path.
+    """
+
+    payload: jax.Array  # int8 [..., P]
+    scale: jax.Array  # f32 [..., S, 2]
+    idx: jax.Array  # int32 [..., K]
+
+
+def _bitcast_f32_to_i8(x: jax.Array) -> jax.Array:
+    """f32 [..., k] -> int8 [..., 4k] (exact, invertible)."""
+    b = jax.lax.bitcast_convert_type(x, jnp.int8)  # [..., k, 4]
+    return b.reshape(x.shape[:-1] + (x.shape[-1] * 4,))
+
+def _bitcast_i8_to_f32(b: jax.Array, k: int) -> jax.Array:
+    """int8 [..., 4k] -> f32 [..., k] (inverse of `_bitcast_f32_to_i8`)."""
+    return jax.lax.bitcast_convert_type(b.reshape(b.shape[:-1] + (k, 4)), jnp.float32)
+
+
+def _stochastic_round(key: jax.Array, q: jax.Array, levels: int) -> jax.Array:
+    """Unbiased rounding of ``q`` in [-levels, levels] to integers: E[out] = q
+    (floor(q + U[0,1)) — the mean-preserving property `tests/test_comm.py`
+    asserts, and what lets compressed BRIDGE average away quantization noise).
+    """
+    u = jax.random.uniform(key, q.shape, q.dtype)
+    return jnp.clip(jnp.floor(q + u), -levels, levels)
+
+
+def _blocked(x: jax.Array) -> jax.Array:
+    """[..., k] -> [..., S, SCALE_BLOCK] (zero-padded ragged tail)."""
+    k = x.shape[-1]
+    s = -(-k // SCALE_BLOCK)
+    pad = s * SCALE_BLOCK - k
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x.reshape(x.shape[:-1] + (s, SCALE_BLOCK))
+
+
+def _quantize(key: jax.Array, x: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """Symmetric stochastic quantization to ``bits`` (<= 8) signed levels,
+    one scale per `SCALE_BLOCK` coordinates.  Returns (q int8 in
+    [-levels, levels] [..., k], scale f32 [..., S, 2])."""
+    levels = (1 << (bits - 1)) - 1
+    k = x.shape[-1]
+    xb = _blocked(x)
+    s = jnp.max(jnp.abs(xb), axis=-1, keepdims=True)  # [..., S, 1]
+    safe = jnp.where(s > 0, s, 1.0)
+    q = _stochastic_round(key, xb / safe * levels, levels)
+    q = q.reshape(q.shape[:-2] + (-1,))[..., :k].astype(jnp.int8)
+    scale0 = (safe / levels)[..., 0]  # [..., S]
+    scale = jnp.stack([scale0, jnp.zeros_like(scale0)], axis=-1)
+    return q, scale
+
+
+def apply_scales(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Decode int codes ``q [..., k]`` with per-block affine pairs
+    ``scale [..., S, 2]`` (shared by codec decode and the kernel oracles)."""
+    k = q.shape[-1]
+    qb = _blocked(q.astype(jnp.float32))
+    v = qb * scale[..., 0:1] + scale[..., 1:2]
+    return v.reshape(v.shape[:-2] + (-1,))[..., :k]
+
+
+def _pack_nibbles(q: jax.Array) -> jax.Array:
+    """int8 [..., k] values in [-7, 7] -> int8 [..., ceil(k/2)] packed pairs."""
+    k = q.shape[-1]
+    if k % 2:
+        q = jnp.pad(q, [(0, 0)] * (q.ndim - 1) + [(0, 1)])
+    lo = q[..., 0::2].astype(jnp.int32) & 0xF
+    hi = q[..., 1::2].astype(jnp.int32) & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+def _unpack_nibbles(b: jax.Array, k: int) -> jax.Array:
+    """Inverse of `_pack_nibbles` (sign-extends each 4-bit field)."""
+    w = b.astype(jnp.int32)
+    lo = ((w & 0xF) ^ 8) - 8
+    hi = (((w >> 4) & 0xF) ^ 8) - 8
+    out = jnp.stack([lo, hi], axis=-1).reshape(b.shape[:-1] + (2 * b.shape[-1],))
+    return out[..., :k].astype(jnp.int8)
+
+
+@functools.lru_cache(maxsize=None)
+def _subset_rank_bits(d: int, k: int) -> int:
+    """ceil(log2 C(d, k)): the exact size of a combinatorial-number-system
+    rank of a k-subset of d coordinates (ranks live in [0, C(d, k)))."""
+    c = math.comb(d, k)
+    return max(1, (c - 1).bit_length())
+
+
+def _scatter_last(idx: jax.Array, vals: jax.Array, d: int) -> jax.Array:
+    """Scatter ``vals [..., k]`` at ``idx [..., k]`` into zeros ``[..., d]``."""
+    lead = idx.shape[:-1]
+    k = idx.shape[-1]
+    n = int(math.prod(lead)) if lead else 1
+    flat = jnp.zeros((n, d), vals.dtype).at[
+        jnp.arange(n)[:, None], idx.reshape(n, k)
+    ].set(vals.reshape(n, k))
+    return flat.reshape(lead + (d,))
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """One wire format: ``mode`` in {dense, topk, randk}, value precision
+    ``bits`` in {32, 8, 4}, kept fraction ``k_frac`` (sparse modes only)."""
+
+    name: str
+    mode: str = "dense"
+    bits: int = 32
+    k_frac: float = 1.0
+
+    def __post_init__(self):
+        if self.mode not in ("dense", "topk", "randk"):
+            raise ValueError(f"unknown codec mode {self.mode!r}")
+        if self.bits not in (32, 8, 4):
+            raise ValueError(f"codec bits must be 32, 8, or 4, got {self.bits}")
+        if not 0.0 < self.k_frac <= 1.0:
+            raise ValueError(f"codec k_frac must be in (0, 1], got {self.k_frac}")
+
+    @property
+    def lossless(self) -> bool:
+        """True when decode(encode(x)) == x bit-for-bit (no error feedback
+        needed; the carry stays structurally untouched)."""
+        return self.mode == "dense" and self.bits == 32
+
+    def kept(self, d: int) -> int:
+        """Coordinates that survive encoding a [d] message."""
+        if self.mode == "dense":
+            return d
+        return max(1, min(d, round(self.k_frac * d)))
+
+    def index_bits(self, d: int) -> int:
+        """TOTAL wire bits for the surviving index set.  ``randk`` indices
+        are re-derived from the shared per-tick PRNG — zero bits on the wire;
+        ``topk`` ships the exact combinatorial rank of its k-subset:
+        ``ceil(log2 C(d, k))`` bits (enumerative code)."""
+        if self.mode != "topk":
+            return 0
+        return _subset_rank_bits(d, self.kept(d))
+
+    def payload_bytes(self, d: int) -> int:
+        """Bytes of the simulated payload buffer (value bytes only)."""
+        k = self.kept(d)
+        if self.bits == 32:
+            return 4 * k
+        if self.bits == 8:
+            return k
+        return (k + 1) // 2  # packed nibbles
+
+    def nscales(self, d: int) -> int:
+        """Per-block dequantization pairs on the wire (1 unit pair, not
+        transmitted, for float32 values)."""
+        if self.bits == 32:
+            return 1
+        return -(-self.kept(d) // SCALE_BLOCK)
+
+    def wire_bits(self, d: int) -> int:
+        """EXACT bits on the wire per message: value bits + the index set's
+        enumerative rank + one 32-bit scale per `SCALE_BLOCK` quantized
+        coordinates (the nibble-packing pad byte is a simulation artifact
+        and is not charged)."""
+        k = self.kept(d)
+        bits = k * self.bits + self.index_bits(d)
+        if self.bits < 32:
+            bits += 32 * self.nscales(d)  # per-block dequantization scales
+        return bits
+
+    # -- encode / decode ----------------------------------------------------
+
+    def encode(self, key: jax.Array, x: jax.Array) -> WireMsg:
+        """``x [..., d] -> WireMsg`` at this codec's natural sizes (the bank
+        helpers in `repro.comm.exchange` pad to the bank maxima)."""
+        d = x.shape[-1]
+        lead = x.shape[:-1]
+        k_sel, k_q = jax.random.split(key)
+        unit_scale = jnp.broadcast_to(
+            jnp.asarray([[1.0, 0.0]], jnp.float32), lead + (1, 2))
+        if self.mode == "dense":
+            idx = jnp.zeros(lead + (0,), jnp.int32)
+            vals = x
+        else:
+            k = self.kept(d)
+            if self.mode == "topk":
+                _, idx = jax.lax.top_k(jnp.abs(x), k)
+                idx = idx.astype(jnp.int32)
+            else:  # randk: surviving set from the shared PRNG, not the data
+                del k_sel  # randk_indices re-splits `key` identically
+                idx = self.randk_indices(key, lead, d)
+            vals = jnp.take_along_axis(x, idx, axis=-1)
+        if self.bits == 32:
+            return WireMsg(_bitcast_f32_to_i8(vals), unit_scale, idx)
+        q, scale = _quantize(k_q, vals, self.bits)
+        payload = q if self.bits == 8 else _pack_nibbles(q)
+        return WireMsg(payload, scale, idx)
+
+    def decode(self, msg: WireMsg, d: int, key: jax.Array | None = None) -> jax.Array:
+        """``WireMsg -> x_hat [..., d]``.  Reads only this codec's own prefix
+        of the (possibly bank-padded) payload/idx, so banked messages decode
+        identically to dedicated ones.
+
+        ``key`` is the shared per-tick PRNG key the encoder drew from.  For
+        ``randk`` the surviving indices are *re-derived* from it — they are
+        exactly what ``wire_bits`` says never travels, so the simulated
+        ``msg.idx`` field is untrusted and codeword attacks cannot forge
+        them (a key-less call, e.g. a unit test poking a raw codec, falls
+        back to the carried field)."""
+        k = self.kept(d)
+        if self.bits == 32:
+            vals = _bitcast_i8_to_f32(msg.payload[..., : 4 * k], k)
+        else:
+            raw = msg.payload[..., : self.payload_bytes(d)]
+            q = raw if self.bits == 8 else _unpack_nibbles(raw, k)
+            vals = apply_scales(q, msg.scale[..., : self.nscales(d), :])
+        if self.mode == "dense":
+            return vals
+        idx = msg.idx[..., :k]
+        if self.mode == "randk" and key is not None:
+            idx = self.randk_indices(key, msg.payload.shape[:-1], d)
+        return _scatter_last(idx, vals, d)
+
+    def randk_indices(self, key: jax.Array, lead: tuple[int, ...], d: int) -> jax.Array:
+        """The shared-randomness index draw both sides of a randk link make:
+        split -> k_sel -> top_k over per-coordinate uniforms.  The SINGLE
+        definition encode, decode, and the error-feedback support all use —
+        the EF-support invariant (residual only on decoded coordinates)
+        depends on these draws being identical."""
+        if self.mode != "randk":
+            raise ValueError(f"codec {self.name!r} has no shared-randomness indices")
+        k_sel, _ = jax.random.split(key)
+        _, idx = jax.lax.top_k(jax.random.uniform(k_sel, lead + (d,)), self.kept(d))
+        return idx.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_SPARSE_RE = re.compile(r"^(topk|randk)(\d{1,2})(?:_int(8|4))?$")
+
+
+@functools.lru_cache(maxsize=None)
+def get_codec(name: str) -> Codec:
+    """Resolve a codec name: ``identity``, ``int8``, ``int4``, or the
+    parameterized sparse family ``topk<P>`` / ``randk<P>`` (P = percent of
+    coordinates kept, 1-99) with an optional ``_int8`` / ``_int4`` value-
+    quantization suffix — e.g. ``topk25_int8``."""
+    if name == "identity":
+        return Codec(name)
+    if name == "int8":
+        return Codec(name, bits=8)
+    if name == "int4":
+        return Codec(name, bits=4)
+    m = _SPARSE_RE.match(name)
+    if m:
+        mode, pct, bits = m.group(1), int(m.group(2)), m.group(3)
+        if not 1 <= pct <= 99:
+            raise ValueError(f"codec {name!r}: kept percentage must be 1-99")
+        return Codec(name, mode=mode, bits=int(bits) if bits else 32,
+                     k_frac=pct / 100.0)
+    raise ValueError(
+        f"unknown codec {name!r}; options: identity, int8, int4, "
+        f"topk<P>[_int8|_int4], randk<P>[_int8|_int4] (P = percent kept)"
+    )
+
+
+def codec_bank(names: Sequence[str]) -> tuple[Codec, ...]:
+    """Resolve codec names to a static bank (order preserved)."""
+    return tuple(get_codec(n) for n in names)
+
+
+def codec_names() -> list[str]:
+    """The fixed registry names (the sparse family is parameterized and
+    validated by `get_codec`, not enumerable)."""
+    return ["identity", "int8", "int4", "topk25", "randk25", "topk25_int8"]

@@ -1,0 +1,201 @@
+"""Banked codec application: delta tracking + per-link error feedback.
+
+The grid engine runs experiments with *different* codecs inside one jitted
+program, so — like rules and attacks — codec selection is a ``lax.switch``
+over a static bank, indexed by the int32 ``codec_idx`` carried in the
+experiment's `CellParams`.  All branches of a bank return one uniform
+`WireMsg` layout (payload/scale/idx padded to the bank maxima), keeping
+shapes switch-compatible; a single-entry bank elides the switch entirely,
+which is how `BridgeTrainer` drives these helpers — per-experiment and
+batched paths stay bit-identical.
+
+Lossy codecs do NOT compress the raw iterate.  BRIDGE gossips *iterates*, so
+a sparse codeword decoded as "zero at unsent coordinates" would average
+literal zeros into consensus and a quantized one would carry noise
+proportional to ``|w|`` forever.  Instead the carry (`CommState`, living in
+``BridgeState.comm``) implements the compressed-gossip scheme of the
+CHOCO-SGD / robust-gossip line (Koloskova et al.; Gaucher & Dieuleveut):
+
+* ``est`` — the *public copy*: the running decoded estimate every receiver
+  holds of this sender(-link)'s iterate.  What travels is the compressed
+  **delta** ``x - est``; receivers apply it, so sparse codewords *update*
+  coordinates instead of zeroing them, and quantization noise scales with
+  the shrinking delta instead of the iterate.
+* ``resid`` — error feedback on the transmitted delta: the codec sends
+  ``compress(delta + resid)`` and carries the *in-support* reconstruction
+  error forward, so quantization error on what WAS sent is corrected the
+  next tick.  Coordinates a sparse codec did not transmit are excluded: the
+  untransmitted mass already persists in the next delta (``est`` did not
+  move there), and accumulating it in the residual too would double-count
+  it — an unstable positive feedback loop (the reason CHOCO-style schemes
+  carry no separate EF term at all).
+
+On the broadcast path the state is per sender (``[M, d]`` — every receiver
+sees the same codeword); on the network-runtime path it is per link
+(``[M, M, d]`` — a Byzantine sender tells different lies on different links,
+so its codewords, estimates, and residuals diverge per link).  Lossless
+codecs pass everything through *structurally untouched* (no ``x + 0.0``
+anywhere), which is what keeps identity-codec runs bit-identical to the
+uncompressed trainer even for ``-0.0`` payloads.
+
+The state update is masked by the tick's live-edge set on the runtime path
+(a sender advances a link's public copy only for messages it actually put on
+the wire — channel drops are downstream, invisible to it, and correctly not
+fed back; the dropped *reconstruction* simply never reaches the mailbox).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.codec import Codec, WireMsg, _scatter_last
+
+
+class CommState(NamedTuple):
+    """Wire-codec carry for one message tensor (see module docstring)."""
+
+    est: jax.Array  # receivers' running decoded estimate (public copy)
+    resid: jax.Array  # error-feedback accumulator on the transmitted delta
+
+
+def bank_is_lossless(bank: Sequence[Codec]) -> bool:
+    """True when no codec in the bank needs a delta/error-feedback carry."""
+    return all(c.lossless for c in bank)
+
+
+def bank_sizes(bank: Sequence[Codec], d: int) -> tuple[int, int, int]:
+    """(payload bytes P, index slots K, scale pairs S) every bank message is
+    padded to."""
+    p = max(c.payload_bytes(d) for c in bank)
+    k = max((c.kept(d) for c in bank if c.mode != "dense"), default=0)
+    s = max(c.nscales(d) for c in bank)
+    return p, k, s
+
+
+def _pad_axis(x: jax.Array, size: int, axis: int = -1) -> jax.Array:
+    axis = axis % x.ndim
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def init_residual(shape: tuple[int, ...], bank: Sequence[Codec]):
+    """The codec carry for a message tensor of ``shape`` (zero estimate +
+    zero residual), or ``None`` for an all-lossless bank — the default
+    identity path carries no extra state at all."""
+    if bank_is_lossless(bank):
+        return None
+    return CommState(est=jnp.zeros(shape, jnp.float32),
+                     resid=jnp.zeros(shape, jnp.float32))
+
+
+def encode_bank(
+    bank: Sequence[Codec],
+    codec_idx,
+    key: jax.Array,
+    x: jax.Array,
+    state,
+) -> tuple[WireMsg, jax.Array]:
+    """Encode ``x [..., d]`` with the codec selected by ``codec_idx``: lossy
+    codecs transmit ``compress((x - est) + resid)``.  Returns ``(msg,
+    target)`` where ``target`` is what the codec tried to send — `decode_bank`
+    needs it to close the feedback loop."""
+    d = x.shape[-1]
+    p, k, s = bank_sizes(bank, d)
+
+    def branch(c: Codec):
+        def run(key, x, st):
+            if c.lossless or st is None:
+                target = x
+            else:
+                target = (x - st.est) + st.resid
+            m = c.encode(key, target)
+            return WireMsg(_pad_axis(m.payload, p), _pad_axis(m.scale, s, axis=-2),
+                           _pad_axis(m.idx, k)), target
+
+        return run
+
+    branches = [branch(c) for c in bank]
+    if len(branches) == 1:
+        return branches[0](key, x, state)
+    return jax.lax.switch(codec_idx, branches, key, x, state)
+
+
+def decode_bank(
+    bank: Sequence[Codec],
+    codec_idx,
+    msg: WireMsg,
+    target: jax.Array,
+    state,
+    key: jax.Array | None = None,
+):
+    """Decode the (possibly wire-attacked) ``msg`` with the selected codec
+    and advance the carry: receivers see ``x_hat = est + decoded_delta``, the
+    public copy moves to ``x_hat``, and the EF residual becomes ``target -
+    decoded_delta``.  Returns ``(x_hat [..., d], state')``.  ``key`` must be
+    the encode-side comm key — shared-randomness codecs (randk) re-derive
+    their index sets from it instead of trusting the attackable ``idx``
+    field.  Honest senders' codewords are never wire-attacked, so their
+    carries correctly track their own decodes (a corrupted Byzantine
+    estimate only poisons what that sender's receivers screen — which is
+    the point)."""
+    d = target.shape[-1]
+
+    def branch(c: Codec):
+        def run(msg, target, st):
+            dec = c.decode(msg, d, key)
+            if c.lossless or st is None:
+                return dec, (jnp.zeros(()) if st is None else st)
+            x_hat = st.est + dec
+            # NOTE: XLA may contract the dequant multiply feeding this
+            # subtraction into an FMA in one program shape but not another,
+            # so a lossy codec inside a *multi-codec banked* program can
+            # drift from its single-codec twin by ~1 ULP per step through
+            # the feedback loop.  Grouped grid execution (the default) uses
+            # single-codec banks and stays bit-identical to the trainer;
+            # identity cells are exactly equal on every path.
+            err = target - dec
+            if c.mode != "dense":
+                # in-support only: untransmitted mass stays in the delta.
+                # The support must match what decode actually scattered —
+                # randk re-derives its set via the same Codec.randk_indices
+                # draw decode makes (XLA CSEs the duplicate).
+                if c.mode == "randk" and key is not None:
+                    sidx = c.randk_indices(key, msg.payload.shape[:-1], d)
+                else:
+                    sidx = msg.idx[..., : c.kept(d)]
+                support = _scatter_last(sidx, jnp.ones(sidx.shape, bool), d)
+                err = jnp.where(support, err, 0.0)
+            return x_hat, CommState(est=x_hat, resid=err)
+
+        return run
+
+    branches = [branch(c) for c in bank]
+    if len(branches) == 1:
+        x_hat, st = branches[0](msg, target, state)
+    else:
+        x_hat, st = jax.lax.switch(codec_idx, branches, msg, target, state)
+    return x_hat, (None if state is None else st)
+
+
+def wire_bits_bank(bank: Sequence[Codec], codec_idx, d: int):
+    """Exact bits-on-wire per message for the selected codec: a python int
+    for single-entry banks (static — channel ring sizing uses it), an int32
+    scalar selected by ``lax.switch`` otherwise."""
+    if len(bank) == 1:
+        return bank[0].wire_bits(d)
+    branches = [
+        (lambda b: lambda _: jnp.asarray(b, jnp.int32))(c.wire_bits(d)) for c in bank
+    ]
+    return jax.lax.switch(codec_idx, branches, 0)
+
+
+def max_wire_bits(bank: Sequence[Codec], d: int) -> int:
+    """The largest message in the bank — what mailbox rings must be sized
+    for when channels charge serialization ticks from wire bits."""
+    return max(c.wire_bits(d) for c in bank)

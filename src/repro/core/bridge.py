@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import codec as codec_lib
+from repro.comm import exchange as comm_lib
 from repro.core import byzantine as byz_lib
 from repro.core import screening
 from repro.core.graph import Topology
@@ -31,6 +33,11 @@ class BridgeState(NamedTuple):
     t: jax.Array  # iteration counter
     key: jax.Array
     net: Any = None  # network-runtime state (mailboxes etc.); None when synchronous
+    # error-feedback residual of the wire codec (repro.comm): [M, d] per
+    # sender on the broadcast path, [M, M, d] per link on the runtime path;
+    # None when every codec in the bank is lossless (the default identity
+    # path carries no extra state)
+    comm: Any = None
 
 
 class CellParams(NamedTuple):
@@ -54,6 +61,9 @@ class CellParams(NamedTuple):
     # int32 index into a scenario-banked runtime's bank (grid net path);
     # None on the single-runtime trainer path (no scenario axis).
     scenario_idx: Any = None
+    # int32 index into the step's static wire-codec bank (repro.comm);
+    # None selects entry 0 (single-codec trainers).
+    codec_idx: Any = None
 
 
 def cell_step_size(cell: CellParams, t: jax.Array) -> jax.Array:
@@ -68,6 +78,7 @@ class BridgeConfig:
     rule: str = "trimmed_mean"  # trimmed_mean | median | krum | bulyan | mean
     num_byzantine: int = 0  # the bound b given to the screening rule
     attack: str = "none"
+    codec: str = "identity"  # wire codec (repro.comm): identity | int8 | int4 | topk<P>...
     byzantine_seed: int = 0
     # step size rho(t) = 1 / (lam * (t0 + t))  (Sec. IV); or constant if lr>0
     lam: float = 1.0
@@ -124,6 +135,50 @@ def stack_flatten(params: Any) -> tuple[jax.Array, Callable[[jax.Array], Any]]:
 # Salt decorrelating the channel PRNG stream from the attack stream (both
 # derive from the same per-step subkey).
 NET_SALT = 0x6E657430
+# Salts for the wire-codec streams (stochastic rounding / codeword attacks),
+# decorrelated from both the attack and the channel streams.
+COMM_SALT = 0x636D6D30
+WIRE_SALT = 0x77697230
+
+
+def _cell_codec_idx(cell: CellParams):
+    """codec bank index; None (single-codec trainers) selects entry 0."""
+    if cell.codec_idx is None:
+        return jnp.zeros((), jnp.int32)
+    return cell.codec_idx
+
+
+def _wire_roundtrip(codec_bank, wire_bank, cell, sub, x, residual, byz, t, d):
+    """Encode -> codeword attack -> decode, with error feedback.
+
+    Returns ``(x_hat, residual')`` — what receivers see and the advanced
+    per-sender (or per-link) EF carry.  When nothing in the banks can alter a
+    payload (all-lossless codecs, no wire attacks) the wire is skipped
+    entirely: the default identity path stays structurally identical to the
+    uncompressed trainer, which is the bit-identity contract the tests pin.
+    """
+    if comm_lib.bank_is_lossless(codec_bank) and all(a.name == "none" for a in wire_bank):
+        return x, residual
+    cidx = _cell_codec_idx(cell)
+    comm_key = jax.random.fold_in(sub, COMM_SALT)
+    wire_key = jax.random.fold_in(sub, WIRE_SALT)
+    msg, target = comm_lib.encode_bank(codec_bank, cidx, comm_key, x, residual)
+    msg = byz_lib.apply_wire_attack_bank(wire_bank, cell.attack_idx, msg, byz, wire_key, t, d)
+    return comm_lib.decode_bank(codec_bank, cidx, msg, target, residual, comm_key)
+
+
+def _comm_metrics(codec_bank, cell, d: int, live_edges, residual) -> dict:
+    """Exact bits-on-wire accounting + EF diagnostics (uniform keys across
+    codec banks so grid groups concatenate)."""
+    bits = comm_lib.wire_bits_bank(codec_bank, _cell_codec_idx(cell), d)
+    bits_f = jnp.asarray(bits, jnp.float32)
+    res = (jnp.zeros((), jnp.float32) if residual is None
+           else jnp.sqrt(jnp.sum(residual.resid * residual.resid)))
+    return {
+        "wire_bits_per_edge": bits_f,
+        "wire_bytes_total": bits_f / 8.0 * live_edges,
+        "ef_residual_norm": res,
+    }
 
 
 def _grad_update_and_metrics(grad_fn, cell: CellParams, state: BridgeState, batch, y, unflatten):
@@ -147,40 +202,67 @@ def _grad_update_and_metrics(grad_fn, cell: CellParams, state: BridgeState, batc
     return new_params, metrics
 
 
-def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *, screen_chunk=None):
+def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
+                    codecs: tuple[str, ...] = ("identity",), wire_attacks=None,
+                    screen_chunk=None):
     """The synchronous-broadcast iteration: ``step(cell, state, batch)``.
 
-    ``rules`` is a static bank of screening-rule names and ``attacks`` a
-    static bank of `byzantine.Attack`s; ``cell`` selects into both.
+    ``rules`` is a static bank of screening-rule names, ``attacks`` a static
+    bank of `byzantine.Attack`s, ``codecs`` a static bank of wire-codec names
+    (`repro.comm`), and ``wire_attacks`` the codeword-domain bank parallel to
+    ``attacks`` (defaults to all no-ops); ``cell`` selects into all of them.
     """
+    codec_bank = codec_lib.codec_bank(codecs)
+    if wire_attacks is None:
+        wire_attacks = (byz_lib.WIRE_ATTACKS["none"],) * len(attacks)
+    n_edges = jnp.sum(jnp.asarray(adjacency)).astype(jnp.float32)
 
     def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         w, unflatten = stack_flatten(state.params)
+        d = w.shape[1]
         key, sub = jax.random.split(state.key)
         # (Step 3-4) broadcast + Byzantine substitution of sent messages
         w_bcast = byz_lib.apply_attack_bank(attacks, cell.attack_idx, w, cell.byz_mask, sub, state.t)
-        # (Step 5) screening at every node
+        # wire codec: what receivers actually decode (identity: w_bcast itself)
+        w_hat, new_comm = _wire_roundtrip(
+            codec_bank, wire_attacks, cell, sub, w_bcast, state.comm,
+            cell.byz_mask, state.t, d,
+        )
+        # (Step 5) screening at every node: neighbors are seen through the
+        # wire; the node's own iterate never travels and stays uncompressed
         y = screening.screen_all_banked(
-            w_bcast, adjacency, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
+            w_hat, adjacency, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
+            self_vals=w_bcast,
         )
         new_params, metrics = _grad_update_and_metrics(grad_fn, cell, state, batch, y, unflatten)
-        return BridgeState(new_params, state.t + 1, key), metrics
+        metrics.update(_comm_metrics(codec_bank, cell, d, n_edges, new_comm))
+        return BridgeState(new_params, state.t + 1, key, state.net, new_comm), metrics
 
     return step
 
 
-def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_attacks, *, screen_chunk=None):
+def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_attacks, *,
+                            codecs: tuple[str, ...] = ("identity",), wire_attacks=None,
+                            screen_chunk=None):
     """The network-runtime iteration: ``step(cell, state, batch)``.
 
-    ``message_attacks`` is a static bank of `byzantine.MessageAttack`s.  A
-    runtime exposing ``cell_aware = True`` (the grid engine's scenario-banked
+    ``message_attacks`` is a static bank of `byzantine.MessageAttack`s and
+    ``codecs`` / ``wire_attacks`` the wire-format banks (see
+    `build_cell_step`).  Messages are encoded per *link* — a Byzantine sender
+    tells different lies on different links, so its codewords (and the
+    error-feedback residuals behind them) diverge per link too.  A runtime
+    exposing ``cell_aware = True`` (the grid engine's scenario-banked
     runtime) additionally receives the cell so it can switch channel/schedule
     per experiment; the standard runtimes keep their two-argument contract.
     """
     cell_aware = bool(getattr(runtime, "cell_aware", False))
+    codec_bank = codec_lib.codec_bank(codecs)
+    if wire_attacks is None:
+        wire_attacks = (byz_lib.WIRE_ATTACKS["none"],) * len(message_attacks)
 
     def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         w, unflatten = stack_flatten(state.params)
+        d = w.shape[1]
         key, sub = jax.random.split(state.key)
         adj_t = runtime.adjacency_at(state.t, cell) if cell_aware else runtime.adjacency_at(state.t)
         # (Step 3-4) per-link transmissions with Byzantine substitution.
@@ -193,14 +275,31 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
         w_self = byz_lib.apply_self_view_bank(
             message_attacks, cell.attack_idx, w, cell.byz_mask, sub, state.t
         )
+        # wire codec per link ([receiver, sender] leading axes); the sender
+        # axis marks whose codewords the wire attacks may corrupt
+        byz_link = jnp.broadcast_to(cell.byz_mask[None, :], adj_t.shape)
+        msgs_hat, comm_full = _wire_roundtrip(
+            codec_bank, wire_attacks, cell, sub, msgs, state.comm,
+            byz_link, state.t, d,
+        )
+        if state.comm is not None and comm_full is not state.comm:
+            # a sender advances a link's public copy / residual only for
+            # messages actually put on the wire this tick (live edges);
+            # channel drops are downstream and invisible to it
+            comm_full = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(adj_t[:, :, None], new, old),
+                comm_full, state.comm)
+        wire_bits = comm_lib.wire_bits_bank(codec_bank, _cell_codec_idx(cell), d)
         net_key = jax.random.fold_in(sub, NET_SALT)
         if cell_aware:
             net, views, mask, net_stats = runtime.exchange(
-                state.net, msgs, w_self, adj_t, net_key, state.t, cell
+                state.net, msgs_hat, w_self, adj_t, net_key, state.t, cell,
+                wire_bits=wire_bits,
             )
         else:
             net, views, mask, net_stats = runtime.exchange(
-                state.net, msgs, w_self, adj_t, net_key, state.t
+                state.net, msgs_hat, w_self, adj_t, net_key, state.t,
+                wire_bits=wire_bits,
             )
         # (Step 5) asynchronous screening over whatever usable (arrived,
         # fresh) messages each node holds; nodes starved below the rule's
@@ -214,7 +313,9 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
         new_params, metrics = _grad_update_and_metrics(grad_fn, cell, state, batch, y, unflatten)
         metrics.update(net_stats)
         metrics["screened_frac"] = jnp.mean(enough.astype(jnp.float32))
-        return BridgeState(new_params, state.t + 1, key, net), metrics
+        metrics.update(_comm_metrics(
+            codec_bank, cell, d, jnp.sum(adj_t).astype(jnp.float32), comm_full))
+        return BridgeState(new_params, state.t + 1, key, net, comm_full), metrics
 
     return step
 
@@ -244,16 +345,20 @@ class BridgeTrainer:
             self.byz_mask = jnp.zeros((m,), dtype=bool)
         else:
             self.byz_mask = byz_lib.pick_byzantine_mask(m, nbyz, config.byzantine_seed)
+        self.codec = codec_lib.get_codec(config.codec)
+        wire_bank = byz_lib.wire_attack_bank((config.attack,))
         if runtime is None:
             self._attack = byz_lib.get_attack(config.attack)
             step = build_cell_step(
                 grad_fn, self.adjacency, (config.rule,), (self._attack,),
+                codecs=(config.codec,), wire_attacks=wire_bank,
                 screen_chunk=config.screen_chunk,
             )
         else:
             self._message_attack = byz_lib.get_message_attack(config.attack)
             step = build_cell_runtime_step(
                 grad_fn, runtime, (config.rule,), (self._message_attack,),
+                codecs=(config.codec,), wire_attacks=wire_bank,
                 screen_chunk=config.screen_chunk,
             )
         # The cell rides along as a jit *operand*, not a closure constant, so
@@ -276,6 +381,7 @@ class BridgeTrainer:
             lam=jnp.asarray(cfg.lam, jnp.float32),
             t0=jnp.asarray(cfg.t0, jnp.float32),
             lr=jnp.asarray(cfg.lr, jnp.float32),
+            codec_idx=jnp.zeros((), jnp.int32),
         )
 
     @property
@@ -287,12 +393,16 @@ class BridgeTrainer:
         lead = jax.tree_util.tree_leaves(params)[0].shape[0]
         if lead != m:
             raise ValueError(f"params leading axis {lead} != num_nodes {m}")
-        net = None
+        net = comm = None
+        w, _ = stack_flatten(params)
+        dim = w.shape[1]
         if self.runtime is not None:
-            w, _ = stack_flatten(params)
-            net = self.runtime.init(m, w.shape[1])
+            net = self.runtime.init(m, dim, max_wire_bits=self.codec.wire_bits(dim))
+            comm = comm_lib.init_residual((m, m, dim), (self.codec,))
+        else:
+            comm = comm_lib.init_residual((m, dim), (self.codec,))
         return BridgeState(params=params, t=jnp.zeros((), jnp.int32),
-                           key=jax.random.PRNGKey(seed), net=net)
+                           key=jax.random.PRNGKey(seed), net=net, comm=comm)
 
     def step(self, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         return self._jit_step(self._cell, state, batch)

@@ -178,9 +178,111 @@ MESSAGE_ATTACKS["selective_victim"] = MessageAttack(
 )
 
 
+# ---------------------------------------------------------------------------
+# Wire attacks (compressed-domain: the adversary crafts the CODEWORD)
+# ---------------------------------------------------------------------------
+#
+# With a `repro.comm` codec on the wire, Definition 1's "may broadcast
+# anything" includes the encoded representation itself: a Byzantine node can
+# emit byte patterns no honest encoder produces, abuse the dequantization
+# metadata, or lie about which coordinates a sparse payload carries.
+# Receivers run the decoder on whatever arrives — screening is evaluated
+# against what decoders actually *emit* (which for garbage float bits
+# includes inf/NaN payloads; the inf-sentinel + NaN guard in
+# `repro.core.screening` is what keeps rank-based rules total-ordered).
+#
+# A `WireAttack` transforms the `repro.comm.codec.WireMsg` after honest
+# encoding and before decoding, substituting the fields of Byzantine senders
+# only.  ``byz`` is a bool mask broadcastable against the message's leading
+# axes ([M] on the broadcast path, [M, M] receiver x sender on the per-link
+# path).  Attacks are no-ops on fields the selected codec ignores (e.g.
+# scale abuse under the identity codec) — the registry composes freely with
+# every codec, and the interesting cells are where attack and codec bite.
+
+
+@dataclasses.dataclass(frozen=True)
+class WireAttack:
+    """An attack on the encoded codeword.
+
+    ``fn(msg: WireMsg, byz, key, t, d) -> WireMsg`` where ``d`` is the
+    decoded dimension (index lies must stay in-range to be maximally
+    damaging — out-of-range scatter indices are dropped by the decoder).
+    """
+
+    name: str
+    fn: Callable
+
+    def __call__(self, msg, byz, key, t, d):
+        return self.fn(msg, byz, key, t, d)
+
+
+def _wire_none(msg, byz, key, t, d):
+    return msg
+
+
+def _sub(field, byz, crafted):
+    """Substitute Byzantine senders' rows of one message field (``byz`` has
+    the message's leading axes; fields append 1-2 trailing axes)."""
+    b = byz.reshape(byz.shape + (1,) * (field.ndim - byz.ndim))
+    return jnp.where(b, crafted, field)
+
+
+def _garbage_codeword():
+    """Uniformly random payload bytes + random sparse indices: the decoder
+    sees byte soup.  Under the identity codec the bitcast emits arbitrary
+    float32 patterns — including inf/NaN — stress-testing the screening
+    guards; under quantized codecs it is bounded-range noise."""
+
+    def fn(msg, byz, key, t, d):
+        kp, ki = jax.random.split(jax.random.fold_in(key, t))
+        payload = jax.random.randint(
+            kp, msg.payload.shape, -128, 128, jnp.int32).astype(jnp.int8)
+        idx = jax.random.randint(ki, msg.idx.shape, 0, max(d, 1), jnp.int32)
+        return msg._replace(payload=_sub(msg.payload, byz, payload),
+                            idx=_sub(msg.idx, byz, idx))
+
+    return fn
+
+
+def _scale_abuse(factor: float = 1e4):
+    """Quant-range abuse: the payload bytes look like a perfectly ordinary
+    codeword, but the dequantization scale is inflated so receivers decode
+    values ``factor``x larger than honest magnitudes.  Invisible to any
+    detector that inspects payload statistics; a no-op on codecs that carry
+    no scale (identity, float32 sparse)."""
+
+    def fn(msg, byz, key, t, d):
+        return msg._replace(scale=_sub(msg.scale, byz, msg.scale * factor))
+
+    return fn
+
+
+def _index_lie():
+    """Top-k index lies: Byzantine senders keep their honest-looking values
+    but claim they belong to the first k coordinates, concentrating all
+    adversarial energy on a small fixed subset (and starving the rest).
+    Only bites sparse codecs — dense decoders ignore the index field."""
+
+    def fn(msg, byz, key, t, d):
+        k = msg.idx.shape[-1]
+        lie = jnp.broadcast_to(jnp.arange(k, dtype=jnp.int32), msg.idx.shape)
+        return msg._replace(idx=_sub(msg.idx, byz, lie))
+
+    return fn
+
+
+WIRE_ATTACKS: dict[str, WireAttack] = {
+    "none": WireAttack("none", _wire_none),
+    "garbage_codeword": WireAttack("garbage_codeword", _garbage_codeword()),
+    "scale_abuse": WireAttack("scale_abuse", _scale_abuse()),
+    "index_lie": WireAttack("index_lie", _index_lie()),
+}
+
+
 def attack_names() -> list[str]:
-    """All registered attack names (broadcast + message-only)."""
-    return sorted(set(ATTACKS) | set(MESSAGE_ATTACKS))
+    """All registered attack names (broadcast + message-only + wire)."""
+    return sorted(set(ATTACKS) | set(MESSAGE_ATTACKS)
+                  | (set(WIRE_ATTACKS) - {"none"}))
 
 
 # ---------------------------------------------------------------------------
@@ -205,6 +307,22 @@ def attack_bank(names: Sequence[str]) -> tuple[Attack, ...]:
 def message_attack_bank(names: Sequence[str]) -> tuple[MessageAttack, ...]:
     """Resolve attack names to a static message-granularity bank."""
     return tuple(get_message_attack(n) for n in names)
+
+
+def wire_attack_bank(names: Sequence[str]) -> tuple[WireAttack, ...]:
+    """The codeword-domain component of each attack name: the registered
+    `WireAttack` for wire-attack names, the no-op for iterate-domain attacks.
+    Indexed by the SAME ``attack_idx`` as the iterate-domain banks, so one
+    grid axis covers both domains."""
+    return tuple(WIRE_ATTACKS.get(n, WIRE_ATTACKS["none"]) for n in names)
+
+
+def apply_wire_attack_bank(bank: tuple[WireAttack, ...], attack_idx, msg, byz, key, t, d: int):
+    """Codeword substitution by the bank entry selected by ``attack_idx``."""
+    if len(bank) == 1:
+        return bank[0](msg, byz, key, t, d)
+    branches = [(lambda a: lambda m, bz, k, tt: a(m, bz, k, tt, d))(a) for a in bank]
+    return jax.lax.switch(attack_idx, branches, msg, byz, key, t)
 
 
 def apply_attack_bank(bank: tuple[Attack, ...], attack_idx, w, byz_mask, key, t):
@@ -239,6 +357,10 @@ def apply_self_view_bank(bank: tuple[MessageAttack, ...], attack_idx, w, byz_mas
 
 
 def get_attack(name: str) -> Attack:
+    # wire attacks corrupt the codeword only; their iterate-domain component
+    # is the no-op (the step applies the wire bank after encoding)
+    if name in WIRE_ATTACKS:
+        return ATTACKS["none"]
     try:
         return ATTACKS[name]
     except KeyError:
@@ -252,6 +374,8 @@ def get_attack(name: str) -> Attack:
 
 
 def get_message_attack(name: str) -> MessageAttack:
+    if name in WIRE_ATTACKS:
+        return MESSAGE_ATTACKS["none"]
     try:
         return MESSAGE_ATTACKS[name]
     except KeyError:

@@ -441,13 +441,13 @@ def _rule_branch_broadcast(rule: str, chunk):
     # its O(M*d + n*chunk) peak instead of an [M, M, d] broadcast
     fn = get_rule(rule)
 
-    def run(w, adjacency, b):
+    def run(w, adjacency, b, self_vals):
         def per_node(mask_j, self_j):
             return _apply_rule(fn, rule, w, mask_j, self_j, b, chunk)
 
         if _streams(rule, w.shape[1], chunk):
-            return jax.lax.map(lambda args: per_node(*args), (adjacency, w))
-        return jax.vmap(per_node)(adjacency, w)
+            return jax.lax.map(lambda args: per_node(*args), (adjacency, self_vals))
+        return jax.vmap(per_node)(adjacency, self_vals)
 
     return run
 
@@ -460,13 +460,22 @@ def screen_all_banked(
     b,
     *,
     chunk: int | None = None,
+    self_vals: jax.Array | None = None,
 ) -> jax.Array:
     """`screen_all` with the rule chosen by a traced ``rule_idx`` into the
-    static ``rules`` bank and a (possibly traced) Byzantine bound ``b``."""
+    static ``rules`` bank and a (possibly traced) Byzantine bound ``b``.
+
+    ``self_vals`` separates the matrix nodes *screen* (``w`` — what arrived,
+    e.g. decoded wire codewords) from the value each node combines as its own
+    (``self_vals[j]`` — its local iterate, which never travels the wire and
+    is never compressed).  Defaults to ``w`` itself, the classic broadcast
+    semantics where both coincide."""
+    if self_vals is None:
+        self_vals = w
     branches = [_rule_branch_broadcast(r, chunk) for r in rules]
     if len(branches) == 1:
-        return branches[0](w, adjacency, b)
-    return jax.lax.switch(rule_idx, branches, w, adjacency, b)
+        return branches[0](w, adjacency, b, self_vals)
+    return jax.lax.switch(rule_idx, branches, w, adjacency, b, self_vals)
 
 
 def screen_views_banked(

@@ -8,6 +8,11 @@ from __future__ import annotations
 
 
 from repro.kernels import ref
+from repro.kernels.dequant_screen import (
+    dequant_median_pallas,
+    dequant_pallas,
+    dequant_trimmed_mean_pallas,
+)
 from repro.kernels.krum import pairwise_sq_dists_pallas
 from repro.kernels.median import median_pallas
 from repro.kernels.trimmed_mean import trimmed_mean_pallas
@@ -29,3 +34,25 @@ def pairwise_sq_dists(stacked, *, use_pallas: bool = True, **kw):
     if use_pallas:
         return pairwise_sq_dists_pallas(stacked, **kw)
     return ref.pairwise_sq_dists_ref(stacked)
+
+
+def dequant(q, scale, *, use_pallas: bool = True, **kw):
+    """Decode int8 codewords to float32 (stage 1 of the unfused pipeline)."""
+    if use_pallas:
+        return dequant_pallas(q, scale, **kw)
+    return ref.dequant_ref(q, scale)
+
+
+def dequant_trimmed_mean(q, scale, mask, self_value, b: int, *, use_pallas: bool = True, **kw):
+    """Fused dequantize->trimmed-mean over int8 neighbor codewords."""
+    if use_pallas:
+        return dequant_trimmed_mean_pallas(q, scale, mask, self_value, b, **kw)
+    return ref.dequant_trimmed_mean_ref(q, scale, mask, self_value, b)
+
+
+def dequant_median(q, scale, mask, self_value, *, use_pallas: bool = True, **kw):
+    """Fused dequantize->median over int8 neighbor codewords (self joins
+    uncompressed)."""
+    if use_pallas:
+        return dequant_median_pallas(q, scale, mask, self_value, **kw)
+    return ref.dequant_median_ref(q, scale, mask, self_value)

@@ -56,3 +56,41 @@ def pairwise_sq_dists_ref(stacked: jax.Array) -> jax.Array:
     x = stacked.astype(jnp.float32)
     sq = jnp.sum(x * x, axis=1)
     return jnp.maximum(sq[:, None] + sq[None, :] - 2.0 * (x @ x.T), 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Compressed-exchange oracles: decode-then-screen, the fused kernels' anchor
+# ---------------------------------------------------------------------------
+
+
+def dequant_ref(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Affine decode of int8 codewords: ``q [..., n, d]`` codes with
+    ``scale [..., n, S, 2]`` per-block (scale, zero) pairs (one per
+    `repro.comm.codec.SCALE_BLOCK` coordinates — the codec's wire layout)
+    -> guarded float32 values.  NaNs (inf scale x zero code, producible by
+    scale-abuse wire attacks) are guarded to +inf, matching
+    `repro.core.screening`."""
+    from repro.comm.codec import apply_scales
+
+    v = apply_scales(q, scale)
+    return jnp.where(jnp.isnan(v), _INF, v)
+
+
+def dequant_trimmed_mean_ref(q, scale, mask, self_value, b: int) -> jax.Array:
+    """Unfused pipeline: materialize the float32 neighbor tensor, then screen."""
+    return trimmed_mean_ref(dequant_ref(q, scale), mask, self_value, b)
+
+
+def dequant_median_ref(q, scale, mask, self_value) -> jax.Array:
+    """Unfused pipeline for BRIDGE-M: decode, append the (uncompressed) self
+    row, coordinate-median over N_j ∪ {j}."""
+
+    def one(q, scale, mask, self_value):
+        v = dequant_ref(q, scale)
+        rows = jnp.concatenate([v, self_value.astype(jnp.float32)[None]], axis=0)
+        fm = jnp.concatenate([mask, jnp.ones((1,), bool)], axis=0)
+        return median_ref(rows, fm)
+
+    if q.ndim == 3:
+        return jax.vmap(one)(q, scale, mask, self_value)
+    return one(q, scale, mask, self_value)

@@ -11,7 +11,8 @@ subprocesses.  All modes are resumable (existing results are skipped).
     PYTHONPATH=src python -m repro.launch.sweep --mode grid \
         --out experiments/grid [--rules trimmed_mean,median] \
         [--attacks random,alie] [--byz 1,2] [--seeds 0,1,2,3] \
-        [--scenarios sync | ideal,lossy,...] [--grid-chunk 16]
+        [--scenarios sync | ideal,lossy,...] [--codecs identity,int8,...] \
+        [--grid-chunk 16]
 
 * ``--mode dryrun`` (default) — the arch x shape x mesh lowering matrix as
   subprocesses:
@@ -143,13 +144,14 @@ def run_grid_mode(args) -> None:
     attacks = args.attacks.split(",")
     byz = [int(x) for x in args.byz.split(",")]
     seeds = [int(x) for x in args.seeds.split(",")]
+    codecs = args.codecs.split(",")
     scenarios = None
     if args.scenarios not in ("sync", "none", ""):
         scenarios = args.scenarios.split(",")
     m, ticks = args.grid_nodes, args.grid_ticks
     topo = default_topology(m, rules, byz, seed=0)
     grid = ExperimentGrid(topo, rules, attacks, byz, seeds, scenarios=scenarios,
-                          lam=1.0, t0=30.0)
+                          codecs=codecs, lam=1.0, t0=30.0)
     done = results_lib.existing_tags(args.out)
     pending = [c for c in grid.cells() if c.tag not in done]
     print(f"{grid.num_cells} grid cells ({len(done & {c.tag for c in grid.cells()})} cached) "
@@ -181,7 +183,7 @@ def run_grid_mode(args) -> None:
         "cells_per_sec": len(pending) / wall, "us_per_cell": wall / len(pending) * 1e6,
         "trace_count": engine.trace_count, "chunk": args.grid_chunk,
         "rules": engine.rule_bank, "attacks": engine.attack_bank,
-        "scenarios": engine.scenario_bank,
+        "scenarios": engine.scenario_bank, "codecs": engine.codec_bank,
     })
     # per-cell honest test accuracy (the paper's metric), evaluated host-side
     xt, yt = jnp.asarray(xt), jnp.asarray(yt)
@@ -229,6 +231,9 @@ def main(argv=None):
     # --mode grid knobs (batched engine on the MNIST-like linear task)
     ap.add_argument("--byz", default="1", help="comma-separated Byzantine counts (grid mode)")
     ap.add_argument("--seeds", default="0", help="comma-separated seeds (grid mode)")
+    ap.add_argument("--codecs", default="identity",
+                    help="comma-separated wire codecs (repro.comm) — a grid "
+                         "axis like rules/attacks (grid mode)")
     ap.add_argument("--grid-nodes", type=int, default=12)
     ap.add_argument("--grid-ticks", type=int, default=60)
     ap.add_argument("--grid-batch", type=int, default=32)

@@ -31,11 +31,13 @@ from repro.models import api as model_api
 
 def build_trainer(args, topo, grad_fn):
     """BridgeTrainer (synchronous) or AsyncBridgeTrainer (--net scenarios)."""
-    use_net = args.net or args.attack not in ATTACKS
+    from repro.core.byzantine import WIRE_ATTACKS
+
+    use_net = args.net or (args.attack not in ATTACKS and args.attack not in WIRE_ATTACKS)
     if not use_net:
         bcfg = BridgeConfig(
             topology=topo, rule=args.rule, num_byzantine=args.byzantine,
-            attack=args.attack, lam=args.lam, t0=args.t0, lr=args.lr,
+            attack=args.attack, codec=args.codec, lam=args.lam, t0=args.t0, lr=args.lr,
         )
         return BridgeTrainer(bcfg, grad_fn)
     from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
@@ -49,7 +51,7 @@ def build_trainer(args, topo, grad_fn):
     )
     acfg = AsyncBridgeConfig(
         topology=topo, rule=args.rule, num_byzantine=args.byzantine,
-        attack=args.attack, lam=args.lam, t0=args.t0, lr=args.lr,
+        attack=args.attack, codec=args.codec, lam=args.lam, t0=args.t0, lr=args.lr,
         channel=channel, staleness_bound=args.net_staleness,
         schedule=scenario_schedule(args.net_schedule, topo, args.steps,
                                    seed=args.seed, churn_prob=args.net_churn_prob),
@@ -65,6 +67,9 @@ def main(argv=None):
     ap.add_argument("--byzantine", type=int, default=1)
     ap.add_argument("--attack", default="none")
     ap.add_argument("--rule", default="trimmed_mean")
+    ap.add_argument("--codec", default="identity",
+                    help="wire codec (repro.comm): identity, int8, int4, "
+                         "topk<P>[_int8|_int4], randk<P>[_int8|_int4]")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=4, help="per-node batch")
     ap.add_argument("--seq", type=int, default=128)
@@ -132,6 +137,8 @@ def main(argv=None):
             if "delivered_frac" in metrics:
                 net = (f"  delivered {float(metrics['delivered_frac']):.2f}"
                        f"  stale {float(metrics['mean_staleness']):.1f}")
+            if args.codec != "identity" and "wire_bits_per_edge" in metrics:
+                net += f"  wire {float(metrics['wire_bits_per_edge'])/8:.0f}B/edge"
             print(
                 f"step {step+1:5d}  loss {float(metrics['loss']):.4f}  "
                 f"consensus {float(metrics['consensus_dist']):.4f}  "

@@ -26,15 +26,24 @@ class ChannelConfig:
     ``latency_min``/``latency_max``: message delay in ticks, sampled uniformly
     from the inclusive integer range (0 means delivery the same tick it was
     sent, i.e. the synchronous ideal).
-    ``bandwidth_cap``: if set, only the first ``bandwidth_cap`` coordinates of
-    a payload are transmitted; the receiver substitutes its own current value
-    for the untransmitted tail at screening time (partial-update semantics).
+    ``bandwidth_cap``: if set, only ``bandwidth_cap`` coordinates of a payload
+    are transmitted — a subset resampled from the per-tick PRNG, so no
+    coordinate is systematically starved; the in-flight payload backfills the
+    untransmitted rest with the receiver's iterate as of the send tick
+    (partial-update semantics, fixed when the message leaves the sender).
+    ``bits_per_tick``: if set, the link's serialization capacity — a message
+    of ``wire_bits`` (the `repro.comm` codec's exact bits-on-wire) occupies
+    the link for ``ceil(wire_bits / bits_per_tick)`` ticks, the excess over
+    one tick added to the sampled propagation latency.  This is what makes
+    compression *visible* to the simulated clock: an int8/top-k codeword
+    clears a narrowband link ticks earlier than the float32 payload.
     """
 
     drop_prob: float = 0.0
     latency_min: int = 0
     latency_max: int = 0
     bandwidth_cap: int | None = None
+    bits_per_tick: int | None = None
 
     def __post_init__(self):
         if not 0.0 <= self.drop_prob <= 1.0:
@@ -46,6 +55,8 @@ class ChannelConfig:
             )
         if self.bandwidth_cap is not None and self.bandwidth_cap < 1:
             raise ValueError(f"bandwidth_cap must be >= 1, got {self.bandwidth_cap}")
+        if self.bits_per_tick is not None and self.bits_per_tick < 1:
+            raise ValueError(f"bits_per_tick must be >= 1, got {self.bits_per_tick}")
 
     @classmethod
     def ideal(cls) -> "ChannelConfig":
@@ -59,11 +70,29 @@ class ChannelConfig:
             self.drop_prob == 0.0
             and self.latency_max == 0
             and self.bandwidth_cap is None
+            and self.bits_per_tick is None
         )
 
     @property
     def max_latency(self) -> int:
         return self.latency_max
+
+    def serial_ticks(self, wire_bits):
+        """EXTRA delay ticks a ``wire_bits``-bit message spends serializing
+        onto the link (0 when uncapped or it fits in one tick).  ``wire_bits``
+        may be a traced int32 (grid cells select codecs as data)."""
+        if self.bits_per_tick is None or wire_bits is None:
+            return 0
+        if isinstance(wire_bits, int):
+            return max((wire_bits + self.bits_per_tick - 1) // self.bits_per_tick - 1, 0)
+        bpt = jnp.int32(self.bits_per_tick)
+        return jnp.maximum((jnp.asarray(wire_bits, jnp.int32) + bpt - 1) // bpt - 1, 0)
+
+    def max_total_latency(self, max_wire_bits: int | None) -> int:
+        """Worst-case delivery delay — propagation plus serialization of the
+        largest codeword the run can emit.  Sizes the mailbox ring."""
+        wb = 0 if max_wire_bits is None else int(max_wire_bits)
+        return self.latency_max + int(self.serial_ticks(wb) or 0)
 
     def sample(self, key: jax.Array, num_nodes: int) -> tuple[jax.Array, jax.Array]:
         """Draw one tick of channel events: ``(delay [M,M] int32, drop [M,M]
@@ -83,8 +112,21 @@ class ChannelConfig:
             drop = jnp.zeros((num_nodes, num_nodes), bool)
         return delay, drop
 
-    def coord_mask(self, d: int) -> jax.Array | None:
-        """[d] bool marking transmitted coordinates, or None when uncapped."""
+    def coord_mask(self, key: jax.Array, d: int) -> jax.Array | None:
+        """[d] bool marking this tick's transmitted coordinates (exactly
+        ``bandwidth_cap`` of them), or None when uncapped.
+
+        The surviving subset is sampled fresh from the per-tick PRNG.  The
+        previous implementation masked the *first* ``bandwidth_cap``
+        coordinates every tick — a deterministic prefix that silently biased
+        learning toward low-index coordinates (high-index ones never traveled
+        and were permanently backfilled with the receiver's own value);
+        ``tests/test_comm.py`` keeps the regression pinned.
+
+        Implementation note: top-k over per-coordinate uniforms is a uniform
+        k-subset draw, and ``lax.top_k``'s partial selection beats the full
+        sort a ``random.permutation`` pays per tick at large d."""
         if self.bandwidth_cap is None or self.bandwidth_cap >= d:
             return None
-        return jnp.arange(d) < self.bandwidth_cap
+        _, idx = jax.lax.top_k(jax.random.uniform(key, (d,)), self.bandwidth_cap)
+        return jnp.zeros((d,), bool).at[idx].set(True)

@@ -58,12 +58,12 @@ class SynchronousRuntime:
     def adjacency_at(self, t: jax.Array) -> jax.Array:
         return self._schedule[t % self.num_ticks]
 
-    def init(self, num_nodes: int, dim: int):
-        del num_nodes, dim
+    def init(self, num_nodes: int, dim: int, max_wire_bits: int | None = None):
+        del num_nodes, dim, max_wire_bits
         return None
 
-    def exchange(self, net_state, msgs, self_vals, adjacency, key, t):
-        del self_vals, key, t
+    def exchange(self, net_state, msgs, self_vals, adjacency, key, t, *, wire_bits=None):
+        del self_vals, key, t, wire_bits
         m = adjacency.shape[0]
         links = jnp.sum(adjacency).astype(jnp.float32) / max(m, 1)
         stats = {
@@ -82,8 +82,8 @@ class UnreliableRuntime:
     surviving messages into the in-flight ring, (3) deliver everything whose
     arrival tick is now, (4) expose mailbox contents no staler than
     ``staleness_bound`` ticks (sender-side timestamps) as the screening views.
-    Untransmitted coordinates under a bandwidth cap are backfilled with the
-    receiver's own iterate.
+    Untransmitted coordinates under a bandwidth cap are backfilled, at send
+    time, with the receiver's iterate of the send tick.
     """
 
     def __init__(
@@ -106,25 +106,45 @@ class UnreliableRuntime:
     def adjacency_at(self, t: jax.Array) -> jax.Array:
         return self._schedule[t % self.num_ticks]
 
-    def init(self, num_nodes: int, dim: int) -> mb.MailboxState:
+    def init(self, num_nodes: int, dim: int, max_wire_bits: int | None = None) -> mb.MailboxState:
         if num_nodes != self._schedule.shape[1]:
             raise ValueError(
                 f"runtime schedule is for {self._schedule.shape[1]} nodes, "
                 f"trainer has {num_nodes}"
             )
-        return mb.init_mailbox(num_nodes, dim, self.channel.max_latency)
+        # ring sized for the worst case: propagation latency plus the
+        # serialization ticks of the largest codeword the run can emit
+        # (32*dim — a raw float32 payload — when no codec bound is given)
+        if max_wire_bits is None:
+            max_wire_bits = 32 * dim
+        return mb.init_mailbox(num_nodes, dim, self.channel.max_total_latency(max_wire_bits))
 
-    def exchange(self, net_state, msgs, self_vals, adjacency, key, t):
+    def exchange(self, net_state, msgs, self_vals, adjacency, key, t, *, wire_bits=None):
         m = adjacency.shape[0]
+        # the coord-subset stream splits off only when a cap is set, so
+        # uncapped channels keep their historical drop/latency traces
+        if self.channel.bandwidth_cap is not None:
+            key, k_coord = jax.random.split(key)
+        else:
+            k_coord = key
         delay, drop = self.channel.sample(key, m)
+        # serialization: a wire_bits-bit codeword occupies the link for
+        # ceil(wire_bits / bits_per_tick) ticks; compression buys ticks back
+        delay = delay + self.channel.serial_ticks(wire_bits)
         send_mask = adjacency & ~drop
+        # the bandwidth cap bites at SEND time: the in-flight payload carries
+        # this tick's transmitted subset, untransmitted coordinates backfilled
+        # with the receiver's iterate as of the send tick.  Masking at read
+        # time instead would re-draw the subset per tick and let a stale
+        # mailbox entry leak almost every coordinate of a message of which
+        # only `cap` per tick ever crossed the wire.
+        cm = self.channel.coord_mask(k_coord, msgs.shape[-1])
+        if cm is not None:
+            msgs = jnp.where(cm[None, None, :], msgs, self_vals[:, None, :])
         net_state = mb.push(net_state, msgs, send_mask, delay, t)
         net_state, arrived = mb.deliver(net_state, t)
         mask = mb.usable_mask(net_state, t, self.staleness_bound)
         views = net_state.values
-        cm = self.channel.coord_mask(views.shape[-1])
-        if cm is not None:
-            views = jnp.where(cm[None, None, :], views, self_vals[:, None, :])
         n_edges = jnp.maximum(jnp.sum(adjacency), 1)
         n_usable = jnp.maximum(jnp.sum(mask), 1)
         stats = {

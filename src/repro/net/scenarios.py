@@ -37,6 +37,10 @@ NET_SCENARIOS: dict[str, NetScenario] = {
         NetScenario("laggy", ChannelConfig(latency_max=3)),
         NetScenario("lossy_laggy", ChannelConfig(drop_prob=0.2, latency_max=3)),
         NetScenario("bandwidth64", ChannelConfig(bandwidth_cap=64)),
+        # serialization-limited link: latency is charged from the codec's
+        # exact wire_bits — a float32 payload of d ~ 8k coords spends extra
+        # ticks on the wire that int8/top-k codewords do not
+        NetScenario("narrowband64k", ChannelConfig(bits_per_tick=1 << 16)),
         NetScenario("churn", schedule_kind="churn"),
         NetScenario("partition", schedule_kind="partition"),
     )

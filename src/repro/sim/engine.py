@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm import codec_bank as resolve_codec_bank
+from repro.comm import exchange as comm_lib
 from repro.core import byzantine as byz_lib
 from repro.core.bridge import (
     BridgeState,
@@ -84,11 +86,10 @@ class GridNetRuntime:
         if not scenarios:
             raise ValueError("GridNetRuntime needs at least one scenario")
         self.scenario_names = tuple(scenarios)
-        specs = [get_scenario(n) for n in self.scenario_names]
+        self._specs = [get_scenario(n) for n in self.scenario_names]
         self.num_ticks = int(num_ticks)
-        self._L = 1 + max(s.channel.max_latency for s in specs)
         scheds, runtimes = [], []
-        for s in specs:
+        for s in self._specs:
             sched = build_schedule(s, topology, self.num_ticks, seed=seed)
             scheds.append(sched)
             runtimes.append(
@@ -105,20 +106,31 @@ class GridNetRuntime:
     def adjacency_at(self, t: jax.Array, cell: CellParams) -> jax.Array:
         return self._schedules[cell.scenario_idx, t % self.num_ticks]
 
-    def init(self, num_nodes: int, dim: int):
+    def init(self, num_nodes: int, dim: int, max_wire_bits: int | None = None):
         from repro.net import mailbox as mb
 
-        return mb.init_mailbox(num_nodes, dim, self._L - 1)
+        # shared ring sized for the slowest scenario's worst case: propagation
+        # latency plus serialization of the largest codeword in the codec bank
+        # (ring semantics are capacity-invariant, so smaller-latency cells
+        # stay bit-identical to their dedicated runtimes)
+        if max_wire_bits is None:
+            max_wire_bits = 32 * dim
+        ring = max(s.channel.max_total_latency(max_wire_bits) for s in self._specs)
+        return mb.init_mailbox(num_nodes, dim, ring)
 
-    def exchange(self, net_state, msgs, self_vals, adjacency, key, t, cell: CellParams):
+    def exchange(self, net_state, msgs, self_vals, adjacency, key, t, cell: CellParams,
+                 *, wire_bits=None):
         if len(self._runtimes) == 1:
-            return self._runtimes[0].exchange(net_state, msgs, self_vals, adjacency, key, t)
+            return self._runtimes[0].exchange(
+                net_state, msgs, self_vals, adjacency, key, t, wire_bits=wire_bits)
         branches = [
-            (lambda rt: lambda ns, ms, sv, adj, k, tt: rt.exchange(ns, ms, sv, adj, k, tt))(rt)
+            (lambda rt: lambda ns, ms, sv, adj, k, tt, wb: rt.exchange(
+                ns, ms, sv, adj, k, tt, wire_bits=wb))(rt)
             for rt in self._runtimes
         ]
+        wb = jnp.zeros((), jnp.int32) if wire_bits is None else jnp.asarray(wire_bits, jnp.int32)
         return jax.lax.switch(
-            cell.scenario_idx, branches, net_state, msgs, self_vals, adjacency, key, t
+            cell.scenario_idx, branches, net_state, msgs, self_vals, adjacency, key, t, wb
         )
 
 
@@ -132,10 +144,13 @@ class GridEngine:
     from the scanned batches.
 
     ``group=True`` (default) statically unrolls one vmapped sub-scan per
-    distinct (rule, attack) inside the compiled program, eliminating the
-    compute-every-branch cost of the banked switches for product grids;
-    ``group=False`` forces the fully banked single-scan path (same results —
-    asserted bit-for-bit by the tests).
+    distinct (rule, attack, codec) inside the compiled program, eliminating
+    the compute-every-branch cost of the banked switches for product grids;
+    ``group=False`` forces the fully banked single-scan path (bit-for-bit
+    equal for every cell whose codec is lossless; lossy codecs inside a
+    *multi-codec* bank may differ from their grouped twin by ~1 ULP/step —
+    XLA's FMA contraction of the dequantize multiply is program-shape
+    dependent — and are asserted allclose by the tests).
     """
 
     def __init__(
@@ -165,6 +180,7 @@ class GridEngine:
         self.rule_bank = _dedup(c.rule for c in self.cells)
         self.attack_bank = _dedup(c.attack for c in self.cells)
         self.scenario_bank = _dedup(s for s in scen if s is not None)
+        self.codec_bank = _dedup(c.codec for c in self.cells)
         e = len(self.cells)
         self.byz_masks = np.stack(
             [grid_lib.pick_byz_mask(m, c, grid.byzantine_seed) for c in self.cells]
@@ -181,6 +197,9 @@ class GridEngine:
                 [self.scenario_bank.index(c.scenario) if c.scenario else 0 for c in self.cells],
                 jnp.int32,
             ),
+            codec_idx=jnp.asarray(
+                [self.codec_bank.index(c.codec) for c in self.cells], jnp.int32
+            ),
         )
         if self.net_mode:
             if num_ticks is None:
@@ -195,10 +214,11 @@ class GridEngine:
         # Execution order: group-major (stable), identity when group=False.
         # Results are always returned in the caller's cell order via _inv.
         if group:
-            gkey = [(self.rule_bank.index(c.rule), self.attack_bank.index(c.attack))
+            gkey = [(self.rule_bank.index(c.rule), self.attack_bank.index(c.attack),
+                     self.codec_bank.index(c.codec))
                     for c in self.cells]
         else:
-            gkey = [(0, 0)] * e
+            gkey = [(0, 0, 0)] * e
         self._perm = np.asarray(sorted(range(e), key=lambda i: gkey[i]), np.int64)
         self._inv = np.argsort(self._perm)
         # group boundaries (over the permuted order) + one step per group
@@ -209,10 +229,12 @@ class GridEngine:
             if i == e or gkey[self._perm[i]] != gkey[self._perm[lo]]:
                 head = self.cells[self._perm[lo]]
                 if group:
-                    rules, attacks = (head.rule,), (head.attack,)
+                    rules, attacks, codecs = (head.rule,), (head.attack,), (head.codec,)
                 else:
-                    rules, attacks = tuple(self.rule_bank), tuple(self.attack_bank)
-                self._vsteps.append(jax.vmap(self._build_step(rules, attacks), in_axes=(0, 0, None)))
+                    rules, attacks, codecs = (tuple(self.rule_bank), tuple(self.attack_bank),
+                                              tuple(self.codec_bank))
+                self._vsteps.append(
+                    jax.vmap(self._build_step(rules, attacks, codecs), in_axes=(0, 0, None)))
                 self._bounds.append((lo, i))
                 lo = i
         self._cell_perm = jax.tree_util.tree_map(lambda x: x[self._perm], self._cell_stack)
@@ -236,14 +258,18 @@ class GridEngine:
         self._scan_all = jax.jit(scan_all)
         self._group_scans: dict[int, Callable] = {}
 
-    def _build_step(self, rules: tuple[str, ...], attacks: tuple[str, ...]):
+    def _build_step(self, rules: tuple[str, ...], attacks: tuple[str, ...],
+                    codecs: tuple[str, ...]):
+        wire_bank = byz_lib.wire_attack_bank(attacks)
         if self.net_mode:
             return build_cell_runtime_step(
                 self._grad_fn, self.runtime, rules, byz_lib.message_attack_bank(attacks),
+                codecs=codecs, wire_attacks=wire_bank,
                 screen_chunk=self._screen_chunk,
             )
         return build_cell_step(
             self._grad_fn, self._adjacency, rules, byz_lib.attack_bank(attacks),
+            codecs=codecs, wire_attacks=wire_bank,
             screen_chunk=self._screen_chunk,
         )
 
@@ -279,14 +305,22 @@ class GridEngine:
         )
         keys = jnp.stack([jax.random.PRNGKey(c.seed) for c in self.cells])
         t = jnp.zeros((len(self.cells),), jnp.int32)
+        e = len(self.cells)
+        w, _ = stack_flatten(params[0])
+        dim = w.shape[1]
+        bank = resolve_codec_bank(tuple(self.codec_bank))
         net = None
         if self.runtime is not None:
-            w, _ = stack_flatten(params[0])
-            one = self.runtime.init(m, w.shape[1])
+            one = self.runtime.init(m, dim, max_wire_bits=comm_lib.max_wire_bits(bank, dim))
             net = jax.tree_util.tree_map(
-                lambda leaf: jnp.broadcast_to(leaf[None], (len(self.cells),) + leaf.shape), one
+                lambda leaf: jnp.broadcast_to(leaf[None], (e,) + leaf.shape), one
             )
-        return BridgeState(params=stacked, t=t, key=keys, net=net)
+        # error-feedback carry: present engine-wide iff any codec in the bank
+        # is lossy (state pytrees must be uniform across groups); per-link on
+        # the net path, per-sender on the broadcast path
+        shape = (e, m, m, dim) if self.runtime is not None else (e, m, dim)
+        comm = comm_lib.init_residual(shape, bank)
+        return BridgeState(params=stacked, t=t, key=keys, net=net, comm=comm)
 
     def run(self, state: BridgeState, batches, *, chunk: int | None = None):
         """Scan all cells over ``batches`` (a pytree of ``[T, ...]`` arrays,

@@ -25,7 +25,8 @@ class Cell(NamedTuple):
     """One experiment: a single point of the grid's cross product.
 
     ``scenario`` is ``None`` for the synchronous broadcast path, or a
-    `repro.net.scenarios` name for the unreliable-network path.
+    `repro.net.scenarios` name for the unreliable-network path.  ``codec``
+    names the wire format (`repro.comm`) neighbor exchange travels in.
     """
 
     rule: str
@@ -33,12 +34,16 @@ class Cell(NamedTuple):
     b: int
     seed: int
     scenario: str | None = None
+    codec: str = "identity"
 
     @property
     def tag(self) -> str:
-        """Stable result-store key (file stem) for this cell."""
+        """Stable result-store key (file stem) for this cell.  Identity-codec
+        tags match the pre-codec layout, so existing stores stay resumable."""
         base = f"{self.rule}_{self.attack}_b{self.b}_s{self.seed}"
-        return f"{base}_{self.scenario}" if self.scenario else base
+        if self.scenario:
+            base = f"{base}_{self.scenario}"
+        return f"{base}_{self.codec}" if self.codec != "identity" else base
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,13 +63,14 @@ class ExperimentGrid:
     byzantine_counts: Sequence[int] = (1,)
     seeds: Sequence[int] = (0,)
     scenarios: Sequence[str] | None = None
+    codecs: Sequence[str] = ("identity",)
     lam: float = 1.0
     t0: float = 50.0
     lr: float = 0.0
     byzantine_seed: int = 0
 
     def __post_init__(self):
-        for axis in ("rules", "attacks", "byzantine_counts", "seeds", "scenarios"):
+        for axis in ("rules", "attacks", "byzantine_counts", "seeds", "scenarios", "codecs"):
             vals = getattr(self, axis)
             if vals is not None and len(vals) != len(set(vals)):
                 raise ValueError(f"duplicate entries on grid axis {axis}: {vals}")
@@ -75,6 +81,10 @@ class ExperimentGrid:
                 byz_lib.get_attack(attack)  # raises for message-only attacks
             else:
                 byz_lib.get_message_attack(attack)
+        from repro.comm import get_codec
+
+        for codec in self.codecs:
+            get_codec(codec)
         if self.scenarios is not None:
             from repro.net.scenarios import get_scenario
 
@@ -92,15 +102,17 @@ class ExperimentGrid:
     @property
     def num_cells(self) -> int:
         s = len(self.scenarios) if self.scenarios else 1
-        return len(self.rules) * len(self.attacks) * len(self.byzantine_counts) * len(self.seeds) * s
+        return (len(self.rules) * len(self.attacks) * len(self.byzantine_counts)
+                * len(self.seeds) * s * len(self.codecs))
 
     def cells(self) -> list[Cell]:
         """Rule-major expansion of the cross product."""
         scen = self.scenarios if self.scenarios is not None else (None,)
         return [
-            Cell(r, a, b, s, sc)
-            for r, a, b, s, sc in itertools.product(
-                self.rules, self.attacks, self.byzantine_counts, self.seeds, scen
+            Cell(r, a, b, s, sc, cd)
+            for r, a, b, s, sc, cd in itertools.product(
+                self.rules, self.attacks, self.byzantine_counts, self.seeds, scen,
+                self.codecs,
             )
         ]
 

@@ -22,8 +22,9 @@ import numpy as np
 from repro.sim.grid import Cell
 
 # Per-tick metric streams summarized into cell records: (key, reducer).
-_FINAL_KEYS = ("loss", "consensus_dist")
-_MEAN_KEYS = ("delivered_frac", "mean_staleness", "screened_frac", "usable_in")
+_FINAL_KEYS = ("loss", "consensus_dist", "ef_residual_norm")
+_MEAN_KEYS = ("delivered_frac", "mean_staleness", "screened_frac", "usable_in",
+              "wire_bits_per_edge", "wire_bytes_total")
 
 
 def collect(cells: Sequence[Cell], metrics: dict, *, meta: dict | None = None) -> "GridResult":
@@ -33,7 +34,7 @@ def collect(cells: Sequence[Cell], metrics: dict, *, meta: dict | None = None) -
     for i, c in enumerate(cells):
         rec = {
             "rule": c.rule, "attack": c.attack, "b": int(c.b), "seed": int(c.seed),
-            "scenario": c.scenario,
+            "scenario": c.scenario, "codec": c.codec,
         }
         for k in _FINAL_KEYS:
             if k in host:
@@ -48,7 +49,7 @@ def collect(cells: Sequence[Cell], metrics: dict, *, meta: dict | None = None) -
 def cell_of(record: dict) -> Cell:
     """The grid `Cell` a record describes (tag round-trips through this)."""
     return Cell(record["rule"], record["attack"], int(record["b"]), int(record["seed"]),
-                record.get("scenario"))
+                record.get("scenario"), record.get("codec", "identity"))
 
 
 @dataclasses.dataclass

@@ -5,6 +5,8 @@ import sys
 # smoke tests and benches must see 1 device.  Multi-device tests spawn
 # subprocesses that set XLA_FLAGS before importing jax.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# repo root, so tests can exercise the benchmarks tooling (check_regression)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import numpy as np
 import pytest

@@ -113,6 +113,9 @@ def test_mailbox_out_of_order_keeps_newest():
 
 
 def test_bandwidth_cap_backfills_self(topo):
+    """Exactly `cap` coordinates travel each tick — a PRNG-sampled subset
+    (NOT the old deterministic prefix; see tests/test_comm.py for the bias
+    regression) — and the receiver backfills the rest with its own value."""
     ch = ChannelConfig(bandwidth_cap=2)
     rt = UnreliableRuntime(topo, ch, staleness_bound=5)
     m = topo.num_nodes
@@ -121,12 +124,21 @@ def test_bandwidth_cap_backfills_self(topo):
     w = jnp.asarray(rng.normal(size=(m, D)), jnp.float32)
     msgs = jnp.broadcast_to(w[None], (m, m, D))
     adj = jnp.asarray(topo.adjacency)
-    net, views, mask, _ = rt.exchange(net, msgs, w, adj, jax.random.PRNGKey(0), jnp.int32(0))
-    views = np.asarray(views)
-    # transmitted prefix is the sender's value, untransmitted tail the receiver's
-    j, i = map(int, np.argwhere(np.asarray(adj))[0])
-    np.testing.assert_allclose(views[j, i, :2], np.asarray(w)[i, :2])
-    np.testing.assert_allclose(views[j, i, 2:], np.asarray(w)[j, 2:])
+    seen = np.zeros(D, bool)
+    for t in range(8):
+        net, views, mask, _ = rt.exchange(
+            net, msgs, w, adj, jax.random.PRNGKey(t), jnp.int32(t))
+        views = np.asarray(views)
+        j, i = map(int, np.argwhere(np.asarray(adj))[0])
+        sent = np.isclose(views[j, i], np.asarray(w)[i])
+        backfilled = np.isclose(views[j, i], np.asarray(w)[j])
+        assert (sent | backfilled).all()  # every coord is sender's or self
+        # mailbox entries persist across ticks, so the sender's value covers
+        # at least this tick's 2 transmitted coords (monotone coverage)
+        seen |= sent
+    # different ticks transmit different subsets — coverage exceeds any
+    # single tick's cap (the deterministic prefix mask could never do this)
+    assert seen.sum() > 2
 
 
 # ---------------------------------------------------------------------------
