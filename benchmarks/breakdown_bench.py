@@ -1,0 +1,142 @@
+"""Breakdown-certification benchmark: certified b* per screening rule under
+static AND adaptive adversaries, on the MNIST-like linear task with the
+extreme non-iid partition (consensus is *required* for honest test accuracy
+— exactly what adaptive adversaries break).
+
+Emits ``BENCH_breakdown.json`` for the CI artifact + regression gate:
+
+* per (rule, adversary): the monotone-certified breakdown point b* and the
+  full probe ladder (honest loss + honest test accuracy per b) — the
+  ``fig_breakdown`` curve data;
+* acceptance booleans: every rule has a monotone-certified b*, and at least
+  one adaptive adversary (inner-maximization / IPM family) achieves strictly
+  worse honest test error than the best static attack at equal b — the
+  red-team subsystem's reason to exist.  The bench FAILS if that inversion
+  disappears (mirroring grid_bench's divergence gate);
+* wall-time metrics (``wall_s``, ``cells_per_sec``) for
+  ``benchmarks.check_regression``.
+
+    PYTHONPATH=src python -m benchmarks.breakdown_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.adversary.breakdown import BreakdownConfig, BreakdownEngine
+from repro.sim import default_topology
+from repro.sim.tasks import linear_task
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_breakdown.json")
+
+STATIC = ("random", "alie")
+ADAPTIVE = ("ipm", "inner_max")
+
+
+def run_certification(num_nodes=10, ticks=60, *, rules=("trimmed_mean", "median"),
+                      adversaries=STATIC + ADAPTIVE, b_max=3, seeds=(0,),
+                      mode="ladder", score_drop=0.25, loss_ratio=50.0):
+    """Certify b* for every (rule, adversary) pair; returns the result dict
+    (probe ladders carry honest loss and honest test accuracy per b).
+
+    Breakdown on this task is an *accuracy* event (honest nodes retreat to
+    their local shards — local loss can stay small while the global model is
+    gone), so the primary detector is the test-accuracy drop; the loss-ratio
+    detector is set high to catch outright blowups only.
+    """
+    # same data sizes as benchmarks.common.get_data (the other paper benches)
+    task = linear_task(num_nodes, ticks, num_train=4000, num_test=800, seed=0)
+    # the shared topology must admit the whole probed ladder, not just b=1
+    topo = default_topology(num_nodes, rules, (max(b_max, 1),), seed=0)
+    engine = BreakdownEngine(
+        topo, rules, adversaries, task.grad_fn, task.init_fn, task.batches,
+        lam=1.0, t0=30.0,
+        config=BreakdownConfig(mode=mode, seeds=seeds, b_max=b_max,
+                               loss_ratio=loss_ratio, score_drop=score_drop),
+        eval_fn=task.eval_accuracy)
+    result = engine.run()
+    result["meta"]["num_nodes"] = num_nodes
+    result["meta"]["ticks"] = ticks
+    return result
+
+
+def _acceptance(result: dict, b_eq: int) -> dict:
+    """The two acceptance booleans (see module docstring)."""
+    monotone = all("bstar_worst_adversary" in rrec and all(
+        arec.get("certified_monotone") for arec in rrec["adversaries"].values())
+        for rrec in result["rules"].values())
+    inversion = {}
+    for rule, rrec in result["rules"].items():
+        advs = rrec["adversaries"]
+
+        def err_at(names):
+            errs = []
+            for n in names:
+                probe = advs.get(n, {}).get("probes", {}).get(str(b_eq))
+                if probe is not None and "score" in probe:
+                    errs.append(1.0 - probe["score"])
+            return errs
+
+        static_err, adaptive_err = err_at(STATIC), err_at(ADAPTIVE)
+        if static_err and adaptive_err:
+            inversion[rule] = {
+                "b": b_eq,
+                "best_static_error": max(static_err),
+                "best_adaptive_error": max(adaptive_err),
+                "adaptive_strictly_worse_for_honest":
+                    max(adaptive_err) > max(static_err),
+            }
+    return {
+        "all_rules_certified_monotone": bool(monotone),
+        # None when no rule has both tiers probed at b_eq (bisect mode may
+        # legitimately skip it) — the gate only bites on real comparisons
+        "adaptive_beats_static_somewhere": any(
+            rec["adaptive_strictly_worse_for_honest"] for rec in inversion.values())
+        if inversion else None,
+        "per_rule": inversion,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced run (fewer ticks) for quick local checks")
+    ap.add_argument("--nodes", type=int, default=10)
+    ap.add_argument("--ticks", type=int, default=60)
+    ap.add_argument("--b-max", type=int, default=3)
+    ap.add_argument("--mode", default="ladder", choices=["ladder", "bisect"])
+    args = ap.parse_args(argv)
+    ticks = 30 if args.smoke else args.ticks
+
+    result = run_certification(args.nodes, ticks, b_max=args.b_max, mode=args.mode)
+    result["acceptance"] = _acceptance(result, b_eq=min(2, args.b_max))
+    with open(BENCH_JSON, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+
+    print("name,us_per_call,derived")
+    meta = result["meta"]
+    for rule, rrec in result["rules"].items():
+        stars = ";".join(f"{a}=b{arec['bstar']}"
+                         for a, arec in rrec["adversaries"].items())
+        print(f"breakdown/{rule},{meta['wall_s'] / max(meta['cells_run'], 1) * 1e6:.1f},"
+              f"feasible={rrec['feasible_b']};{stars};"
+              f"worst={rrec['bstar_worst_adversary']}")
+    acc = result["acceptance"]
+    print(f"breakdown/acceptance,0.0,"
+          f"monotone={acc['all_rules_certified_monotone']};"
+          f"adaptive_beats_static={acc['adaptive_beats_static_somewhere']}")
+    if not acc["all_rules_certified_monotone"]:
+        raise RuntimeError("breakdown certification lost monotonicity — see BENCH_breakdown.json")
+    if acc["adaptive_beats_static_somewhere"] is False:
+        raise RuntimeError(
+            "no adaptive adversary beats the best static attack at equal b — "
+            "the red-team harness has regressed; see BENCH_breakdown.json")
+    if acc["adaptive_beats_static_somewhere"] is None:
+        print("[warn] no (rule, b) point had both tiers probed — "
+              "adaptive-vs-static comparison skipped (use --mode ladder)")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,7 +13,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import BridgeConfig, BridgeTrainer, erdos_renyi, replicate
+from repro.core import (
+    BrdsoConfig,
+    BrdsoTrainer,
+    BridgeConfig,
+    BridgeTrainer,
+    ByrdieConfig,
+    ByrdieTrainer,
+    erdos_renyi,
+    replicate,
+)
 from repro.data import make_mnist_like, partition_extreme_noniid, partition_iid, partition_moderate_noniid
 from repro.data.partition import stack_node_batches
 from repro.models import small
@@ -58,6 +67,7 @@ def run_decentralized(
     model: str = "linear",
     rule: str = "trimmed_mean",
     attack: str = "none",
+    adversary: str = "none",
     codec: str = "identity",
     num_nodes: int = 20,
     num_byzantine: int = 0,
@@ -89,7 +99,7 @@ def run_decentralized(
     if topo is None:
         raise RuntimeError(f"no graph for rule={rule}, b={num_byzantine}, M={num_nodes}")
     cfg = BridgeConfig(topology=topo, rule=rule, num_byzantine=num_byzantine,
-                       attack=attack, codec=codec, lam=lam, t0=t0)
+                       attack=attack, adversary=adversary, codec=codec, lam=lam, t0=t0)
     trainer = BridgeTrainer(cfg, make_grad_fn(model))
     key = jax.random.PRNGKey(seed)
     init = small.init_linear(key) if model == "linear" else small.init_cnn(key)
@@ -113,4 +123,60 @@ def run_decentralized(
         "curve": curve,
         "trainer": trainer,
         "state": state,
+    }
+
+
+def _baseline_setup(num_nodes, num_byzantine, partition, seed):
+    """The shared linear task (repro.sim.tasks) at the paper benches' data
+    sizes, plus the ByRDiE/BRDSO baseline topology."""
+    from repro.sim.tasks import linear_task
+
+    task = linear_task(num_nodes, 0, partition=partition,
+                       num_train=4000, num_test=800, seed=seed)
+    topo = erdos_renyi(num_nodes, 0.5, num_byzantine, seed=seed)
+    return topo, task.batch_fn, task.init_fn(seed), task.x_test, task.y_test
+
+
+def run_byrdie(*, num_nodes=20, num_byzantine=2, attack="random", sweeps=2,
+               block=512, partition="iid", t0=30.0, seed=0):
+    """ByRDiE baseline (coordinate descent, [58]) on the linear task — one
+    sweep is d sequential scalar screening rounds; `block` trades gradient
+    recomputation fidelity for wall time (communication accounting is exact
+    either way)."""
+    topo, batch_fn, params, xt, yt = _baseline_setup(num_nodes, num_byzantine, partition, seed)
+    cfg = ByrdieConfig(topology=topo, num_byzantine=num_byzantine, attack=attack,
+                       block=block, t0=t0)
+    tr = ByrdieTrainer(cfg, make_grad_fn("linear"))
+    st = tr.init(params)
+    t_start = time.perf_counter()
+    for i in range(sweeps):
+        bx, by = batch_fn(i)
+        st, m = tr.sweep(st, (jnp.asarray(bx), jnp.asarray(by)))
+    wall = time.perf_counter() - t_start
+    return {
+        "accuracy": eval_accuracy("linear", st.params, ~tr.byz_mask, xt, yt),
+        "loss": float(m["loss"]),
+        "scalars_sent": float(m["scalars_sent"]),
+        "us_per_step": wall / sweeps * 1e6,
+    }
+
+
+def run_brdso(*, num_nodes=20, num_byzantine=2, attack="random", steps=120,
+              partition="iid", lam0=0.05, t0=30.0, seed=0):
+    """BRDSO baseline (TV-penalty subgradient, [60]) on the linear task."""
+    topo, batch_fn, params, xt, yt = _baseline_setup(num_nodes, num_byzantine, partition, seed)
+    cfg = BrdsoConfig(topology=topo, num_byzantine=num_byzantine, attack=attack,
+                      lam0=lam0, t0=t0)
+    tr = BrdsoTrainer(cfg, make_grad_fn("linear"))
+    st = tr.init(params)
+    t_start = time.perf_counter()
+    for i in range(steps):
+        bx, by = batch_fn(i)
+        st, m = tr.step(st, (jnp.asarray(bx), jnp.asarray(by)))
+    wall = time.perf_counter() - t_start
+    return {
+        "accuracy": eval_accuracy("linear", st.params, ~tr.byz_mask, xt, yt),
+        "loss": float(m["loss"]),
+        "consensus": float(m["consensus_dist"]),
+        "us_per_step": wall / steps * 1e6,
     }

@@ -212,6 +212,27 @@ def fig_comm_accuracy_vs_bits(num_nodes=12, ticks=300):
     return rows
 
 
+def fig_breakdown(num_nodes=10, ticks=60, b_max=3):
+    """Breakdown curves (repro.adversary): honest loss / test accuracy vs the
+    actual Byzantine count b, per screening rule, under static AND adaptive
+    adversaries — with the monotone-certified breakdown point b* each pair
+    earns.  The companion figure to fig_comm: where fig_comm trades accuracy
+    against bits, this trades it against adversarial budget.  Runs the same
+    `benchmarks.breakdown_bench` certification the CI gate consumes."""
+    from benchmarks.breakdown_bench import run_certification
+    from repro.adversary.breakdown import breakdown_curve
+
+    result = run_certification(num_nodes=num_nodes, ticks=ticks, b_max=b_max)
+    us = result["meta"]["wall_s"] / max(result["meta"]["cells_run"], 1) * 1e6
+    rows = []
+    for rule, adv, b, loss, score in breakdown_curve(result):
+        bstar = result["rules"][rule]["adversaries"][adv]["bstar"]
+        acc = "" if score is None else f"acc={score:.4f};"
+        rows.append((f"fig_breakdown/{rule}/{adv}/b{b}", us,
+                     f"loss={loss:.4f};{acc}bstar={bstar}"))
+    return rows
+
+
 def table2_screening_cost(d=100_000, n=25, b=2, reps=5):
     """Table II: per-call screening cost — BRIDGE-T/M are O(nd), K/B O(n^2 d)."""
     rng = np.random.default_rng(0)

@@ -40,6 +40,7 @@ def main() -> None:
         "fig67": lambda: paper_figs.fig67_noniid(num_nodes=m),
         "table2": paper_figs.table2_screening_cost,
         "fig_comm": paper_figs.fig_comm_accuracy_vs_bits,
+        "fig_breakdown": paper_figs.fig_breakdown,
         "kernels": kernels_bench.kernel_throughput,
         "net": lambda: net_bench.async_lossy_scenarios(num_nodes=m),
         "grid": grid_bench.grid_throughput,
@@ -50,7 +51,8 @@ def main() -> None:
     else:
         # net/grid/comm/kernels have their own CI jobs + JSON records (and
         # overwrite the repo-root BENCH_*.json); opt in via --only
-        only = set(benches) - {"net", "grid", "comm", "fig_comm", "kernels"}
+        only = set(benches) - {"net", "grid", "comm", "fig_comm",
+                               "fig_breakdown", "kernels"}
     if args.only:
         only = set(args.only.split(","))
     print("name,us_per_call,derived")

@@ -1,14 +1,19 @@
 """Compare all four BRIDGE screening variants (T/M/K/B) under attack —
-reproduces the shape of the paper's Fig. 2 on the synthetic MNIST-like set.
+reproduces the shape of the paper's Fig. 2 on the synthetic MNIST-like set —
+plus the two non-BRIDGE baselines the paper benchmarks against: ByRDiE
+(coordinate descent, Fig. 3) and BRDSO (TV-penalty subgradient, Figs. 6-7).
 
     PYTHONPATH=src python examples/bridge_variants.py [--byzantine 2] [--attack random]
 
-``--codec`` routes every broadcast through a `repro.comm` wire codec and
-prints bytes/edge/step next to accuracy — e.g. ``--codec int4`` sends 4-bit
-stochastic codewords whose delta-tracking + error feedback matches the
-uncompressed run's accuracy at ~1/8 of the bytes:
+``--adversary`` swaps the static attack for a `repro.adversary` adaptive one
+(omniscient, trajectory-tracking — e.g. ``ipm``, ``alie_online``,
+``inner_max``); ``--codec`` routes every broadcast through a `repro.comm`
+wire codec and prints bytes/edge/step next to accuracy:
 
+    PYTHONPATH=src python examples/bridge_variants.py --adversary inner_max
     PYTHONPATH=src python examples/bridge_variants.py --codec int4
+
+``--no-baselines`` skips the (slower) ByRDiE/BRDSO rows.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -21,25 +26,48 @@ ap.add_argument("--byzantine", type=int, default=2)
 ap.add_argument("--attack", default="random",
                 choices=["random", "sign_flip", "same_value", "alie", "shift",
                          "garbage_codeword", "scale_abuse", "index_lie"])
+ap.add_argument("--adversary", default="none",
+                help="adaptive adversary (repro.adversary): ipm, alie_online, "
+                     "dissensus, inner_max; overrides --attack when set")
 ap.add_argument("--codec", default=None,
                 help="wire codec (repro.comm): int8, int4, topk50_int8, ... ; "
                      "when set, each variant runs uncompressed AND compressed")
 ap.add_argument("--nodes", type=int, default=20)
 ap.add_argument("--steps", type=int, default=120)
+ap.add_argument("--no-baselines", action="store_true",
+                help="skip the ByRDiE / BRDSO comparison rows")
 args = ap.parse_args()
 
-from benchmarks.common import run_decentralized
+from benchmarks.common import run_brdso, run_byrdie, run_decentralized
 
+attack = "none" if args.adversary != "none" else args.attack
 codecs = ["identity"] + ([args.codec] if args.codec and args.codec != "identity" else [])
-print(f"{args.nodes} nodes, {args.byzantine} byzantine, attack={args.attack}")
+label_attack = args.adversary if args.adversary != "none" else args.attack
+print(f"{args.nodes} nodes, {args.byzantine} byzantine, attack={label_attack}")
 print(f"{'variant':12s} {'codec':12s} {'accuracy':>9s} {'consensus':>10s} "
       f"{'B/edge/step':>12s} {'ms/step':>8s}")
 for rule, label in [("mean", "DGD"), ("trimmed_mean", "BRIDGE-T"),
                     ("median", "BRIDGE-M"), ("krum", "BRIDGE-K"),
                     ("bulyan", "BRIDGE-B")]:
     for codec in codecs:
-        r = run_decentralized(model="linear", rule=rule, attack=args.attack,
-                              codec=codec, num_nodes=args.nodes,
+        r = run_decentralized(model="linear", rule=rule, attack=attack,
+                              adversary=args.adversary, codec=codec,
+                              num_nodes=args.nodes,
                               num_byzantine=args.byzantine, steps=args.steps)
         print(f"{label:12s} {codec:12s} {r['accuracy']:9.4f} {r['consensus']:10.4f} "
               f"{r['wire_bits_per_edge']/8:12.0f} {r['us_per_step']/1000:8.1f}")
+
+if not args.no_baselines:
+    # the paper's comparison baselines run with the static broadcast attack
+    # (neither protocol takes a repro.adversary bank)
+    base_attack = args.attack if args.attack in ("random", "sign_flip", "same_value",
+                                                 "alie", "shift") else "random"
+    r = run_byrdie(num_nodes=args.nodes, num_byzantine=args.byzantine,
+                   attack=base_attack, sweeps=2)
+    print(f"{'ByRDiE':12s} {'scalar':12s} {r['accuracy']:9.4f} {'-':>10s} "
+          f"{'-':>12s} {r['us_per_step']/1000:8.1f}  "
+          f"(2 sweeps = {int(r['scalars_sent'])} scalar broadcasts/node)")
+    r = run_brdso(num_nodes=args.nodes, num_byzantine=args.byzantine,
+                  attack=base_attack, steps=args.steps)
+    print(f"{'BRDSO':12s} {'identity':12s} {r['accuracy']:9.4f} {r['consensus']:10.4f} "
+          f"{'-':>12s} {r['us_per_step']/1000:8.1f}")

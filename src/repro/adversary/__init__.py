@@ -1,0 +1,46 @@
+"""repro.adversary — adaptive omniscient adversaries + breakdown certification.
+
+The red-team side of BRIDGE as a first-class subsystem:
+
+* `protocols` — the stateful `Adversary` API: an `AdvState` pytree threaded
+  through `BridgeState` and the training scan (running honest statistics,
+  tracked consensus direction), banked via ``lax.switch`` on
+  ``CellParams.adv_idx`` exactly like rules/attacks/codecs.  Static attacks
+  are re-registered as stateless adversaries, so one grid axis covers both.
+* `adaptive` — omniscient attacks that optimize per tick: inner maximization
+  through the differentiable screening step, online-sigma ALIE, IPM, and
+  time-coupled dissensus.
+* `breakdown` — certification engine: binary-search the breakdown point b*
+  per (rule, topology, adversary) with batched probe rounds on the grid
+  engine, emitting ``BENCH_breakdown.json`` (import explicitly:
+  ``from repro.adversary import breakdown`` — it depends on `repro.sim`).
+* `search` — red-team hyperparameter search (random + evolutionary) running
+  proposal populations as grid cells of one compiled program (import
+  explicitly, same reason).
+"""
+from repro.adversary import adaptive as _adaptive  # noqa: F401  (registers)
+from repro.adversary.protocols import (
+    ADVERSARIES,
+    THETA_DIM,
+    Adversary,
+    AdvCtx,
+    AdvState,
+    adversary_bank,
+    apply_adversary_bank,
+    apply_message_adversary_bank,
+    attack_names,
+    bank_engaged,
+    bank_stateful,
+    cell_theta,
+    default_thetas,
+    get_adversary,
+    init_state,
+    registry_tiers,
+)
+
+__all__ = [
+    "ADVERSARIES", "THETA_DIM", "Adversary", "AdvCtx", "AdvState",
+    "adversary_bank", "apply_adversary_bank", "apply_message_adversary_bank",
+    "attack_names", "bank_engaged", "bank_stateful", "cell_theta",
+    "default_thetas", "get_adversary", "init_state", "registry_tiers",
+]

@@ -1,0 +1,252 @@
+"""Breakdown-point certification: the largest b a (rule, topology, adversary)
+triple actually tolerates.
+
+"Achieving Optimal Breakdown for Byzantine Robust Gossip" (Gaucher &
+Dieuleveut, 2024) frames resilience as a *breakdown point* and shows that
+screening-rule rankings invert once the adversary adapts — a rule's Table-II
+degree bound says when screening is *defined*, not when it *works*.  This
+module turns that framing into a certification engine on top of
+`repro.sim.GridEngine`:
+
+* every probe (rule, adversary, b, seed) is one grid cell; a probe *round*
+  runs all pending probes across every (rule, adversary) pair as ONE batched
+  engine call;
+* ``mode="bisect"`` binary-searches b* per pair — ceil(log2(b_max)) rounds,
+  each a fresh compile; ``mode="ladder"`` probes every feasible b in a
+  single compiled run (the right choice at smoke scale, and what the
+  breakdown *curve* figure needs anyway);
+* divergence detection runs on the stacked loss trace: a cell diverges when
+  its trace goes non-finite, its final honest loss exceeds
+  ``loss_ratio x`` the faultless (b=0) reference, or — when a host-side
+  ``eval_fn`` is given (e.g. honest test accuracy, the paper's metric) — its
+  score drops more than ``score_drop`` below the reference;
+* certification is *monotone*: after the search, every b <= b* the bisection
+  skipped is probed too (ladder mode has them already), and b* is lowered to
+  the longest all-surviving prefix — a bisection can otherwise overshoot on
+  a non-monotone fluke.
+
+The result feeds ``BENCH_breakdown.json`` (CI-gated) and the
+``fig_breakdown`` paper figure (loss / score vs b per rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import screening
+from repro.sim import Cell, ExperimentGrid, GridEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class BreakdownConfig:
+    """Knobs of the certification run.
+
+    ``b_max`` caps the searched range (None: whatever the topology's minimum
+    in-degree admits per rule); ``loss_ratio`` is the divergence threshold
+    relative to the faultless reference's final loss; ``score_drop`` (with an
+    ``eval_fn``) flags cells whose host-side score fell that far below the
+    reference; ``seeds`` must all survive for a probe to count as surviving.
+    """
+
+    b_max: int | None = None
+    seeds: tuple[int, ...] = (0,)
+    loss_ratio: float = 4.0
+    score_drop: float | None = None
+    mode: str = "ladder"  # ladder | bisect
+
+
+def feasible_b(rule: str, topology, b_cap: int | None = None) -> int:
+    """The largest b whose Table-II minimum in-degree the topology satisfies
+    (never more than M - 2: at least one honest pair must remain)."""
+    m = topology.num_nodes
+    hi = 0
+    for b in range(1, m - 1):
+        if screening.min_neighbors(rule, b) > topology.min_in_degree:
+            break
+        hi = b
+    return hi if b_cap is None else min(hi, b_cap)
+
+
+class BreakdownEngine:
+    """Certifies b* for every (rule, adversary) pair over one topology.
+
+    ``grad_fn`` / ``init_fn`` / ``batches`` are exactly the `GridEngine`
+    contract (synchronous broadcast path); ``eval_fn(params, honest_mask)``,
+    when given, scores one cell's final ``[M, ...]`` params host-side
+    (higher = better, e.g. honest test accuracy).
+    """
+
+    def __init__(self, topology, rules: Sequence[str], adversaries: Sequence[str],
+                 grad_fn: Callable, init_fn: Callable, batches, *,
+                 lam: float = 1.0, t0: float = 30.0,
+                 config: BreakdownConfig = BreakdownConfig(),
+                 eval_fn: Callable | None = None,
+                 engine_chunk: int | None = None):
+        if "none" in adversaries:
+            raise ValueError("'none' is the reference, not a certifiable adversary")
+        self.topology = topology
+        self.rules = tuple(rules)
+        self.adversaries = tuple(adversaries)
+        self.grad_fn = grad_fn
+        self.init_fn = init_fn
+        self.batches = batches
+        self.lam, self.t0 = lam, t0
+        self.config = config
+        self.eval_fn = eval_fn
+        self.engine_chunk = engine_chunk
+        self.compiles = 0
+        self.cells_run = 0
+        self.feasible = {r: feasible_b(r, topology, config.b_max) for r in self.rules}
+        # probe ledger: (rule, adversary, b) -> record dict
+        self.probes: dict[tuple[str, str, int], dict] = {}
+        self.refs: dict[str, dict] = {}
+
+    # -- one batched probe round ------------------------------------------
+
+    def _grid(self) -> ExperimentGrid:
+        return ExperimentGrid(
+            self.topology, self.rules, ("none",), byzantine_counts=(0,),
+            seeds=self.config.seeds,
+            adversaries=("none",) + self.adversaries,
+            lam=self.lam, t0=self.t0,
+        )
+
+    def _run_round(self, keys: list[tuple[str, str, int]]) -> None:
+        """Run every (rule, adversary, b) probe (x seeds) as one engine call
+        and record per-probe aggregates in the ledger."""
+        keys = [k for k in keys if k not in self.probes]
+        if not keys:
+            return
+        cells = [Cell(rule, "none", b, s, adversary=adv, mask_seed=s)
+                 for (rule, adv, b) in keys for s in self.config.seeds]
+        engine = GridEngine(self._grid(), self.grad_fn, cells=cells)
+        state = engine.init(self.init_fn)
+        final, metrics = engine.run(state, self.batches, chunk=self.engine_chunk)
+        self.compiles += engine.trace_count
+        self.cells_run += len(cells)
+        loss = np.asarray(metrics["loss"], np.float64)  # [E, T]
+        ns = len(self.config.seeds)
+        for j, key in enumerate(keys):
+            rows = slice(j * ns, (j + 1) * ns)
+            rec = {
+                "final_loss": float(np.mean(loss[rows, -1])),
+                "max_final_loss": float(np.max(loss[rows, -1])),
+                "finite": bool(np.isfinite(loss[rows]).all()),
+            }
+            if self.eval_fn is not None:
+                scores = []
+                for i in range(j * ns, (j + 1) * ns):
+                    params_i = jax.tree_util.tree_map(lambda x: x[i], final.params)
+                    scores.append(float(self.eval_fn(params_i, ~engine.byz_masks[i])))
+                rec["score"] = float(np.mean(scores))
+            self.probes[key] = rec
+
+    def _survived(self, rule: str, adv: str, b: int) -> bool:
+        rec = self.probes[(rule, adv, b)]
+        ref = self.refs[rule]
+        ok = rec["finite"] and rec["max_final_loss"] <= (
+            self.config.loss_ratio * max(ref["final_loss"], 1e-9) + 1e-6)
+        if ok and self.eval_fn is not None and self.config.score_drop is not None:
+            ok = rec["score"] >= ref["score"] - self.config.score_drop
+        rec["survived"] = bool(ok)
+        return rec["survived"]
+
+    # -- certification ----------------------------------------------------
+
+    def run(self) -> dict:
+        t_start = time.time()
+        # faultless references (b=0, adversary-free), one per rule
+        self._run_round([(rule, "none", 0) for rule in self.rules])
+        for rule in self.rules:
+            self.refs[rule] = self.probes[(rule, "none", 0)]
+            self.refs[rule]["survived"] = True
+        pairs = [(r, a) for r in self.rules for a in self.adversaries]
+        # the raw search answer per pair, before the prefix certificate;
+        # a certified b* below it means the search overshot on a
+        # non-monotone fluke (reported honestly via certified_monotone)
+        search_bstar: dict[tuple[str, str], int] = {}
+        if self.config.mode == "ladder":
+            self._run_round([(r, a, b) for r, a in pairs
+                             for b in range(1, self.feasible[r] + 1)])
+        elif self.config.mode == "bisect":
+            # batched binary search: one engine round serves every pair's probe
+            lo = {p: 0 for p in pairs}  # largest b known surviving
+            hi = {p: self.feasible[p[0]] + 1 for p in pairs}  # smallest diverging
+            while any(hi[p] - lo[p] > 1 for p in pairs):
+                mids = {p: (lo[p] + hi[p]) // 2 for p in pairs if hi[p] - lo[p] > 1}
+                self._run_round([(r, a, m) for (r, a), m in mids.items()])
+                for p, mid in mids.items():
+                    if self._survived(p[0], p[1], mid):
+                        lo[p] = mid
+                    else:
+                        hi[p] = mid
+            search_bstar = dict(lo)
+            # monotone certificate: probe the skipped prefix below each b*
+            self._run_round([(r, a, b) for (r, a) in pairs
+                             for b in range(1, lo[(r, a)] + 1)])
+        else:
+            raise ValueError(f"unknown breakdown mode {self.config.mode!r}")
+
+        result = {"rules": {}, "meta": {
+            "mode": self.config.mode, "seeds": list(self.config.seeds),
+            "loss_ratio": self.config.loss_ratio,
+            "adversaries": list(self.adversaries),
+        }}
+        for rule in self.rules:
+            rrec = {"feasible_b": self.feasible[rule],
+                    "ref": dict(self.refs[rule]), "adversaries": {}}
+            worst = self.feasible[rule]
+            for adv in self.adversaries:
+                # the FULL probed ladder (failures included — ladder mode has
+                # every b, so downstream equal-b comparisons across tiers
+                # never lose a point to another tier's early break)
+                ladder = {}
+                for b in range(1, self.feasible[rule] + 1):
+                    if (rule, adv, b) in self.probes:
+                        self._survived(rule, adv, b)
+                        ladder[b] = dict(self.probes[(rule, adv, b)])
+                bstar = 0
+                for b in range(1, self.feasible[rule] + 1):
+                    if b not in ladder or not ladder[b]["survived"]:
+                        break
+                    bstar = b
+                # the actual certificate, computed from the ledger: every
+                # b <= b* was probed and survived, AND the prefix walk agrees
+                # with the raw search answer (a bisection that overshot on a
+                # non-monotone fluke reports certified_monotone=False while
+                # b* stays the conservative prefix)
+                certified = all(
+                    b in ladder and ladder[b]["survived"]
+                    for b in range(1, bstar + 1)
+                ) and bstar == search_bstar.get((rule, adv), bstar)
+                rrec["adversaries"][adv] = {
+                    "bstar": bstar,  # the longest all-surviving prefix
+                    "certified_monotone": bool(certified),
+                    "probes": {str(b): rec for b, rec in ladder.items()},
+                }
+                worst = min(worst, bstar)
+            rrec["bstar_worst_adversary"] = worst
+            result["rules"][rule] = rrec
+        result["meta"].update({
+            "wall_s": time.time() - t_start,
+            "compiles": self.compiles,
+            "cells_run": self.cells_run,
+            "cells_per_sec": self.cells_run / max(time.time() - t_start, 1e-9),
+        })
+        return result
+
+
+def breakdown_curve(result: dict) -> list[tuple[str, str, int, float, float | None]]:
+    """Flatten a certification result into figure rows:
+    ``(rule, adversary, b, final_loss, score)`` sorted for plotting."""
+    rows = []
+    for rule, rrec in result["rules"].items():
+        for adv, arec in rrec["adversaries"].items():
+            for b_str, probe in sorted(arec["probes"].items(), key=lambda kv: int(kv[0])):
+                rows.append((rule, adv, int(b_str),
+                             probe["final_loss"], probe.get("score")))
+    return rows

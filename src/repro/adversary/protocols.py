@@ -1,0 +1,304 @@
+"""The stateful adversary protocol — Definition 1 upgraded to worst-case.
+
+Every attack in `repro.core.byzantine` is *oblivious*: a pure function of the
+current broadcast matrix (fixed-scale gaussian, fixed-z ALIE, ...).  The
+Byzantine model permits far more — an omniscient adversary may observe the
+whole honest trajectory and *adapt*.  This module makes that adversary a
+first-class, grid-bankable object:
+
+* `Adversary` — a named attack whose call carries an `AdvState` pytree
+  through the training scan, so the adversary can track honest-node
+  statistics across iterations (running mean/variance of broadcasts, the
+  estimated consensus-motion direction, a warm-started perturbation).  The
+  state is threaded through `repro.core.bridge.BridgeState` and the
+  ``lax.scan`` carry exactly like the wire codec's error-feedback residual.
+* `AdvCtx` — the omniscient observation surface the step hands the
+  adversary: a differentiable closure over this cell's *banked* screening
+  step (inner-maximization attacks ascend through it), the coordinate
+  subset the channel will actually deliver this tick (bandwidth-capped
+  links), and the channel's expected latency (stale-view extrapolation).
+* banked dispatch — adversary selection is **data**: an int32
+  ``CellParams.adv_idx`` into a static bank resolved by ``lax.switch``,
+  exactly like rules/attacks/codecs, so a rule x adversary x b grid still
+  compiles once.  Per-cell attack hyperparameters ride along as a
+  ``THETA_DIM``-vector (``CellParams.adv_theta``), which is what lets
+  `repro.adversary.search` run whole proposal populations as grid cells of
+  one compiled program.
+
+Every static broadcast attack is re-registered here as a *stateless*
+adversary (its `AdvState` passes through untouched — all-zeros in, all-zeros
+out, property-tested), so the adversary tier subsumes the broadcast tier and
+one grid axis covers both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import byzantine as byz_lib
+
+# Per-cell adversary hyperparameter vector width (CellParams.adv_theta).
+# Slots are adversary-specific (see each registration's docstring); unused
+# slots are zero.  Fixed width keeps the stacked cell pytree uniform.
+THETA_DIM = 4
+
+# EMA decay for the tracked honest-broadcast statistics.
+EMA = 0.8
+
+
+class AdvState(NamedTuple):
+    """The adversary's carried observations — one global (colluding) state.
+
+    Uniform across every registered adversary so a mixed bank switches over
+    one pytree: stateless entries ignore it and pass it through unchanged.
+
+    ``mean``/``var``: EMA of the honest broadcasts' per-coordinate mean and
+    variance.  ``dir``: an adversary-specific tracked direction — the
+    consensus-motion estimate (IPM / online ALIE), the principal honest
+    deviation axis (dissensus), or the warm-started perturbation
+    (inner-maximization).  ``count``: observation ticks so far.
+    """
+
+    mean: jax.Array  # [d] f32
+    var: jax.Array  # [d] f32
+    dir: jax.Array  # [d] f32
+    count: jax.Array  # [] f32
+
+
+class AdvCtx(NamedTuple):
+    """What the omniscient adversary is allowed to see beyond ``w`` itself.
+
+    ``screen``: ``w_bcast [M, d] -> y [M, d]`` — this cell's banked
+    screening step (differentiable; inner-maximization ascends through it).
+    ``deliver_mask``: ``[d]`` bool — the coordinate subset a
+    bandwidth-capped channel will deliver this tick (None when uncapped /
+    unknowable): an adaptive adversary wastes no energy on coordinates the
+    wire will replace with backfill.  ``latency``: the channel's expected
+    delivery delay in ticks (0 on the synchronous path) — adversaries that
+    track the consensus motion extrapolate their crafted values to *arrival*
+    time, so the lie still sits inside the trimming band when it is screened.
+    """
+
+    screen: Callable | None = None
+    deliver_mask: jax.Array | None = None
+    latency: float = 0.0
+
+
+def init_state(dim: int, *, lead: tuple[int, ...] = ()) -> AdvState:
+    """All-zeros carried state (optionally with leading batch axes — the grid
+    engine stacks one state row per experiment)."""
+    return AdvState(
+        mean=jnp.zeros(lead + (dim,), jnp.float32),
+        var=jnp.zeros(lead + (dim,), jnp.float32),
+        dir=jnp.zeros(lead + (dim,), jnp.float32),
+        count=jnp.zeros(lead, jnp.float32),
+    )
+
+
+def honest_stats(w: jax.Array, byz_mask: jax.Array):
+    """(mu [d], sigma [d], count) over the honest rows of ``w [M, d]``."""
+    honest = ~byz_mask
+    cnt = jnp.maximum(jnp.sum(honest), 1)
+    mu = jnp.sum(jnp.where(honest[:, None], w, 0.0), axis=0) / cnt
+    var = jnp.sum(jnp.where(honest[:, None], (w - mu) ** 2, 0.0), axis=0) / cnt
+    return mu, jnp.sqrt(var + 1e-12), cnt
+
+
+def observe(state: AdvState, w: jax.Array, byz_mask: jax.Array):
+    """Advance the tracked running statistics with this tick's broadcasts.
+
+    Returns ``(state', mu, sigma, vel)`` where ``mu``/``sigma`` are the
+    *instantaneous* honest stats and ``vel`` is the estimated per-coordinate
+    consensus motion (current honest mean minus the tracked one; zero on the
+    first observation).
+    """
+    mu, sigma, _ = honest_stats(w, byz_mask)
+    seen = state.count > 0
+    vel = jnp.where(seen, mu - state.mean, jnp.zeros_like(mu))
+    new_mean = jnp.where(seen, EMA * state.mean + (1.0 - EMA) * mu, mu)
+    new_var = jnp.where(seen, EMA * state.var + (1.0 - EMA) * sigma**2, sigma**2)
+    return state._replace(mean=new_mean, var=new_var, count=state.count + 1.0), mu, sigma, vel
+
+
+@dataclasses.dataclass(frozen=True)
+class Adversary:
+    """A (possibly stateful) broadcast-substitution adversary.
+
+    ``fn(ctx, state, theta, w [M,d], byz_mask [M], key, t)
+    -> (w_bcast [M,d], state')`` substitutes the Byzantine rows; honest rows
+    must pass through bitwise (``jnp.where(byz_mask[:, None], ...)``), which
+    is what makes an empty mask exactly the `none` path.  ``message_fn``
+    (``(ctx, state, theta, w, byz_mask, adjacency, key, t)
+    -> (msgs [M,M,d], self_view [M,d], state')``) is the per-link variant the
+    network runtime drives; `lift_message` derives it for broadcast-only
+    adversaries.  ``stateful`` declares whether `AdvState` is read — a bank
+    carries state iff any member needs it; stateless members pass it through
+    untouched (the inertness contract the property tests pin).
+
+    ``default_theta`` / ``theta_bounds`` describe the `THETA_DIM`
+    hyperparameter slots (`repro.adversary.search` samples inside the
+    bounds; ``(0, 0)`` marks an unused slot).
+    """
+
+    name: str
+    fn: Callable
+    stateful: bool = False
+    message_fn: Callable | None = None
+    default_theta: tuple[float, ...] = (0.0,) * THETA_DIM
+    theta_bounds: tuple[tuple[float, float], ...] = ((0.0, 0.0),) * THETA_DIM
+
+    def __post_init__(self):
+        if len(self.default_theta) != THETA_DIM or len(self.theta_bounds) != THETA_DIM:
+            raise ValueError(f"adversary {self.name!r}: theta spec must have {THETA_DIM} slots")
+
+
+def lift_message(adv: Adversary) -> Callable:
+    """Message-granularity view of a broadcast adversary: every receiver gets
+    the same crafted row, and the Byzantine self-view is the broadcast value
+    (matching the synchronous path bit-for-bit over an ideal channel).  When
+    the channel is bandwidth-capped (``ctx.deliver_mask``), the lie is
+    confined to the coordinates the wire will actually deliver — off-mask
+    coordinates revert to the sender's true iterate, so no adversarial energy
+    rides coordinates the channel replaces with backfill anyway."""
+
+    def mfn(ctx, state, theta, w, byz_mask, adjacency, key, t):
+        w_bcast, new_state = adv.fn(ctx, state, theta, w, byz_mask, key, t)
+        if ctx.deliver_mask is not None:
+            w_bcast = jnp.where(ctx.deliver_mask[None, :], w_bcast, w)
+        m = w.shape[0]
+        msgs = jnp.broadcast_to(w_bcast[None, :, :], (m,) + w.shape)
+        return msgs, w_bcast, new_state
+
+    return mfn
+
+
+def from_attack(attack: byz_lib.Attack) -> Adversary:
+    """Re-register a static broadcast attack as a stateless adversary."""
+
+    def fn(ctx, state, theta, w, byz_mask, key, t):
+        del ctx, theta
+        return attack(w, byz_mask, key, t), state
+
+    return Adversary(attack.name, fn, stateful=False)
+
+
+# ---------------------------------------------------------------------------
+# Registry — the single source of truth for the attack <-> adversary namespace
+# ---------------------------------------------------------------------------
+
+ADVERSARIES: dict[str, Adversary] = {}
+
+
+def register(adv: Adversary) -> Adversary:
+    if adv.name in ADVERSARIES:
+        raise ValueError(f"adversary {adv.name!r} already registered")
+    ADVERSARIES[adv.name] = adv
+    return adv
+
+
+# the static broadcast tier, subsumed as stateless adversaries
+for _attack in byz_lib.ATTACKS.values():
+    register(from_attack(_attack))
+
+
+def get_adversary(name: str) -> Adversary:
+    try:
+        return ADVERSARIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown adversary {name!r}; options: {sorted(ADVERSARIES)} "
+            f"(adaptive adversaries register via repro.adversary.adaptive)"
+        )
+
+
+def registry_tiers() -> dict[str, frozenset[str]]:
+    """The four attack-namespace tiers.  Every registered name belongs to
+    exactly ONE tier (validated by ``tests/test_adversary.py``):
+
+    * ``broadcast`` — static `byzantine.Attack`s (also usable as stateless
+      adversaries; their adversary registration is *derived*, not a second
+      home).
+    * ``message`` — per-link-only `byzantine.MessageAttack`s (no broadcast
+      equivalent, e.g. ``selective_victim``).
+    * ``wire`` — codeword-domain `byzantine.WireAttack`s.
+    * ``adversary`` — adaptive stateful adversaries (this package).
+    """
+    return {
+        "broadcast": frozenset(byz_lib.ATTACKS),
+        "message": frozenset(
+            n for n, a in byz_lib.MESSAGE_ATTACKS.items() if a.broadcast is None
+        ),
+        "wire": frozenset(byz_lib.WIRE_ATTACKS) - {"none"},
+        "adversary": frozenset(ADVERSARIES) - frozenset(byz_lib.ATTACKS),
+    }
+
+
+def attack_names() -> list[str]:
+    """Every name in the full four-tier namespace (sorted, deduplicated)."""
+    tiers = registry_tiers()
+    return sorted(set().union(*tiers.values()))
+
+
+# ---------------------------------------------------------------------------
+# Banked (branchless) dispatch — adversary selection as data
+# ---------------------------------------------------------------------------
+
+
+def adversary_bank(names: Sequence[str]) -> tuple[Adversary, ...]:
+    """Resolve names to a static bank (order preserved)."""
+    return tuple(get_adversary(n) for n in names)
+
+
+def bank_engaged(bank: Sequence[Adversary] | None) -> bool:
+    """True when the bank can alter a broadcast (any non-`none` entry) —
+    False lets the step skip the adversary stage structurally, keeping the
+    default path bit-identical to the pre-adversary program."""
+    return bank is not None and any(a.name != "none" for a in bank)
+
+def bank_stateful(bank: Sequence[Adversary] | None) -> bool:
+    """True when any bank entry reads `AdvState` — the carry is allocated
+    iff so (stateless banks thread ``None``, costing nothing)."""
+    return bank is not None and any(a.stateful for a in bank)
+
+
+def default_thetas(bank: Sequence[Adversary]) -> jnp.ndarray:
+    """[len(bank), THETA_DIM] registered defaults (row per bank entry)."""
+    return jnp.asarray([a.default_theta for a in bank], jnp.float32)
+
+
+def cell_theta(bank: Sequence[Adversary], adv_idx, adv_theta):
+    """The per-cell hyperparameter vector: the cell's own ``adv_theta`` when
+    carried, else the selected bank entry's registered default."""
+    if adv_theta is not None:
+        return adv_theta
+    return default_thetas(bank)[jnp.asarray(adv_idx, jnp.int32)]
+
+
+def apply_adversary_bank(bank, adv_idx, ctx, state, theta, w, byz_mask, key, t):
+    """Broadcast-path substitution by the bank entry selected by ``adv_idx``
+    (single-entry banks elide the switch — the trainer path)."""
+    if len(bank) == 1:
+        return bank[0].fn(ctx, state, theta, w, byz_mask, key, t)
+    branches = [
+        (lambda fn: lambda st, th, ww, bm, k, tt: fn(ctx, st, th, ww, bm, k, tt))(a.fn)
+        for a in bank
+    ]
+    return jax.lax.switch(adv_idx, branches, state, theta, w, byz_mask, key, t)
+
+
+def apply_message_adversary_bank(bank, adv_idx, ctx, state, theta, w, byz_mask,
+                                 adjacency, key, t):
+    """Per-link substitution by the selected bank entry.  Returns
+    ``(msgs, self_view, state')`` — the crafted message tensor, the self-view
+    Byzantine nodes screen with, and the advanced adversary state."""
+    fns = [a.message_fn if a.message_fn is not None else lift_message(a) for a in bank]
+    if len(fns) == 1:
+        return fns[0](ctx, state, theta, w, byz_mask, adjacency, key, t)
+    branches = [
+        (lambda fn: lambda st, th, ww, bm, adj, k, tt: fn(ctx, st, th, ww, bm, adj, k, tt))(fn)
+        for fn in fns
+    ]
+    return jax.lax.switch(adv_idx, branches, state, theta, w, byz_mask, adjacency, key, t)

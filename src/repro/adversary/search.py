@@ -1,0 +1,170 @@
+"""Red-team hyperparameter search: find the theta that breaks a rule.
+
+An adaptive adversary is only as strong as its hyperparameters (attack
+scale, z, ascent steps, ...).  This module searches the registered
+``theta_bounds`` box of one adversary against one (rule, b) defense with a
+random + evolutionary loop whose *entire proposal population runs as grid
+cells of one compiled program*:
+
+* generation 0: the registered default plus uniform-random draws inside the
+  bounds;
+* every later generation: the elite (highest honest damage) survive, and
+  the rest are gaussian mutations of random elites, clipped to the bounds;
+* fitness is the mean final honest loss over the evaluation seeds
+  (maximize — the red team's objective), with non-finite traces scored as
+  +inf fitness (a total break);
+* the population size and cell structure never change, so after the first
+  generation compiles, `GridEngine.set_cells` swaps thetas as jit *data* —
+  ``trace_count`` stays 1 across the whole search (asserted in tests).
+
+    PYTHONPATH=src python -m repro.adversary.search --rule trimmed_mean \
+        --adversary ipm --b 2 [--population 12] [--generations 4]
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Sequence
+
+import numpy as np
+
+from repro.adversary import protocols as adv_lib
+from repro.sim import Cell, ExperimentGrid, GridEngine
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    population: int = 12
+    generations: int = 4
+    elite: int = 3
+    mutation_scale: float = 0.15  # gaussian sigma as a fraction of each bound's width
+    seeds: tuple[int, ...] = (0,)  # evaluation seeds per proposal
+    seed: int = 0  # the search's own PRNG
+
+
+def _sample_theta(rng: np.random.Generator, bounds) -> tuple[float, ...]:
+    return tuple(
+        0.0 if hi <= lo else float(rng.uniform(lo, hi)) for lo, hi in bounds
+    )
+
+
+def _mutate_theta(rng: np.random.Generator, theta, bounds, scale: float) -> tuple[float, ...]:
+    out = []
+    for x, (lo, hi) in zip(theta, bounds):
+        if hi <= lo:
+            out.append(0.0)
+            continue
+        out.append(float(np.clip(x + rng.normal() * scale * (hi - lo), lo, hi)))
+    return tuple(out)
+
+
+def red_team_search(topology, rule: str, adversary: str, b: int,
+                    grad_fn: Callable, init_fn: Callable, batches, *,
+                    lam: float = 1.0, t0: float = 30.0,
+                    config: SearchConfig = SearchConfig(),
+                    engine_chunk: int | None = None) -> dict:
+    """Search ``adversary``'s theta box against ``(rule, b)``.  Returns the
+    ledger: best theta/fitness, per-generation history, and the engine's
+    trace count (1 — the zero-retrace contract)."""
+    adv = adv_lib.get_adversary(adversary)
+    if all(hi <= lo for lo, hi in adv.theta_bounds):
+        raise ValueError(f"adversary {adversary!r} has no searchable theta slots")
+    rng = np.random.default_rng(config.seed)
+    pop = max(config.population, 2)
+    ns = len(config.seeds)
+
+    def cells_for(thetas: Sequence[tuple]) -> list[Cell]:
+        return [Cell(rule, "none", b, s, adversary=adversary, mask_seed=s, theta=th)
+                for th in thetas for s in config.seeds]
+
+    thetas = [tuple(map(float, adv.default_theta))]
+    thetas += [_sample_theta(rng, adv.theta_bounds) for _ in range(pop - 1)]
+    grid = ExperimentGrid(topology, (rule,), ("none",), byzantine_counts=(b,),
+                          seeds=config.seeds, adversaries=(adversary,),
+                          lam=lam, t0=t0)
+    engine = GridEngine(grid, grad_fn, cells=cells_for(thetas))
+    state0 = engine.init(init_fn)
+
+    history, best_theta, best_fit = [], None, -np.inf
+    default_fit = None
+    t_start = time.time()
+    for gen in range(config.generations):
+        if gen > 0:
+            engine.set_cells(cells_for(thetas))
+        _, metrics = engine.run(state0, batches, chunk=engine_chunk)
+        loss = np.asarray(metrics["loss"], np.float64)  # [pop*ns, T]
+        fits = []
+        for j in range(pop):
+            tail = loss[j * ns:(j + 1) * ns, -1]
+            # a non-finite honest trace is a total break: top fitness
+            fits.append(np.inf if not np.isfinite(tail).all() else float(np.mean(tail)))
+        if gen == 0:
+            default_fit = fits[0]  # thetas[0] is the registered default
+        order = np.argsort(fits)[::-1]
+        if fits[order[0]] > best_fit:
+            best_fit, best_theta = fits[order[0]], thetas[order[0]]
+        history.append({
+            "generation": gen,
+            "best_fitness": fits[order[0]],
+            "best_theta": list(thetas[order[0]]),
+            "mean_fitness": float(np.mean([f for f in fits if np.isfinite(f)] or [np.inf])),
+        })
+        elite = [thetas[i] for i in order[:config.elite]]
+        thetas = list(elite)
+        while len(thetas) < pop:
+            if rng.random() < 0.25:  # fresh random blood
+                thetas.append(_sample_theta(rng, adv.theta_bounds))
+            else:
+                parent = elite[rng.integers(len(elite))]
+                thetas.append(_mutate_theta(rng, parent, adv.theta_bounds,
+                                            config.mutation_scale))
+    return {
+        "rule": rule, "adversary": adversary, "b": b,
+        "best_theta": list(best_theta),
+        "best_fitness": best_fit,
+        "default_fitness": default_fit,
+        "generations": history,
+        "trace_count": engine.trace_count,
+        "wall_s": time.time() - t_start,
+        "proposals_evaluated": pop * config.generations,
+    }
+
+
+def main(argv=None):  # pragma: no cover - thin CLI smoke
+    import argparse
+    import json
+
+    from repro.sim import default_topology
+    from repro.sim.tasks import linear_task
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rule", default="trimmed_mean")
+    ap.add_argument("--adversary", default="ipm")
+    ap.add_argument("--b", type=int, default=2)
+    ap.add_argument("--nodes", type=int, default=10)
+    ap.add_argument("--ticks", type=int, default=40)
+    ap.add_argument("--population", type=int, default=12)
+    ap.add_argument("--generations", type=int, default=4)
+    ap.add_argument("--out", default=None, help="write the ledger JSON here")
+    args = ap.parse_args(argv)
+
+    topo = default_topology(args.nodes, (args.rule,), (args.b,), seed=0)
+    task = linear_task(args.nodes, args.ticks, seed=0)
+    ledger = red_team_search(
+        topo, args.rule, args.adversary, args.b,
+        task.grad_fn, task.init_fn, task.batches, lam=1.0, t0=30.0,
+        config=SearchConfig(population=args.population, generations=args.generations))
+    print(json.dumps({k: v for k, v in ledger.items() if k != "generations"}, indent=2,
+                     default=str))
+    for g in ledger["generations"]:
+        print(f"  gen {g['generation']}: best={g['best_fitness']:.4g} "
+              f"theta={[round(t, 3) for t in g['best_theta']]}")
+    if ledger["trace_count"] != 1:
+        raise SystemExit(f"expected one compile, got {ledger['trace_count']}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(ledger, f, indent=2, default=str)
+
+
+if __name__ == "__main__":  # pragma: no cover
+    main()

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.adversary import protocols as adv_lib
 from repro.comm import codec as codec_lib
 from repro.comm import exchange as comm_lib
 from repro.core import byzantine as byz_lib
@@ -38,6 +39,10 @@ class BridgeState(NamedTuple):
     # None when every codec in the bank is lossless (the default identity
     # path carries no extra state)
     comm: Any = None
+    # adversary tracking state (repro.adversary.AdvState): the omniscient
+    # adversary's carried observations of the honest trajectory; None when no
+    # adversary in the bank is stateful (static attacks carry nothing)
+    adv: Any = None
 
 
 class CellParams(NamedTuple):
@@ -64,6 +69,14 @@ class CellParams(NamedTuple):
     # int32 index into the step's static wire-codec bank (repro.comm);
     # None selects entry 0 (single-codec trainers).
     codec_idx: Any = None
+    # int32 index into the step's static adversary bank (repro.adversary);
+    # None selects entry 0 (single-adversary trainers / no adversary axis).
+    adv_idx: Any = None
+    # [THETA_DIM] f32 per-cell adversary hyperparameters (attack scale / z /
+    # ascent steps — see repro.adversary.adaptive); None -> the selected
+    # adversary's registered defaults.  Data, not structure: the red-team
+    # search mutates these between generations without retracing.
+    adv_theta: Any = None
 
 
 def cell_step_size(cell: CellParams, t: jax.Array) -> jax.Array:
@@ -78,6 +91,10 @@ class BridgeConfig:
     rule: str = "trimmed_mean"  # trimmed_mean | median | krum | bulyan | mean
     num_byzantine: int = 0  # the bound b given to the screening rule
     attack: str = "none"
+    # adaptive adversary (repro.adversary): none | ipm | alie_online |
+    # dissensus | inner_max | any static attack name (stateless tier).
+    # Composes after `attack` (both substitute Byzantine rows, so use one).
+    adversary: str = "none"
     codec: str = "identity"  # wire codec (repro.comm): identity | int8 | int4 | topk<P>...
     byzantine_seed: int = 0
     # step size rho(t) = 1 / (lam * (t0 + t))  (Sec. IV); or constant if lr>0
@@ -139,6 +156,8 @@ NET_SALT = 0x6E657430
 # decorrelated from both the attack and the channel streams.
 COMM_SALT = 0x636D6D30
 WIRE_SALT = 0x77697230
+# Salt for the adaptive-adversary stream (repro.adversary).
+ADV_SALT = 0x61647630
 
 
 def _cell_codec_idx(cell: CellParams):
@@ -146,6 +165,13 @@ def _cell_codec_idx(cell: CellParams):
     if cell.codec_idx is None:
         return jnp.zeros((), jnp.int32)
     return cell.codec_idx
+
+
+def _cell_adv_idx(cell: CellParams):
+    """adversary bank index; None (single-adversary trainers) selects 0."""
+    if cell.adv_idx is None:
+        return jnp.zeros((), jnp.int32)
+    return cell.adv_idx
 
 
 def _wire_roundtrip(codec_bank, wire_bank, cell, sub, x, residual, byz, t, d):
@@ -204,17 +230,23 @@ def _grad_update_and_metrics(grad_fn, cell: CellParams, state: BridgeState, batc
 
 def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
                     codecs: tuple[str, ...] = ("identity",), wire_attacks=None,
+                    adversaries: tuple[str, ...] | None = None,
                     screen_chunk=None):
     """The synchronous-broadcast iteration: ``step(cell, state, batch)``.
 
     ``rules`` is a static bank of screening-rule names, ``attacks`` a static
     bank of `byzantine.Attack`s, ``codecs`` a static bank of wire-codec names
-    (`repro.comm`), and ``wire_attacks`` the codeword-domain bank parallel to
-    ``attacks`` (defaults to all no-ops); ``cell`` selects into all of them.
+    (`repro.comm`), ``wire_attacks`` the codeword-domain bank parallel to
+    ``attacks`` (defaults to all no-ops), and ``adversaries`` a static bank
+    of `repro.adversary` names (None / all-`none` skips the adversary stage
+    structurally — the default path stays bit-identical); ``cell`` selects
+    into all of them.
     """
     codec_bank = codec_lib.codec_bank(codecs)
     if wire_attacks is None:
         wire_attacks = (byz_lib.WIRE_ATTACKS["none"],) * len(attacks)
+    adv_bank = None if adversaries is None else adv_lib.adversary_bank(adversaries)
+    adv_engaged = adv_lib.bank_engaged(adv_bank)
     n_edges = jnp.sum(jnp.asarray(adjacency)).astype(jnp.float32)
 
     def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
@@ -223,6 +255,22 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
         key, sub = jax.random.split(state.key)
         # (Step 3-4) broadcast + Byzantine substitution of sent messages
         w_bcast = byz_lib.apply_attack_bank(attacks, cell.attack_idx, w, cell.byz_mask, sub, state.t)
+        new_adv = state.adv
+        if adv_engaged:
+            # the adaptive adversary observes the honest trajectory and
+            # re-crafts the Byzantine rows; its screening oracle is this
+            # cell's own banked screen (differentiable — inner maximization
+            # ascends through it)
+            ctx = adv_lib.AdvCtx(
+                screen=lambda wb: screening.screen_all_banked(
+                    wb, adjacency, rules, cell.rule_idx, cell.b,
+                    chunk=screen_chunk, self_vals=wb),
+            )
+            theta = adv_lib.cell_theta(adv_bank, _cell_adv_idx(cell), cell.adv_theta)
+            w_bcast, new_adv = adv_lib.apply_adversary_bank(
+                adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
+                w_bcast, cell.byz_mask, jax.random.fold_in(sub, ADV_SALT), state.t,
+            )
         # wire codec: what receivers actually decode (identity: w_bcast itself)
         w_hat, new_comm = _wire_roundtrip(
             codec_bank, wire_attacks, cell, sub, w_bcast, state.comm,
@@ -236,13 +284,14 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
         )
         new_params, metrics = _grad_update_and_metrics(grad_fn, cell, state, batch, y, unflatten)
         metrics.update(_comm_metrics(codec_bank, cell, d, n_edges, new_comm))
-        return BridgeState(new_params, state.t + 1, key, state.net, new_comm), metrics
+        return BridgeState(new_params, state.t + 1, key, state.net, new_comm, new_adv), metrics
 
     return step
 
 
 def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_attacks, *,
                             codecs: tuple[str, ...] = ("identity",), wire_attacks=None,
+                            adversaries: tuple[str, ...] | None = None,
                             screen_chunk=None):
     """The network-runtime iteration: ``step(cell, state, batch)``.
 
@@ -254,11 +303,25 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
     exposing ``cell_aware = True`` (the grid engine's scenario-banked
     runtime) additionally receives the cell so it can switch channel/schedule
     per experiment; the standard runtimes keep their two-argument contract.
+
+    ``adversaries`` crafts per-link lies adaptively (`repro.adversary`): on a
+    single-channel runtime the adversary additionally sees the coordinate
+    subset a bandwidth-capped channel will deliver this tick and the
+    channel's expected latency — the staleness-exploiting message variants.
     """
     cell_aware = bool(getattr(runtime, "cell_aware", False))
     codec_bank = codec_lib.codec_bank(codecs)
     if wire_attacks is None:
         wire_attacks = (byz_lib.WIRE_ATTACKS["none"],) * len(message_attacks)
+    adv_bank = None if adversaries is None else adv_lib.adversary_bank(adversaries)
+    adv_engaged = adv_lib.bank_engaged(adv_bank)
+    # omniscient channel knowledge is only well defined when the runtime has
+    # ONE channel (the scenario-banked grid runtime switches per cell; its
+    # adversaries fall back to attacking every coordinate, latency 0)
+    channel = getattr(runtime, "channel", None)
+    adv_latency = 0.0
+    if channel is not None:
+        adv_latency = 0.5 * (channel.latency_min + channel.latency_max)
 
     def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         w, unflatten = stack_flatten(state.params)
@@ -275,6 +338,29 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
         w_self = byz_lib.apply_self_view_bank(
             message_attacks, cell.attack_idx, w, cell.byz_mask, sub, state.t
         )
+        new_adv = state.adv
+        if adv_engaged:
+            net_key_peek = jax.random.fold_in(sub, NET_SALT)
+            deliver = None
+            peek = getattr(runtime, "delivered_coord_mask", None)
+            if peek is not None and not cell_aware:
+                deliver = peek(net_key_peek, d)
+            ctx = adv_lib.AdvCtx(
+                screen=lambda wb: screening.screen_all_banked(
+                    wb, adj_t, rules, cell.rule_idx, cell.b,
+                    chunk=screen_chunk, self_vals=wb),
+                deliver_mask=deliver,
+                latency=adv_latency,
+            )
+            theta = adv_lib.cell_theta(adv_bank, _cell_adv_idx(cell), cell.adv_theta)
+            adv_msgs, adv_self, new_adv = adv_lib.apply_message_adversary_bank(
+                adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
+                w, cell.byz_mask, adj_t, jax.random.fold_in(sub, ADV_SALT), state.t,
+            )
+            # the adversary re-crafts Byzantine senders only; honest links
+            # keep whatever the static message-attack stage produced, bitwise
+            msgs = jnp.where(cell.byz_mask[None, :, None], adv_msgs, msgs)
+            w_self = jnp.where(cell.byz_mask[:, None], adv_self, w_self)
         # wire codec per link ([receiver, sender] leading axes); the sender
         # axis marks whose codewords the wire attacks may corrupt
         byz_link = jnp.broadcast_to(cell.byz_mask[None, :], adj_t.shape)
@@ -315,7 +401,7 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
         metrics["screened_frac"] = jnp.mean(enough.astype(jnp.float32))
         metrics.update(_comm_metrics(
             codec_bank, cell, d, jnp.sum(adj_t).astype(jnp.float32), comm_full))
-        return BridgeState(new_params, state.t + 1, key, net, comm_full), metrics
+        return BridgeState(new_params, state.t + 1, key, net, comm_full, new_adv), metrics
 
     return step
 
@@ -341,17 +427,22 @@ class BridgeTrainer:
         self.adjacency = jnp.asarray(config.topology.adjacency)
         m = config.topology.num_nodes
         nbyz = min(config.num_byzantine, m)
-        if config.attack == "none" or nbyz == 0:
+        if (config.attack == "none" and config.adversary == "none") or nbyz == 0:
             self.byz_mask = jnp.zeros((m,), dtype=bool)
         else:
             self.byz_mask = byz_lib.pick_byzantine_mask(m, nbyz, config.byzantine_seed)
         self.codec = codec_lib.get_codec(config.codec)
         wire_bank = byz_lib.wire_attack_bank((config.attack,))
+        # the adversary bank is engaged only when named, so the default path
+        # keeps its exact pre-adversary program shape
+        self._adv_bank = (None if config.adversary == "none"
+                          else adv_lib.adversary_bank((config.adversary,)))
         if runtime is None:
             self._attack = byz_lib.get_attack(config.attack)
             step = build_cell_step(
                 grad_fn, self.adjacency, (config.rule,), (self._attack,),
                 codecs=(config.codec,), wire_attacks=wire_bank,
+                adversaries=None if self._adv_bank is None else (config.adversary,),
                 screen_chunk=config.screen_chunk,
             )
         else:
@@ -359,6 +450,7 @@ class BridgeTrainer:
             step = build_cell_runtime_step(
                 grad_fn, runtime, (config.rule,), (self._message_attack,),
                 codecs=(config.codec,), wire_attacks=wire_bank,
+                adversaries=None if self._adv_bank is None else (config.adversary,),
                 screen_chunk=config.screen_chunk,
             )
         # The cell rides along as a jit *operand*, not a closure constant, so
@@ -373,6 +465,12 @@ class BridgeTrainer:
         """The constant single-cell parameters equivalent to this config
         (bank indices are 0 — the trainer's banks have one entry each)."""
         cfg = self.config
+        adv_idx = adv_theta = None
+        if self._adv_bank is not None:
+            # theta rides as a jit operand (like the cell itself) for
+            # program-shape parity with the grid engine
+            adv_idx = jnp.zeros((), jnp.int32)
+            adv_theta = jnp.asarray(self._adv_bank[0].default_theta, jnp.float32)
         return CellParams(
             rule_idx=jnp.zeros((), jnp.int32),
             attack_idx=jnp.zeros((), jnp.int32),
@@ -382,6 +480,8 @@ class BridgeTrainer:
             t0=jnp.asarray(cfg.t0, jnp.float32),
             lr=jnp.asarray(cfg.lr, jnp.float32),
             codec_idx=jnp.zeros((), jnp.int32),
+            adv_idx=adv_idx,
+            adv_theta=adv_theta,
         )
 
     @property
@@ -393,7 +493,7 @@ class BridgeTrainer:
         lead = jax.tree_util.tree_leaves(params)[0].shape[0]
         if lead != m:
             raise ValueError(f"params leading axis {lead} != num_nodes {m}")
-        net = comm = None
+        net = comm = adv = None
         w, _ = stack_flatten(params)
         dim = w.shape[1]
         if self.runtime is not None:
@@ -401,8 +501,10 @@ class BridgeTrainer:
             comm = comm_lib.init_residual((m, m, dim), (self.codec,))
         else:
             comm = comm_lib.init_residual((m, dim), (self.codec,))
+        if adv_lib.bank_stateful(self._adv_bank):
+            adv = adv_lib.init_state(dim)
         return BridgeState(params=params, t=jnp.zeros((), jnp.int32),
-                           key=jax.random.PRNGKey(seed), net=net, comm=comm)
+                           key=jax.random.PRNGKey(seed), net=net, comm=comm, adv=adv)
 
     def step(self, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         return self._jit_step(self._cell, state, batch)

@@ -280,7 +280,12 @@ WIRE_ATTACKS: dict[str, WireAttack] = {
 
 
 def attack_names() -> list[str]:
-    """All registered attack names (broadcast + message-only + wire)."""
+    """All attack names registered in THIS module's three tiers (broadcast +
+    message-only + wire).  The full four-tier namespace — including the
+    adaptive-adversary tier — is owned by
+    `repro.adversary.protocols.registry_tiers` (the single source of truth;
+    a validation test asserts every name lives in exactly one tier), whose
+    `attack_names` supersedes this one for user-facing listings."""
     return sorted(set(ATTACKS) | set(MESSAGE_ATTACKS)
                   | (set(WIRE_ATTACKS) - {"none"}))
 

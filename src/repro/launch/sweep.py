@@ -27,6 +27,14 @@ subprocesses.  All modes are resumable (existing results are skipped).
     PYTHONPATH=src python -m repro.launch.sweep --mode net \
         --out experiments/net [--rules trimmed_mean,median] \
         [--attacks random,alie,selective_victim] [--scenarios ideal,lossy]
+
+* ``--mode breakdown`` — breakdown-point certification (`repro.adversary`):
+  binary-search / ladder the largest tolerated b per (rule, adversary) with
+  batched probe rounds, writing ``BENCH_breakdown.json``-shaped output:
+
+    PYTHONPATH=src python -m repro.launch.sweep --mode breakdown \
+        --out experiments/breakdown [--rules trimmed_mean,median] \
+        [--adversaries random,alie,ipm,inner_max] [--breakdown-mode ladder]
 """
 from __future__ import annotations
 
@@ -145,13 +153,14 @@ def run_grid_mode(args) -> None:
     byz = [int(x) for x in args.byz.split(",")]
     seeds = [int(x) for x in args.seeds.split(",")]
     codecs = args.codecs.split(",")
+    adversaries = args.adversaries.split(",") if args.adversaries else ["none"]
     scenarios = None
     if args.scenarios not in ("sync", "none", ""):
         scenarios = args.scenarios.split(",")
     m, ticks = args.grid_nodes, args.grid_ticks
     topo = default_topology(m, rules, byz, seed=0)
     grid = ExperimentGrid(topo, rules, attacks, byz, seeds, scenarios=scenarios,
-                          codecs=codecs, lam=1.0, t0=30.0)
+                          codecs=codecs, adversaries=adversaries, lam=1.0, t0=30.0)
     done = results_lib.existing_tags(args.out)
     pending = [c for c in grid.cells() if c.tag not in done]
     print(f"{grid.num_cells} grid cells ({len(done & {c.tag for c in grid.cells()})} cached) "
@@ -184,6 +193,7 @@ def run_grid_mode(args) -> None:
         "trace_count": engine.trace_count, "chunk": args.grid_chunk,
         "rules": engine.rule_bank, "attacks": engine.attack_bank,
         "scenarios": engine.scenario_bank, "codecs": engine.codec_bank,
+        "adversaries": engine.adversary_bank,
     })
     # per-cell honest test accuracy (the paper's metric), evaluated host-side
     xt, yt = jnp.asarray(xt), jnp.asarray(yt)
@@ -209,9 +219,48 @@ def run_grid_mode(args) -> None:
         print(f"  {row[0]:60s} acc={rec['accuracy']:.4f} loss={rec['final_loss']:.4f}")
 
 
+def run_breakdown_mode(args) -> None:
+    """Breakdown-point certification on the paper's MNIST-like linear task
+    (extreme non-iid partition — consensus is *required* for honest test
+    accuracy, which is what adaptive adversaries break)."""
+    from repro.adversary.breakdown import BreakdownConfig, BreakdownEngine
+    from repro.sim import default_topology
+    from repro.sim.tasks import linear_task
+
+    rules = args.rules.split(",")
+    adversaries = (args.adversaries or "random,alie,ipm,inner_max").split(",")
+    m, ticks = args.grid_nodes, args.grid_ticks
+    # the topology must admit the whole probed ladder, not just b=1
+    topo = default_topology(m, rules, [max(args.breakdown_b_max, 1)], seed=0)
+    task = linear_task(m, ticks, batch=args.grid_batch,
+                       num_train=args.grid_train, num_test=args.grid_test, seed=0)
+    engine = BreakdownEngine(
+        topo, rules, adversaries, task.grad_fn, task.init_fn, task.batches,
+        lam=1.0, t0=30.0,
+        config=BreakdownConfig(mode=args.breakdown_mode,
+                               seeds=tuple(int(s) for s in args.seeds.split(",")),
+                               b_max=args.breakdown_b_max,
+                               loss_ratio=args.breakdown_loss_ratio,
+                               score_drop=args.breakdown_score_drop),
+        eval_fn=task.eval_accuracy, engine_chunk=args.grid_chunk)
+    result = engine.run()
+    path = os.path.join(args.out, "BENCH_breakdown.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"breakdown certification ({result['meta']['cells_run']} cells, "
+          f"{result['meta']['compiles']} compiles, "
+          f"{result['meta']['wall_s']:.1f}s) -> {path}")
+    for rule, rrec in result["rules"].items():
+        stars = "  ".join(f"{a}:b*={arec['bstar']}"
+                          for a, arec in rrec["adversaries"].items())
+        print(f"  {rule:14s} feasible_b={rrec['feasible_b']}  {stars}  "
+              f"worst={rrec['bstar_worst_adversary']}")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="dryrun", choices=["dryrun", "net", "grid"])
+    ap.add_argument("--mode", default="dryrun",
+                    choices=["dryrun", "net", "grid", "breakdown"])
     ap.add_argument("--out", default=None)
     ap.add_argument("--jobs", type=int, default=4)
     ap.add_argument("--timeout", type=int, default=1500)
@@ -234,6 +283,22 @@ def main(argv=None):
     ap.add_argument("--codecs", default="identity",
                     help="comma-separated wire codecs (repro.comm) — a grid "
                          "axis like rules/attacks (grid mode)")
+    ap.add_argument("--adversaries", default=None,
+                    help="comma-separated repro.adversary names — a grid axis "
+                         "(grid mode; default none) and the certified attack "
+                         "suite (breakdown mode; default "
+                         "random,alie,ipm,inner_max)")
+    # --mode breakdown knobs (repro.adversary.breakdown)
+    ap.add_argument("--breakdown-mode", default="ladder", choices=["ladder", "bisect"])
+    ap.add_argument("--breakdown-b-max", type=int, default=3,
+                    help="deepest Byzantine count probed (topology is built "
+                         "dense enough to admit it)")
+    ap.add_argument("--breakdown-loss-ratio", type=float, default=4.0,
+                    help="diverged when final honest loss exceeds this "
+                         "multiple of the faultless reference")
+    ap.add_argument("--breakdown-score-drop", type=float, default=0.15,
+                    help="diverged when honest test accuracy drops this far "
+                         "below the faultless reference")
     ap.add_argument("--grid-nodes", type=int, default=12)
     ap.add_argument("--grid-ticks", type=int, default=60)
     ap.add_argument("--grid-batch", type=int, default=32)
@@ -244,9 +309,13 @@ def main(argv=None):
                          "default runs the whole grid in one call")
     args = ap.parse_args(argv)
     if args.out is None:
-        args.out = {"net": "experiments/net", "grid": "experiments/grid"}.get(
+        args.out = {"net": "experiments/net", "grid": "experiments/grid",
+                    "breakdown": "experiments/breakdown"}.get(
             args.mode, "experiments/dryrun")
     os.makedirs(args.out, exist_ok=True)
+    if args.mode == "breakdown":
+        run_breakdown_mode(args)
+        return
     if args.mode == "grid":
         if args.scenarios is None:
             args.scenarios = "sync"  # default grid mode is the broadcast path

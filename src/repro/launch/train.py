@@ -37,7 +37,8 @@ def build_trainer(args, topo, grad_fn):
     if not use_net:
         bcfg = BridgeConfig(
             topology=topo, rule=args.rule, num_byzantine=args.byzantine,
-            attack=args.attack, codec=args.codec, lam=args.lam, t0=args.t0, lr=args.lr,
+            attack=args.attack, adversary=args.adversary, codec=args.codec,
+            lam=args.lam, t0=args.t0, lr=args.lr,
         )
         return BridgeTrainer(bcfg, grad_fn)
     from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
@@ -51,7 +52,8 @@ def build_trainer(args, topo, grad_fn):
     )
     acfg = AsyncBridgeConfig(
         topology=topo, rule=args.rule, num_byzantine=args.byzantine,
-        attack=args.attack, codec=args.codec, lam=args.lam, t0=args.t0, lr=args.lr,
+        attack=args.attack, adversary=args.adversary, codec=args.codec,
+        lam=args.lam, t0=args.t0, lr=args.lr,
         channel=channel, staleness_bound=args.net_staleness,
         schedule=scenario_schedule(args.net_schedule, topo, args.steps,
                                    seed=args.seed, churn_prob=args.net_churn_prob),
@@ -66,6 +68,10 @@ def main(argv=None):
     ap.add_argument("--nodes", type=int, default=6)
     ap.add_argument("--byzantine", type=int, default=1)
     ap.add_argument("--attack", default="none")
+    ap.add_argument("--adversary", default="none",
+                    help="adaptive adversary (repro.adversary): ipm, "
+                         "alie_online, dissensus, inner_max, or any static "
+                         "attack name (stateless tier)")
     ap.add_argument("--rule", default="trimmed_mean")
     ap.add_argument("--codec", default="identity",
                     help="wire codec (repro.comm): identity, int8, int4, "

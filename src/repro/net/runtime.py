@@ -119,6 +119,16 @@ class UnreliableRuntime:
             max_wire_bits = 32 * dim
         return mb.init_mailbox(num_nodes, dim, self.channel.max_total_latency(max_wire_bits))
 
+    def delivered_coord_mask(self, key: jax.Array, d: int) -> jax.Array | None:
+        """The coordinate subset `exchange` will deliver for this tick's
+        ``key`` (None when uncapped).  Mirrors the internal PRNG derivation
+        exactly — an *omniscient* adversary (`repro.adversary`) can therefore
+        concentrate its lies on the coordinates that will actually cross the
+        wire; honest nodes cannot (the draw happens channel-side)."""
+        if self.channel.bandwidth_cap is None:
+            return None
+        return self.channel.coord_mask(jax.random.split(key)[1], d)
+
     def exchange(self, net_state, msgs, self_vals, adjacency, key, t, *, wire_bits=None):
         m = adjacency.shape[0]
         # the coord-subset stream splits off only when a cap is set, so

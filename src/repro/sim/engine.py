@@ -39,6 +39,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.adversary import protocols as adv_lib
 from repro.comm import codec_bank as resolve_codec_bank
 from repro.comm import exchange as comm_lib
 from repro.core import byzantine as byz_lib
@@ -181,26 +182,13 @@ class GridEngine:
         self.attack_bank = _dedup(c.attack for c in self.cells)
         self.scenario_bank = _dedup(s for s in scen if s is not None)
         self.codec_bank = _dedup(c.codec for c in self.cells)
-        e = len(self.cells)
-        self.byz_masks = np.stack(
-            [grid_lib.pick_byz_mask(m, c, grid.byzantine_seed) for c in self.cells]
-        )
-        self._cell_stack = CellParams(
-            rule_idx=jnp.asarray([self.rule_bank.index(c.rule) for c in self.cells], jnp.int32),
-            attack_idx=jnp.asarray([self.attack_bank.index(c.attack) for c in self.cells], jnp.int32),
-            b=jnp.asarray([c.b for c in self.cells], jnp.int32),
-            byz_mask=jnp.asarray(self.byz_masks),
-            lam=jnp.full((e,), grid.lam, jnp.float32),
-            t0=jnp.full((e,), grid.t0, jnp.float32),
-            lr=jnp.full((e,), grid.lr, jnp.float32),
-            scenario_idx=jnp.asarray(
-                [self.scenario_bank.index(c.scenario) if c.scenario else 0 for c in self.cells],
-                jnp.int32,
-            ),
-            codec_idx=jnp.asarray(
-                [self.codec_bank.index(c.codec) for c in self.cells], jnp.int32
-            ),
-        )
+        self.adversary_bank = _dedup(c.adversary for c in self.cells)
+        # the adversary axis engages only when some cell names one, so
+        # adversary-free grids keep their exact pre-adversary program shape
+        self._adv_engaged = any(c.adversary != "none" for c in self.cells)
+        self._adv_stateful = self._adv_engaged and adv_lib.bank_stateful(
+            adv_lib.adversary_bank(self.adversary_bank))
+        self._bind_cells(self.cells)
         if self.net_mode:
             if num_ticks is None:
                 raise ValueError("num_ticks is required for net-scenario grids (schedule length)")
@@ -213,12 +201,9 @@ class GridEngine:
 
         # Execution order: group-major (stable), identity when group=False.
         # Results are always returned in the caller's cell order via _inv.
-        if group:
-            gkey = [(self.rule_bank.index(c.rule), self.attack_bank.index(c.attack),
-                     self.codec_bank.index(c.codec))
-                    for c in self.cells]
-        else:
-            gkey = [(0, 0, 0)] * e
+        e = len(self.cells)
+        self._group = group
+        gkey = self._group_keys(self.cells)
         self._perm = np.asarray(sorted(range(e), key=lambda i: gkey[i]), np.int64)
         self._inv = np.argsort(self._perm)
         # group boundaries (over the permuted order) + one step per group
@@ -230,11 +215,14 @@ class GridEngine:
                 head = self.cells[self._perm[lo]]
                 if group:
                     rules, attacks, codecs = (head.rule,), (head.attack,), (head.codec,)
+                    advs = (head.adversary,) if self._adv_engaged else None
                 else:
                     rules, attacks, codecs = (tuple(self.rule_bank), tuple(self.attack_bank),
                                               tuple(self.codec_bank))
+                    advs = tuple(self.adversary_bank) if self._adv_engaged else None
                 self._vsteps.append(
-                    jax.vmap(self._build_step(rules, attacks, codecs), in_axes=(0, 0, None)))
+                    jax.vmap(self._build_step(rules, attacks, codecs, advs),
+                             in_axes=(0, 0, None)))
                 self._bounds.append((lo, i))
                 lo = i
         self._cell_perm = jax.tree_util.tree_map(lambda x: x[self._perm], self._cell_stack)
@@ -258,18 +246,117 @@ class GridEngine:
         self._scan_all = jax.jit(scan_all)
         self._group_scans: dict[int, Callable] = {}
 
+    def _group_keys(self, cells) -> list[tuple[int, ...]]:
+        if not self._group:
+            return [(0, 0, 0, 0)] * len(cells)
+        return [(self.rule_bank.index(c.rule), self.attack_bank.index(c.attack),
+                 self.adversary_bank.index(c.adversary), self.codec_bank.index(c.codec))
+                for c in cells]
+
+    def _bind_cells(self, cells) -> None:
+        """Stack per-cell parameters (byz masks, bank indices, schedules,
+        adversary thetas) into the `CellParams` rows the vmapped steps read."""
+        m = self.grid.topology.num_nodes
+        e = len(cells)
+        self.byz_masks = np.stack(
+            [grid_lib.pick_byz_mask(m, c, self.grid.byzantine_seed) for c in cells]
+        )
+        adv_idx = adv_theta = None
+        if self._adv_engaged:
+            adv_idx = jnp.asarray(
+                [self.adversary_bank.index(c.adversary) for c in cells], jnp.int32)
+            adv_theta = jnp.asarray(
+                [c.theta if c.theta is not None
+                 else adv_lib.get_adversary(c.adversary).default_theta
+                 for c in cells], jnp.float32)
+        self._cell_stack = CellParams(
+            rule_idx=jnp.asarray([self.rule_bank.index(c.rule) for c in cells], jnp.int32),
+            attack_idx=jnp.asarray([self.attack_bank.index(c.attack) for c in cells], jnp.int32),
+            b=jnp.asarray([c.b for c in cells], jnp.int32),
+            byz_mask=jnp.asarray(self.byz_masks),
+            lam=jnp.full((e,), self.grid.lam, jnp.float32),
+            t0=jnp.full((e,), self.grid.t0, jnp.float32),
+            lr=jnp.full((e,), self.grid.lr, jnp.float32),
+            scenario_idx=jnp.asarray(
+                [self.scenario_bank.index(c.scenario) if c.scenario else 0 for c in cells],
+                jnp.int32,
+            ),
+            codec_idx=jnp.asarray(
+                [self.codec_bank.index(c.codec) for c in cells], jnp.int32
+            ),
+            adv_idx=adv_idx,
+            adv_theta=adv_theta,
+        )
+
+    def set_cells(self, cells: Sequence[Cell]) -> None:
+        """Swap the engine onto a new cell list of identical *structure* —
+        same length and same per-position (rule, attack, adversary, codec,
+        scenario) group keys — without invalidating the compiled programs.
+
+        Everything that changed (b, seeds, byz masks, adversary thetas) is
+        jit *data*, so the next `run` hits the existing compilation: this is
+        what lets `repro.adversary.search` evaluate generation after
+        generation of proposal populations at zero retrace cost
+        (``trace_count`` stays 1 — asserted by its tests).
+        """
+        cells = list(cells)
+        if len(cells) != len(self.cells):
+            raise ValueError(
+                f"set_cells needs {len(self.cells)} cells (engine shape), got {len(cells)}")
+        # every name must resolve inside the compiled banks — the group-key
+        # check alone is blind in group=False mode, where keys are constant
+        for c in cells:
+            for bank, name, axis in ((self.rule_bank, c.rule, "rule"),
+                                     (self.attack_bank, c.attack, "attack"),
+                                     (self.adversary_bank, c.adversary, "adversary"),
+                                     (self.codec_bank, c.codec, "codec")):
+                if name not in bank:
+                    raise ValueError(
+                        f"set_cells: {axis} {name!r} is outside this engine's "
+                        f"compiled bank {bank}; rebuild a GridEngine to change "
+                        f"the grid's structure")
+            if c.scenario is not None and c.scenario not in self.scenario_bank:
+                raise ValueError(
+                    f"set_cells: scenario {c.scenario!r} is outside this "
+                    f"engine's compiled bank {self.scenario_bank}")
+        if self._group_keys(self.cells) != self._group_keys(cells):
+            raise ValueError(
+                "set_cells cells must keep the per-position (rule, attack, "
+                "adversary, codec) group keys; rebuild a GridEngine to change "
+                "the grid's structure")
+        for c_old, c_new in zip(self.cells, cells):
+            if (c_new.scenario is None) != (c_old.scenario is None):
+                raise ValueError("set_cells cannot move cells across the sync/net split")
+        if not self._adv_engaged and any(c.adversary != "none" for c in cells):
+            raise ValueError(
+                "set_cells: this engine compiled without the adversary stage "
+                "(all cells were adversary='none'); rebuild a GridEngine to add one")
+        if self._adv_engaged and any(c.theta is not None and len(c.theta) != adv_lib.THETA_DIM
+                                     for c in cells):
+            raise ValueError(f"cell theta must have {adv_lib.THETA_DIM} entries")
+        # bind BEFORE committing, so a failure leaves the engine untouched
+        old_cells = self.cells
+        try:
+            self.cells = cells
+            self._bind_cells(cells)
+        except Exception:
+            self.cells = old_cells
+            self._bind_cells(old_cells)
+            raise
+        self._cell_perm = jax.tree_util.tree_map(lambda x: x[self._perm], self._cell_stack)
+
     def _build_step(self, rules: tuple[str, ...], attacks: tuple[str, ...],
-                    codecs: tuple[str, ...]):
+                    codecs: tuple[str, ...], adversaries: tuple[str, ...] | None = None):
         wire_bank = byz_lib.wire_attack_bank(attacks)
         if self.net_mode:
             return build_cell_runtime_step(
                 self._grad_fn, self.runtime, rules, byz_lib.message_attack_bank(attacks),
-                codecs=codecs, wire_attacks=wire_bank,
+                codecs=codecs, wire_attacks=wire_bank, adversaries=adversaries,
                 screen_chunk=self._screen_chunk,
             )
         return build_cell_step(
             self._grad_fn, self._adjacency, rules, byz_lib.attack_bank(attacks),
-            codecs=codecs, wire_attacks=wire_bank,
+            codecs=codecs, wire_attacks=wire_bank, adversaries=adversaries,
             screen_chunk=self._screen_chunk,
         )
 
@@ -320,7 +407,11 @@ class GridEngine:
         # the net path, per-sender on the broadcast path
         shape = (e, m, m, dim) if self.runtime is not None else (e, m, dim)
         comm = comm_lib.init_residual(shape, bank)
-        return BridgeState(params=stacked, t=t, key=keys, net=net, comm=comm)
+        # adversary carry: present engine-wide iff any adversary in the bank
+        # is stateful (same uniformity constraint); stateless cells thread it
+        # through untouched (all-zeros in, all-zeros out)
+        adv = adv_lib.init_state(dim, lead=(e,)) if self._adv_stateful else None
+        return BridgeState(params=stacked, t=t, key=keys, net=net, comm=comm, adv=adv)
 
     def run(self, state: BridgeState, batches, *, chunk: int | None = None):
         """Scan all cells over ``batches`` (a pytree of ``[T, ...]`` arrays,

@@ -27,6 +27,13 @@ class Cell(NamedTuple):
     ``scenario`` is ``None`` for the synchronous broadcast path, or a
     `repro.net.scenarios` name for the unreliable-network path.  ``codec``
     names the wire format (`repro.comm`) neighbor exchange travels in.
+    ``adversary`` names a `repro.adversary` entry (adaptive or re-registered
+    static; ``"none"`` keeps the classic attack-only path), ``theta`` its
+    optional per-cell hyperparameter override (`THETA_DIM` floats — the
+    red-team search's proposal vector), and ``mask_seed`` the draw that
+    picks *which* nodes are Byzantine (None falls back to the grid's shared
+    ``byzantine_seed`` — the pre-fix behavior where every seed reran the
+    same mask).
     """
 
     rule: str
@@ -35,12 +42,28 @@ class Cell(NamedTuple):
     seed: int
     scenario: str | None = None
     codec: str = "identity"
+    adversary: str = "none"
+    mask_seed: int | None = None
+    theta: tuple | None = None
 
     @property
     def tag(self) -> str:
         """Stable result-store key (file stem) for this cell.  Identity-codec
-        tags match the pre-codec layout, so existing stores stay resumable."""
+        / no-adversary tags match the pre-codec layout, so existing stores
+        stay resumable — EXCEPT cells whose Byzantine placement actually
+        changed under the mask_seed fix (mask_seed != 0 with a live mask),
+        which get a ``_m<seed>`` marker so resumable stores never silently
+        mix old-mask and new-mask results under one key."""
         base = f"{self.rule}_{self.attack}_b{self.b}_s{self.seed}"
+        if (self.mask_seed not in (None, 0) and self.b > 0
+                and not (self.attack == "none" and self.adversary == "none")):
+            base = f"{base}_m{self.mask_seed}"
+        if self.adversary != "none":
+            base = f"{base}_adv_{self.adversary}"
+        if self.theta is not None:
+            import zlib
+
+            base = f"{base}_th{zlib.crc32(repr(tuple(self.theta)).encode()):08x}"
         if self.scenario:
             base = f"{base}_{self.scenario}"
         return f"{base}_{self.codec}" if self.codec != "identity" else base
@@ -64,13 +87,20 @@ class ExperimentGrid:
     seeds: Sequence[int] = (0,)
     scenarios: Sequence[str] | None = None
     codecs: Sequence[str] = ("identity",)
+    adversaries: Sequence[str] = ("none",)
     lam: float = 1.0
     t0: float = 50.0
     lr: float = 0.0
     byzantine_seed: int = 0
+    # seed-axis sweeps vary WHICH nodes are Byzantine (mask_seed =
+    # byzantine_seed + seed), not just data/init.  False restores the legacy
+    # behavior where one shared mask made every "seed" replicate the same
+    # Byzantine placement.
+    mask_from_seed: bool = True
 
     def __post_init__(self):
-        for axis in ("rules", "attacks", "byzantine_counts", "seeds", "scenarios", "codecs"):
+        for axis in ("rules", "attacks", "byzantine_counts", "seeds", "scenarios",
+                     "codecs", "adversaries"):
             vals = getattr(self, axis)
             if vals is not None and len(vals) != len(set(vals)):
                 raise ValueError(f"duplicate entries on grid axis {axis}: {vals}")
@@ -81,8 +111,11 @@ class ExperimentGrid:
                 byz_lib.get_attack(attack)  # raises for message-only attacks
             else:
                 byz_lib.get_message_attack(attack)
+        from repro.adversary import get_adversary
         from repro.comm import get_codec
 
+        for adv in self.adversaries:
+            get_adversary(adv)
         for codec in self.codecs:
             get_codec(codec)
         if self.scenarios is not None:
@@ -103,16 +136,17 @@ class ExperimentGrid:
     def num_cells(self) -> int:
         s = len(self.scenarios) if self.scenarios else 1
         return (len(self.rules) * len(self.attacks) * len(self.byzantine_counts)
-                * len(self.seeds) * s * len(self.codecs))
+                * len(self.seeds) * s * len(self.codecs) * len(self.adversaries))
 
     def cells(self) -> list[Cell]:
         """Rule-major expansion of the cross product."""
         scen = self.scenarios if self.scenarios is not None else (None,)
         return [
-            Cell(r, a, b, s, sc, cd)
-            for r, a, b, s, sc, cd in itertools.product(
+            Cell(r, a, b, s, sc, cd, adv,
+                 mask_seed=(self.byzantine_seed + s) if self.mask_from_seed else None)
+            for r, a, b, s, sc, cd, adv in itertools.product(
                 self.rules, self.attacks, self.byzantine_counts, self.seeds, scen,
-                self.codecs,
+                self.codecs, self.adversaries,
             )
         ]
 
@@ -139,9 +173,12 @@ def default_topology(num_nodes: int, rules: Sequence[str], byzantine_counts: Seq
 
 def pick_byz_mask(num_nodes: int, cell: Cell, byzantine_seed: int = 0) -> np.ndarray:
     """The cell's attacking-node mask — exactly `BridgeTrainer.__init__`'s
-    rule: no attackers when the attack is 'none' or b == 0, else a seeded
-    draw of b nodes (shared across cells with equal b)."""
-    if cell.attack == "none" or cell.b == 0:
+    rule: no attackers when neither an attack nor an adversary is named or
+    b == 0, else a seeded draw of b nodes.  The draw uses the cell's own
+    ``mask_seed`` when set (seed-axis sweeps then vary *which* nodes attack),
+    falling back to the grid-shared ``byzantine_seed``."""
+    if (cell.attack == "none" and cell.adversary == "none") or cell.b == 0:
         return np.zeros((num_nodes,), dtype=bool)
     nbyz = min(cell.b, num_nodes)
-    return np.asarray(byz_lib.pick_byzantine_mask(num_nodes, nbyz, byzantine_seed))
+    seed = cell.mask_seed if cell.mask_seed is not None else byzantine_seed
+    return np.asarray(byz_lib.pick_byzantine_mask(num_nodes, nbyz, seed))

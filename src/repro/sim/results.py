@@ -34,7 +34,9 @@ def collect(cells: Sequence[Cell], metrics: dict, *, meta: dict | None = None) -
     for i, c in enumerate(cells):
         rec = {
             "rule": c.rule, "attack": c.attack, "b": int(c.b), "seed": int(c.seed),
-            "scenario": c.scenario, "codec": c.codec,
+            "scenario": c.scenario, "codec": c.codec, "adversary": c.adversary,
+            "mask_seed": c.mask_seed,
+            "theta": None if c.theta is None else [float(x) for x in c.theta],
         }
         for k in _FINAL_KEYS:
             if k in host:
@@ -48,8 +50,13 @@ def collect(cells: Sequence[Cell], metrics: dict, *, meta: dict | None = None) -
 
 def cell_of(record: dict) -> Cell:
     """The grid `Cell` a record describes (tag round-trips through this)."""
+    theta = record.get("theta")
+    mask_seed = record.get("mask_seed")
     return Cell(record["rule"], record["attack"], int(record["b"]), int(record["seed"]),
-                record.get("scenario"), record.get("codec", "identity"))
+                record.get("scenario"), record.get("codec", "identity"),
+                record.get("adversary", "none"),
+                None if mask_seed is None else int(mask_seed),
+                None if theta is None else tuple(float(x) for x in theta))
 
 
 @dataclasses.dataclass

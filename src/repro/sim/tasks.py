@@ -1,0 +1,78 @@
+"""The canonical smoke task grid consumers share.
+
+Breakdown certification (`repro.adversary.breakdown` via ``sweep --mode
+breakdown`` and ``benchmarks/breakdown_bench.py``) and the red-team search
+CLI all drive the same paper-scale task: the MNIST-like linear classifier
+with a non-iid partition, scanned as stacked batches, scored by honest test
+accuracy.  One builder keeps the three entry points certifying the *same*
+task — they had already begun to drift apart as inline copies.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LinearTask(NamedTuple):
+    """Everything a grid consumer needs to run + score the linear task."""
+
+    grad_fn: Callable  # (node_params, batch) -> (loss, grads)
+    init_fn: Callable  # seed -> [M, ...] replicated params
+    batches: Any  # [T, ...] stacked batch pytree for scan-over-ticks (None if ticks=0)
+    eval_accuracy: Callable  # (params [M, ...], honest_mask [M]) -> mean acc
+    x_test: jax.Array
+    y_test: jax.Array
+    # a FRESH per-tick batch closure (stack_node_batches closures advance a
+    # private rng per call, so this one is independent of `batches`' draws
+    # but replays the identical sequence) — for step-at-a-time consumers
+    # (ByRDiE sweeps, BRDSO steps) that don't scan stacked batches
+    batch_fn: Callable = None
+
+
+def linear_task(num_nodes: int, ticks: int, *, partition: str = "extreme",
+                batch: int = 32, num_train: int = 2000, num_test: int = 400,
+                seed: int = 0) -> LinearTask:
+    """Assemble the MNIST-like linear task for ``num_nodes`` nodes over
+    ``ticks`` stacked batches.  ``partition="extreme"`` (each node sees only
+    one class — consensus is *required* for test accuracy, which is exactly
+    what adaptive adversaries break) needs ``num_nodes >= 10``."""
+    from repro.core import replicate
+    from repro.data import (
+        make_mnist_like,
+        partition_extreme_noniid,
+        partition_iid,
+        partition_moderate_noniid,
+    )
+    from repro.data.partition import stack_node_batches
+    from repro.models import small
+    from repro.sim.engine import stack_batches
+
+    part = {"iid": partition_iid, "extreme": partition_extreme_noniid,
+            "moderate": partition_moderate_noniid}[partition]
+    x, y, xt, yt = make_mnist_like(num_train, num_test, seed=seed)
+    shards = part(x, y, num_nodes, seed=seed)
+    batches = None
+    if ticks > 0:
+        bf = stack_node_batches(shards, batch, seed=seed)
+        batches = stack_batches(
+            lambda i: jax.tree_util.tree_map(jnp.asarray, bf(i)), ticks)
+    xt, yt = jnp.asarray(xt), jnp.asarray(yt)
+
+    def grad_fn(params, b):
+        return jax.value_and_grad(lambda p: small.linear_loss(p, b))(params)
+
+    def init_fn(s):
+        key = jax.random.PRNGKey(s)
+        return replicate(small.init_linear(key), num_nodes, perturb=0.01, key=key)
+
+    def eval_accuracy(params, honest_mask):
+        accs = [float(small.linear_accuracy(
+            jax.tree_util.tree_map(lambda leaf: leaf[j], params), xt, yt))
+            for j in np.nonzero(np.asarray(honest_mask))[0]]
+        return float(np.mean(accs)) if accs else 0.0
+
+    return LinearTask(grad_fn, init_fn, batches, eval_accuracy, xt, yt,
+                      batch_fn=stack_node_batches(shards, batch, seed=seed))

@@ -1,0 +1,431 @@
+"""repro.adversary: stateful adaptive adversaries + breakdown certification.
+
+The subsystem's contract (ISSUE 4 acceptance):
+* (a) a rule x adversary x b grid compiles ONCE and every cell is
+  bit-identical to its sequential `BridgeTrainer` run;
+* (b) property tests — an adversary with b=0 (empty Byzantine mask) is
+  bit-identical to the `none` attack path; an adversary under the identity
+  codec matches the adversary under the no-comm path; `AdvState` is inert
+  (all-zeros carry) for stateless attacks riding in a stateful bank;
+* (c) at least one adaptive adversary achieves strictly worse honest loss
+  (on the global objective — Eq. (1)) than the best static attack at equal b;
+* (d) breakdown certification yields a monotone-certified b* per rule, with
+  bisect and ladder modes agreeing;
+* (e) the red-team search runs every proposal generation at zero retrace
+  cost (trace_count stays 1);
+plus the four-tier attack-namespace partition and the mask_seed regression
+(two seeds => two different Byzantine masks).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adversary import (
+    ADVERSARIES,
+    get_adversary,
+    registry_tiers,
+)
+from repro.adversary import attack_names as all_attack_names
+from repro.adversary.breakdown import BreakdownConfig, BreakdownEngine, feasible_b
+from repro.adversary.search import SearchConfig, red_team_search
+from repro.core import BridgeConfig, BridgeTrainer, erdos_renyi, replicate
+from repro.core import byzantine as byz_lib
+from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
+from repro.sim import Cell, ExperimentGrid, GridEngine
+from repro.sim.engine import stack_batches
+
+M, D, T = 10, 4, 12
+ADAPTIVE = ("ipm", "alie_online", "dissensus", "inner_max")
+
+
+def quad_grad_fn(params, batch):
+    w, c = params["w"], batch
+    loss = 0.5 * jnp.sum((w - c) ** 2)
+    return loss, {"w": w - c}
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return erdos_renyi(M, 0.8, 2, seed=1)
+
+
+@pytest.fixture(scope="module")
+def targets():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(3.0 * rng.normal(size=(M, D)), jnp.float32)
+
+
+def init_fn(seed):
+    return replicate({"w": jnp.zeros(D)}, M, perturb=0.1, key=jax.random.PRNGKey(seed))
+
+
+@pytest.fixture(scope="module")
+def batches(targets):
+    return stack_batches(lambda i: targets, T)
+
+
+def _run_trainer(topo, targets, *, rule="trimmed_mean", b=0, adversary="none",
+                 attack="none", codec="identity", mask_seed=0, seed=0, steps=T):
+    cfg = BridgeConfig(topology=topo, rule=rule, num_byzantine=b, attack=attack,
+                       adversary=adversary, codec=codec, byzantine_seed=mask_seed,
+                       lam=1.0, t0=10.0)
+    tr = BridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(seed), seed=seed)
+    losses = []
+    for _ in range(steps):
+        st, m = tr.step(st, targets)
+        losses.append(m["loss"])
+    return st, np.asarray(jnp.stack(losses))
+
+
+# ---------------------------------------------------------------------------
+# registry: the four-tier namespace partition
+# ---------------------------------------------------------------------------
+
+
+def test_registry_tiers_partition_every_name_exactly_once():
+    tiers = registry_tiers()
+    assert set(tiers) == {"broadcast", "message", "wire", "adversary"}
+    names = [n for tier in tiers.values() for n in tier]
+    dupes = {n for n in names if names.count(n) > 1}
+    assert not dupes, f"names in more than one tier: {dupes}"
+    assert set(all_attack_names()) == set(names)
+    # byzantine.attack_names() is exactly the three non-adversary tiers
+    assert set(byz_lib.attack_names()) == (
+        tiers["broadcast"] | tiers["message"] | tiers["wire"])
+    # every broadcast attack doubles as a stateless adversary; adaptive
+    # adversaries are stateful and in the adversary tier only
+    for n in tiers["broadcast"]:
+        assert not get_adversary(n).stateful
+    for n in ADAPTIVE:
+        assert n in tiers["adversary"] and get_adversary(n).stateful
+    with pytest.raises(ValueError, match="unknown adversary"):
+        get_adversary("not_an_adversary")
+
+
+def test_theta_specs_well_formed():
+    from repro.adversary import THETA_DIM
+
+    for name, adv in ADVERSARIES.items():
+        assert len(adv.default_theta) == THETA_DIM, name
+        assert len(adv.theta_bounds) == THETA_DIM, name
+        for x, (lo, hi) in zip(adv.default_theta, adv.theta_bounds):
+            if hi > lo:
+                assert lo <= x <= hi or x == 0.0, (name, x, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# (b) property tests
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("adversary", ADAPTIVE)
+def test_b0_adversary_bit_identical_to_none_path(topo, targets, adversary):
+    """An empty Byzantine mask makes every adversary exactly the `none`
+    path: honest rows pass through the substitution bitwise."""
+    st_none, loss_none = _run_trainer(topo, targets, b=0, steps=8)
+    st_adv, loss_adv = _run_trainer(topo, targets, b=0, adversary=adversary, steps=8)
+    np.testing.assert_array_equal(np.asarray(st_none.params["w"]),
+                                  np.asarray(st_adv.params["w"]))
+    np.testing.assert_array_equal(loss_none, loss_adv)
+
+
+@pytest.mark.parametrize("group", [True, False])
+def test_adv_state_inert_for_stateless_attacks(topo, targets, batches, group):
+    """A stateless (re-registered static) adversary riding in a stateful bank
+    threads the all-zeros AdvState through untouched."""
+    grid = ExperimentGrid(topo, ("trimmed_mean",), ("none",), (2,), (0,),
+                          adversaries=("random", "ipm"), lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn, group=group)
+    state = engine.init(init_fn)
+    final, _ = engine.run(state, batches)
+    assert final.adv is not None
+    i_static = [c.adversary for c in engine.cells].index("random")
+    i_adaptive = [c.adversary for c in engine.cells].index("ipm")
+    for leaf in jax.tree_util.tree_leaves(final.adv):
+        assert not np.any(np.asarray(leaf[i_static])), "stateless cell mutated AdvState"
+    # ...while the stateful cell actually tracked something
+    assert any(np.any(np.asarray(leaf[i_adaptive]))
+               for leaf in jax.tree_util.tree_leaves(final.adv))
+
+
+def test_adversary_identity_codec_matches_no_comm_path(topo, targets, batches):
+    """adversary x identity-codec (inside a lossy multi-codec grid bank) ==
+    adversary with no wire codec at all."""
+    grid = ExperimentGrid(topo, ("trimmed_mean",), ("none",), (2,), (0,),
+                          adversaries=("ipm",), codecs=("identity", "int8"),
+                          lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn)
+    state = engine.init(init_fn)
+    final, metrics = engine.run(state, batches)
+    i_ident = [c.codec for c in engine.cells].index("identity")
+    cell = engine.cells[i_ident]
+    st, losses = _run_trainer(topo, targets, b=2, adversary="ipm",
+                              mask_seed=cell.mask_seed, seed=cell.seed)
+    np.testing.assert_array_equal(np.asarray(st.params["w"]),
+                                  np.asarray(final.params["w"][i_ident]))
+    np.testing.assert_array_equal(losses, np.asarray(metrics["loss"][i_ident]))
+
+
+# ---------------------------------------------------------------------------
+# (a) grid: compile-once + per-cell bit-identity with the trainer
+# ---------------------------------------------------------------------------
+
+
+def test_rule_adversary_b_grid_compiles_once_and_matches_trainer(topo, targets, batches):
+    grid = ExperimentGrid(topo, ("trimmed_mean", "median"), ("none",), (1, 2), (0, 1),
+                          adversaries=("none", "ipm", "inner_max"), lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn)
+    state = engine.init(init_fn)
+    final, metrics = engine.run(state, batches)
+    assert engine.trace_count == 1  # rule x adversary x b x seed, ONE compile
+    assert engine.num_cells == 24
+    for i in [0, 5, 11, 14, 19, 23]:  # spot-check across rules/advs/b/seeds
+        cell = engine.cells[i]
+        st, losses = _run_trainer(
+            topo, targets, rule=cell.rule, b=cell.b, adversary=cell.adversary,
+            mask_seed=cell.mask_seed, seed=cell.seed)
+        np.testing.assert_array_equal(np.asarray(st.params["w"]),
+                                      np.asarray(final.params["w"][i]),
+                                      err_msg=f"params diverged for {cell}")
+        np.testing.assert_array_equal(losses, np.asarray(metrics["loss"][i]),
+                                      err_msg=f"loss trace diverged for {cell}")
+
+
+def test_mask_seed_varies_byzantine_placement(topo):
+    """Regression (ISSUE 4): the seed axis must vary WHICH nodes are
+    Byzantine, not just data/init."""
+    grid = ExperimentGrid(topo, ("trimmed_mean",), ("random",), (2,), (0, 1, 2, 3),
+                          lam=1.0, t0=10.0)
+    cells = grid.cells()
+    assert [c.mask_seed for c in cells] == [0, 1, 2, 3]
+    from repro.sim import pick_byz_mask
+
+    masks = [pick_byz_mask(M, c) for c in cells]
+    assert any(not np.array_equal(masks[0], mk) for mk in masks[1:]), \
+        "all seeds produced the same Byzantine mask"
+    # legacy escape hatch: one shared mask across the seed axis
+    legacy = ExperimentGrid(topo, ("trimmed_mean",), ("random",), (2,), (0, 1),
+                            mask_from_seed=False, lam=1.0, t0=10.0)
+    lm = [pick_byz_mask(M, c) for c in legacy.cells()]
+    np.testing.assert_array_equal(lm[0], lm[1])
+
+
+# ---------------------------------------------------------------------------
+# runtime path: lifted adversaries + channel knowledge
+# ---------------------------------------------------------------------------
+
+
+def test_runtime_ideal_channel_matches_broadcast_path(topo, targets):
+    st_sync, loss_sync = _run_trainer(topo, targets, b=2, adversary="ipm", steps=8)
+    cfg = AsyncBridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                            adversary="ipm", lam=1.0, t0=10.0,
+                            channel=ChannelConfig.ideal())
+    tr = AsyncBridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    losses = []
+    for _ in range(8):
+        st, m = tr.step(st, targets)
+        losses.append(m["loss"])
+    np.testing.assert_array_equal(np.asarray(st_sync.params["w"]),
+                                  np.asarray(st.params["w"]))
+    np.testing.assert_array_equal(loss_sync, np.asarray(jnp.stack(losses)))
+
+
+@pytest.mark.parametrize("adversary", ["dissensus", "alie_online"])
+def test_adversary_over_lossy_capped_channel_runs(topo, targets, adversary):
+    """Message-granularity adaptive variants over a dropping, laggy,
+    bandwidth-capped channel: the staleness-exploiting path stays finite."""
+    cfg = AsyncBridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                            adversary=adversary, lam=1.0, t0=10.0,
+                            channel=ChannelConfig(drop_prob=0.2, latency_max=2,
+                                                  bandwidth_cap=2))
+    tr = AsyncBridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    for _ in range(6):
+        st, m = tr.step(st, targets)
+    assert np.isfinite(float(m["loss"]))
+    assert st.adv is not None
+
+
+def test_net_grid_adversary_cells_match_async_trainer(topo, targets, batches):
+    """scenario x adversary cells through the scenario-banked grid runtime:
+    the ideal-channel adversary cell is bit-identical to its dedicated
+    AsyncBridgeTrainer run."""
+    from repro.net.scenarios import get_scenario
+
+    grid = ExperimentGrid(topo, ("trimmed_mean",), ("none",), (2,), (0,),
+                          scenarios=("ideal", "lossy"),
+                          adversaries=("none", "ipm"), lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn, num_ticks=T)
+    state = engine.init(init_fn)
+    final, metrics = engine.run(state, batches)
+    assert engine.trace_count == 1
+    i = [(c.scenario, c.adversary) for c in engine.cells].index(("ideal", "ipm"))
+    cell = engine.cells[i]
+    spec = get_scenario("ideal")
+    cfg = AsyncBridgeConfig(
+        topology=topo, rule="trimmed_mean", num_byzantine=2, adversary="ipm",
+        lam=1.0, t0=10.0, channel=spec.channel,
+        staleness_bound=spec.staleness_bound,
+        schedule=engine.runtime.schedule_for("ideal"),
+        byzantine_seed=cell.mask_seed)
+    tr = AsyncBridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    st, ms = tr.run_scan(st, batches)
+    np.testing.assert_array_equal(np.asarray(st.params["w"]),
+                                  np.asarray(final.params["w"][i]))
+    np.testing.assert_array_equal(np.asarray(ms["loss"]),
+                                  np.asarray(metrics["loss"][i]))
+
+
+def test_delivered_coord_mask_matches_exchange_draw():
+    from repro.net.runtime import UnreliableRuntime
+
+    topo = erdos_renyi(6, 0.9, 1, seed=0)
+    capped = UnreliableRuntime(topo, ChannelConfig(bandwidth_cap=3))
+    key = jax.random.PRNGKey(7)
+    mask = capped.delivered_coord_mask(key, D)
+    assert mask is not None and int(jnp.sum(mask)) == 3
+    # same derivation exchange uses internally: split(key)[1] -> coord_mask
+    expect = capped.channel.coord_mask(jax.random.split(key)[1], D)
+    np.testing.assert_array_equal(np.asarray(mask), np.asarray(expect))
+    uncapped = UnreliableRuntime(topo, ChannelConfig.ideal())
+    assert uncapped.delivered_coord_mask(key, D) is None
+
+
+# ---------------------------------------------------------------------------
+# (c) adaptive beats the best static attack at equal b
+# ---------------------------------------------------------------------------
+
+
+def test_adaptive_strictly_worse_honest_loss_than_best_static():
+    """On the global objective (Eq. (1): mean local risk over ALL nodes,
+    evaluated at honest iterates), the adaptive tier must beat every static
+    attack at equal b — the reason the subsystem exists.  Needs enough nodes
+    for heterogeneity to matter and a horizon long enough for trajectory
+    tracking to pay off (the adaptive edge IS time-coupling)."""
+    m2, d2, t2 = 12, 5, 50
+    topo2 = erdos_renyi(m2, 0.8, 3, seed=1)
+    rng = np.random.default_rng(0)
+    tgt = jnp.asarray(3.0 * rng.normal(size=(m2, d2)), jnp.float32)
+
+    def init2(seed):
+        return replicate({"w": jnp.zeros(d2)}, m2, perturb=0.1,
+                         key=jax.random.PRNGKey(seed))
+
+    statics = ("random", "sign_flip", "same_value", "alie", "shift")
+    adaptives = ("alie_online", "inner_max")
+    grid = ExperimentGrid(topo2, ("trimmed_mean",), ("none",), (2,), (0,),
+                          adversaries=statics + adaptives, lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn)
+    state = engine.init(init2)
+    final, _ = engine.run(state, stack_batches(lambda i: tgt, t2))
+
+    def global_honest_loss(i):
+        w = np.asarray(final.params["w"][i])  # [M, D]
+        hm = ~engine.byz_masks[i]
+        c = np.asarray(tgt)
+        # f(w) = (1/M) sum_j 0.5 ||w - c_j||^2 at each honest iterate; the
+        # guarantee is per honest node, so breakdown is the WORST honest
+        # node's global loss
+        per_node = 0.5 * ((w[hm][:, None, :] - c[None, :, :]) ** 2).sum(-1).mean(1)
+        return float(per_node.max())
+
+    loss_of = {engine.cells[i].adversary: global_honest_loss(i)
+               for i in range(engine.num_cells)}
+    best_static = max(loss_of[a] for a in statics)
+    best_adaptive = max(loss_of[a] for a in adaptives)
+    assert best_adaptive > best_static, (
+        f"adaptive tier ({best_adaptive:.4f}) failed to beat the best static "
+        f"attack ({best_static:.4f}) at b=2: {loss_of}")
+
+
+# ---------------------------------------------------------------------------
+# (d) breakdown certification
+# ---------------------------------------------------------------------------
+
+
+def test_breakdown_certification_monotone_and_bisect_matches_ladder(topo, targets, batches):
+    cfg = BreakdownConfig(mode="ladder", seeds=(0,), loss_ratio=1.5, b_max=3)
+    eng = BreakdownEngine(topo, ("trimmed_mean", "mean"), ("random", "inner_max"),
+                          quad_grad_fn, init_fn, batches, lam=1.0, t0=10.0, config=cfg)
+    res = eng.run()
+    for rule, rrec in res["rules"].items():
+        assert rrec["feasible_b"] == feasible_b(rule, topo, 3)
+        for adv, arec in rrec["adversaries"].items():
+            bstar, probes = arec["bstar"], arec["probes"]
+            assert arec["certified_monotone"]
+            # the certificate: every b <= b* was probed and survived
+            for b in range(1, bstar + 1):
+                assert probes[str(b)]["survived"], (rule, adv, b)
+            if str(bstar + 1) in probes:
+                assert not probes[str(bstar + 1)]["survived"]
+        assert rrec["bstar_worst_adversary"] == min(
+            a["bstar"] for a in rrec["adversaries"].values())
+    # no screening ("mean") breaks immediately under the random broadcast
+    assert res["rules"]["mean"]["adversaries"]["random"]["bstar"] == 0
+    # bisect agrees with the exhaustive ladder
+    cfg2 = BreakdownConfig(mode="bisect", seeds=(0,), loss_ratio=1.5, b_max=3)
+    eng2 = BreakdownEngine(topo, ("trimmed_mean",), ("inner_max",),
+                           quad_grad_fn, init_fn, batches, lam=1.0, t0=10.0, config=cfg2)
+    res2 = eng2.run()
+    assert (res2["rules"]["trimmed_mean"]["adversaries"]["inner_max"]["bstar"]
+            == res["rules"]["trimmed_mean"]["adversaries"]["inner_max"]["bstar"])
+    with pytest.raises(ValueError, match="reference"):
+        BreakdownEngine(topo, ("mean",), ("none",), quad_grad_fn, init_fn, batches)
+
+
+# ---------------------------------------------------------------------------
+# (e) red-team search: zero retrace across generations
+# ---------------------------------------------------------------------------
+
+
+def test_red_team_search_single_compile_and_improves(topo, targets, batches):
+    ledger = red_team_search(
+        topo, "trimmed_mean", "ipm", 2, quad_grad_fn, init_fn, batches,
+        lam=1.0, t0=10.0,
+        config=SearchConfig(population=4, generations=3, elite=2, seed=0))
+    assert ledger["trace_count"] == 1, "set_cells retraced the engine"
+    assert len(ledger["generations"]) == 3
+    fits = [g["best_fitness"] for g in ledger["generations"]]
+    assert ledger["best_fitness"] == max(fits)
+    assert len(ledger["best_theta"]) == 4
+    # theta is live data: proposals produce distinct fitness values
+    assert len({round(f, 6) for f in fits if np.isfinite(f)}) >= 1
+    with pytest.raises(ValueError, match="searchable"):
+        red_team_search(topo, "trimmed_mean", "random", 2, quad_grad_fn,
+                        init_fn, batches, config=SearchConfig(population=2, generations=1))
+
+
+def test_set_cells_rejects_structure_changes(topo, targets, batches):
+    grid = ExperimentGrid(topo, ("trimmed_mean",), ("none",), (2,), (0,),
+                          adversaries=("ipm",), lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn)
+    with pytest.raises(ValueError, match="compiled bank"):
+        engine.set_cells([Cell("trimmed_mean", "none", 2, 0, adversary="inner_max")])
+    with pytest.raises(ValueError, match="cells"):
+        engine.set_cells([])
+    # same structure, new data: allowed, and reuses the compiled program
+    state = engine.init(init_fn)
+    engine.run(state, batches)
+    engine.set_cells([Cell("trimmed_mean", "none", 2, 0, adversary="ipm",
+                           mask_seed=5, theta=(12.0, 2.0, 0.0, 0.0))])
+    engine.run(state, batches)
+    assert engine.trace_count == 1
+
+
+# ---------------------------------------------------------------------------
+# baselines wired into the CLI harness (ByRDiE / BRDSO)
+# ---------------------------------------------------------------------------
+
+
+def test_byrdie_brdso_cli_harness_smoke():
+    from benchmarks.common import run_brdso, run_byrdie
+
+    r = run_byrdie(num_nodes=6, num_byzantine=1, sweeps=1, block=4096)
+    assert np.isfinite(r["loss"]) and 0.0 <= r["accuracy"] <= 1.0
+    assert r["scalars_sent"] == 7850.0  # d scalars broadcast per sweep, exact
+    r = run_brdso(num_nodes=6, num_byzantine=1, steps=5)
+    assert np.isfinite(r["loss"]) and 0.0 <= r["accuracy"] <= 1.0

@@ -217,8 +217,11 @@ def test_topk_with_error_feedback_converges(topo, targets):
 
 
 def _sequential(topo, targets, cell):
+    # the cell's mask_seed (seed-axis-varying since ISSUE 4) maps onto the
+    # trainer's byzantine_seed — same draw, same attacking nodes
     cfg = BridgeConfig(topology=topo, rule=cell.rule, num_byzantine=cell.b,
-                       attack=cell.attack, codec=cell.codec, lam=1.0, t0=10.0)
+                       attack=cell.attack, codec=cell.codec, lam=1.0, t0=10.0,
+                       byzantine_seed=cell.mask_seed if cell.mask_seed is not None else 0)
     tr = BridgeTrainer(cfg, quad_grad_fn)
     st = tr.init(init_fn(cell.seed), seed=cell.seed)
     losses = []

@@ -51,8 +51,11 @@ def batches(targets):
 
 
 def _sequential_sync(topo, targets, cell):
+    # the cell's mask_seed (seed-axis-varying since ISSUE 4) maps onto the
+    # trainer's byzantine_seed — same draw, same attacking nodes
     cfg = BridgeConfig(topology=topo, rule=cell.rule, num_byzantine=cell.b,
-                       attack=cell.attack, lam=1.0, t0=10.0)
+                       attack=cell.attack, lam=1.0, t0=10.0,
+                       byzantine_seed=cell.mask_seed if cell.mask_seed is not None else 0)
     tr = BridgeTrainer(cfg, quad_grad_fn)
     st = tr.init(init_fn(cell.seed), seed=cell.seed)
     losses = []
@@ -103,6 +106,7 @@ def test_net_grid_bit_equals_async_trainer(topo, targets, batches):
             lam=1.0, t0=10.0, channel=spec.channel,
             staleness_bound=spec.staleness_bound,
             schedule=engine.runtime.schedule_for(cell.scenario),
+            byzantine_seed=cell.mask_seed if cell.mask_seed is not None else 0,
         )
         tr = AsyncBridgeTrainer(cfg, quad_grad_fn)
         st = tr.init(init_fn(cell.seed), seed=cell.seed)
