@@ -42,7 +42,7 @@ SKIP = ("extrapolated_wall_s_all_cells", "seconds_per_cell")
 SKIP_PREFIXES = ("subprocess_baseline.", "sequential_inprocess_baseline.")
 
 DEFAULT_NAMES = ("BENCH_grid.json", "BENCH_net.json", "BENCH_comm.json",
-                 "BENCH_kernels.json", "BENCH_breakdown.json")
+                 "BENCH_kernels.json", "BENCH_breakdown.json", "BENCH_scale.json")
 
 
 def _higher_is_better(leaf: str) -> bool:

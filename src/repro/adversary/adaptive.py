@@ -159,14 +159,20 @@ def _dissensus_fn(ctx, state, theta, w, byz_mask, key, t):
     return _substitute(w, byz_mask, crafted), state
 
 
-def _dissensus_message_fn(ctx, state, theta, w, byz_mask, adjacency, key, t):
+def _dissensus_receiver_lies(ctx, state, theta, w, byz_mask):
+    """Shared by the dense and sparse message variants: the advanced state
+    and the per-RECEIVER crafted row (each receiver pushed outward along its
+    own side of the tracked axis — only expressible at message granularity)."""
     state, mu, pert = _dissensus_core(state, theta, w, byz_mask)
-    m = w.shape[0]
-    # push each RECEIVER outward along its own side of the axis — only
-    # expressible at message granularity (different lies per link)
     proj = (w - mu[None, :]) @ state.dir
     side = jnp.where(proj >= 0, 1.0, -1.0)
     crafted = mu[None, :] + side[:, None] * pert[None, :]  # [receiver, d]
+    return state, crafted
+
+
+def _dissensus_message_fn(ctx, state, theta, w, byz_mask, adjacency, key, t):
+    state, crafted = _dissensus_receiver_lies(ctx, state, theta, w, byz_mask)
+    m = w.shape[0]
     base = jnp.broadcast_to(w[None, :, :], (m,) + w.shape)
     lie = jnp.broadcast_to(crafted[:, None, :], (m,) + w.shape)
     if ctx.deliver_mask is not None:
@@ -177,8 +183,20 @@ def _dissensus_message_fn(ctx, state, theta, w, byz_mask, adjacency, key, t):
     return msgs, w, state
 
 
+def _dissensus_sparse_message_fn(ctx, state, theta, w, byz_mask, nbr, live, key, t):
+    del live
+    state, crafted = _dissensus_receiver_lies(ctx, state, theta, w, byz_mask)
+    base = nbr.gather_rows(w)  # [M, K, d]
+    lie = jnp.broadcast_to(crafted[:, None, :], base.shape)
+    if ctx.deliver_mask is not None:
+        lie = jnp.where(ctx.deliver_mask[None, None, :], lie, base)
+    msgs = jnp.where(nbr.gather_senders(byz_mask, fill=False)[:, :, None], lie, base)
+    return msgs, w, state
+
+
 register(Adversary(
     "dissensus", _dissensus_fn, stateful=True, message_fn=_dissensus_message_fn,
+    sparse_message_fn=_dissensus_sparse_message_fn,
     # theta: [z (band half-width in sigmas)]
     default_theta=(1.5, 0.0, 0.0, 0.0),
     theta_bounds=((0.5, 3.0), (0.0, 0.0), (0.0, 0.0), (0.0, 0.0)),

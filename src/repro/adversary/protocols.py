@@ -147,6 +147,13 @@ class Adversary:
     fn: Callable
     stateful: bool = False
     message_fn: Callable | None = None
+    # neighbor-indexed twin of message_fn (repro.core.neighbors):
+    # ``(ctx, state, theta, w, byz_mask, nbr, live [M,K], key, t)
+    # -> (msgs [M,K,d], self_view [M,d], state')`` — must be the bitwise
+    # gather of the dense tensor.  Broadcast-only adversaries derive it via
+    # `lift_message_sparse`; custom message_fn adversaries must supply it to
+    # run on the sparse runtime.
+    sparse_message_fn: Callable | None = None
     default_theta: tuple[float, ...] = (0.0,) * THETA_DIM
     theta_bounds: tuple[tuple[float, float], ...] = ((0.0, 0.0),) * THETA_DIM
 
@@ -171,6 +178,21 @@ def lift_message(adv: Adversary) -> Callable:
         m = w.shape[0]
         msgs = jnp.broadcast_to(w_bcast[None, :, :], (m,) + w.shape)
         return msgs, w_bcast, new_state
+
+    return mfn
+
+
+def lift_message_sparse(adv: Adversary) -> Callable:
+    """Neighbor-indexed `lift_message`: the crafted broadcast row, gathered
+    into each receiver's ``[K, d]`` slots — the bitwise gather of the dense
+    lift."""
+
+    def mfn(ctx, state, theta, w, byz_mask, nbr, live, key, t):
+        del live
+        w_bcast, new_state = adv.fn(ctx, state, theta, w, byz_mask, key, t)
+        if ctx.deliver_mask is not None:
+            w_bcast = jnp.where(ctx.deliver_mask[None, :], w_bcast, w)
+        return nbr.gather_rows(w_bcast), w_bcast, new_state
 
     return mfn
 
@@ -302,3 +324,26 @@ def apply_message_adversary_bank(bank, adv_idx, ctx, state, theta, w, byz_mask,
         for fn in fns
     ]
     return jax.lax.switch(adv_idx, branches, state, theta, w, byz_mask, adjacency, key, t)
+
+
+def apply_sparse_message_adversary_bank(bank, adv_idx, ctx, state, theta, w, byz_mask,
+                                        nbr, live, key, t):
+    """Neighbor-indexed `apply_message_adversary_bank`: per-slot lies on the
+    ``[M, K]`` layout (``nbr`` a `repro.core.neighbors.NeighborTable``)."""
+    fns = []
+    for a in bank:
+        if a.sparse_message_fn is not None:
+            fns.append(a.sparse_message_fn)
+        elif a.message_fn is None:
+            fns.append(lift_message_sparse(a))
+        else:
+            raise ValueError(
+                f"adversary {a.name!r} crafts per-link messages but has no "
+                f"sparse_message_fn — required on the neighbor-indexed runtime path")
+    if len(fns) == 1:
+        return fns[0](ctx, state, theta, w, byz_mask, nbr, live, key, t)
+    branches = [
+        (lambda fn: lambda st, th, ww, bm, lv, k, tt: fn(ctx, st, th, ww, bm, nbr, lv, k, tt))(fn)
+        for fn in fns
+    ]
+    return jax.lax.switch(adv_idx, branches, state, theta, w, byz_mask, live, key, t)

@@ -15,10 +15,15 @@ from repro.core.graph import (
     check_assumption4,
     complete_graph,
     erdos_renyi,
+    make_topology,
     metropolis_weights,
+    random_geometric,
     ring_of_cliques,
+    small_world,
+    toroidal_grid,
 )
 from repro.core.gossip import coordwise_gossip_leaf, gossip_screen_params, vector_rule_select
+from repro.core.neighbors import NeighborTable
 from repro.core.screening import RULES, get_rule, min_neighbors, screen_all, screen_views
 
 __all__ = [
@@ -27,7 +32,8 @@ __all__ = [
     "ATTACKS", "MESSAGE_ATTACKS", "attack_names", "get_attack",
     "get_message_attack", "pick_byzantine_mask",
     "Topology", "check_assumption4", "complete_graph", "erdos_renyi",
-    "metropolis_weights", "ring_of_cliques",
+    "make_topology", "metropolis_weights", "random_geometric",
+    "ring_of_cliques", "small_world", "toroidal_grid", "NeighborTable",
     "coordwise_gossip_leaf", "gossip_screen_params", "vector_rule_select",
     "RULES", "get_rule", "min_neighbors", "screen_all", "screen_views",
 ]

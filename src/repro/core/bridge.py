@@ -26,7 +26,9 @@ from repro.comm import codec as codec_lib
 from repro.comm import exchange as comm_lib
 from repro.core import byzantine as byz_lib
 from repro.core import screening
+from repro.core import neighbors as neighbors_lib
 from repro.core.graph import Topology
+from repro.core.neighbors import NeighborTable
 
 
 class BridgeState(NamedTuple):
@@ -102,6 +104,11 @@ class BridgeConfig:
     t0: float = 50.0
     lr: float = 0.0  # if > 0, use constant step size instead
     screen_chunk: int | None = 1 << 20  # coordinate streaming chunk
+    # neighbor-indexed [M, K] state layout (repro.core.neighbors): screening
+    # consumes gathered [M, K, d] views instead of masking the full [M, d]
+    # broadcast per node — bit-identical to the dense path (property-tested)
+    # and the only layout that scales past the dense O(M^2) wall
+    sparse: bool = False
 
     def step_size(self, t: jax.Array) -> jax.Array:
         if self.lr > 0:
@@ -174,7 +181,7 @@ def _cell_adv_idx(cell: CellParams):
     return cell.adv_idx
 
 
-def _wire_roundtrip(codec_bank, wire_bank, cell, sub, x, residual, byz, t, d):
+def _wire_roundtrip(codec_bank, wire_bank, cell, sub, x, residual, byz, t, d, eids=None):
     """Encode -> codeword attack -> decode, with error feedback.
 
     Returns ``(x_hat, residual')`` — what receivers see and the advanced
@@ -182,15 +189,36 @@ def _wire_roundtrip(codec_bank, wire_bank, cell, sub, x, residual, byz, t, d):
     payload (all-lossless codecs, no wire attacks) the wire is skipped
     entirely: the default identity path stays structurally identical to the
     uncompressed trainer, which is the bit-identity contract the tests pin.
+    ``eids`` (the per-link paths) re-keys every PRNG consumer — stochastic
+    codec rounding, randk index draws, randomized wire attacks — per *edge
+    id* instead of per tensor, so the dense ``[M, M, d]`` and sparse
+    ``[M, K, d]`` layouts produce bitwise-identical codewords on matching
+    edges (the dense<->sparse bit-identity contract for lossy codecs).
     """
     if comm_lib.bank_is_lossless(codec_bank) and all(a.name == "none" for a in wire_bank):
         return x, residual
     cidx = _cell_codec_idx(cell)
     comm_key = jax.random.fold_in(sub, COMM_SALT)
     wire_key = jax.random.fold_in(sub, WIRE_SALT)
-    msg, target = comm_lib.encode_bank(codec_bank, cidx, comm_key, x, residual)
-    msg = byz_lib.apply_wire_attack_bank(wire_bank, cell.attack_idx, msg, byz, wire_key, t, d)
-    return comm_lib.decode_bank(codec_bank, cidx, msg, target, residual, comm_key)
+    if eids is None:
+        msg, target = comm_lib.encode_bank(codec_bank, cidx, comm_key, x, residual)
+        msg = byz_lib.apply_wire_attack_bank(wire_bank, cell.attack_idx, msg, byz, wire_key, t, d)
+        return comm_lib.decode_bank(codec_bank, cidx, msg, target, residual, comm_key)
+
+    lead = x.shape[:-1]  # [M, M] or [M, K]
+
+    def per_edge(eid, x_e, byz_e, st_e):
+        ck = jax.random.fold_in(comm_key, eid)
+        wk = jax.random.fold_in(wire_key, eid)
+        msg, target = comm_lib.encode_bank(codec_bank, cidx, ck, x_e, st_e)
+        msg = byz_lib.apply_wire_attack_bank(wire_bank, cell.attack_idx, msg, byz_e, wk, t, d)
+        return comm_lib.decode_bank(codec_bank, cidx, msg, target, st_e, ck)
+
+    flat = lambda a: a.reshape((-1,) + a.shape[len(lead):])
+    st_flat = None if residual is None else jax.tree_util.tree_map(flat, residual)
+    x_hat, st = jax.vmap(per_edge)(flat(eids), flat(x), flat(byz), st_flat)
+    unflat = lambda a: a.reshape(lead + a.shape[1:])
+    return unflat(x_hat), (None if residual is None else jax.tree_util.tree_map(unflat, st))
 
 
 def _comm_metrics(codec_bank, cell, d: int, live_edges, residual) -> dict:
@@ -208,11 +236,17 @@ def _comm_metrics(codec_bank, cell, d: int, live_edges, residual) -> dict:
 
 
 def _grad_update_and_metrics(grad_fn, cell: CellParams, state: BridgeState, batch, y, unflatten):
-    """(Step 6) local gradient update at w_j(t) + shared diagnostics."""
+    """(Step 6) local gradient update at w_j(t) + shared diagnostics.
+
+    ``rho * g`` passes through `screening.fence` before the subtract: whether
+    XLA contracts ``y - rho * g`` into an FNMA is *program-shape dependent*,
+    and the grid's banked program and the trainer's single-bank program would
+    otherwise drift ~1 ULP/step apart — breaking the bit-for-bit
+    grid<->trainer contract the tests pin."""
     losses, grads = jax.vmap(grad_fn)(state.params, batch)
     g, _ = stack_flatten(grads)
     rho = cell_step_size(cell, state.t)
-    w_new = y - rho * g
+    w_new = y - screening.fence(rho * g)
     new_params = unflatten(w_new)
     # consensus diagnostic over honest nodes
     hm = ~cell.byz_mask
@@ -231,7 +265,7 @@ def _grad_update_and_metrics(grad_fn, cell: CellParams, state: BridgeState, batc
 def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
                     codecs: tuple[str, ...] = ("identity",), wire_attacks=None,
                     adversaries: tuple[str, ...] | None = None,
-                    screen_chunk=None):
+                    screen_chunk=None, neighbors: NeighborTable | None = None):
     """The synchronous-broadcast iteration: ``step(cell, state, batch)``.
 
     ``rules`` is a static bank of screening-rule names, ``attacks`` a static
@@ -241,6 +275,11 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
     of `repro.adversary` names (None / all-`none` skips the adversary stage
     structurally — the default path stays bit-identical); ``cell`` selects
     into all of them.
+
+    ``neighbors`` switches screening to the neighbor-indexed sparse layout
+    (`repro.core.neighbors`): each node screens its gathered ``[K, d]`` view
+    instead of masking the full ``[M, d]`` broadcast — bit-identical outputs
+    (property-tested), ``O(M K d)`` instead of ``O(M^2 d)`` work.
     """
     codec_bank = codec_lib.codec_bank(codecs)
     if wire_attacks is None:
@@ -248,6 +287,15 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
     adv_bank = None if adversaries is None else adv_lib.adversary_bank(adversaries)
     adv_engaged = adv_lib.bank_engaged(adv_bank)
     n_edges = jnp.sum(jnp.asarray(adjacency)).astype(jnp.float32)
+
+    def screen(w_hat, self_vals, cell):
+        if neighbors is not None:
+            return screening.screen_views_banked(
+                neighbors.gather_rows(w_hat), neighbors.valid_dev, self_vals,
+                rules, cell.rule_idx, cell.b, chunk=screen_chunk)
+        return screening.screen_all_banked(
+            w_hat, adjacency, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
+            self_vals=self_vals)
 
     def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         w, unflatten = stack_flatten(state.params)
@@ -261,11 +309,7 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
             # re-crafts the Byzantine rows; its screening oracle is this
             # cell's own banked screen (differentiable — inner maximization
             # ascends through it)
-            ctx = adv_lib.AdvCtx(
-                screen=lambda wb: screening.screen_all_banked(
-                    wb, adjacency, rules, cell.rule_idx, cell.b,
-                    chunk=screen_chunk, self_vals=wb),
-            )
+            ctx = adv_lib.AdvCtx(screen=lambda wb: screen(wb, wb, cell))
             theta = adv_lib.cell_theta(adv_bank, _cell_adv_idx(cell), cell.adv_theta)
             w_bcast, new_adv = adv_lib.apply_adversary_bank(
                 adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
@@ -278,10 +322,7 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
         )
         # (Step 5) screening at every node: neighbors are seen through the
         # wire; the node's own iterate never travels and stays uncompressed
-        y = screening.screen_all_banked(
-            w_hat, adjacency, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
-            self_vals=w_bcast,
-        )
+        y = screen(w_hat, w_bcast, cell)
         new_params, metrics = _grad_update_and_metrics(grad_fn, cell, state, batch, y, unflatten)
         metrics.update(_comm_metrics(codec_bank, cell, d, n_edges, new_comm))
         return BridgeState(new_params, state.t + 1, key, state.net, new_comm, new_adv), metrics
@@ -310,6 +351,9 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
     channel's expected latency — the staleness-exploiting message variants.
     """
     cell_aware = bool(getattr(runtime, "cell_aware", False))
+    # neighbor-indexed layout (repro.core.neighbors): the runtime exposes its
+    # static table and every per-link tensor in this step is [M, K, ...]
+    nbr = getattr(runtime, "neighbors", None)
     codec_bank = codec_lib.codec_bank(codecs)
     if wire_attacks is None:
         wire_attacks = (byz_lib.WIRE_ATTACKS["none"],) * len(message_attacks)
@@ -323,15 +367,32 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
     if channel is not None:
         adv_latency = 0.5 * (channel.latency_min + channel.latency_max)
 
+    def screen_oracle(wb, adj_t, cell):
+        """The adversary's differentiable per-tick screening closure."""
+        if nbr is not None:
+            return screening.screen_views_banked(
+                nbr.gather_rows(wb), adj_t, wb, rules, cell.rule_idx, cell.b,
+                chunk=screen_chunk)
+        return screening.screen_all_banked(
+            wb, adj_t, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
+            self_vals=wb)
+
     def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         w, unflatten = stack_flatten(state.params)
         d = w.shape[1]
+        m = w.shape[0]
         key, sub = jax.random.split(state.key)
+        # dense: the tick's [M, M] adjacency; sparse: the [M, K] live-slot mask
         adj_t = runtime.adjacency_at(state.t, cell) if cell_aware else runtime.adjacency_at(state.t)
         # (Step 3-4) per-link transmissions with Byzantine substitution.
-        msgs = byz_lib.apply_message_attack_bank(
-            message_attacks, cell.attack_idx, w, cell.byz_mask, adj_t, sub, state.t
-        )
+        if nbr is not None:
+            msgs = byz_lib.apply_sparse_message_attack_bank(
+                message_attacks, cell.attack_idx, w, cell.byz_mask, nbr, adj_t, sub, state.t
+            )
+        else:
+            msgs = byz_lib.apply_message_attack_bank(
+                message_attacks, cell.attack_idx, w, cell.byz_mask, adj_t, sub, state.t
+            )
         # Byzantine nodes screen with the same self-view they broadcast
         # (matching the synchronous path); message-only attacks have no
         # single broadcast value, so nodes screen with their true iterate.
@@ -346,27 +407,39 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
             if peek is not None and not cell_aware:
                 deliver = peek(net_key_peek, d)
             ctx = adv_lib.AdvCtx(
-                screen=lambda wb: screening.screen_all_banked(
-                    wb, adj_t, rules, cell.rule_idx, cell.b,
-                    chunk=screen_chunk, self_vals=wb),
+                screen=lambda wb: screen_oracle(wb, adj_t, cell),
                 deliver_mask=deliver,
                 latency=adv_latency,
             )
             theta = adv_lib.cell_theta(adv_bank, _cell_adv_idx(cell), cell.adv_theta)
-            adv_msgs, adv_self, new_adv = adv_lib.apply_message_adversary_bank(
-                adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
-                w, cell.byz_mask, adj_t, jax.random.fold_in(sub, ADV_SALT), state.t,
-            )
+            if nbr is not None:
+                adv_msgs, adv_self, new_adv = adv_lib.apply_sparse_message_adversary_bank(
+                    adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
+                    w, cell.byz_mask, nbr, adj_t, jax.random.fold_in(sub, ADV_SALT), state.t,
+                )
+                adv_sender_byz = nbr.gather_senders(cell.byz_mask, fill=False)
+            else:
+                adv_msgs, adv_self, new_adv = adv_lib.apply_message_adversary_bank(
+                    adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
+                    w, cell.byz_mask, adj_t, jax.random.fold_in(sub, ADV_SALT), state.t,
+                )
+                adv_sender_byz = jnp.broadcast_to(cell.byz_mask[None, :], adj_t.shape)
             # the adversary re-crafts Byzantine senders only; honest links
             # keep whatever the static message-attack stage produced, bitwise
-            msgs = jnp.where(cell.byz_mask[None, :, None], adv_msgs, msgs)
+            msgs = jnp.where(adv_sender_byz[:, :, None], adv_msgs, msgs)
             w_self = jnp.where(cell.byz_mask[:, None], adv_self, w_self)
-        # wire codec per link ([receiver, sender] leading axes); the sender
-        # axis marks whose codewords the wire attacks may corrupt
-        byz_link = jnp.broadcast_to(cell.byz_mask[None, :], adj_t.shape)
+        # wire codec per link ([receiver, sender/slot] leading axes); the
+        # sender axis marks whose codewords the wire attacks may corrupt, and
+        # per-edge ids key their PRNG streams identically on both layouts
+        if nbr is not None:
+            byz_link = nbr.gather_senders(cell.byz_mask, fill=False)
+            eids = nbr.edge_ids
+        else:
+            byz_link = jnp.broadcast_to(cell.byz_mask[None, :], adj_t.shape)
+            eids = jnp.asarray(neighbors_lib.edge_id_grid(m))
         msgs_hat, comm_full = _wire_roundtrip(
             codec_bank, wire_attacks, cell, sub, msgs, state.comm,
-            byz_link, state.t, d,
+            byz_link, state.t, d, eids=eids,
         )
         if state.comm is not None and comm_full is not state.comm:
             # a sender advances a link's public copy / residual only for
@@ -437,13 +510,23 @@ class BridgeTrainer:
         # keeps its exact pre-adversary program shape
         self._adv_bank = (None if config.adversary == "none"
                           else adv_lib.adversary_bank((config.adversary,)))
+        # the sync path's neighbor table (sparse layout); runtimes carry
+        # their own (built from the schedule union)
+        self.neighbors = None
+        if config.sparse and runtime is None:
+            self.neighbors = NeighborTable.from_adjacency(config.topology.adjacency)
+        if config.sparse and runtime is not None and getattr(runtime, "neighbors", None) is None:
+            raise ValueError(
+                "BridgeConfig(sparse=True) with an explicit dense runtime: pass a "
+                "neighbor-indexed runtime (SparseUnreliableRuntime) or drop the flag "
+                "— a dense runtime would silently keep the O(M^2) state layout")
         if runtime is None:
             self._attack = byz_lib.get_attack(config.attack)
             step = build_cell_step(
                 grad_fn, self.adjacency, (config.rule,), (self._attack,),
                 codecs=(config.codec,), wire_attacks=wire_bank,
                 adversaries=None if self._adv_bank is None else (config.adversary,),
-                screen_chunk=config.screen_chunk,
+                screen_chunk=config.screen_chunk, neighbors=self.neighbors,
             )
         else:
             self._message_attack = byz_lib.get_message_attack(config.attack)
@@ -498,7 +581,10 @@ class BridgeTrainer:
         dim = w.shape[1]
         if self.runtime is not None:
             net = self.runtime.init(m, dim, max_wire_bits=self.codec.wire_bits(dim))
-            comm = comm_lib.init_residual((m, m, dim), (self.codec,))
+            # per-link codec carry: [M, M, d] dense, [M, K, d] neighbor-indexed
+            rt_nbr = getattr(self.runtime, "neighbors", None)
+            link = m if rt_nbr is None else rt_nbr.k
+            comm = comm_lib.init_residual((m, link, dim), (self.codec,))
         else:
             comm = comm_lib.init_residual((m, dim), (self.codec,))
         if adv_lib.bank_stateful(self._adv_bank):

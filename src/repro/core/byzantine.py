@@ -121,11 +121,22 @@ class MessageAttack:
     broadcast-granularity `Attack` when one exists (lifted attacks keep it so
     the runtime path can reproduce the broadcast path bit-for-bit — including
     the attacked self-view Byzantine nodes screen with).
+
+    ``sparse_fn(w, byz_mask, nbr, live [M,K], key, t) -> msgs [M,K,d]`` is
+    the neighbor-indexed variant (`repro.core.neighbors.NeighborTable`): slot
+    (j, k) holds what sender ``nbr.idx[j, k]`` tells receiver j.  It must be
+    the exact gather of the dense tensor — ``msgs_sparse[j, k] ==
+    msgs_dense[j, nbr.idx[j, k]]`` bitwise — which is what keeps the sparse
+    runtime a bit-identical twin of the dense oracle.  Attacks whose
+    per-link values derive from per-sender/per-receiver quantities (all
+    current registrations) get this for free via gathers; `lift_sparse`
+    derives it for lifted broadcast attacks.
     """
 
     name: str
     fn: Callable
     broadcast: Attack | None = None
+    sparse_fn: Callable | None = None
 
     def __call__(self, w, byz_mask, adjacency, key, t):
         return self.fn(w, byz_mask, adjacency, key, t)
@@ -140,7 +151,11 @@ def lift_broadcast_attack(attack: Attack) -> MessageAttack:
         m = w.shape[0]
         return jnp.broadcast_to(w_bcast[None, :, :], (m,) + w.shape)
 
-    return MessageAttack(attack.name, fn, broadcast=attack)
+    def sparse_fn(w, byz_mask, nbr, live, key, t):
+        del live  # lifted attacks corrupt the sender row regardless of edges
+        return nbr.gather_rows(attack(w, byz_mask, key, t))
+
+    return MessageAttack(attack.name, fn, broadcast=attack, sparse_fn=sparse_fn)
 
 
 def _selective_victim(z: float = 1.5):
@@ -154,27 +169,39 @@ def _selective_victim(z: float = 1.5):
     the victim set is recomputed from the tick's adjacency, so edge churn
     shifts the blast radius."""
 
-    def fn(w, byz_mask, adjacency, key, t):
-        m = w.shape[0]
+    def crafted_and_victims(w, byz_mask, in_deg):
         honest = ~byz_mask
         cnt = jnp.sum(honest)
         mu = jnp.sum(jnp.where(honest[:, None], w, 0.0), axis=0) / cnt
         var = jnp.sum(jnp.where(honest[:, None], (w - mu) ** 2, 0.0), axis=0) / cnt
         crafted = mu + z * jnp.sqrt(var + 1e-12)
-        in_deg = jnp.sum(adjacency, axis=1)
         victim = in_deg <= jnp.median(in_deg)  # [M] receivers
+        return crafted, victim
+
+    def fn(w, byz_mask, adjacency, key, t):
+        m = w.shape[0]
+        crafted, victim = crafted_and_victims(w, byz_mask, jnp.sum(adjacency, axis=1))
         lie_edge = victim[:, None] & byz_mask[None, :]  # [receiver, sender]
         msgs = jnp.broadcast_to(w[None, :, :], (m,) + w.shape)
         return jnp.where(lie_edge[:, :, None], crafted[None, None, :], msgs)
 
-    return fn
+    def sparse_fn(w, byz_mask, nbr, live, key, t):
+        # in-degrees from the [M, K] live mask are the dense row sums exactly
+        # (padded slots are never live), so the victim set — and with it every
+        # per-slot lie — is the bitwise gather of the dense tensor
+        crafted, victim = crafted_and_victims(w, byz_mask, jnp.sum(live, axis=1))
+        lie_edge = victim[:, None] & nbr.gather_senders(byz_mask, fill=False)
+        return jnp.where(lie_edge[:, :, None], crafted[None, None, :], nbr.gather_rows(w))
+
+    return fn, sparse_fn
 
 
 MESSAGE_ATTACKS: dict[str, MessageAttack] = {
     name: lift_broadcast_attack(a) for name, a in ATTACKS.items()
 }
+_sv_fn, _sv_sparse = _selective_victim()
 MESSAGE_ATTACKS["selective_victim"] = MessageAttack(
-    "selective_victim", _selective_victim()
+    "selective_victim", _sv_fn, sparse_fn=_sv_sparse
 )
 
 
@@ -207,6 +234,14 @@ class WireAttack:
     ``fn(msg: WireMsg, byz, key, t, d) -> WireMsg`` where ``d`` is the
     decoded dimension (index lies must stay in-range to be maximally
     damaging — out-of-range scatter indices are dropped by the decoder).
+
+    On the per-link runtime paths the step applies this bank once per *edge*
+    under ``vmap``, with ``key`` already folded with the edge id
+    (`bridge._wire_roundtrip`) — so randomized attacks draw bitwise-identical
+    garbage on matching edges of the dense ``[M, M, ...]`` and sparse
+    ``[M, K, ...]`` layouts without knowing which layout they are in.  The
+    broadcast path applies it once over the whole ``[M, ...]`` tensor (shared
+    codewords, shared draws).
     """
 
     name: str
@@ -342,6 +377,26 @@ def apply_message_attack_bank(bank: tuple[MessageAttack, ...], attack_idx, w, by
     if len(bank) == 1:
         return bank[0](w, byz_mask, adjacency, key, t)
     return jax.lax.switch(attack_idx, [a.fn for a in bank], w, byz_mask, adjacency, key, t)
+
+
+def apply_sparse_message_attack_bank(bank: tuple[MessageAttack, ...], attack_idx, w,
+                                     byz_mask, nbr, live, key, t):
+    """Neighbor-indexed message crafting: the ``[M, K, d]`` twin of
+    `apply_message_attack_bank` (``nbr`` a `NeighborTable`, ``live [M, K]``
+    the tick's per-slot live mask).  Every bank entry must carry a
+    ``sparse_fn`` (all registered attacks do)."""
+    for a in bank:
+        if a.sparse_fn is None:
+            raise ValueError(
+                f"message attack {a.name!r} has no sparse_fn — required on the "
+                f"neighbor-indexed runtime path")
+    if len(bank) == 1:
+        return bank[0].sparse_fn(w, byz_mask, nbr, live, key, t)
+    branches = [
+        (lambda fn: lambda ww, bm, lv, k, tt: fn(ww, bm, nbr, lv, k, tt))(a.sparse_fn)
+        for a in bank
+    ]
+    return jax.lax.switch(attack_idx, branches, w, byz_mask, live, key, t)
 
 
 def apply_self_view_bank(bank: tuple[MessageAttack, ...], attack_idx, w, byz_mask, key, t):

@@ -1,0 +1,143 @@
+"""Static padded neighbor-index tables — the sparse [M, K] layout key.
+
+Every dense runtime structure in this repo is quadratic in the node count:
+mailbox rings are ``[M, M, L, d]``, per-link error-feedback residuals are
+``[M, M, d]``, and screening sorts all ``M`` candidate rows per node.  On the
+sparse graphs BRIDGE actually certifies (Assumption 4 holds on ER / small-
+world / geometric graphs with ``K = max in-degree << M``) almost all of that
+state is structurally dead: node j can only ever hear from its in-neighbors.
+
+A `NeighborTable` is the static gather key that collapses the dead axis:
+``idx[j, k]`` is the node id of j's k-th in-neighbor (rows padded to the
+shared width ``K`` with the sentinel index ``num_nodes``), ``valid[j, k]``
+marks the real slots.  Per-link state then lives as ``[M, K, ...]`` — the
+mailbox ring becomes ``[M, K, L, d]``, residuals ``[M, K, d]``, channel
+events ``[M, K]`` — and screening consumes the ``[M, K, d]`` gathered views
+directly (the ``+inf``-sentinel masking in `repro.core.screening` already
+treats padded rows as absent neighbors).
+
+The table is built once on the host (from a static `Topology` or from the
+union of a ``[T, M, M]`` schedule, so churned-away edges keep their slot) and
+is a jit constant: gathers against it lower to static-index `take`s.
+
+Padded slots are *inert by construction*: they are never marked live, never
+pushed to, never counted — property-tested in ``tests/test_sparse.py``
+(widening ``k`` beyond the max in-degree changes no output bit).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_id_grid(num_nodes: int) -> np.ndarray:
+    """``[M, M]`` unique per-edge ids: ``receiver * (M + 1) + sender``.
+
+    THE edge-id scheme — the per-link PRNG streams (stochastic codec
+    rounding, randomized wire attacks) fold these ids into their keys, and
+    dense<->sparse bit-identity holds precisely because both layouts derive
+    matching ids for matching edges (`NeighborTable.edge_ids` gathers from
+    this same formula; the ``M + 1`` stride keeps sentinel-padded slots —
+    sender index ``M`` — collision-free)."""
+    r = np.arange(num_nodes, dtype=np.int64)
+    return (r[:, None] * (num_nodes + 1) + r[None, :]).astype(np.int32)
+
+
+class NeighborTable:
+    """Static ``[M, K]`` in-neighbor index table (see module docstring).
+
+    ``idx`` keeps the sentinel ``num_nodes`` in padded slots (host-side
+    clarity; an accidental un-masked gather fails loudly in numpy).  Device
+    gathers go through ``safe_idx`` — the sentinel clipped to ``num_nodes-1``
+    — plus the ``valid`` mask, so padded rows carry a real-but-ignored row
+    instead of relying on out-of-range gather semantics.
+    """
+
+    def __init__(self, idx: np.ndarray, valid: np.ndarray, num_nodes: int):
+        idx = np.asarray(idx, np.int32)
+        valid = np.asarray(valid, bool)
+        if idx.shape != valid.shape or idx.ndim != 2 or idx.shape[0] != num_nodes:
+            raise ValueError(f"table shapes {idx.shape} / {valid.shape} must be [M={num_nodes}, K]")
+        self.idx = idx
+        self.valid = valid
+        self.num_nodes = int(num_nodes)
+        self.k = int(idx.shape[1])
+        # device-side constants
+        self.safe_idx = jnp.asarray(np.minimum(idx, num_nodes - 1))
+        self.valid_dev = jnp.asarray(valid)
+        # per-slot edge ids — the gather of `edge_id_grid` through the table
+        # (sentinel slots get unique ids that never collide with a real edge)
+        self.edge_ids = jnp.asarray(
+            np.arange(num_nodes, dtype=np.int64)[:, None] * (num_nodes + 1)
+            + idx.astype(np.int64), jnp.int32)
+
+    # -- construction -------------------------------------------------------
+
+    @classmethod
+    def from_adjacency(cls, adjacency, k: int | None = None) -> "NeighborTable":
+        """Table of a static ``[M, M]`` adjacency (``adjacency[j, i]`` marks i
+        an in-neighbor of j).  ``k`` pads beyond the max in-degree (shared
+        widths let tables of different graphs stack); it must cover it."""
+        adj = np.asarray(getattr(adjacency, "adjacency", adjacency), bool)
+        if adj.ndim != 2 or adj.shape[0] != adj.shape[1]:
+            raise ValueError(f"adjacency must be [M, M], got {adj.shape}")
+        m = adj.shape[0]
+        deg = adj.sum(axis=1)
+        kmax = int(deg.max()) if m else 0
+        if k is None:
+            k = kmax
+        if k < kmax:
+            raise ValueError(f"k={k} cannot hold max in-degree {kmax}")
+        idx = np.full((m, k), m, np.int32)
+        valid = np.zeros((m, k), bool)
+        for j in range(m):
+            ns = np.nonzero(adj[j])[0]
+            idx[j, : len(ns)] = ns
+            valid[j, : len(ns)] = True
+        return cls(idx, valid, m)
+
+    @classmethod
+    def from_schedule(cls, schedule, k: int | None = None) -> "NeighborTable":
+        """Table of the *union* graph of a ``[T, M, M]`` schedule: an edge
+        that is live at any tick owns a slot for the whole run (churned-away
+        edges keep their mailbox history; the per-tick live mask is what
+        gates sends)."""
+        sched = np.asarray(schedule, bool)
+        if sched.ndim != 3 or sched.shape[1] != sched.shape[2]:
+            raise ValueError(f"schedule must be [T, M, M], got {sched.shape}")
+        return cls.from_adjacency(sched.any(axis=0), k=k)
+
+    # -- gathers ------------------------------------------------------------
+
+    def gather_rows(self, x: jax.Array) -> jax.Array:
+        """``x [M, ...] -> [M, K, ...]``: slot (j, k) holds the row of j's
+        k-th in-neighbor (padded slots hold a real-but-masked row)."""
+        return jnp.take(x, self.safe_idx, axis=0)
+
+    def gather_edges(self, mat: jax.Array, fill=None) -> jax.Array:
+        """``mat [M, M] -> [M, K]``: slot (j, k) holds ``mat[j, idx[j, k]]``.
+        ``fill`` replaces padded slots (bool ``fill=False`` masks them out);
+        None leaves the gathered-but-meaningless value in place."""
+        out = jnp.take_along_axis(mat, self.safe_idx, axis=1)
+        if fill is None:
+            return out
+        return jnp.where(self.valid_dev, out, fill)
+
+    def gather_senders(self, vec: jax.Array, fill=None) -> jax.Array:
+        """``vec [M] -> [M, K]``: per-slot sender attribute (e.g. the
+        Byzantine mask); ``fill`` as in `gather_edges`."""
+        out = jnp.take(vec, self.safe_idx, axis=0)
+        if fill is None:
+            return out
+        return jnp.where(self.valid_dev, out, fill)
+
+    def live_schedule(self, schedule) -> np.ndarray:
+        """Pre-gather a ``[T, M, M]`` schedule to the ``[T, M, K]`` per-slot
+        live mask (host-side, once) — the sparse runtime never touches an
+        ``[M, M]`` adjacency at trace time."""
+        sched = np.asarray(schedule, bool)
+        safe = np.minimum(self.idx, self.num_nodes - 1)
+        live = np.take_along_axis(sched, safe[None].repeat(sched.shape[0], 0), axis=2)
+        return live & self.valid[None]

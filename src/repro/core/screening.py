@@ -39,6 +39,77 @@ import jax.numpy as jnp
 _MASKED = jnp.inf  # sentinel for masked entries; see module docstring
 
 
+def sum_rows(x: jax.Array) -> jax.Array:
+    """Strictly sequential sum over the leading (neighbor) axis.
+
+    ``jnp.sum`` lowers to a shape-dependent reduction tree, so summing the
+    same non-zero rows padded to *different* row counts can differ in ULPs —
+    which would break the dense [M]-row vs sparse [K]-row screening
+    bit-identity contract (`repro.core.neighbors`).  A left-to-right chain is
+    layout-invariant: ``x + 0.0`` is exact, so present-but-zeroed padded rows
+    drop out bitwise.  ONLY safe when the summand contains no multiply: XLA
+    may FMA-contract ``a * b + total`` in one program shape but not the
+    other, which is exactly the ULP drift the chain exists to prevent — sums
+    over products must use `sum_rows_mat`.  Falls back to ``jnp.sum`` above
+    the same row bound as `sort_rows` (a huge-M dense run is the slow
+    oracle, not a bit-identity reference).
+    """
+    n = x.shape[0]
+    if n > 64:
+        return jnp.sum(x, axis=0)
+    total = x[0]
+    for i in range(1, n):
+        total = total + x[i]
+    return total
+
+
+def sum_rows_mat(x: jax.Array) -> jax.Array:
+    """`sum_rows` for summands that contain a product (geomedian's weighted
+    rows, clipped-mean's scaled deltas): a ``lax.scan`` *materializes* its
+    ``xs`` operand, so the producer multiply is rounded to storage precision
+    before the loop and the body is a pure, contraction-proof add.
+    (``optimization_barrier`` would be cheaper but has no batching rule on
+    jax 0.4.x.)"""
+    n = x.shape[0]
+    if n > 64:
+        return jnp.sum(x, axis=0)
+    total, _ = jax.lax.scan(lambda tot, row: (tot + row, None), jnp.zeros_like(x[0]), x)
+    return total
+
+
+def fence(x: jax.Array) -> jax.Array:
+    """Round ``x`` to storage precision behind a ``lax.scan`` (whose ``xs``
+    XLA must materialize).  Rules whose *last* operation is a multiply
+    (`coordinate_median`'s ``0.5 * (lo + hi)``) would otherwise leave the
+    caller free to FMA-contract that multiply into its own subtract in one
+    program shape but not another — the same cross-program ULP drift
+    `sum_rows_mat` guards inside the rules.  The scan is length TWO, not
+    one: XLA's while-loop simplifier unrolls trip-count-<=1 loops, which
+    would re-fuse the producer and void the fence."""
+    out, _ = jax.lax.scan(lambda c, row: (row, None), jnp.zeros_like(x),
+                          jnp.stack([x, x]))
+    return out
+
+
+def effective_trim(b, count: jax.Array) -> jax.Array:
+    """The trim width a ``count``-strong usable neighborhood can support:
+    ``min(b, (count - 1) // 2)``.
+
+    `Topology.validate_for_rule` certifies Table II's ``|N_j| >= 2b + 1`` on
+    the *static* graph only; a churn/partition schedule (`repro.net.dynamic`)
+    can drop a tick's live in-degree below that, where an unclamped trim
+    window would sweep ``+inf`` sentinel rows into the kept ranks and the
+    divisor ``count - 2b + 1`` through zero.  At or above the bound the clamp
+    is the identity (``b_eff == b``) — bit-identical to the unclamped rule —
+    and below it the rule degrades to the widest trim the tick supports (the
+    network runtime additionally freezes such nodes entirely; this clamp
+    covers the paths with no freeze, e.g. the adversary's per-tick screening
+    oracle).  Regression-tested in ``tests/test_sparse.py``.
+    """
+    cnt = jnp.asarray(count, jnp.int32)
+    return jnp.clip(jnp.asarray(b, jnp.int32), 0, jnp.maximum((cnt - 1) // 2, 0))
+
+
 def _sanitize(values: jax.Array) -> jax.Array:
     """NaN payloads -> +inf so rank-based rules treat them as maximal outliers
     (the explicit finite-payload guard for the inf-sentinel masking)."""
@@ -100,12 +171,13 @@ def trimmed_mean(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: i
     """
     n = values.shape[0]
     count = jnp.sum(mask)  # |N_j|, traced scalar
+    b_eff = effective_trim(b, count)  # == b whenever count >= 2b + 1
     masked = jnp.where(mask[:, None], _sanitize(values), _MASKED)
     order = sort_rows(masked)  # ascending; masked at the end
     idx = jnp.arange(n)[:, None]
-    keep = (idx >= b) & (idx < count - b)  # ranks [b, |N_j| - b)
-    total = jnp.sum(jnp.where(keep, order, 0.0), axis=0) + self_value
-    return total / (count - 2 * b + 1).astype(values.dtype)
+    keep = (idx >= b_eff) & (idx < count - b_eff)  # ranks [b_eff, |N_j| - b_eff)
+    total = sum_rows(jnp.where(keep, order, 0.0)) + self_value
+    return total / (count - 2 * b_eff + 1).astype(values.dtype)
 
 
 def coordinate_median(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int = 0) -> jax.Array:
@@ -124,7 +196,7 @@ def coordinate_median(values: jax.Array, mask: jax.Array, self_value: jax.Array,
     idx = jnp.arange(n1)[:, None]
     pick_lo = jnp.sum(jnp.where(idx == lo, order, 0.0), axis=0)
     pick_hi = jnp.sum(jnp.where(idx == hi, order, 0.0), axis=0)
-    return 0.5 * (pick_lo + pick_hi)
+    return fence(0.5 * (pick_lo + pick_hi))
 
 
 # ---------------------------------------------------------------------------
@@ -160,7 +232,9 @@ def _krum_scores(d2: jax.Array, full_mask: jax.Array, count: jax.Array, b: int) 
     k = count - b - 2  # number of nearest peers to sum (traced)
     idx = jnp.arange(n1)[None, :]
     take = idx < jnp.maximum(k, 1)
-    scores = jnp.sum(jnp.where(take, order, 0.0), axis=1)
+    # transpose so the (sorted-rank) reduction runs through the
+    # layout-invariant sequential chain — see `sum_rows`
+    scores = sum_rows(jnp.where(take, order, 0.0).T)
     return jnp.where(full_mask, scores, jnp.inf)
 
 
@@ -210,12 +284,12 @@ def geometric_median(values: jax.Array, mask: jax.Array, self_value: jax.Array,
     del b
     stacked = jnp.concatenate([values, self_value[None, :]], axis=0)
     fm = jnp.concatenate([mask, jnp.ones((1,), bool)], axis=0).astype(values.dtype)
-    y = jnp.sum(stacked * fm[:, None], axis=0) / jnp.sum(fm)
+    y = sum_rows_mat(stacked * fm[:, None]) / jnp.sum(fm)
 
     def body(y, _):
         d = jnp.sqrt(jnp.sum((stacked - y[None]) ** 2, axis=1) + eps)
         w = fm / d
-        y = jnp.sum(stacked * w[:, None], axis=0) / jnp.sum(w)
+        y = sum_rows_mat(stacked * w[:, None]) / sum_rows(w[:, None])[0]
         return y, None
 
     y, _ = jax.lax.scan(body, y, None, length=iters)
@@ -233,7 +307,7 @@ def clipped_mean(values: jax.Array, mask: jax.Array, self_value: jax.Array,
     scale = jnp.minimum(1.0, tau / nrm)
     clipped = delta * scale
     cnt = jnp.sum(mask)
-    return self_value + jnp.sum(jnp.where(mask[:, None], clipped, 0.0), axis=0) / jnp.maximum(cnt, 1)
+    return self_value + sum_rows_mat(jnp.where(mask[:, None], clipped, 0.0)) / jnp.maximum(cnt, 1)
 
 
 def mean(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int = 0) -> jax.Array:
@@ -241,7 +315,7 @@ def mean(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int = 0) 
     N_j ∪ {j}).  The b=0 baseline the paper's Figures 1-2 compare against."""
     del b
     count = jnp.sum(mask)
-    total = jnp.sum(jnp.where(mask[:, None], values, 0.0), axis=0) + self_value
+    total = sum_rows(jnp.where(mask[:, None], values, 0.0)) + self_value
     return total / (count + 1).astype(values.dtype)
 
 

@@ -1,0 +1,192 @@
+"""Fused Pallas gather -> (dequantize ->) screen kernels — the sparse hot path.
+
+On the neighbor-indexed layout (`repro.core.neighbors`) screening node j
+means: gather its K in-neighbor rows from the ``[M, d]`` broadcast matrix (or
+its ``[M, P]`` int8 codeword bank), decode them, and reduce coordinate-wise.
+The staged jnp pipeline materializes the gathered ``[M, K, d]`` float tensor
+in HBM just to immediately reduce it; these kernels instead gather the K rows
+*inside the VMEM block* with dynamic row slices, dequantize in-register, and
+screen in the same pass — one kernel launch per coordinate block, and neither
+``[M, M, d]`` nor ``[M, K, d]`` ever exists.
+
+Layout per grid step ``(j, i)``: the whole value bank's rows for coordinate
+block ``i`` sit in VMEM (``[M, block_d]`` — f32 at block_d=512 and M=512 is
+1 MB, comfortably inside VMEM), node j's ``[K]`` neighbor indices arrive as a
+scalar row, and K unrolled ``pl.ds`` row loads build the ``[K, block_d]``
+neighborhood.  K is static and small (the whole point of the sparse layout),
+so the unrolled gather is a handful of sublane moves.
+
+The correctness anchors are the staged paths: ``gather -> screening rule``
+(pure jnp, `repro.core.screening`) for the f32 kernels and ``gather ->
+`repro.kernels.dequant_screen` `` for the codeword kernels; the tests assert
+exact agreement and ``benchmarks/scale_bench.py`` times fused vs staged.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.comm.codec import SCALE_BLOCK
+from repro.kernels.dequant_screen import _dequant_rows
+from repro.kernels.median import _median_block
+from repro.kernels.trimmed_mean import _trimmed_mean_block
+
+_INF = float("inf")
+
+
+def _gather_rows(w_ref, idx_ref, k: int):
+    """K unrolled dynamic row loads: [K, blk] neighborhood of this node."""
+    rows = [w_ref[pl.ds(idx_ref[0, kk], 1), :] for kk in range(k)]
+    return jnp.concatenate(rows, axis=0)
+
+
+def _gtm_kernel(idx_ref, valid_ref, w_ref, self_ref, out_ref, *, b: int, k: int):
+    v = _gather_rows(w_ref, idx_ref, k)  # [K, blk]
+    v = jnp.where(jnp.isnan(v), _INF, v)
+    valid = (valid_ref[0][:, None] > 0.5) & jnp.ones_like(v, dtype=bool)
+    out_ref[0] = _trimmed_mean_block(v, valid, self_ref[0], b)
+
+
+def _gmed_kernel(idx_ref, valid_ref, w_ref, self_ref, out_ref, *, k: int):
+    v = _gather_rows(w_ref, idx_ref, k)
+    self_row = self_ref[0][None, :]
+    rows = jnp.concatenate([jnp.where(jnp.isnan(v), _INF, v),
+                            jnp.where(jnp.isnan(self_row), _INF, self_row)], axis=0)
+    valid = jnp.concatenate(
+        [(valid_ref[0][:, None] > 0.5) & jnp.ones_like(v, dtype=bool),
+         jnp.ones_like(self_row, dtype=bool)], axis=0)
+    out_ref[0] = _median_block(rows, valid)
+
+
+def _gdq_tm_kernel(idx_ref, valid_ref, q_ref, scale_ref, self_ref, out_ref, *,
+                   b: int, k: int):
+    q = _gather_rows(q_ref, idx_ref, k)  # [K, blk] int8
+    sc = jnp.concatenate(
+        [scale_ref[pl.ds(idx_ref[0, kk], 1), :, :] for kk in range(k)], axis=0)
+    v = _dequant_rows(q, sc)  # guarded f32 [K, blk]
+    valid = (valid_ref[0][:, None] > 0.5) & jnp.ones_like(v, dtype=bool)
+    out_ref[0] = _trimmed_mean_block(v, valid, self_ref[0], b)
+
+
+def _gdq_med_kernel(idx_ref, valid_ref, q_ref, scale_ref, self_ref, out_ref, *, k: int):
+    q = _gather_rows(q_ref, idx_ref, k)
+    sc = jnp.concatenate(
+        [scale_ref[pl.ds(idx_ref[0, kk], 1), :, :] for kk in range(k)], axis=0)
+    v = _dequant_rows(q, sc)
+    self_row = self_ref[0][None, :]
+    rows = jnp.concatenate([v, jnp.where(jnp.isnan(self_row), _INF, self_row)], axis=0)
+    valid = jnp.concatenate(
+        [(valid_ref[0][:, None] > 0.5) & jnp.ones_like(v, dtype=bool),
+         jnp.ones_like(self_row, dtype=bool)], axis=0)
+    out_ref[0] = _median_block(rows, valid)
+
+
+def _prep(idx, valid, m: int, d: int, block_d: int, interpret):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if idx.ndim != 2 or idx.shape != valid.shape or idx.shape[0] != m:
+        raise ValueError(f"idx/valid must be [M={m}, K], got {idx.shape} / {valid.shape}")
+    k = idx.shape[1]
+    # padded slots (sentinel index M) are clamped to a real row and killed by
+    # the valid mask — same contract as NeighborTable.safe_idx
+    idx = jnp.minimum(idx.astype(jnp.int32), m - 1)
+    pad_d = (-d) % block_d
+    return interpret, k, idx, valid.astype(jnp.float32), pad_d
+
+
+@functools.partial(jax.jit, static_argnames=("b", "rule", "block_d", "interpret"))
+def gather_screen_pallas(
+    w: jax.Array,
+    idx: jax.Array,
+    valid: jax.Array,
+    self_vals: jax.Array,
+    b: int,
+    *,
+    rule: str = "trimmed_mean",
+    block_d: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused gather->screen over float values: ``w [M, d]`` stacked broadcast
+    rows, ``idx/valid [M, K]`` the neighbor table, ``self_vals [M, d]`` the
+    (never-gathered) own iterates -> ``[M, d]`` screened outputs.  ``rule``
+    is ``trimmed_mean`` (BRIDGE-T) or ``median`` (BRIDGE-M)."""
+    m, d = w.shape
+    interpret, k, idx, validf, pad_d = _prep(idx, valid, m, d, block_d, interpret)
+    wp = jnp.pad(w.astype(jnp.float32), ((0, 0), (0, pad_d)))
+    sp = jnp.pad(self_vals.astype(jnp.float32), ((0, 0), (0, pad_d)))
+    dp = d + pad_d
+    if rule == "trimmed_mean":
+        kernel = functools.partial(_gtm_kernel, b=b, k=k)
+    elif rule == "median":
+        kernel = functools.partial(_gmed_kernel, k=k)
+    else:
+        raise ValueError(f"rule must be trimmed_mean|median, got {rule!r}")
+    out = pl.pallas_call(
+        kernel,
+        grid=(m, dp // block_d),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda j, i: (j, 0)),
+            pl.BlockSpec((1, k), lambda j, i: (j, 0)),
+            pl.BlockSpec((m, block_d), lambda j, i: (0, i)),
+            pl.BlockSpec((1, block_d), lambda j, i: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda j, i: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((m, dp), jnp.float32),
+        interpret=interpret,
+    )(idx, validf, wp, sp)
+    return out[:, :d]
+
+
+@functools.partial(jax.jit, static_argnames=("b", "rule", "block_d", "interpret"))
+def gather_dequant_screen_pallas(
+    q: jax.Array,
+    scale: jax.Array,
+    idx: jax.Array,
+    valid: jax.Array,
+    self_vals: jax.Array,
+    b: int,
+    *,
+    rule: str = "trimmed_mean",
+    block_d: int = 512,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused gather->dequantize->screen over int8 codewords: ``q [M, d]``
+    int8 codes + ``scale [M, S, 2]`` per-`SCALE_BLOCK` affine pairs (the
+    `repro.comm` wire layout), gathered per node through ``idx/valid [M, K]``
+    and screened against the uncompressed ``self_vals [M, d]`` -> ``[M, d]``.
+    Neither the decoded float bank nor the gathered neighborhood tensor ever
+    reaches HBM."""
+    if block_d % SCALE_BLOCK:
+        raise ValueError(f"block_d must be a multiple of {SCALE_BLOCK}, got {block_d}")
+    m, d = q.shape
+    interpret, k, idx, validf, pad_d = _prep(idx, valid, m, d, block_d, interpret)
+    qp = jnp.pad(q, ((0, 0), (0, pad_d)))
+    s_need = (d + pad_d) // SCALE_BLOCK
+    scp = jnp.pad(scale, ((0, 0), (0, s_need - scale.shape[1]), (0, 0)))
+    sp = jnp.pad(self_vals.astype(jnp.float32), ((0, 0), (0, pad_d)))
+    dp = d + pad_d
+    sb = block_d // SCALE_BLOCK
+    if rule == "trimmed_mean":
+        kernel = functools.partial(_gdq_tm_kernel, b=b, k=k)
+    elif rule == "median":
+        kernel = functools.partial(_gdq_med_kernel, k=k)
+    else:
+        raise ValueError(f"rule must be trimmed_mean|median, got {rule!r}")
+    out = pl.pallas_call(
+        kernel,
+        grid=(m, dp // block_d),
+        in_specs=[
+            pl.BlockSpec((1, k), lambda j, i: (j, 0)),
+            pl.BlockSpec((1, k), lambda j, i: (j, 0)),
+            pl.BlockSpec((m, block_d), lambda j, i: (0, i)),
+            pl.BlockSpec((m, sb, 2), lambda j, i: (0, i, 0)),
+            pl.BlockSpec((1, block_d), lambda j, i: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_d), lambda j, i: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((m, dp), jnp.float32),
+        interpret=interpret,
+    )(idx, validf, qp, scp, sp)
+    return out[:, :d]

@@ -47,20 +47,26 @@ def _first_true(flags: jax.Array) -> jax.Array:
 
 
 def _trimmed_mean_block(values, valid, self_value, b: int):
-    """Screen one [n, blk] block; `valid` is the [n, blk] neighbor mask."""
+    """Screen one [n, blk] block; `valid` is the [n, blk] neighbor mask.
+
+    The trim width is clamped to ``min(b, (count - 1) // 2)`` exactly like
+    `repro.core.screening.effective_trim`: identical at or above Table II's
+    ``2b + 1`` minimum, and degrades instead of dividing through zero on a
+    starved neighborhood (dynamic schedules)."""
     count = jnp.sum(valid[:, :1].astype(jnp.float32))  # |N_j| (mask is per-row)
+    b_eff = jnp.minimum(jnp.float32(b), jnp.floor(jnp.maximum(count - 1.0, 0.0) / 2.0))
     m = valid
     v = values
-    for _ in range(b):  # drop b maxima
+    for i in range(b):  # drop up to b maxima (gated by the clamp)
         cur = jnp.max(jnp.where(m, v, -_INF), axis=0, keepdims=True)
         hit = _first_true((v == cur) & m)
-        m = m & ~hit
-    for _ in range(b):  # drop b minima
+        m = m & ~(hit & (i < b_eff))
+    for i in range(b):  # drop up to b minima
         cur = jnp.min(jnp.where(m, v, _INF), axis=0, keepdims=True)
         hit = _first_true((v == cur) & m)
-        m = m & ~hit
+        m = m & ~(hit & (i < b_eff))
     total = jnp.sum(jnp.where(m, v, 0.0), axis=0) + self_value
-    return total / (count - 2 * b + 1)
+    return total / (count - 2 * b_eff + 1)
 
 
 def _kernel(values_ref, mask_ref, self_ref, out_ref, *, b: int):

@@ -331,6 +331,27 @@ def analyze(text: str) -> Cost:
     return comp_cost(entry, False)
 
 
+def largest_tensor_bytes(text: str) -> int:
+    """The largest single array (in bytes) typed anywhere in the HLO text —
+    parameters, instruction results, tuple elements.
+
+    This is the memory-layout assertion surface for the sparse
+    neighbor-indexed runtime (`repro.core.neighbors`): a jitted step whose
+    largest tensor is below ``M * M * d * 4`` bytes provably never
+    materializes a dense ``[M, M, d]`` float tensor (``benchmarks/
+    scale_bench.py`` and ``tests/test_sparse.py`` gate on it)."""
+    best = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        best = max(best, n * _DTYPE_BYTES[dt])
+    return best
+
+
 # ---------------------------------------------------------------------------
 # roofline
 # ---------------------------------------------------------------------------

@@ -181,7 +181,7 @@ def run_grid_mode(args) -> None:
         return replicate(small.init_linear(key), m, perturb=0.01, key=key)
 
     engine = GridEngine(grid, grad_fn, cells=pending,
-                        num_ticks=ticks if scenarios else None)
+                        num_ticks=ticks if scenarios else None, sparse=args.sparse)
     t0 = time.time()
     state = engine.init(init_fn)
     state, metrics = engine.run(state, batches, chunk=args.grid_chunk)
@@ -307,6 +307,10 @@ def main(argv=None):
     ap.add_argument("--grid-chunk", type=int, default=None,
                     help="max experiments per compiled call (memory bound); "
                          "default runs the whole grid in one call")
+    ap.add_argument("--sparse", action="store_true",
+                    help="neighbor-indexed [M, K] state layout "
+                         "(repro.core.neighbors) — bit-identical to dense, "
+                         "required past a few hundred nodes")
     args = ap.parse_args(argv)
     if args.out is None:
         args.out = {"net": "experiments/net", "grid": "experiments/grid",

@@ -38,7 +38,7 @@ def build_trainer(args, topo, grad_fn):
         bcfg = BridgeConfig(
             topology=topo, rule=args.rule, num_byzantine=args.byzantine,
             attack=args.attack, adversary=args.adversary, codec=args.codec,
-            lam=args.lam, t0=args.t0, lr=args.lr,
+            lam=args.lam, t0=args.t0, lr=args.lr, sparse=args.sparse,
         )
         return BridgeTrainer(bcfg, grad_fn)
     from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
@@ -53,7 +53,7 @@ def build_trainer(args, topo, grad_fn):
     acfg = AsyncBridgeConfig(
         topology=topo, rule=args.rule, num_byzantine=args.byzantine,
         attack=args.attack, adversary=args.adversary, codec=args.codec,
-        lam=args.lam, t0=args.t0, lr=args.lr,
+        lam=args.lam, t0=args.t0, lr=args.lr, sparse=args.sparse,
         channel=channel, staleness_bound=args.net_staleness,
         schedule=scenario_schedule(args.net_schedule, topo, args.steps,
                                    seed=args.seed, churn_prob=args.net_churn_prob),
@@ -83,6 +83,15 @@ def main(argv=None):
     ap.add_argument("--t0", type=float, default=100.0)
     ap.add_argument("--lr", type=float, default=0.0, help="constant lr override")
     ap.add_argument("--graph-p", type=float, default=0.8)
+    ap.add_argument("--topology", default=None,
+                    help="named topology spec (repro.core.graph.TOPOLOGIES): "
+                         "erdos_renyi[:p], small_world[:nearest], "
+                         "geometric[:radius], torus[:rows], complete; "
+                         "default builds ER from --graph-p")
+    ap.add_argument("--sparse", action="store_true",
+                    help="neighbor-indexed [M, K] state layout "
+                         "(repro.core.neighbors) — bit-identical to dense, "
+                         "required past a few hundred nodes")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
@@ -108,7 +117,12 @@ def main(argv=None):
     print(f"arch={cfg.name} family={cfg.family} params(single)="
           f"{model_api.param_count(cfg):,}")
 
-    topo = erdos_renyi(args.nodes, args.graph_p, args.byzantine, seed=args.seed)
+    if args.topology:
+        from repro.core.graph import make_topology
+
+        topo = make_topology(args.topology, args.nodes, args.byzantine, seed=args.seed)
+    else:
+        topo = erdos_renyi(args.nodes, args.graph_p, args.byzantine, seed=args.seed)
     trainer = build_trainer(args, topo, api.grad_fn())
     key = jax.random.PRNGKey(args.seed)
     params = replicate(api.init_params(key, cfg), args.nodes, perturb=0.01, key=key)

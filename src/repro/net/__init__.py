@@ -29,7 +29,7 @@ from repro.net.dynamic import (
     static_schedule,
 )
 from repro.net.mailbox import MailboxState, deliver, init_mailbox, push, staleness, usable_mask
-from repro.net.runtime import SynchronousRuntime, UnreliableRuntime
+from repro.net.runtime import SparseUnreliableRuntime, SynchronousRuntime, UnreliableRuntime
 from repro.net.scenarios import NET_SCENARIOS, NetScenario, build_schedule, get_scenario
 
 __all__ = [
@@ -38,6 +38,6 @@ __all__ = [
     "edge_churn", "node_join_leave", "node_presence_schedule",
     "partition_and_heal", "scenario_schedule", "schedule_stats", "static_schedule",
     "MailboxState", "deliver", "init_mailbox", "push", "staleness", "usable_mask",
-    "SynchronousRuntime", "UnreliableRuntime",
+    "SparseUnreliableRuntime", "SynchronousRuntime", "UnreliableRuntime",
     "NET_SCENARIOS", "NetScenario", "build_schedule", "get_scenario",
 ]

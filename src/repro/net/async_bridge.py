@@ -46,10 +46,19 @@ class AsyncBridgeConfig(BridgeConfig):
 
 
 class AsyncBridgeTrainer(BridgeTrainer):
-    """BRIDGE through an `UnreliableRuntime` built from an `AsyncBridgeConfig`."""
+    """BRIDGE through an `UnreliableRuntime` built from an `AsyncBridgeConfig`.
+
+    ``config.sparse`` swaps in the neighbor-indexed `SparseUnreliableRuntime`
+    — ``[M, K]`` mailbox/channel/codec state keyed by the schedule-union
+    `NeighborTable`, bit-identical to the dense runtime at equal seed and the
+    only layout that fits large-M graphs (see `repro.core.neighbors`).
+    """
 
     def __init__(self, config: AsyncBridgeConfig, grad_fn: Callable):
-        runtime = UnreliableRuntime(
+        from repro.net.runtime import SparseUnreliableRuntime
+
+        cls = SparseUnreliableRuntime if config.sparse else UnreliableRuntime
+        runtime = cls(
             config.schedule if config.schedule is not None else config.topology,
             config.channel,
             staleness_bound=config.staleness_bound,

@@ -13,9 +13,16 @@ State is a pytree of fixed-shape arrays so the whole exchange threads through
   and L bounds how far ahead any message can land (a later send to the same
   slot would be delivered first).
 
-Memory is ``O(M^2 * L * d)`` — the price of per-link payloads, which is what
-makes selective-victim attacks and per-edge loss expressible.  At simulation
-scale (M tens, d up to ~10^4, L a few ticks) this is tens of MB.
+Memory is ``O(M * W * L * d)`` where ``W`` is the mailbox width: ``M`` on the
+dense per-link layout (every node a potential sender — what makes
+selective-victim attacks and per-edge loss expressible at simulation scale),
+or ``K = max in-degree`` on the neighbor-indexed layout
+(`repro.core.neighbors.NeighborTable`), where slot (j, k) belongs to j's k-th
+static in-neighbor.  All state transforms here are elementwise over the
+leading ``[M, W]`` axes, so the two layouts share every function below —
+only `init_mailbox`'s ``width`` differs.  Padded sparse slots are never
+pushed to, so they stay at `NEVER` forever and `usable_mask` keeps them out
+of screening by construction.
 """
 from __future__ import annotations
 
@@ -31,25 +38,29 @@ NEVER = -(2**30)
 
 
 class MailboxState(NamedTuple):
-    values: jax.Array  # [M, M, d] newest delivered payload per (receiver, sender)
-    send_tick: jax.Array  # [M, M] int32 tick the stored payload was sent
-    ring_vals: jax.Array  # [M, M, L, d] in-flight payloads by arrival slot
-    ring_send: jax.Array  # [M, M, L] int32 send ticks of in-flight payloads
-    ring_valid: jax.Array  # [M, M, L] bool slot occupancy
+    values: jax.Array  # [M, W, d] newest delivered payload per (receiver, slot)
+    send_tick: jax.Array  # [M, W] int32 tick the stored payload was sent
+    ring_vals: jax.Array  # [M, W, L, d] in-flight payloads by arrival slot
+    ring_send: jax.Array  # [M, W, L] int32 send ticks of in-flight payloads
+    ring_valid: jax.Array  # [M, W, L] bool slot occupancy
 
     @property
     def capacity(self) -> int:
         return self.ring_vals.shape[2]
 
 
-def init_mailbox(num_nodes: int, dim: int, max_delay: int, dtype=jnp.float32) -> MailboxState:
+def init_mailbox(num_nodes: int, dim: int, max_delay: int, dtype=jnp.float32,
+                 *, width: int | None = None) -> MailboxState:
+    """``width`` is the sender-slot axis: ``num_nodes`` (default — the dense
+    per-link layout) or a `NeighborTable`'s ``k`` (the sparse layout)."""
     m, L = num_nodes, max_delay + 1
+    w = num_nodes if width is None else int(width)
     return MailboxState(
-        values=jnp.zeros((m, m, dim), dtype),
-        send_tick=jnp.full((m, m), NEVER, jnp.int32),
-        ring_vals=jnp.zeros((m, m, L, dim), dtype),
-        ring_send=jnp.full((m, m, L), NEVER, jnp.int32),
-        ring_valid=jnp.zeros((m, m, L), bool),
+        values=jnp.zeros((m, w, dim), dtype),
+        send_tick=jnp.full((m, w), NEVER, jnp.int32),
+        ring_vals=jnp.zeros((m, w, L, dim), dtype),
+        ring_send=jnp.full((m, w, L), NEVER, jnp.int32),
+        ring_valid=jnp.zeros((m, w, L), bool),
     )
 
 
@@ -97,11 +108,17 @@ def deliver(state: MailboxState, tick: jax.Array) -> tuple[MailboxState, jax.Arr
 
 
 def staleness(state: MailboxState, tick: jax.Array) -> jax.Array:
-    """[M, M] ticks since each mailbox entry was *sent* (huge where empty)."""
-    return tick - state.send_tick
+    """[M, W] ticks since each mailbox entry was *sent*; empty slots saturate
+    to INT32_MAX instead of computing ``tick - NEVER`` (which overflows int32
+    once ``tick`` exceeds ``2**30``, silently turning never-filled slots into
+    "fresh" zero payloads — pinned by ``tests/test_sparse.py``)."""
+    return jnp.where(state.send_tick > NEVER, tick - state.send_tick,
+                     jnp.iinfo(jnp.int32).max)
 
 
 def usable_mask(state: MailboxState, tick: jax.Array, bound: int) -> jax.Array:
-    """[M, M] entries that have ever arrived and are at most ``bound`` ticks
-    stale — the mask asynchronous screening feeds to the rules."""
-    return (state.send_tick > NEVER) & (staleness(state, tick) <= bound)
+    """[M, W] entries that have ever arrived and are at most ``bound`` ticks
+    stale — the mask asynchronous screening feeds to the rules.  Written as a
+    bound on ``send_tick`` (never as ``tick - NEVER``), so it stays exact at
+    arbitrary tick counts."""
+    return (state.send_tick > NEVER) & (state.send_tick >= tick - bound)

@@ -25,6 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.neighbors import NeighborTable
 from repro.net import mailbox as mb
 from repro.net.channel import ChannelConfig
 from repro.net.dynamic import static_schedule
@@ -165,6 +166,106 @@ class UnreliableRuntime:
             "active_links": jnp.sum(adjacency).astype(jnp.float32) / max(m, 1),
             # usable entries can exceed active_links: fresh mailbox values from
             # edges that churned away still count until they go stale
+            "usable_in": jnp.sum(mask).astype(jnp.float32) / max(m, 1),
+        }
+        return net_state, views, mask, stats
+
+
+class SparseUnreliableRuntime:
+    """`UnreliableRuntime` on the neighbor-indexed ``[M, K]`` layout.
+
+    A static `NeighborTable` built from the *union* of the topology schedule
+    keys every per-link structure: the mailbox ring is ``[M, K, L, d]``, the
+    per-tick live/usable masks are ``[M, K]``, and `exchange` consumes/emits
+    ``[M, K, d]`` message tensors — nothing of size ``M^2 * d`` exists on
+    this path (asserted over the jitted step's HLO by
+    ``benchmarks/scale_bench.py``).  Channel *events* are still drawn on the
+    dense ``[M, M]`` scalar grid and gathered through the table: per-edge
+    scalars are microscopic next to payloads, and reusing the dense draw
+    keeps the drop/latency trace — and therefore the whole trajectory —
+    bit-identical to the dense `UnreliableRuntime` oracle at equal seed
+    (property-tested in ``tests/test_sparse.py``).
+
+    ``adjacency_at`` returns the pre-gathered ``[M, K]`` live-slot mask (the
+    schedule is collapsed through the table once, on the host).
+    """
+
+    def __init__(
+        self,
+        topology_or_schedule,
+        channel: ChannelConfig = ChannelConfig.ideal(),
+        *,
+        staleness_bound: int = 5,
+        k: int | None = None,
+        neighbors: NeighborTable | None = None,
+    ):
+        if staleness_bound < 0:
+            raise ValueError(f"staleness_bound must be >= 0, got {staleness_bound}")
+        schedule = _as_schedule(topology_or_schedule)
+        self.channel = channel
+        self.staleness_bound = staleness_bound
+        sched_np = np.asarray(schedule)
+        self.neighbors = (
+            neighbors if neighbors is not None
+            else NeighborTable.from_schedule(sched_np, k=k)
+        )
+        if self.neighbors.num_nodes != sched_np.shape[1]:
+            raise ValueError(
+                f"neighbor table is for {self.neighbors.num_nodes} nodes, "
+                f"schedule has {sched_np.shape[1]}")
+        self._live = jnp.asarray(self.neighbors.live_schedule(sched_np))  # [T, M, K]
+
+    @property
+    def num_ticks(self) -> int:
+        return self._live.shape[0]
+
+    def adjacency_at(self, t: jax.Array) -> jax.Array:
+        return self._live[t % self.num_ticks]  # [M, K]
+
+    def init(self, num_nodes: int, dim: int, max_wire_bits: int | None = None) -> mb.MailboxState:
+        if num_nodes != self.neighbors.num_nodes:
+            raise ValueError(
+                f"runtime table is for {self.neighbors.num_nodes} nodes, "
+                f"trainer has {num_nodes}")
+        if max_wire_bits is None:
+            max_wire_bits = 32 * dim
+        return mb.init_mailbox(
+            num_nodes, dim, self.channel.max_total_latency(max_wire_bits),
+            width=self.neighbors.k)
+
+    def delivered_coord_mask(self, key: jax.Array, d: int) -> jax.Array | None:
+        """See `UnreliableRuntime.delivered_coord_mask` (identical stream)."""
+        if self.channel.bandwidth_cap is None:
+            return None
+        return self.channel.coord_mask(jax.random.split(key)[1], d)
+
+    def exchange(self, net_state, msgs, self_vals, live, key, t, *, wire_bits=None):
+        m = self.neighbors.num_nodes
+        if self.channel.bandwidth_cap is not None:
+            key, k_coord = jax.random.split(key)
+        else:
+            k_coord = key
+        # dense scalar event grid, gathered to slots — see class docstring
+        delay_d, drop_d = self.channel.sample(key, m)
+        delay = self.neighbors.gather_edges(delay_d)
+        drop = self.neighbors.gather_edges(drop_d, fill=True)
+        delay = delay + self.channel.serial_ticks(wire_bits)
+        send_mask = live & ~drop
+        cm = self.channel.coord_mask(k_coord, msgs.shape[-1])
+        if cm is not None:
+            msgs = jnp.where(cm[None, None, :], msgs, self_vals[:, None, :])
+        net_state = mb.push(net_state, msgs, send_mask, delay, t)
+        net_state, arrived = mb.deliver(net_state, t)
+        mask = mb.usable_mask(net_state, t, self.staleness_bound)
+        views = net_state.values
+        n_edges = jnp.maximum(jnp.sum(live), 1)
+        n_usable = jnp.maximum(jnp.sum(mask), 1)
+        stats = {
+            "delivered_frac": jnp.sum(arrived & live) / n_edges.astype(jnp.float32),
+            "mean_staleness": jnp.sum(
+                jnp.where(mask, mb.staleness(net_state, t), 0)
+            ) / n_usable.astype(jnp.float32),
+            "active_links": jnp.sum(live).astype(jnp.float32) / max(m, 1),
             "usable_in": jnp.sum(mask).astype(jnp.float32) / max(m, 1),
         }
         return net_state, views, mask, stats

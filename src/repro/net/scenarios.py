@@ -20,13 +20,21 @@ from repro.net.dynamic import scenario_schedule, static_schedule
 
 @dataclasses.dataclass(frozen=True)
 class NetScenario:
-    """One named network condition (channel x topology dynamics)."""
+    """One named network condition (channel x topology dynamics).
+
+    ``topology`` optionally names a `repro.core.graph.TOPOLOGIES` spec —
+    large-graph scenarios (small-world / geometric / torus at M >= 512,
+    where only the sparse [M, K] layout fits) bundle the graph family with
+    the channel so one label reproduces the whole condition; resolve it with
+    `build_topology`.  ``None`` means the caller supplies the graph (all
+    paper-scale scenarios)."""
 
     name: str
     channel: ChannelConfig = ChannelConfig.ideal()
     schedule_kind: str | None = None  # dynamic.scenario_schedule kind; None = static
     staleness_bound: int = 5
     churn_prob: float = 0.3
+    topology: str | None = None  # repro.core.graph.make_topology spec
 
 
 NET_SCENARIOS: dict[str, NetScenario] = {
@@ -43,8 +51,30 @@ NET_SCENARIOS: dict[str, NetScenario] = {
         NetScenario("narrowband64k", ChannelConfig(bits_per_tick=1 << 16)),
         NetScenario("churn", schedule_kind="churn"),
         NetScenario("partition", schedule_kind="partition"),
+        # large-graph scenarios (ISSUE 5): bounded-degree families at
+        # M >= 512 — run these through the sparse neighbor-indexed layout
+        # (dense [M, M, d] state does not fit)
+        NetScenario("smallworld_lossy", ChannelConfig(drop_prob=0.1),
+                    topology="small_world:6"),
+        NetScenario("geometric_churn", schedule_kind="churn", churn_prob=0.2,
+                    topology="geometric"),
+        NetScenario("torus_laggy", ChannelConfig(latency_max=2),
+                    topology="torus"),
     )
 }
+
+
+def build_topology(scenario: NetScenario, num_nodes: int, num_byzantine: int,
+                   *, seed: int = 0):
+    """Resolve the scenario's bundled topology spec (see `NetScenario`);
+    raises for paper-scale scenarios that leave the graph to the caller."""
+    if scenario.topology is None:
+        raise ValueError(
+            f"scenario {scenario.name!r} does not bundle a topology; "
+            f"construct one via repro.core.graph")
+    from repro.core.graph import make_topology
+
+    return make_topology(scenario.topology, num_nodes, num_byzantine, seed=seed)
 
 
 def get_scenario(name: str) -> NetScenario:

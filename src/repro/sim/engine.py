@@ -80,8 +80,9 @@ class GridNetRuntime:
 
     cell_aware = True  # step passes the cell through (see build_cell_runtime_step)
 
-    def __init__(self, topology, scenarios: Sequence[str], num_ticks: int, *, seed: int = 0):
-        from repro.net.runtime import UnreliableRuntime
+    def __init__(self, topology, scenarios: Sequence[str], num_ticks: int, *, seed: int = 0,
+                 sparse: bool = False):
+        from repro.net.runtime import SparseUnreliableRuntime, UnreliableRuntime
         from repro.net.scenarios import build_schedule, get_scenario
 
         if not scenarios:
@@ -89,22 +90,46 @@ class GridNetRuntime:
         self.scenario_names = tuple(scenarios)
         self._specs = [get_scenario(n) for n in self.scenario_names]
         self.num_ticks = int(num_ticks)
-        scheds, runtimes = [], []
-        for s in self._specs:
-            sched = build_schedule(s, topology, self.num_ticks, seed=seed)
-            scheds.append(sched)
-            runtimes.append(
-                UnreliableRuntime(sched, s.channel, staleness_bound=s.staleness_bound)
-            )
-        self._schedules = jnp.asarray(np.stack(scheds))  # [S, T, M, M]
+        scheds = [build_schedule(s, topology, self.num_ticks, seed=seed)
+                  for s in self._specs]
+        # neighbor-indexed mode: ONE table over the union of every scenario's
+        # schedule, so all cells share the [M, K, ...] state layout (a slot
+        # that any scenario can use exists in all of them; extra slots are
+        # inert padding for the others — capacity-invariance again)
+        self.neighbors = None
+        if sparse:
+            from repro.core.neighbors import NeighborTable
+
+            self.neighbors = NeighborTable.from_schedule(
+                np.concatenate([np.asarray(s, bool) for s in scheds], axis=0))
+        runtimes = []
+        for s, sched in zip(self._specs, scheds):
+            if sparse:
+                runtimes.append(SparseUnreliableRuntime(
+                    sched, s.channel, staleness_bound=s.staleness_bound,
+                    neighbors=self.neighbors))
+            else:
+                runtimes.append(
+                    UnreliableRuntime(sched, s.channel, staleness_bound=s.staleness_bound)
+                )
+        self._schedules_np = np.stack([np.asarray(s, bool) for s in scheds])  # [S, T, M, M]
+        if sparse:
+            # pre-gathered per-scenario live slots: [S, T, M, K]
+            self._lives = jnp.asarray(np.stack(
+                [self.neighbors.live_schedule(s) for s in self._schedules_np]))
+            self._schedules = None
+        else:
+            self._schedules = jnp.asarray(self._schedules_np)
         self._runtimes = tuple(runtimes)
 
     def schedule_for(self, name: str) -> np.ndarray:
         """The exact ``[T, M, M]`` schedule a sequential comparator run must
         use to reproduce this runtime's cell bit-for-bit."""
-        return np.asarray(self._schedules[self.scenario_names.index(name)])
+        return self._schedules_np[self.scenario_names.index(name)]
 
     def adjacency_at(self, t: jax.Array, cell: CellParams) -> jax.Array:
+        if self.neighbors is not None:
+            return self._lives[cell.scenario_idx, t % self.num_ticks]  # [M, K]
         return self._schedules[cell.scenario_idx, t % self.num_ticks]
 
     def init(self, num_nodes: int, dim: int, max_wire_bits: int | None = None):
@@ -117,7 +142,8 @@ class GridNetRuntime:
         if max_wire_bits is None:
             max_wire_bits = 32 * dim
         ring = max(s.channel.max_total_latency(max_wire_bits) for s in self._specs)
-        return mb.init_mailbox(num_nodes, dim, ring)
+        width = None if self.neighbors is None else self.neighbors.k
+        return mb.init_mailbox(num_nodes, dim, ring, width=width)
 
     def exchange(self, net_state, msgs, self_vals, adjacency, key, t, cell: CellParams,
                  *, wire_bits=None):
@@ -152,6 +178,12 @@ class GridEngine:
     *multi-codec* bank may differ from their grouped twin by ~1 ULP/step —
     XLA's FMA contraction of the dequantize multiply is program-shape
     dependent — and are asserted allclose by the tests).
+
+    ``sparse=True`` runs every cell on the neighbor-indexed ``[M, K]`` state
+    layout (`repro.core.neighbors`): net grids share ONE table over the
+    union of all scenario schedules (mailboxes ``[E, M, K, L, d]``), sync
+    grids screen gathered views — each cell bit-identical to its dense twin
+    (``tests/test_sparse.py``) and the only layout that fits large M.
     """
 
     def __init__(
@@ -164,6 +196,7 @@ class GridEngine:
         screen_chunk: int | None = None,
         scenario_seed: int = 0,
         group: bool = True,
+        sparse: bool = False,
     ):
         self.grid = grid
         self.cells = list(cells) if cells is not None else grid.cells()
@@ -189,12 +222,23 @@ class GridEngine:
         self._adv_stateful = self._adv_engaged and adv_lib.bank_stateful(
             adv_lib.adversary_bank(self.adversary_bank))
         self._bind_cells(self.cells)
+        # neighbor-indexed [M, K] state layout (repro.core.neighbors): the
+        # sync path screens gathered views, the net path runs sparse
+        # runtimes; every cell stays bit-identical to its dense twin
+        self.sparse = bool(sparse)
+        self.neighbors = None
         if self.net_mode:
             if num_ticks is None:
                 raise ValueError("num_ticks is required for net-scenario grids (schedule length)")
-            self.runtime = GridNetRuntime(topo, self.scenario_bank, num_ticks, seed=scenario_seed)
+            self.runtime = GridNetRuntime(topo, self.scenario_bank, num_ticks,
+                                          seed=scenario_seed, sparse=self.sparse)
+            self.neighbors = self.runtime.neighbors
         else:
             self.runtime = None
+            if self.sparse:
+                from repro.core.neighbors import NeighborTable
+
+                self.neighbors = NeighborTable.from_adjacency(topo.adjacency)
         self._screen_chunk = screen_chunk
         self._grad_fn = grad_fn
         self._adjacency = jnp.asarray(topo.adjacency)
@@ -357,7 +401,7 @@ class GridEngine:
         return build_cell_step(
             self._grad_fn, self._adjacency, rules, byz_lib.attack_bank(attacks),
             codecs=codecs, wire_attacks=wire_bank, adversaries=adversaries,
-            screen_chunk=self._screen_chunk,
+            screen_chunk=self._screen_chunk, neighbors=self.neighbors,
         )
 
     def _group_scan(self, gi: int) -> Callable:
@@ -404,8 +448,13 @@ class GridEngine:
             )
         # error-feedback carry: present engine-wide iff any codec in the bank
         # is lossy (state pytrees must be uniform across groups); per-link on
-        # the net path, per-sender on the broadcast path
-        shape = (e, m, m, dim) if self.runtime is not None else (e, m, dim)
+        # the net path ([M, K] slots when neighbor-indexed), per-sender on
+        # the broadcast path
+        if self.runtime is not None:
+            link = m if self.runtime.neighbors is None else self.runtime.neighbors.k
+            shape = (e, m, link, dim)
+        else:
+            shape = (e, m, dim)
         comm = comm_lib.init_residual(shape, bank)
         # adversary carry: present engine-wide iff any adversary in the bank
         # is stateful (same uniformity constraint); stateless cells thread it

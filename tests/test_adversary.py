@@ -173,6 +173,7 @@ def test_adversary_identity_codec_matches_no_comm_path(topo, targets, batches):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_rule_adversary_b_grid_compiles_once_and_matches_trainer(topo, targets, batches):
     grid = ExperimentGrid(topo, ("trimmed_mean", "median"), ("none",), (1, 2), (0, 1),
                           adversaries=("none", "ipm", "inner_max"), lam=1.0, t0=10.0)
@@ -300,6 +301,7 @@ def test_delivered_coord_mask_matches_exchange_draw():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_adaptive_strictly_worse_honest_loss_than_best_static():
     """On the global objective (Eq. (1): mean local risk over ALL nodes,
     evaluated at honest iterates), the adaptive tier must beat every static
@@ -347,6 +349,7 @@ def test_adaptive_strictly_worse_honest_loss_than_best_static():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_breakdown_certification_monotone_and_bisect_matches_ladder(topo, targets, batches):
     cfg = BreakdownConfig(mode="ladder", seeds=(0,), loss_ratio=1.5, b_max=3)
     eng = BreakdownEngine(topo, ("trimmed_mean", "mean"), ("random", "inner_max"),

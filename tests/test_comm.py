@@ -231,6 +231,7 @@ def _sequential(topo, targets, cell):
     return np.asarray(st.params["w"]), np.asarray(jnp.stack(losses))
 
 
+@pytest.mark.slow
 def test_codec_grid_compiles_once_and_matches_trainers(topo, targets, batches):
     """codec x rule x attack x seed as ONE compiled program, every cell
     bit-identical to its own (codec-configured) BridgeTrainer run."""

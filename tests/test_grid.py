@@ -70,6 +70,7 @@ def _sequential_sync(topo, targets, cell):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("group", [True, False])
 def test_sync_grid_bit_equals_sequential_trainer(topo, targets, batches, group):
     """The acceptance grid — 2 rules x 3 attacks x 4 seeds — as one compiled
@@ -89,6 +90,7 @@ def test_sync_grid_bit_equals_sequential_trainer(topo, targets, batches, group):
                                       err_msg=f"loss trace diverged for {cell}")
 
 
+@pytest.mark.slow
 def test_net_grid_bit_equals_async_trainer(topo, targets, batches):
     """Net-scenario cells (channel noise, churn, per-link attacks) are
     bit-identical to dedicated AsyncBridgeTrainer runs driven with the same
@@ -124,6 +126,7 @@ def test_net_grid_bit_equals_async_trainer(topo, targets, batches):
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("chunk", [1, 3, 5, 24])
 def test_chunked_matches_unchunked(topo, targets, batches, chunk):
     grid = ExperimentGrid(topo, ("trimmed_mean", "median"),

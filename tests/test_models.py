@@ -28,6 +28,7 @@ def _batch(cfg, rng):
     return {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S + 1)), jnp.int32)}
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", sorted(ARCHS))
 def test_arch_smoke_train_step(arch, rng):
     """Reduced variant: one forward/backward step, finite loss and grads."""
@@ -57,6 +58,7 @@ def test_arch_smoke_decode_step(arch, rng):
     assert bool(jnp.all(jnp.isfinite(logits))), arch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["qwen3-4b", "gemma3-12b", "rwkv6-3b", "zamba2-1.2b"])
 def test_prefill_decode_consistency(arch, rng):
     """Chunked training-time recurrences must equal step-by-step decode."""
@@ -80,6 +82,7 @@ def test_prefill_decode_consistency(arch, rng):
     assert float(jnp.max(jnp.abs(full - dec))) / scale < 2e-4, arch
 
 
+@pytest.mark.slow
 def test_moe_prefill_decode_consistency(rng):
     """MoE: with generous capacity (no drops) decode must match prefill."""
     cfg = dataclasses.replace(get_config("deepseek-v2-236b").reduced(), capacity_factor=8.0)

@@ -6,6 +6,8 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
@@ -22,6 +24,7 @@ def _run(code: str, devices: int = 8, timeout: int = 420):
     return proc.stdout
 
 
+@pytest.mark.slow
 def test_sharded_gossip_matches_reference():
     out = _run("""
         import numpy as np, jax, jax.numpy as jnp

@@ -4,6 +4,7 @@ qualitative claims at CPU scale."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config
 from repro.core import BridgeConfig, BridgeTrainer, erdos_renyi, replicate
@@ -32,6 +33,7 @@ def _train_lm(arch, rule, attack, steps=25, seed=0, lr=0.1):
     return losses, float(metrics["consensus_dist"])
 
 
+@pytest.mark.slow
 def test_lm_training_loss_decreases_under_attack():
     losses, cons = _train_lm("qwen3-4b", "trimmed_mean", "random", steps=40)
     assert np.isfinite(losses).all()
@@ -39,6 +41,7 @@ def test_lm_training_loss_decreases_under_attack():
     assert cons < 5.0
 
 
+@pytest.mark.slow
 def test_lm_dgd_vs_bridge_under_attack():
     """DGD (mean) degrades far more than BRIDGE-T under the same attack."""
     dgd, _ = _train_lm("qwen3-4b", "mean", "random", steps=25)
@@ -46,6 +49,7 @@ def test_lm_dgd_vs_bridge_under_attack():
     assert np.mean(brt[-5:]) < np.mean(dgd[-5:]) - 0.5
 
 
+@pytest.mark.slow
 def test_ssm_arch_trains_with_bridge():
     """Attention-free arch (RWKV6): the paper's technique is arch-agnostic."""
     losses, _ = _train_lm("rwkv6-3b", "trimmed_mean", "random", steps=40, lr=0.3)
@@ -53,6 +57,7 @@ def test_ssm_arch_trains_with_bridge():
     assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.1
 
 
+@pytest.mark.slow
 def test_moe_arch_trains_with_bridge():
     """MoE incl. router params are screened coordinate-wise."""
     losses, _ = _train_lm("deepseek-v2-236b", "median", "random", steps=15)
