@@ -54,7 +54,8 @@ def run_certification(num_nodes=10, ticks=60, *, rules=("trimmed_mean", "median"
         topo, rules, adversaries, task.grad_fn, task.init_fn, task.batches,
         lam=1.0, t0=30.0,
         config=BreakdownConfig(mode=mode, seeds=seeds, b_max=b_max,
-                               loss_ratio=loss_ratio, score_drop=score_drop),
+                               loss_ratio=loss_ratio, score_drop=score_drop,
+                               measure_compile=True),
         eval_fn=task.eval_accuracy)
     result = engine.run()
     result["meta"]["num_nodes"] = num_nodes

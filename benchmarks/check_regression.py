@@ -32,17 +32,20 @@ import os
 import shutil
 import sys
 
-LOWER_IS_BETTER = ("us_per_tick", "us_per_step", "us_per_cell", "us_per_call", "wall_s")
+LOWER_IS_BETTER = ("us_per_tick", "us_per_step", "us_per_cell", "us_per_call",
+                   "wall_s", "steady_state_s")
 # "speedup" metrics compare two measurements from the SAME machine, so they
 # are environment-relative — the most portable signal across runner classes
 HIGHER_IS_BETTER = ("cells_per_sec", "ticks_per_sec")
 # environment measurements, not properties of the code under test (interpreter
-# start-up, import cost, reference-machine extrapolations) — never gated
-SKIP = ("extrapolated_wall_s_all_cells", "seconds_per_cell")
+# start-up, import cost, reference-machine extrapolations, XLA compile time —
+# compile cost rides the runner's cache state and core count) — never gated
+SKIP = ("extrapolated_wall_s_all_cells", "seconds_per_cell", "compile_s")
 SKIP_PREFIXES = ("subprocess_baseline.", "sequential_inprocess_baseline.")
 
 DEFAULT_NAMES = ("BENCH_grid.json", "BENCH_net.json", "BENCH_comm.json",
-                 "BENCH_kernels.json", "BENCH_breakdown.json", "BENCH_scale.json")
+                 "BENCH_kernels.json", "BENCH_breakdown.json", "BENCH_scale.json",
+                 "BENCH_obs.json")
 
 
 def _higher_is_better(leaf: str) -> bool:

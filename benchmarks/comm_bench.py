@@ -88,10 +88,14 @@ def codec_accuracy_grid(
                           codecs=tuple(codecs), lam=1.0, t0=30.0)
     engine = GridEngine(grid, grad_fn)
     t0 = time.perf_counter()
-    state = engine.init(init_fn)
-    state, metrics = engine.run(state, batches)
+    state0 = engine.init(init_fn)
+    state, metrics = engine.run(state0, batches)
     jax.block_until_ready(state.params)
     wall = time.perf_counter() - t0
+    # re-run the cached program: steady-state scan cost without the compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(engine.run(state0, batches)[0].params)
+    wall_steady = time.perf_counter() - t0
 
     wall_base = base_cells = None
     if uncompressed_baseline:
@@ -140,6 +144,8 @@ def codec_accuracy_grid(
     meta = {
         "cells": engine.num_cells, "ticks": ticks, "num_nodes": num_nodes,
         "dim": d, "wall_s": wall, "trace_count": engine.trace_count,
+        "compile_s": max(wall - wall_steady, 0.0),
+        "steady_state_s": wall_steady,
         "cells_per_sec": engine.num_cells / wall,
         "ticks_per_sec": engine.num_cells * ticks / wall,
     }

@@ -105,16 +105,19 @@ def _build(num_nodes: int, sparse: bool, *, dim_small: bool, seed: int = 0):
 
 
 def _time_ticks(tr, state, batch_fn, ticks: int):
-    """Per-tick wall time of the jitted scan (compile excluded), and the
-    final state for correctness checks."""
+    """Per-tick wall time of the jitted scan (compile excluded), the compile
+    cost (first-call excess over the cached call), and the final state for
+    correctness checks."""
     batches = stack_batches(batch_fn, ticks)
+    t0 = time.perf_counter()
     st, _ = tr.run_scan(state, batches)  # warm-up & compile
     jax.block_until_ready(st.params)
+    wall_first = time.perf_counter() - t0
     t0 = time.perf_counter()
     st, ms = tr.run_scan(state, batches)
     jax.block_until_ready(st.params)
     wall = time.perf_counter() - t0
-    return wall / ticks, st, ms
+    return wall / ticks, st, ms, max(wall_first - wall, 0.0), wall
 
 
 def hlo_no_dense_allocation(tr, state, batch_fn) -> dict:
@@ -150,8 +153,8 @@ def run(smoke: bool = False) -> dict:
     # --- dense vs sparse at the comparison size (bit-identical + timed) ---
     tr_d, st_d, bf, _ = _build(cmp_m, sparse=False, dim_small=True)
     tr_s, st_s, _, _ = _build(cmp_m, sparse=True, dim_small=True)
-    us_dense, fin_d, _ = _time_ticks(tr_d, st_d, bf, ticks)
-    us_sparse, fin_s, _ = _time_ticks(tr_s, st_s, bf, ticks)
+    us_dense, fin_d, _, compile_d, steady_d = _time_ticks(tr_d, st_d, bf, ticks)
+    us_sparse, fin_s, _, compile_sp, steady_sp = _time_ticks(tr_s, st_s, bf, ticks)
     identical = bool(jax.tree_util.tree_all(jax.tree_util.tree_map(
         lambda a, b: bool(jnp.all(a == b)), fin_d.params, fin_s.params)))
     speedup = us_dense / us_sparse
@@ -159,7 +162,7 @@ def run(smoke: bool = False) -> dict:
     # --- M = 512 small-world end-to-end on the real linear task ---
     tr_big, st_big, bf_big, topo_big = _build(big_m, sparse=True, dim_small=smoke)
     hlo = hlo_no_dense_allocation(tr_big, st_big, bf_big)
-    us_big, fin_big, ms_big = _time_ticks(tr_big, st_big, bf_big, ticks)
+    us_big, fin_big, ms_big, compile_big, steady_big = _time_ticks(tr_big, st_big, bf_big, ticks)
     loss = np.asarray(ms_big["loss"])
     # per-tick batch losses are noisy; compare half-means, not endpoints
     loss_decreased = bool(loss[ticks // 2:].mean() < loss[: ticks // 2].mean())
@@ -176,12 +179,15 @@ def run(smoke: bool = False) -> dict:
             "num_nodes": cmp_m,
             "dense_us_per_tick": us_dense * 1e6,
             "sparse_us_per_tick": us_sparse * 1e6,
+            "dense_compile_s": compile_d, "dense_steady_state_s": steady_d,
+            "sparse_compile_s": compile_sp, "sparse_steady_state_s": steady_sp,
             "sparse_speedup": speedup,
             "bit_identical": identical,
         },
         "large_graph": {
             "num_nodes": big_m, "k": int(k),
             "us_per_tick": us_big * 1e6,
+            "compile_s": compile_big, "steady_state_s": steady_big,
             "first_loss": float(loss[0]), "last_loss": float(loss[-1]),
             "loss_decreased": loss_decreased,
             "hlo": hlo,

@@ -38,7 +38,12 @@ import jax
 import numpy as np
 
 from repro.core import screening
+from repro.obs import TraceSpec
 from repro.sim import Cell, ExperimentGrid, GridEngine
+
+# ctor sentinel: "use the default sentinel-only trace" (pass trace=None to
+# run with observability fully off)
+_DEFAULT_TRACE = object()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +55,9 @@ class BreakdownConfig:
     relative to the faultless reference's final loss; ``score_drop`` (with an
     ``eval_fn``) flags cells whose host-side score fell that far below the
     reference; ``seeds`` must all survive for a probe to count as surviving.
+    ``measure_compile`` double-runs each probe round (second call hits the
+    jit cache) to split ``compile_s`` from ``steady_state_s`` in the meta —
+    opt-in because it doubles device work.
     """
 
     b_max: int | None = None
@@ -57,6 +65,7 @@ class BreakdownConfig:
     loss_ratio: float = 4.0
     score_drop: float | None = None
     mode: str = "ladder"  # ladder | bisect
+    measure_compile: bool = False
 
 
 def feasible_b(rule: str, topology, b_cap: int | None = None) -> int:
@@ -85,7 +94,8 @@ class BreakdownEngine:
                  lam: float = 1.0, t0: float = 30.0,
                  config: BreakdownConfig = BreakdownConfig(),
                  eval_fn: Callable | None = None,
-                 engine_chunk: int | None = None):
+                 engine_chunk: int | None = None,
+                 trace=_DEFAULT_TRACE, events=None):
         if "none" in adversaries:
             raise ValueError("'none' is the reference, not a certifiable adversary")
         self.topology = topology
@@ -98,8 +108,16 @@ class BreakdownEngine:
         self.config = config
         self.eval_fn = eval_fn
         self.engine_chunk = engine_chunk
+        # sentinel-only trace by default: divergence is *located* (first bad
+        # tick per probe) instead of inferred from NaNs in the loss trace;
+        # bit-inert, so certification verdicts are unchanged
+        self.trace = (TraceSpec(forensics=False, sentinel=True)
+                      if trace is _DEFAULT_TRACE else trace)
+        self.events = events
         self.compiles = 0
         self.cells_run = 0
+        self.compile_s = 0.0
+        self.steady_state_s = 0.0
         self.feasible = {r: feasible_b(r, topology, config.b_max) for r in self.rules}
         # probe ledger: (rule, adversary, b) -> record dict
         self.probes: dict[tuple[str, str, int], dict] = {}
@@ -123,12 +141,25 @@ class BreakdownEngine:
             return
         cells = [Cell(rule, "none", b, s, adversary=adv, mask_seed=s)
                  for (rule, adv, b) in keys for s in self.config.seeds]
-        engine = GridEngine(self._grid(), self.grad_fn, cells=cells)
+        engine = GridEngine(self._grid(), self.grad_fn, cells=cells, trace=self.trace)
         state = engine.init(self.init_fn)
+        t0 = time.perf_counter()
         final, metrics = engine.run(state, self.batches, chunk=self.engine_chunk)
+        final = jax.block_until_ready(final)
+        wall = time.perf_counter() - t0
+        if self.config.measure_compile:
+            # second call hits the jit cache: its wall IS the steady-state
+            # round, the excess of the first call is compile time
+            t1 = time.perf_counter()
+            jax.block_until_ready(engine.run(state, self.batches, chunk=self.engine_chunk))
+            steady = time.perf_counter() - t1
+            self.compile_s += max(wall - steady, 0.0)
+            self.steady_state_s += steady
         self.compiles += engine.trace_count
         self.cells_run += len(cells)
         loss = np.asarray(metrics["loss"], np.float64)  # [E, T]
+        first_bad = (np.asarray(final.obs.first_bad)
+                     if final.obs is not None else None)  # [E] or None
         ns = len(self.config.seeds)
         for j, key in enumerate(keys):
             rows = slice(j * ns, (j + 1) * ns)
@@ -137,13 +168,27 @@ class BreakdownEngine:
                 "max_final_loss": float(np.max(loss[rows, -1])),
                 "finite": bool(np.isfinite(loss[rows]).all()),
             }
+            if first_bad is not None:
+                bad = first_bad[rows][first_bad[rows] >= 0]
+                rec["first_bad_tick"] = int(bad.min()) if bad.size else None
             if self.eval_fn is not None:
+                # score only the seeds that stayed finite: a diverged run's
+                # params are NaN and would poison the host-side score, hiding
+                # *when* the cell broke behind an opaque NaN
                 scores = []
                 for i in range(j * ns, (j + 1) * ns):
+                    if not np.isfinite(loss[i]).all():
+                        continue
                     params_i = jax.tree_util.tree_map(lambda x: x[i], final.params)
                     scores.append(float(self.eval_fn(params_i, ~engine.byz_masks[i])))
-                rec["score"] = float(np.mean(scores))
+                rec["score"] = float(np.mean(scores)) if scores else None
             self.probes[key] = rec
+            if self.events is not None and rec.get("first_bad_tick") is not None:
+                self.events.emit("obs.divergence", rule=key[0], adversary=key[1],
+                                 b=key[2], first_bad_tick=rec["first_bad_tick"])
+        if self.events is not None:
+            self.events.emit("breakdown.round", probes=len(keys), cells=len(cells),
+                             wall_s=wall, compiles=engine.trace_count)
 
     def _survived(self, rule: str, adv: str, b: int) -> bool:
         rec = self.probes[(rule, adv, b)]
@@ -237,6 +282,9 @@ class BreakdownEngine:
             "cells_run": self.cells_run,
             "cells_per_sec": self.cells_run / max(time.time() - t_start, 1e-9),
         })
+        if self.config.measure_compile:
+            result["meta"]["compile_s"] = self.compile_s
+            result["meta"]["steady_state_s"] = self.steady_state_s
         return result
 
 

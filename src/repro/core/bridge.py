@@ -45,6 +45,10 @@ class BridgeState(NamedTuple):
     # adversary's carried observations of the honest trajectory; None when no
     # adversary in the bank is stateful (static attacks carry nothing)
     adv: Any = None
+    # observability aggregates (repro.obs.trace.TraceState): in-scan screening
+    # forensics, histograms, and the divergence sentinel; None (the default)
+    # keeps the untraced program shape bit-for-bit
+    obs: Any = None
 
 
 class CellParams(NamedTuple):
@@ -79,6 +83,12 @@ class CellParams(NamedTuple):
     # adversary's registered defaults.  Data, not structure: the red-team
     # search mutates these between generations without retracing.
     adv_theta: Any = None
+    # observability spec (repro.obs.trace.TraceSpec): *structural* auxiliary
+    # data — a zero-leaf pytree node, so it is part of the jit cache key, not
+    # an operand.  None (the default) keeps the exact untraced program shape;
+    # a spec compiles forensic aggregation into the step (bit-inert for the
+    # trajectory — property-tested).
+    trace: Any = None
 
 
 def cell_step_size(cell: CellParams, t: jax.Array) -> jax.Array:
@@ -109,6 +119,8 @@ class BridgeConfig:
     # broadcast per node — bit-identical to the dense path (property-tested)
     # and the only layout that scales past the dense O(M^2) wall
     sparse: bool = False
+    # observability (repro.obs.trace.TraceSpec); None = untraced (default)
+    trace: Any = None
 
     def step_size(self, t: jax.Array) -> jax.Array:
         if self.lr > 0:
@@ -297,35 +309,83 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
             w_hat, adjacency, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
             self_vals=self_vals)
 
+    def screen_decide(w_hat, self_vals, cell):
+        # decision-instrumented twin: same y op graph (bitwise), plus the
+        # [M, W] per-edge trim fractions the obs aggregates fold in
+        stride = cell.trace.decide_stride
+        if neighbors is not None:
+            return screening.screen_views_decide_banked(
+                neighbors.gather_rows(w_hat), neighbors.valid_dev, self_vals,
+                rules, cell.rule_idx, cell.b, decide_stride=stride)
+        return screening.screen_all_decide_banked(
+            w_hat, adjacency, rules, cell.rule_idx, cell.b, self_vals=self_vals,
+            decide_stride=stride)
+
     def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
+        spec = cell.trace  # static: TraceSpec or None (zero-leaf aux data)
         w, unflatten = stack_flatten(state.params)
         d = w.shape[1]
         key, sub = jax.random.split(state.key)
         # (Step 3-4) broadcast + Byzantine substitution of sent messages
-        w_bcast = byz_lib.apply_attack_bank(attacks, cell.attack_idx, w, cell.byz_mask, sub, state.t)
+        with jax.named_scope("bridge.attack"):
+            w_bcast = byz_lib.apply_attack_bank(
+                attacks, cell.attack_idx, w, cell.byz_mask, sub, state.t)
         new_adv = state.adv
         if adv_engaged:
             # the adaptive adversary observes the honest trajectory and
             # re-crafts the Byzantine rows; its screening oracle is this
             # cell's own banked screen (differentiable — inner maximization
             # ascends through it)
-            ctx = adv_lib.AdvCtx(screen=lambda wb: screen(wb, wb, cell))
-            theta = adv_lib.cell_theta(adv_bank, _cell_adv_idx(cell), cell.adv_theta)
-            w_bcast, new_adv = adv_lib.apply_adversary_bank(
-                adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
-                w_bcast, cell.byz_mask, jax.random.fold_in(sub, ADV_SALT), state.t,
-            )
+            with jax.named_scope("bridge.adversary"):
+                ctx = adv_lib.AdvCtx(screen=lambda wb: screen(wb, wb, cell))
+                theta = adv_lib.cell_theta(adv_bank, _cell_adv_idx(cell), cell.adv_theta)
+                w_bcast, new_adv = adv_lib.apply_adversary_bank(
+                    adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
+                    w_bcast, cell.byz_mask, jax.random.fold_in(sub, ADV_SALT), state.t,
+                )
         # wire codec: what receivers actually decode (identity: w_bcast itself)
-        w_hat, new_comm = _wire_roundtrip(
-            codec_bank, wire_attacks, cell, sub, w_bcast, state.comm,
-            cell.byz_mask, state.t, d,
-        )
+        with jax.named_scope("bridge.codec"):
+            w_hat, new_comm = _wire_roundtrip(
+                codec_bank, wire_attacks, cell, sub, w_bcast, state.comm,
+                cell.byz_mask, state.t, d,
+            )
         # (Step 5) screening at every node: neighbors are seen through the
         # wire; the node's own iterate never travels and stays uncompressed
-        y = screen(w_hat, w_bcast, cell)
-        new_params, metrics = _grad_update_and_metrics(grad_fn, cell, state, batch, y, unflatten)
+        trim = None
+        with jax.named_scope("bridge.screen"):
+            if spec is not None and spec.forensics:
+                screening.check_decide_streams(rules, d, screen_chunk)
+                y, trim = screen_decide(w_hat, w_bcast, cell)
+            else:
+                y = screen(w_hat, w_bcast, cell)
+        with jax.named_scope("bridge.apply"):
+            new_params, metrics = _grad_update_and_metrics(
+                grad_fn, cell, state, batch, y, unflatten)
         metrics.update(_comm_metrics(codec_bank, cell, d, n_edges, new_comm))
-        return BridgeState(new_params, state.t + 1, key, state.net, new_comm, new_adv), metrics
+        new_obs = state.obs
+        if spec is not None:
+            from repro.obs import trace as obs_trace
+
+            with jax.named_scope("bridge.obs"):
+                live = byz_edge = None
+                if trim is not None:
+                    if neighbors is not None:
+                        live = neighbors.valid_dev
+                        byz_edge = neighbors.gather_senders(cell.byz_mask, fill=False)
+                    else:
+                        live = jnp.asarray(adjacency, bool)
+                        byz_edge = jnp.broadcast_to(cell.byz_mask[None, :], live.shape)
+                    live_f = live.astype(jnp.float32)
+                    metrics["obs_trim_frac"] = (
+                        jnp.sum(trim * live_f) / jnp.maximum(jnp.sum(live_f), 1.0))
+                new_obs = obs_trace.update(
+                    spec, state.obs, t=state.t, loss=metrics["loss"],
+                    consensus=metrics["consensus_dist"], trim_frac=trim,
+                    live=live, byz_edge=byz_edge, staleness=None,
+                    wire_bits=comm_lib.wire_bits_bank(codec_bank, _cell_codec_idx(cell), d),
+                    live_edges=n_edges, d=d)
+        return BridgeState(new_params, state.t + 1, key, state.net, new_comm,
+                           new_adv, new_obs), metrics
 
     return step
 
@@ -378,6 +438,7 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
             self_vals=wb)
 
     def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
+        spec = cell.trace  # static: TraceSpec or None (zero-leaf aux data)
         w, unflatten = stack_flatten(state.params)
         d = w.shape[1]
         m = w.shape[0]
@@ -385,49 +446,51 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
         # dense: the tick's [M, M] adjacency; sparse: the [M, K] live-slot mask
         adj_t = runtime.adjacency_at(state.t, cell) if cell_aware else runtime.adjacency_at(state.t)
         # (Step 3-4) per-link transmissions with Byzantine substitution.
-        if nbr is not None:
-            msgs = byz_lib.apply_sparse_message_attack_bank(
-                message_attacks, cell.attack_idx, w, cell.byz_mask, nbr, adj_t, sub, state.t
+        with jax.named_scope("bridge.attack"):
+            if nbr is not None:
+                msgs = byz_lib.apply_sparse_message_attack_bank(
+                    message_attacks, cell.attack_idx, w, cell.byz_mask, nbr, adj_t, sub, state.t
+                )
+            else:
+                msgs = byz_lib.apply_message_attack_bank(
+                    message_attacks, cell.attack_idx, w, cell.byz_mask, adj_t, sub, state.t
+                )
+            # Byzantine nodes screen with the same self-view they broadcast
+            # (matching the synchronous path); message-only attacks have no
+            # single broadcast value, so nodes screen with their true iterate.
+            w_self = byz_lib.apply_self_view_bank(
+                message_attacks, cell.attack_idx, w, cell.byz_mask, sub, state.t
             )
-        else:
-            msgs = byz_lib.apply_message_attack_bank(
-                message_attacks, cell.attack_idx, w, cell.byz_mask, adj_t, sub, state.t
-            )
-        # Byzantine nodes screen with the same self-view they broadcast
-        # (matching the synchronous path); message-only attacks have no
-        # single broadcast value, so nodes screen with their true iterate.
-        w_self = byz_lib.apply_self_view_bank(
-            message_attacks, cell.attack_idx, w, cell.byz_mask, sub, state.t
-        )
         new_adv = state.adv
         if adv_engaged:
-            net_key_peek = jax.random.fold_in(sub, NET_SALT)
-            deliver = None
-            peek = getattr(runtime, "delivered_coord_mask", None)
-            if peek is not None and not cell_aware:
-                deliver = peek(net_key_peek, d)
-            ctx = adv_lib.AdvCtx(
-                screen=lambda wb: screen_oracle(wb, adj_t, cell),
-                deliver_mask=deliver,
-                latency=adv_latency,
-            )
-            theta = adv_lib.cell_theta(adv_bank, _cell_adv_idx(cell), cell.adv_theta)
-            if nbr is not None:
-                adv_msgs, adv_self, new_adv = adv_lib.apply_sparse_message_adversary_bank(
-                    adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
-                    w, cell.byz_mask, nbr, adj_t, jax.random.fold_in(sub, ADV_SALT), state.t,
+            with jax.named_scope("bridge.adversary"):
+                net_key_peek = jax.random.fold_in(sub, NET_SALT)
+                deliver = None
+                peek = getattr(runtime, "delivered_coord_mask", None)
+                if peek is not None and not cell_aware:
+                    deliver = peek(net_key_peek, d)
+                ctx = adv_lib.AdvCtx(
+                    screen=lambda wb: screen_oracle(wb, adj_t, cell),
+                    deliver_mask=deliver,
+                    latency=adv_latency,
                 )
-                adv_sender_byz = nbr.gather_senders(cell.byz_mask, fill=False)
-            else:
-                adv_msgs, adv_self, new_adv = adv_lib.apply_message_adversary_bank(
-                    adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
-                    w, cell.byz_mask, adj_t, jax.random.fold_in(sub, ADV_SALT), state.t,
-                )
-                adv_sender_byz = jnp.broadcast_to(cell.byz_mask[None, :], adj_t.shape)
-            # the adversary re-crafts Byzantine senders only; honest links
-            # keep whatever the static message-attack stage produced, bitwise
-            msgs = jnp.where(adv_sender_byz[:, :, None], adv_msgs, msgs)
-            w_self = jnp.where(cell.byz_mask[:, None], adv_self, w_self)
+                theta = adv_lib.cell_theta(adv_bank, _cell_adv_idx(cell), cell.adv_theta)
+                if nbr is not None:
+                    adv_msgs, adv_self, new_adv = adv_lib.apply_sparse_message_adversary_bank(
+                        adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
+                        w, cell.byz_mask, nbr, adj_t, jax.random.fold_in(sub, ADV_SALT), state.t,
+                    )
+                    adv_sender_byz = nbr.gather_senders(cell.byz_mask, fill=False)
+                else:
+                    adv_msgs, adv_self, new_adv = adv_lib.apply_message_adversary_bank(
+                        adv_bank, _cell_adv_idx(cell), ctx, state.adv, theta,
+                        w, cell.byz_mask, adj_t, jax.random.fold_in(sub, ADV_SALT), state.t,
+                    )
+                    adv_sender_byz = jnp.broadcast_to(cell.byz_mask[None, :], adj_t.shape)
+                # the adversary re-crafts Byzantine senders only; honest links
+                # keep whatever the static message-attack stage produced, bitwise
+                msgs = jnp.where(adv_sender_byz[:, :, None], adv_msgs, msgs)
+                w_self = jnp.where(cell.byz_mask[:, None], adv_self, w_self)
         # wire codec per link ([receiver, sender/slot] leading axes); the
         # sender axis marks whose codewords the wire attacks may corrupt, and
         # per-edge ids key their PRNG streams identically on both layouts
@@ -437,44 +500,80 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
         else:
             byz_link = jnp.broadcast_to(cell.byz_mask[None, :], adj_t.shape)
             eids = jnp.asarray(neighbors_lib.edge_id_grid(m))
-        msgs_hat, comm_full = _wire_roundtrip(
-            codec_bank, wire_attacks, cell, sub, msgs, state.comm,
-            byz_link, state.t, d, eids=eids,
-        )
-        if state.comm is not None and comm_full is not state.comm:
-            # a sender advances a link's public copy / residual only for
-            # messages actually put on the wire this tick (live edges);
-            # channel drops are downstream and invisible to it
-            comm_full = jax.tree_util.tree_map(
-                lambda new, old: jnp.where(adj_t[:, :, None], new, old),
-                comm_full, state.comm)
+        with jax.named_scope("bridge.codec"):
+            msgs_hat, comm_full = _wire_roundtrip(
+                codec_bank, wire_attacks, cell, sub, msgs, state.comm,
+                byz_link, state.t, d, eids=eids,
+            )
+            if state.comm is not None and comm_full is not state.comm:
+                # a sender advances a link's public copy / residual only for
+                # messages actually put on the wire this tick (live edges);
+                # channel drops are downstream and invisible to it
+                comm_full = jax.tree_util.tree_map(
+                    lambda new, old: jnp.where(adj_t[:, :, None], new, old),
+                    comm_full, state.comm)
         wire_bits = comm_lib.wire_bits_bank(codec_bank, _cell_codec_idx(cell), d)
         net_key = jax.random.fold_in(sub, NET_SALT)
-        if cell_aware:
-            net, views, mask, net_stats = runtime.exchange(
-                state.net, msgs_hat, w_self, adj_t, net_key, state.t, cell,
-                wire_bits=wire_bits,
-            )
-        else:
-            net, views, mask, net_stats = runtime.exchange(
-                state.net, msgs_hat, w_self, adj_t, net_key, state.t,
-                wire_bits=wire_bits,
-            )
+        with jax.named_scope("bridge.exchange"):
+            if cell_aware:
+                net, views, mask, net_stats = runtime.exchange(
+                    state.net, msgs_hat, w_self, adj_t, net_key, state.t, cell,
+                    wire_bits=wire_bits,
+                )
+            else:
+                net, views, mask, net_stats = runtime.exchange(
+                    state.net, msgs_hat, w_self, adj_t, net_key, state.t,
+                    wire_bits=wire_bits,
+                )
         # (Step 5) asynchronous screening over whatever usable (arrived,
         # fresh) messages each node holds; nodes starved below the rule's
         # minimum usable count keep their own iterate this tick.
-        y_rule = screening.screen_views_banked(
-            views, mask, w_self, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
-        )
-        need = screening.min_neighbors_banked(rules, cell.rule_idx, cell.b)
-        enough = jnp.sum(mask, axis=1) >= need
-        y = jnp.where(enough[:, None], y_rule, w_self)
-        new_params, metrics = _grad_update_and_metrics(grad_fn, cell, state, batch, y, unflatten)
+        trim = None
+        with jax.named_scope("bridge.screen"):
+            if spec is not None and spec.forensics:
+                screening.check_decide_streams(rules, d, screen_chunk)
+                y_rule, trim = screening.screen_views_decide_banked(
+                    views, mask, w_self, rules, cell.rule_idx, cell.b,
+                    decide_stride=spec.decide_stride,
+                )
+            else:
+                y_rule = screening.screen_views_banked(
+                    views, mask, w_self, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
+                )
+            need = screening.min_neighbors_banked(rules, cell.rule_idx, cell.b)
+            enough = jnp.sum(mask, axis=1) >= need
+            y = jnp.where(enough[:, None], y_rule, w_self)
+        with jax.named_scope("bridge.apply"):
+            new_params, metrics = _grad_update_and_metrics(
+                grad_fn, cell, state, batch, y, unflatten)
         metrics.update(net_stats)
         metrics["screened_frac"] = jnp.mean(enough.astype(jnp.float32))
         metrics.update(_comm_metrics(
             codec_bank, cell, d, jnp.sum(adj_t).astype(jnp.float32), comm_full))
-        return BridgeState(new_params, state.t + 1, key, net, comm_full, new_adv), metrics
+        new_obs = state.obs
+        if spec is not None:
+            from repro.obs import trace as obs_trace
+
+            with jax.named_scope("bridge.obs"):
+                live = byz_edge = None
+                if trim is not None:
+                    # nodes starved below the Table-II minimum fell back to
+                    # their own iterate — their rows never screened this tick
+                    live = mask & enough[:, None]
+                    trim = jnp.where(live, trim, 0.0)
+                    byz_edge = byz_link & live
+                    live_f = live.astype(jnp.float32)
+                    metrics["obs_trim_frac"] = (
+                        jnp.sum(trim * live_f) / jnp.maximum(jnp.sum(live_f), 1.0))
+                new_obs = obs_trace.update(
+                    spec, state.obs, t=state.t, loss=metrics["loss"],
+                    consensus=metrics["consensus_dist"], trim_frac=trim,
+                    live=live, byz_edge=byz_edge,
+                    staleness=obs_trace.staleness_of(net, state.t),
+                    wire_bits=wire_bits,
+                    live_edges=jnp.sum(adj_t).astype(jnp.float32), d=d)
+        return BridgeState(new_params, state.t + 1, key, net, comm_full,
+                           new_adv, new_obs), metrics
 
     return step
 
@@ -565,6 +664,7 @@ class BridgeTrainer:
             codec_idx=jnp.zeros((), jnp.int32),
             adv_idx=adv_idx,
             adv_theta=adv_theta,
+            trace=cfg.trace,
         )
 
     @property
@@ -589,8 +689,17 @@ class BridgeTrainer:
             comm = comm_lib.init_residual((m, dim), (self.codec,))
         if adv_lib.bank_stateful(self._adv_bank):
             adv = adv_lib.init_state(dim)
+        obs = None
+        if self.config.trace is not None:
+            from repro.obs import trace as obs_trace
+
+            nbr = (self.neighbors if self.runtime is None
+                   else getattr(self.runtime, "neighbors", None))
+            obs = obs_trace.init_state(self.config.trace, m,
+                                       m if nbr is None else nbr.k)
         return BridgeState(params=params, t=jnp.zeros((), jnp.int32),
-                           key=jax.random.PRNGKey(seed), net=net, comm=comm, adv=adv)
+                           key=jax.random.PRNGKey(seed), net=net, comm=comm,
+                           adv=adv, obs=obs)
 
     def step(self, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         return self._jit_step(self._cell, state, batch)

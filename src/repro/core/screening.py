@@ -177,7 +177,15 @@ def trimmed_mean(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: i
     idx = jnp.arange(n)[:, None]
     keep = (idx >= b_eff) & (idx < count - b_eff)  # ranks [b_eff, |N_j| - b_eff)
     total = sum_rows(jnp.where(keep, order, 0.0)) + self_value
-    return total / (count - 2 * b_eff + 1).astype(values.dtype)
+    y = total / (count - 2 * b_eff + 1).astype(values.dtype)
+    # XLA CPU re-computes the fused sort network per consumer; a scalar
+    # full-reduce consumer forces `order` to materialize once (~3x on
+    # [128, 16, 64]).  min (not sum: huge payloads overflow a sum to
+    # inf - inf = NaN) of NaN-sanitized input is never NaN, so the select is
+    # the identity bitwise, but the compare can't be constant-folded — that
+    # is what keeps the reduce alive.
+    anchor = jnp.min(order)
+    return jnp.where(anchor == anchor, y, jnp.zeros_like(y))
 
 
 def coordinate_median(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int = 0) -> jax.Array:
@@ -250,9 +258,10 @@ def krum(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int) -> j
     return values[i_star]
 
 
-def bulyan(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int) -> jax.Array:
-    """BRIDGE-B screening: recursive-Krum selection of |N_j| - 2b neighbors,
-    then coordinate-wise trimmed mean (with self) over the selected set."""
+def _bulyan_select(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int) -> jax.Array:
+    """Bulyan's recursive-Krum selection mask: the |N_j| - 2b neighbors the
+    trimmed-mean stage then aggregates.  Factored out so the decision-
+    instrumented twin reuses the exact selection op graph."""
     n = values.shape[0]
     d2, full_mask = pairwise_sq_dists(values, mask, self_value)
     count0 = jnp.sum(mask)
@@ -272,6 +281,13 @@ def bulyan(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int) ->
         return cand_mask & ~pick, sel_mask | pick
 
     _, selected = jax.lax.fori_loop(0, n, body, (mask, jnp.zeros((n,), dtype=bool)))
+    return selected
+
+
+def bulyan(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int) -> jax.Array:
+    """BRIDGE-B screening: recursive-Krum selection of |N_j| - 2b neighbors,
+    then coordinate-wise trimmed mean (with self) over the selected set."""
+    selected = _bulyan_select(values, mask, self_value, b)
     return trimmed_mean(values, selected, self_value, b)
 
 
@@ -327,6 +343,149 @@ RULES: dict[str, Callable] = {
     "geomedian": geometric_median,
     "clipped_mean": clipped_mean,
     "mean": mean,
+}
+
+
+# ---------------------------------------------------------------------------
+# Decision-instrumented twins (screening forensics — repro.obs)
+# ---------------------------------------------------------------------------
+#
+# Each `<rule>_with_decisions` returns ``(y, trim_frac)`` where ``y`` is built
+# from the *identical op graph* as the plain rule (bitwise-equal outputs —
+# property-tested in tests/test_obs.py, the trace-inertness contract) and
+# ``trim_frac[i]`` is the fraction of coordinates on which neighbor i's value
+# was excluded from the aggregate (0/1 for the vector rules).  Decisions are
+# derived from order statistics the rule already computes — kept-boundary
+# thresholds instead of O(n^2 d) per-coordinate rank matrices — so the obs
+# path stays inside the <10% overhead budget at M=512.
+
+
+def trimmed_mean_with_decisions(values, mask, self_value, b, *, decide_stride=1):
+    n = values.shape[0]
+    count = jnp.sum(mask)
+    b_eff = effective_trim(b, count)
+    masked = jnp.where(mask[:, None], _sanitize(values), _MASKED)
+    order = sort_rows(masked)
+    idx = jnp.arange(n)[:, None]
+    keep = (idx >= b_eff) & (idx < count - b_eff)
+    total = sum_rows(jnp.where(keep, order, 0.0)) + self_value
+    y = total / (count - 2 * b_eff + 1).astype(values.dtype)
+    # kept iff the value lies within the kept-rank boundary order statistics
+    # (ties at the boundary count as kept — conservative for the counters).
+    # The picks are dynamic row gathers, not masked reductions: on the
+    # anchor-materialized `order` they read 2 rows instead of sweeping all of
+    # [n, d] twice — the difference between +6% and +96% step overhead at
+    # d=7850.  decide_stride > 1 estimates the per-edge fractions on every
+    # stride-th coordinate: sort and boundary picks stay exact, only the
+    # O(n*d) membership pass shrinks — the counters' ranking signal
+    # accumulates over ticks either way
+    s = decide_stride
+    lo = jax.lax.dynamic_index_in_dim(order, b_eff, 0, keepdims=False)
+    hi = jax.lax.dynamic_index_in_dim(
+        order, jnp.maximum(count - b_eff - 1, b_eff), 0, keepdims=False)
+    kept = (masked[:, ::s] >= lo[None, ::s]) & (masked[:, ::s] <= hi[None, ::s])
+    trim = jnp.mean((mask[:, None] & ~kept).astype(jnp.float32), axis=1)
+    # XLA CPU re-computes the fused sort network once per consumer; a scalar
+    # full-reduce consumer forces `order` to materialize exactly once, making
+    # every other read of it free (measured 5-6x on [128, 16, 64]).  min (not
+    # sum, which huge payloads overflow to inf - inf = NaN) of NaN-sanitized
+    # input is never NaN, so the select is the identity bitwise — but the
+    # compare can't be constant-folded, which keeps the reduce alive.
+    anchor = jnp.min(order)
+    trim = jnp.where(anchor == anchor, trim, jnp.zeros_like(trim))
+    return y, trim
+
+
+def coordinate_median_with_decisions(values, mask, self_value, b=0, *, decide_stride=1):
+    del b
+    stacked = jnp.concatenate([values, self_value[None, :]], axis=0)
+    full_mask = jnp.concatenate([mask, jnp.ones((1,), dtype=bool)], axis=0)
+    n1 = stacked.shape[0]
+    count = jnp.sum(full_mask)
+    masked = jnp.where(full_mask[:, None], _sanitize(stacked), _MASKED)
+    order = sort_rows(masked)
+    lo = (count - 1) // 2
+    hi = count // 2
+    idx = jnp.arange(n1)[:, None]
+    pick_lo = jnp.sum(jnp.where(idx == lo, order, 0.0), axis=0)
+    pick_hi = jnp.sum(jnp.where(idx == hi, order, 0.0), axis=0)
+    y = fence(0.5 * (pick_lo + pick_hi))
+    # a value "survives" the median when it sits inside [lo, hi] — i.e. it is
+    # one of the middle order statistics the output averages (decide_stride
+    # samples the membership pass; see trimmed_mean_with_decisions)
+    s = decide_stride
+    kept = (masked[:, ::s] >= pick_lo[None, ::s]) & (masked[:, ::s] <= pick_hi[None, ::s])
+    trim = jnp.mean((full_mask[:, None] & ~kept).astype(jnp.float32), axis=1)
+    return y, trim[:-1]  # drop the self row: decisions are about neighbors
+
+
+def krum_with_decisions(values, mask, self_value, b, *, decide_stride=1):
+    del decide_stride  # whole-vector decision
+    n = values.shape[0]
+    d2, full_mask = pairwise_sq_dists(values, mask, self_value)
+    count = jnp.sum(mask)
+    scores = _krum_scores(d2, full_mask, count, b)
+    cand_scores = jnp.where(mask, scores[:-1], jnp.inf)
+    i_star = jnp.argmin(cand_scores)
+    trim = (mask & (jnp.arange(n) != i_star)).astype(jnp.float32)
+    return values[i_star], trim
+
+
+def bulyan_with_decisions(values, mask, self_value, b, *, decide_stride=1):
+    selected = _bulyan_select(values, mask, self_value, b)
+    y, trim_inner = trimmed_mean_with_decisions(values, selected, self_value, b,
+                                                decide_stride=decide_stride)
+    # deselected-by-Krum neighbors are fully trimmed; the rest carry the
+    # inner trimmed-mean's per-coordinate fractions
+    return y, jnp.where(mask & ~selected, 1.0, trim_inner)
+
+
+def geometric_median_with_decisions(values, mask, self_value, b=0, *,
+                                    iters: int = 8, eps: float = 1e-6,
+                                    decide_stride=1):
+    del decide_stride  # whole-vector decision
+    y = geometric_median(values, mask, self_value, b, iters=iters, eps=eps)
+    # soft suspicion: distance to the median, normalized by the masked median
+    # distance (Weiszfeld downweights rows by 1/distance, so this is the
+    # influence deficit); 0 for rows at/inside the typical radius
+    n = values.shape[0]
+    diff = values - y[None, :]
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=1) + eps)
+    cnt = jnp.sum(mask)
+    order = jnp.sort(jnp.where(mask, dist, jnp.inf))
+    idx = jnp.arange(n)
+    lo = jnp.maximum((cnt - 1) // 2, 0)
+    hi = jnp.maximum(cnt // 2, 0)
+    med = 0.5 * (jnp.sum(jnp.where(idx == lo, order, 0.0))
+                 + jnp.sum(jnp.where(idx == hi, order, 0.0)))
+    trim = jnp.where(mask, jnp.clip(1.0 - med / jnp.maximum(dist, 1e-12), 0.0, 1.0), 0.0)
+    return y, trim.astype(jnp.float32)
+
+
+def clipped_mean_with_decisions(values, mask, self_value, b=0, *, tau: float = 1.0,
+                                decide_stride=1):
+    del decide_stride  # whole-vector decision
+    y = clipped_mean(values, mask, self_value, b, tau=tau)
+    delta = values - self_value[None, :]
+    nrm = jnp.sqrt(jnp.sum(delta * delta, axis=1) + 1e-12)
+    # clipped = influence capped at tau/|N_j| — the rule's trim analogue
+    trim = (mask & (nrm > tau)).astype(jnp.float32)
+    return y, trim
+
+
+def mean_with_decisions(values, mask, self_value, b=0, *, decide_stride=1):
+    del decide_stride
+    return mean(values, mask, self_value, b), jnp.zeros(values.shape[:1], jnp.float32)
+
+
+RULES_WITH_DECISIONS: dict[str, Callable] = {
+    "trimmed_mean": trimmed_mean_with_decisions,
+    "median": coordinate_median_with_decisions,
+    "krum": krum_with_decisions,
+    "bulyan": bulyan_with_decisions,
+    "geomedian": geometric_median_with_decisions,
+    "clipped_mean": clipped_mean_with_decisions,
+    "mean": mean_with_decisions,
 }
 
 
@@ -564,6 +723,89 @@ def screen_views_banked(
 ) -> jax.Array:
     """`screen_views` with banked rule dispatch (see `screen_all_banked`)."""
     branches = [_rule_branch(r, chunk) for r in rules]
+    if len(branches) == 1:
+        return branches[0](views, mask, self_vals, b)
+    return jax.lax.switch(rule_idx, branches, views, mask, self_vals, b)
+
+
+# ---------------------------------------------------------------------------
+# Banked dispatch with decisions (screening forensics — repro.obs)
+# ---------------------------------------------------------------------------
+#
+# Same shape as the plain banked dispatch, but every branch runs the rule's
+# decision-instrumented twin and returns ``(y [M, d], trim_frac [M, n])``.
+# The decide path never streams coordinates (the trim matrix spans all of d by
+# construction); callers must guard with `check_decide_streams` so engaging
+# forensics where streaming would have engaged is a loud error, not a silent
+# memory blowup.
+
+
+def check_decide_streams(rules: Sequence[str], d: int, chunk: int | None) -> None:
+    """Raise when screening forensics would collide with coordinate
+    streaming (`_streams`): the decision path evaluates rules unchunked."""
+    bad = [r for r in rules if _streams(r, d, chunk)]
+    if bad:
+        raise ValueError(
+            f"screening forensics cannot stream coordinates: rules {bad} at d={d} "
+            f"engage screen_chunk={chunk}; raise screen_chunk above d or set "
+            f"TraceSpec(forensics=False)")
+
+
+def _rule_branch_decide(rule: str, decide_stride: int):
+    fn = RULES_WITH_DECISIONS[rule]
+
+    def run(values_per_node, mask_per_node, self_vals, b):
+        return jax.vmap(lambda v, m, s: fn(v, m, s, b, decide_stride=decide_stride))(
+            values_per_node, mask_per_node, self_vals)
+
+    return run
+
+
+def _rule_branch_broadcast_decide(rule: str, decide_stride: int):
+    fn = RULES_WITH_DECISIONS[rule]
+
+    def run(w, adjacency, b, self_vals):
+        return jax.vmap(lambda m, s: fn(w, m, s, b, decide_stride=decide_stride))(
+            adjacency, self_vals)
+
+    return run
+
+
+def screen_all_decide_banked(
+    w: jax.Array,
+    adjacency: jax.Array,
+    rules: Sequence[str],
+    rule_idx,
+    b,
+    *,
+    self_vals: jax.Array | None = None,
+    decide_stride: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """`screen_all_banked` returning ``(y, trim_frac)`` — ``y`` bitwise-equal
+    to the plain path, ``trim_frac[j, i]`` the fraction of coordinates on
+    which receiver j excluded sender i this tick (estimated on every
+    ``decide_stride``-th coordinate when > 1)."""
+    if self_vals is None:
+        self_vals = w
+    branches = [_rule_branch_broadcast_decide(r, decide_stride) for r in rules]
+    if len(branches) == 1:
+        return branches[0](w, adjacency, b, self_vals)
+    return jax.lax.switch(rule_idx, branches, w, adjacency, b, self_vals)
+
+
+def screen_views_decide_banked(
+    views: jax.Array,
+    mask: jax.Array,
+    self_vals: jax.Array,
+    rules: Sequence[str],
+    rule_idx,
+    b,
+    *,
+    decide_stride: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """`screen_views_banked` returning ``(y, trim_frac)`` (see
+    `screen_all_decide_banked`)."""
+    branches = [_rule_branch_decide(r, decide_stride) for r in rules]
     if len(branches) == 1:
         return branches[0](views, mask, self_vals, b)
     return jax.lax.switch(rule_idx, branches, views, mask, self_vals, b)

@@ -3,9 +3,16 @@
 ``use_pallas`` selects the Pallas TPU path (interpret-mode on CPU) vs the
 pure-jnp reference; both produce identical results — the dispatcher lets the
 trainer flip implementations per platform/config.
+
+Every entry point runs under a ``jax.named_scope`` (``kernels.<name>``) so
+``jax.profiler`` captures (``--profile`` on the launch CLIs) attribute
+device time to the kernel, not to an anonymous fusion.  Named scopes are
+op-metadata only — they never change the computed values.
 """
 from __future__ import annotations
 
+
+import jax
 
 from repro.kernels import ref
 from repro.kernels.dequant_screen import (
@@ -19,40 +26,46 @@ from repro.kernels.trimmed_mean import trimmed_mean_pallas
 
 
 def trimmed_mean(values, mask, self_value, b: int, *, use_pallas: bool = True, **kw):
-    if use_pallas:
-        return trimmed_mean_pallas(values, mask, self_value, b, **kw)
-    return ref.trimmed_mean_ref(values, mask, self_value, b)
+    with jax.named_scope("kernels.trimmed_mean"):
+        if use_pallas:
+            return trimmed_mean_pallas(values, mask, self_value, b, **kw)
+        return ref.trimmed_mean_ref(values, mask, self_value, b)
 
 
 def median(values, mask, *, use_pallas: bool = True, **kw):
-    if use_pallas:
-        return median_pallas(values, mask, **kw)
-    return ref.median_ref(values, mask)
+    with jax.named_scope("kernels.median"):
+        if use_pallas:
+            return median_pallas(values, mask, **kw)
+        return ref.median_ref(values, mask)
 
 
 def pairwise_sq_dists(stacked, *, use_pallas: bool = True, **kw):
-    if use_pallas:
-        return pairwise_sq_dists_pallas(stacked, **kw)
-    return ref.pairwise_sq_dists_ref(stacked)
+    with jax.named_scope("kernels.pairwise_sq_dists"):
+        if use_pallas:
+            return pairwise_sq_dists_pallas(stacked, **kw)
+        return ref.pairwise_sq_dists_ref(stacked)
 
 
 def dequant(q, scale, *, use_pallas: bool = True, **kw):
     """Decode int8 codewords to float32 (stage 1 of the unfused pipeline)."""
-    if use_pallas:
-        return dequant_pallas(q, scale, **kw)
-    return ref.dequant_ref(q, scale)
+    with jax.named_scope("kernels.dequant"):
+        if use_pallas:
+            return dequant_pallas(q, scale, **kw)
+        return ref.dequant_ref(q, scale)
 
 
 def dequant_trimmed_mean(q, scale, mask, self_value, b: int, *, use_pallas: bool = True, **kw):
     """Fused dequantize->trimmed-mean over int8 neighbor codewords."""
-    if use_pallas:
-        return dequant_trimmed_mean_pallas(q, scale, mask, self_value, b, **kw)
-    return ref.dequant_trimmed_mean_ref(q, scale, mask, self_value, b)
+    with jax.named_scope("kernels.dequant_trimmed_mean"):
+        if use_pallas:
+            return dequant_trimmed_mean_pallas(q, scale, mask, self_value, b, **kw)
+        return ref.dequant_trimmed_mean_ref(q, scale, mask, self_value, b)
 
 
 def dequant_median(q, scale, mask, self_value, *, use_pallas: bool = True, **kw):
     """Fused dequantize->median over int8 neighbor codewords (self joins
     uncompressed)."""
-    if use_pallas:
-        return dequant_median_pallas(q, scale, mask, self_value, **kw)
-    return ref.dequant_median_ref(q, scale, mask, self_value)
+    with jax.named_scope("kernels.dequant_median"):
+        if use_pallas:
+            return dequant_median_pallas(q, scale, mask, self_value, **kw)
+        return ref.dequant_median_ref(q, scale, mask, self_value)

@@ -180,13 +180,30 @@ def run_grid_mode(args) -> None:
         key = jax.random.PRNGKey(seed)
         return replicate(small.init_linear(key), m, perturb=0.01, key=key)
 
+    trace_spec, events = None, None
+    if args.trace is not None:
+        from repro.obs import EventLog, TraceSpec
+        from repro.obs import trace as obs_trace
+
+        os.makedirs(args.trace, exist_ok=True)
+        trace_spec = TraceSpec()
+        events = EventLog(os.path.join(args.trace, "events.jsonl"))
+    if args.profile is not None:
+        os.makedirs(args.profile, exist_ok=True)
+        jax.profiler.start_trace(args.profile)
     engine = GridEngine(grid, grad_fn, cells=pending,
-                        num_ticks=ticks if scenarios else None, sparse=args.sparse)
+                        num_ticks=ticks if scenarios else None, sparse=args.sparse,
+                        trace=trace_spec, events=events)
     t0 = time.time()
     state = engine.init(init_fn)
     state, metrics = engine.run(state, batches, chunk=args.grid_chunk)
     jax.block_until_ready(state.params)
     wall = time.time() - t0
+    if args.profile is not None:
+        jax.profiler.stop_trace()
+        if events is not None:
+            events.emit("profile.capture", dir=args.profile)
+        print(f"profiler trace -> {args.profile}")
     result = results_lib.collect(pending, metrics, meta={
         "num_nodes": m, "ticks": ticks, "wall_s": wall,
         "cells_per_sec": len(pending) / wall, "us_per_cell": wall / len(pending) * 1e6,
@@ -205,6 +222,22 @@ def run_grid_mode(args) -> None:
             for j in hm.nonzero()[0]
         ]
         rec["accuracy"] = float(sum(accs) / max(len(accs), 1))
+    if trace_spec is not None:
+        events.close()
+        senders = engine.sender_grid()
+        cells_out = []
+        for i, c in enumerate(pending):
+            obs_i = jax.tree_util.tree_map(lambda leaf: leaf[i], state.obs)
+            rec = {"tag": c.tag, "rule": c.rule,
+                   **obs_trace.summarize(trace_spec, obs_i,
+                                         byz_mask=engine.byz_masks[i], senders=senders)}
+            cells_out.append(rec)
+        summary_path = os.path.join(args.trace, "obs_summary.json")
+        with open(summary_path, "w") as f:
+            json.dump({"meta": {"mode": "grid", "num_nodes": m, "ticks": ticks},
+                       "cells": cells_out}, f, indent=2, sort_keys=True)
+        print(f"obs summary -> {summary_path}  "
+              f"(render: python -m repro.obs.report {args.trace})")
     result.save_cells(args.out)
     # the aggregate covers the WHOLE store (earlier runs' cells included),
     # so a resumed sweep never truncates GridResult.json to the tail run
@@ -234,6 +267,12 @@ def run_breakdown_mode(args) -> None:
     topo = default_topology(m, rules, [max(args.breakdown_b_max, 1)], seed=0)
     task = linear_task(m, ticks, batch=args.grid_batch,
                        num_train=args.grid_train, num_test=args.grid_test, seed=0)
+    events = None
+    if args.trace is not None:
+        from repro.obs import EventLog
+
+        os.makedirs(args.trace, exist_ok=True)
+        events = EventLog(os.path.join(args.trace, "events.jsonl"))
     engine = BreakdownEngine(
         topo, rules, adversaries, task.grad_fn, task.init_fn, task.batches,
         lam=1.0, t0=30.0,
@@ -242,8 +281,10 @@ def run_breakdown_mode(args) -> None:
                                b_max=args.breakdown_b_max,
                                loss_ratio=args.breakdown_loss_ratio,
                                score_drop=args.breakdown_score_drop),
-        eval_fn=task.eval_accuracy, engine_chunk=args.grid_chunk)
+        eval_fn=task.eval_accuracy, engine_chunk=args.grid_chunk, events=events)
     result = engine.run()
+    if events is not None:
+        events.close()
     path = os.path.join(args.out, "BENCH_breakdown.json")
     with open(path, "w") as f:
         json.dump(result, f, indent=2, sort_keys=True)
@@ -311,6 +352,13 @@ def main(argv=None):
                     help="neighbor-indexed [M, K] state layout "
                          "(repro.core.neighbors) — bit-identical to dense, "
                          "required past a few hundred nodes")
+    # observability flags (repro.obs; grid + breakdown modes)
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="compile screening forensics into the grid (bit-inert) "
+                         "and write DIR/events.jsonl + DIR/obs_summary.json "
+                         "(render with `python -m repro.obs.report DIR`)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the grid run into DIR")
     args = ap.parse_args(argv)
     if args.out is None:
         args.out = {"net": "experiments/net", "grid": "experiments/grid",

@@ -11,10 +11,17 @@ Network scenarios (repro.net): ``--net`` routes training through the
 unreliable-network runtime; combine with ``--net-drop 0.2 --net-latency 3
 --net-schedule churn`` etc.  Message-granularity attacks (selective_victim)
 imply ``--net``.
+
+Observability (repro.obs): ``--trace DIR`` compiles screening forensics into
+the step (bit-inert), streams a JSONL event log to ``DIR/events.jsonl``, and
+dumps ``DIR/obs_summary.json`` for ``python -m repro.obs.report DIR``.
+``--profile DIR`` captures a ``jax.profiler`` trace of the training loop
+(named scopes mark the gather/screen/apply/codec phases).
 """
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -33,12 +40,18 @@ def build_trainer(args, topo, grad_fn):
     """BridgeTrainer (synchronous) or AsyncBridgeTrainer (--net scenarios)."""
     from repro.core.byzantine import WIRE_ATTACKS
 
+    trace = None
+    if args.trace is not None:
+        from repro.obs import TraceSpec
+
+        trace = TraceSpec(reservoir=args.trace_reservoir)
     use_net = args.net or (args.attack not in ATTACKS and args.attack not in WIRE_ATTACKS)
     if not use_net:
         bcfg = BridgeConfig(
             topology=topo, rule=args.rule, num_byzantine=args.byzantine,
             attack=args.attack, adversary=args.adversary, codec=args.codec,
             lam=args.lam, t0=args.t0, lr=args.lr, sparse=args.sparse,
+            trace=trace,
         )
         return BridgeTrainer(bcfg, grad_fn)
     from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
@@ -57,8 +70,38 @@ def build_trainer(args, topo, grad_fn):
         channel=channel, staleness_bound=args.net_staleness,
         schedule=scenario_schedule(args.net_schedule, topo, args.steps,
                                    seed=args.seed, churn_prob=args.net_churn_prob),
+        trace=trace,
     )
     return AsyncBridgeTrainer(acfg, grad_fn)
+
+
+def dump_obs(args, trainer, state, topo, events_path) -> str:
+    """Render the final `TraceState` into ``obs_summary.json`` (the input of
+    ``python -m repro.obs.report``)."""
+    import json
+
+    from repro.obs import trace as obs_trace
+
+    m = args.nodes
+    nbr = (trainer.neighbors if trainer.runtime is None
+           else getattr(trainer.runtime, "neighbors", None))
+    if nbr is not None:
+        senders = obs_trace.sender_grid(m, neighbors=nbr)
+    else:
+        # net schedules vary per tick, so the mailbox width is the full grid
+        senders = obs_trace.sender_grid(
+            m, adjacency=None if trainer.runtime is not None else topo.adjacency)
+    rec = obs_trace.summarize(trainer.config.trace, state.obs,
+                              byz_mask=np.asarray(trainer.byz_mask), senders=senders)
+    tag = f"{args.rule}_{args.attack}_b{args.byzantine}_s{args.seed}"
+    summary = {"meta": {"nodes": m, "steps": args.steps, "rule": args.rule,
+                        "attack": args.attack, "adversary": args.adversary,
+                        "codec": args.codec, "events": events_path},
+               "cells": [{"tag": tag, "rule": args.rule, **rec}]}
+    path = os.path.join(args.trace, "obs_summary.json")
+    with open(path, "w") as f:
+        json.dump(summary, f, indent=2, sort_keys=True)
+    return path
 
 
 def main(argv=None):
@@ -108,6 +151,17 @@ def main(argv=None):
     ap.add_argument("--net-schedule", default="static",
                     choices=["static", "churn", "partition", "join_leave"])
     ap.add_argument("--net-churn-prob", type=float, default=0.2)
+    # observability flags (repro.obs)
+    ap.add_argument("--trace", default=None, metavar="DIR",
+                    help="compile screening forensics into the step (bit-inert) "
+                         "and write DIR/events.jsonl + DIR/obs_summary.json "
+                         "(render with `python -m repro.obs.report DIR`)")
+    ap.add_argument("--trace-reservoir", type=int, default=0,
+                    help="raw-trace reservoir slots kept on device (0: "
+                         "bounded aggregates only)")
+    ap.add_argument("--profile", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the training loop "
+                         "into DIR (phases are jax.named_scope-annotated)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -146,10 +200,30 @@ def main(argv=None):
 
     pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, args.nodes, seed=args.seed)
 
+    events = None
+    if args.trace is not None:
+        from repro.obs import EventLog
+
+        os.makedirs(args.trace, exist_ok=True)
+        events = EventLog(os.path.join(args.trace, "events.jsonl"))
+        events.emit("run.start", kind="train", arch=cfg.name, nodes=args.nodes,
+                    steps=args.steps, rule=args.rule, attack=args.attack,
+                    net=bool(trainer.runtime is not None), resumed_at=start)
+    if args.profile is not None:
+        os.makedirs(args.profile, exist_ok=True)
+        jax.profiler.start_trace(args.profile)
+
+    t_run = time.time()
+    compile_s = 0.0
     t_last = time.time()
     for step in range(start, args.steps):
         batch = jax.tree_util.tree_map(jnp.asarray, pipe.batch(step))
         state, metrics = trainer.step(state, batch)
+        if step == start:
+            # the first step's wall is compile + one step: close enough to the
+            # compile cost that the steady-state remainder is honest
+            jax.block_until_ready(state.params)
+            compile_s = time.time() - t_run
         if (step + 1) % args.log_every == 0:
             dt = time.time() - t_last
             t_last = time.time()
@@ -167,6 +241,24 @@ def main(argv=None):
             )
         if args.ckpt and (step + 1) % args.ckpt_every == 0:
             checkpoint.save(args.ckpt, step + 1, tuple(state))
+    state = jax.block_until_ready(state)
+    wall = time.time() - t_run
+    if args.profile is not None:
+        jax.profiler.stop_trace()
+        if events is not None:
+            events.emit("profile.capture", dir=args.profile)
+        print(f"profiler trace -> {args.profile}")
+    if events is not None:
+        first_bad = int(np.asarray(state.obs.first_bad))
+        events.emit("run.end", steps=args.steps - start, wall_s=wall,
+                    compile_s=compile_s, steady_state_s=max(wall - compile_s, 0.0))
+        if first_bad >= 0:
+            events.emit("obs.divergence", cell="train", first_bad_tick=first_bad)
+        events.close()
+        path = dump_obs(args, trainer, state, topo,
+                        os.path.join(args.trace, "events.jsonl"))
+        print(f"obs summary -> {path}  "
+              f"(render: python -m repro.obs.report {args.trace})")
     print("done.")
 
 

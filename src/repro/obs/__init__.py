@@ -1,0 +1,31 @@
+"""repro.obs — observability for the BRIDGE stack.
+
+`TraceSpec`-driven in-graph forensics (`repro.obs.trace`), the async JSONL
+event log (`repro.obs.events`), and the report renderer
+(``python -m repro.obs.report``).  Tracing is OFF by default everywhere
+(``trace=None``) and bit-inert when on — see ``tests/test_obs.py``.
+"""
+from repro.obs.events import EventLog, read_events
+from repro.obs.trace import (
+    TraceSpec,
+    TraceState,
+    init_state,
+    ranking_auc,
+    sender_grid,
+    staleness_of,
+    summarize,
+    update,
+)
+
+__all__ = [
+    "EventLog",
+    "read_events",
+    "TraceSpec",
+    "TraceState",
+    "init_state",
+    "ranking_auc",
+    "sender_grid",
+    "staleness_of",
+    "summarize",
+    "update",
+]

@@ -1,0 +1,100 @@
+"""Structured host-side event log: an async JSONL writer (repro.obs).
+
+The jitted scan cannot write files; the host-side loops around it can — the
+grid engine's chunk boundaries, the breakdown engine's probe rounds, and the
+launch CLIs' run brackets all emit here.  Writes go through a queue drained
+by a daemon thread so emitting never blocks the dispatch loop.
+
+Every record is one JSON line ``{"tag": ..., "wall": <s since log open>,
+"time": <unix>, **fields}``.  Stable tags (the report renderer and CI
+artifacts key on these):
+
+* ``run.start`` / ``run.end``      — one run bracket (engine or CLI)
+* ``grid.chunk``                   — one compiled chunk of a chunked grid run
+* ``breakdown.round``              — one (rule, adversary, b) probe round
+* ``obs.divergence``               — a cell's NaN sentinel fired (first tick)
+* ``profile.capture``              — a jax.profiler trace was written
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import threading
+import time
+
+import numpy as np
+
+_SENTINEL = object()
+
+
+def _jsonable(x):
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    if isinstance(x, (np.floating,)):
+        return float(x)
+    if isinstance(x, np.ndarray):
+        return x.tolist()
+    return str(x)
+
+
+class EventLog:
+    """Append-only JSONL event stream; safe to emit from any thread."""
+
+    def __init__(self, path: str):
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self.path = path
+        self._f = open(path, "a")
+        self._t0 = time.perf_counter()
+        self._q: queue.Queue = queue.Queue()
+        self._closed = False
+        self._thread = threading.Thread(target=self._drain, daemon=True,
+                                        name="obs-eventlog")
+        self._thread.start()
+
+    def emit(self, tag: str, **fields) -> None:
+        if self._closed:
+            return
+        rec = {"tag": str(tag), "wall": round(time.perf_counter() - self._t0, 6),
+               "time": time.time()}
+        rec.update(fields)
+        self._q.put(rec)
+
+    def _drain(self) -> None:
+        while True:
+            rec = self._q.get()
+            if rec is _SENTINEL:
+                break
+            self._f.write(json.dumps(rec, sort_keys=True, default=_jsonable) + "\n")
+            self._f.flush()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(_SENTINEL)
+        self._thread.join(timeout=10.0)
+        self._f.close()
+
+    def __enter__(self) -> "EventLog":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_events(path: str) -> list[dict]:
+    """Parse an event log back into records (report input); tolerates a
+    truncated final line from an interrupted run."""
+    records = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                records.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return records

@@ -1,0 +1,295 @@
+"""In-graph screening forensics: bounded-memory trace aggregates (repro.obs).
+
+BRIDGE's whole defense happens inside a jitted ``lax.scan`` — which neighbor
+values landed in the trim window, which Byzantine coordinates survived
+screening, how stale each delivered message was — and none of it escapes the
+graph as ``[E, T]`` scalar streams.  A `TraceSpec` compiles the missing
+telemetry *into* the scan:
+
+* **per-edge trim-frequency counters** ``[M, W]`` (W = M dense / K sparse) —
+  who keeps landing in the trim window, the ROADMAP trust layer's suspicion
+  statistic;
+* **Byzantine-vs-honest survival rates** — scalar totals against the known
+  attacker mask, the "did screening actually screen" check;
+* **staleness / wire-bits histograms** — fixed-bin ``segment_sum``, so the
+  distribution survives without carrying per-tick tensors;
+* **a strided raw-trace reservoir** — ``reservoir`` slots of (tick, loss,
+  trim matrix) snapshots, written every ``stride`` ticks, overwriting
+  round-robin (bounded HBM at M=512 x T);
+* **a NaN/divergence sentinel** — the first tick where the honest loss or
+  consensus distance went non-finite, surfaced as an obs event instead of
+  silently propagating NaN into downstream scoring.
+
+The spec rides on `repro.core.bridge.CellParams` as *structural* auxiliary
+data — `TraceSpec` is registered as a zero-leaf pytree node, so it is jit
+cache key, not operand.  ``trace=None`` (the default everywhere) keeps every
+step builder's exact pre-obs program shape; tracing on is bit-inert for the
+trajectory itself (property-tested in ``tests/test_obs.py``).
+
+Aggregate counters are float32: exact integer accumulation holds to 2**24
+(~16.7M edge observations per counter), far beyond any tick budget here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceSpec:
+    """What the compiled step traces.  Hashable and frozen: it is jit
+    *structure* (a zero-leaf pytree), so changing any field retraces — which
+    is correct, the program genuinely differs."""
+
+    # per-edge trim counters + survival rates + histograms (needs the
+    # decision-instrumented screening twins; incompatible with coordinate
+    # streaming — the step raises if `screen_chunk` would engage)
+    forensics: bool = True
+    # coordinate subsampling for the per-edge membership pass: the twins
+    # estimate trim fractions on every `decide_stride`-th coordinate (1 =
+    # exact).  The aggregate y and its sort stay exact and bit-inert either
+    # way; > 1 trades counter variance (which tick-accumulation averages
+    # out) for dropping the one extra O(M*K*d) sweep tracing would add —
+    # the knob that holds the <10% overhead budget at large d
+    decide_stride: int = 1
+    # raw-trace reservoir slots (0 disables); slot i holds the (tick, loss,
+    # trim matrix) snapshot of the latest tick with t % stride == 0, written
+    # round-robin
+    reservoir: int = 0
+    stride: int = 1
+    # fixed histogram bins (staleness in ticks, wire bits as a fraction of
+    # the uncompressed 32*d payload)
+    hist_bins: int = 16
+    stale_max: int = 32
+    # loss_trace smoothing: 0 keeps the last tick's loss, else EMA weight on
+    # the carried value
+    ema: float = 0.0
+    # first-non-finite-tick sentinel on (loss, consensus_dist)
+    sentinel: bool = True
+
+    def __post_init__(self):
+        if (self.reservoir < 0 or self.stride < 1 or self.hist_bins < 1
+                or self.decide_stride < 1):
+            raise ValueError(f"invalid TraceSpec: {self}")
+
+
+# Zero-leaf pytree registration: the spec flattens to no children and rides
+# in the treedef.  This is what lets it sit on CellParams/vmapped stacks
+# without contributing a mapped axis.
+jax.tree_util.register_pytree_node(TraceSpec, lambda s: ((), s), lambda aux, _: aux)
+
+
+class TraceState(NamedTuple):
+    """The scanned obs carry (one per cell; the grid stacks a leading [E])."""
+
+    edge_seen: jax.Array  # [M, W] f32 live-edge observation counts
+    edge_trim: jax.Array  # [M, W] f32 accumulated trim fractions
+    byz_seen: jax.Array  # f32 scalar
+    byz_trim: jax.Array  # f32 scalar
+    hon_seen: jax.Array  # f32 scalar
+    hon_trim: jax.Array  # f32 scalar
+    stale_hist: jax.Array  # [hist_bins] f32
+    bits_hist: jax.Array  # [hist_bins] f32
+    loss_trace: jax.Array  # f32 scalar (last or EMA, per spec.ema)
+    res_tick: jax.Array  # [R] i32, -1 = slot never written
+    res_loss: jax.Array  # [R] f32
+    res_trim: jax.Array  # [R, M, W] f32 (R or M/W zero-sized when disabled)
+    first_bad: jax.Array  # i32 scalar, -1 = finite so far
+
+
+def init_state(spec: TraceSpec | None, num_nodes: int, width: int, *,
+               lead: tuple = ()) -> TraceState | None:
+    """Fresh aggregates for one cell (``lead=(E,)`` stacks a grid's worth).
+    ``width`` is the per-node edge-slot count: M dense, K neighbor-indexed."""
+    if spec is None:
+        return None
+    mw = (num_nodes, width) if spec.forensics else (0, 0)
+    r = spec.reservoir
+    z = lambda shape, dt=jnp.float32: jnp.zeros(lead + shape, dt)
+    return TraceState(
+        edge_seen=z(mw), edge_trim=z(mw),
+        byz_seen=z(()), byz_trim=z(()), hon_seen=z(()), hon_trim=z(()),
+        stale_hist=z((spec.hist_bins,)), bits_hist=z((spec.hist_bins,)),
+        loss_trace=z(()),
+        res_tick=jnp.full(lead + (r,), -1, jnp.int32),
+        res_loss=z((r,)),
+        res_trim=z((r,) + mw),
+        first_bad=jnp.full(lead, -1, jnp.int32),
+    )
+
+
+def update(spec: TraceSpec, st: TraceState, *, t, loss, consensus,
+           trim_frac=None, live=None, byz_edge=None, staleness=None,
+           wire_bits=None, live_edges=None, d: int | None = None) -> TraceState:
+    """Fold one tick into the aggregates.  All inputs are this tick's values
+    inside the step: ``trim_frac``/``live``/``byz_edge`` are ``[M, W]``
+    (trim fractions already zeroed outside ``live``), ``staleness`` the
+    ``[M, W]`` delivered-message ages (None on the synchronous path),
+    ``wire_bits`` the per-edge codeword size and ``live_edges`` the tick's
+    live-edge count.  Every op is vmap-safe (the grid maps this over [E])."""
+    kw: dict[str, Any] = {}
+    loss32 = jnp.asarray(loss, jnp.float32)
+    if spec.forensics and trim_frac is not None:
+        live_f = live.astype(jnp.float32)
+        byz_f = byz_edge.astype(jnp.float32)
+        kw["edge_seen"] = st.edge_seen + live_f
+        kw["edge_trim"] = st.edge_trim + trim_frac
+        kw["byz_seen"] = st.byz_seen + jnp.sum(live_f * byz_f)
+        kw["byz_trim"] = st.byz_trim + jnp.sum(trim_frac * byz_f)
+        kw["hon_seen"] = st.hon_seen + jnp.sum(live_f * (1.0 - byz_f))
+        kw["hon_trim"] = st.hon_trim + jnp.sum(trim_frac * (1.0 - byz_f))
+        if staleness is not None:
+            bin_w = max(1, -(-spec.stale_max // spec.hist_bins))
+            bins = jnp.clip(jnp.asarray(staleness, jnp.int32) // bin_w,
+                            0, spec.hist_bins - 1)
+            kw["stale_hist"] = st.stale_hist + jax.ops.segment_sum(
+                live_f.reshape(-1), bins.reshape(-1), num_segments=spec.hist_bins)
+        if wire_bits is not None and d is not None:
+            # bits binned as a fraction of the uncompressed 32*d payload
+            frac_bin = jnp.clip(
+                (jnp.asarray(wire_bits, jnp.int32) * spec.hist_bins) // (32 * d + 1),
+                0, spec.hist_bins - 1)
+            le = (jnp.asarray(live_edges, jnp.float32) if live_edges is not None
+                  else jnp.ones((), jnp.float32))
+            kw["bits_hist"] = st.bits_hist.at[frac_bin].add(le)
+    if spec.ema > 0.0:
+        kw["loss_trace"] = jnp.where(
+            t == 0, loss32, spec.ema * st.loss_trace + (1.0 - spec.ema) * loss32)
+    else:
+        kw["loss_trace"] = loss32
+    if spec.reservoir > 0:
+        write = (t % spec.stride) == 0
+        slot = (t // spec.stride) % spec.reservoir
+        kw["res_tick"] = st.res_tick.at[slot].set(
+            jnp.where(write, jnp.asarray(t, jnp.int32), st.res_tick[slot]))
+        kw["res_loss"] = st.res_loss.at[slot].set(
+            jnp.where(write, loss32, st.res_loss[slot]))
+        if spec.forensics and trim_frac is not None:
+            kw["res_trim"] = st.res_trim.at[slot].set(
+                jnp.where(write, trim_frac, st.res_trim[slot]))
+    if spec.sentinel:
+        bad = ~(jnp.isfinite(loss32) & jnp.isfinite(jnp.asarray(consensus, jnp.float32)))
+        kw["first_bad"] = jnp.where((st.first_bad < 0) & bad,
+                                    jnp.asarray(t, jnp.int32), st.first_bad)
+    return st._replace(**kw)
+
+
+def staleness_of(net, t):
+    """Delivered-message ages ``[M, W]`` of a mailbox-style net state (duck
+    typed on ``send_tick``), or None when the runtime carries none."""
+    if getattr(net, "send_tick", None) is None:
+        return None
+    from repro.net import mailbox as mb
+
+    return jnp.where(net.send_tick > mb.NEVER, t - net.send_tick, 0)
+
+
+# ---------------------------------------------------------------------------
+# Host-side summaries (report inputs)
+# ---------------------------------------------------------------------------
+
+
+def sender_grid(num_nodes: int, *, adjacency=None, neighbors=None) -> np.ndarray:
+    """``[M, W]`` sender node id per edge slot (-1 = never a live edge):
+    neighbor-indexed tables map slots through ``idx``/``valid``; dense
+    layouts map slot i to sender i, masked by the adjacency when the slot
+    set is static (synchronous broadcast)."""
+    if neighbors is not None:
+        return np.where(np.asarray(neighbors.valid),
+                        np.asarray(neighbors.idx, np.int64), -1)
+    grid = np.broadcast_to(np.arange(num_nodes, dtype=np.int64)[None, :],
+                           (num_nodes, num_nodes))
+    if adjacency is None:
+        return grid.copy()
+    return np.where(np.asarray(adjacency, bool), grid, -1)
+
+
+def ranking_auc(scores, labels) -> float | None:
+    """Mann-Whitney AUC (average ranks on ties) of ``scores`` ranking
+    ``labels`` (True = positive class).  None when a class is empty."""
+    scores = np.asarray(scores, np.float64).reshape(-1)
+    labels = np.asarray(labels, bool).reshape(-1)
+    npos = int(labels.sum())
+    nneg = int(labels.size - npos)
+    if npos == 0 or nneg == 0:
+        return None
+    order = np.argsort(scores, kind="mergesort")
+    s = scores[order]
+    r = np.empty(s.size, np.float64)
+    i = 0
+    while i < s.size:
+        j = i
+        while j + 1 < s.size and s[j + 1] == s[i]:
+            j += 1
+        r[i:j + 1] = 0.5 * (i + j) + 1.0  # average 1-based rank of the tie run
+        i = j + 1
+    ranks = np.empty(s.size, np.float64)
+    ranks[order] = r
+    return float((ranks[labels].sum() - npos * (npos + 1) / 2.0) / (npos * nneg))
+
+
+def summarize(spec: TraceSpec, state: TraceState, *, byz_mask=None,
+              senders: np.ndarray | None = None, top: int = 20) -> dict:
+    """One cell's aggregates as a JSON-ready forensics record: suspicion-
+    ranked edges, Byzantine-vs-honest survival, histograms, sentinel tick,
+    and (when the true mask is known) the AUC of the trim-frequency counters
+    ranking Byzantine in-edges — the acceptance metric."""
+    out: dict[str, Any] = {"spec": dataclasses.asdict(spec)}
+    fb = int(np.asarray(state.first_bad))
+    out["first_bad_tick"] = None if fb < 0 else fb
+    out["loss_trace"] = float(np.asarray(state.loss_trace))
+    byz = None if byz_mask is None else np.asarray(byz_mask, bool)
+    if spec.forensics and state.edge_seen.size:
+        seen = np.asarray(state.edge_seen, np.float64)
+        trim = np.asarray(state.edge_trim, np.float64)
+        freq = trim / np.maximum(seen, 1.0)
+        bs = float(np.asarray(state.byz_seen))
+        ht = float(np.asarray(state.hon_seen))
+        out["survival"] = {
+            "byz_edges_seen": bs,
+            "byz_trim_freq": float(np.asarray(state.byz_trim)) / max(bs, 1.0),
+            "honest_edges_seen": ht,
+            "honest_trim_freq": float(np.asarray(state.hon_trim)) / max(ht, 1.0),
+        }
+        out["stale_hist"] = [float(x) for x in np.asarray(state.stale_hist)]
+        out["bits_hist"] = [float(x) for x in np.asarray(state.bits_hist)]
+        if senders is not None:
+            recv, slot = np.nonzero((seen > 0) & (senders >= 0))
+            send = senders[recv, slot]
+            if byz is not None:
+                # forensics are the honest nodes' view of their in-edges
+                keep = ~byz[recv]
+                recv, slot, send = recv[keep], slot[keep], send[keep]
+            f = freq[recv, slot]
+            order = np.argsort(-f, kind="mergesort")[:top]
+            out["top_edges"] = [
+                {"receiver": int(recv[k]), "sender": int(send[k]),
+                 "trim_freq": float(f[k]), "seen": float(seen[recv[k], slot[k]]),
+                 "byzantine": None if byz is None else bool(byz[send[k]])}
+                for k in order
+            ]
+            if byz is not None:
+                out["auc_byzantine_edges"] = ranking_auc(f, byz[send])
+    if spec.reservoir > 0:
+        ticks = np.asarray(state.res_tick)
+        live = ticks >= 0
+        out["reservoir"] = {
+            "ticks": [int(x) for x in ticks[live]],
+            "loss": [float(x) for x in np.asarray(state.res_loss)[live]],
+        }
+    return out
+
+
+# Obs metric streams registered with the grid result reducers (satellite:
+# `sim.results` warns on unregistered streams instead of dropping silently).
+def _register_reducers() -> None:
+    from repro.sim import results as results_lib
+
+    results_lib.register_mean("obs_trim_frac")
+
+
+_register_reducers()

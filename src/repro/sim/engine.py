@@ -33,6 +33,7 @@ per-experiment trainer run.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Iterable, Sequence
 
 import jax
@@ -197,7 +198,15 @@ class GridEngine:
         scenario_seed: int = 0,
         group: bool = True,
         sparse: bool = False,
+        trace=None,
+        events=None,
     ):
+        # observability (repro.obs): `trace` is an engine-wide TraceSpec
+        # compiled into every cell's step (None = untraced, the default);
+        # `events` an EventLog receiving run/chunk/divergence records from
+        # the host-side loop around the jitted scans
+        self._trace_spec = trace
+        self._events = events
         self.grid = grid
         self.cells = list(cells) if cells is not None else grid.cells()
         if not self.cells:
@@ -330,6 +339,7 @@ class GridEngine:
             ),
             adv_idx=adv_idx,
             adv_theta=adv_theta,
+            trace=self._trace_spec,  # zero-leaf aux data: no vmapped axis
         )
 
     def set_cells(self, cells: Sequence[Cell]) -> None:
@@ -460,7 +470,15 @@ class GridEngine:
         # is stateful (same uniformity constraint); stateless cells thread it
         # through untouched (all-zeros in, all-zeros out)
         adv = adv_lib.init_state(dim, lead=(e,)) if self._adv_stateful else None
-        return BridgeState(params=stacked, t=t, key=keys, net=net, comm=comm, adv=adv)
+        # observability carry (repro.obs): engine-wide spec, stacked over [E]
+        obs = None
+        if self._trace_spec is not None:
+            from repro.obs import trace as obs_trace
+
+            width = m if self.neighbors is None else self.neighbors.k
+            obs = obs_trace.init_state(self._trace_spec, m, width, lead=(e,))
+        return BridgeState(params=stacked, t=t, key=keys, net=net, comm=comm,
+                           adv=adv, obs=obs)
 
     def run(self, state: BridgeState, batches, *, chunk: int | None = None):
         """Scan all cells over ``batches`` (a pytree of ``[T, ...]`` arrays,
@@ -478,6 +496,13 @@ class GridEngine:
         perm, inv = self._perm, self._inv
         cells_p = self._cell_perm
         state_p = tree(lambda x: x[perm], state)
+        ev = self._events
+        t_run = time.perf_counter()
+        if ev is not None:
+            ticks = int(jax.tree_util.tree_leaves(batches)[0].shape[0])
+            ev.emit("run.start", kind="grid", cells=e, ticks=ticks, chunk=chunk,
+                    groups=len(self._bounds), sparse=self.sparse,
+                    traced=self._trace_spec is not None)
         if chunk is None or chunk >= e:
             final_p, ms_p = self._scan_all(cells_p, state_p, batches)
         else:
@@ -499,11 +524,19 @@ class GridEngine:
 
                 for lo in range(glo, ghi, width):
                     hi = min(lo + width, ghi)
+                    t_chunk = time.perf_counter()
                     f, ms = gscan(
                         tree(lambda x: padded(x, lo, hi), cells_p),
                         tree(lambda x: padded(x, lo, hi), state_p),
                         batches,
                     )
+                    if ev is not None:
+                        # block so the chunk wall is real compute, not
+                        # dispatch (events-enabled runs trade async overlap
+                        # for honest per-chunk timings)
+                        f = jax.block_until_ready(f)
+                        ev.emit("grid.chunk", group=gi, lo=int(lo), hi=int(hi),
+                                wall_s=time.perf_counter() - t_chunk)
                     valid = hi - lo
                     finals.append(tree(lambda x: x[:valid], f))
                     mss.append(tree(lambda x: x[:, :valid], ms))
@@ -511,8 +544,31 @@ class GridEngine:
             ms_p = tree(lambda *xs: jnp.concatenate(xs, axis=1), *mss)
         final = tree(lambda x: x[inv], final_p)
         ms = tree(lambda x: jnp.swapaxes(x[:, inv], 0, 1), ms_p)
+        if ev is not None:
+            final = jax.block_until_ready(final)
+            ev.emit("run.end", kind="grid", wall_s=time.perf_counter() - t_run,
+                    trace_count=self.trace_count)
+            if final.obs is not None and self._trace_spec.sentinel:
+                first_bad = np.asarray(final.obs.first_bad)
+                for i, tick in enumerate(first_bad):
+                    if tick >= 0:
+                        ev.emit("obs.divergence", cell=self.cells[i].tag,
+                                first_bad_tick=int(tick))
         return final, ms
 
     def cell_params_of(self, i: int) -> CellParams:
         """Row ``i`` of the stacked cell parameters (diagnostics/tests)."""
         return jax.tree_util.tree_map(lambda x: x[i], self._cell_stack)
+
+    def sender_grid(self) -> np.ndarray:
+        """``[M, W]`` sender node id per obs edge slot (-1 = never live) —
+        what `repro.obs.trace.summarize` needs to name suspect edges.  Net
+        grids keep every dense slot (schedules vary per tick); sync grids
+        mask by the static adjacency."""
+        from repro.obs import trace as obs_trace
+
+        m = self.grid.topology.num_nodes
+        if self.neighbors is not None:
+            return obs_trace.sender_grid(m, neighbors=self.neighbors)
+        return obs_trace.sender_grid(
+            m, adjacency=None if self.net_mode else self.grid.topology.adjacency)

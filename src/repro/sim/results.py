@@ -15,21 +15,62 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Sequence
+import warnings
+from typing import Callable, Sequence
 
 import numpy as np
 
 from repro.sim.grid import Cell
 
-# Per-tick metric streams summarized into cell records: (key, reducer).
-_FINAL_KEYS = ("loss", "consensus_dist", "ef_residual_norm")
-_MEAN_KEYS = ("delivered_frac", "mean_staleness", "screened_frac", "usable_in",
-              "wire_bits_per_edge", "wire_bytes_total")
+# ---------------------------------------------------------------------------
+# Metric-stream reducer registry
+# ---------------------------------------------------------------------------
+#
+# `collect` used to reduce two hardcoded key tuples — any other engine metric
+# stream vanished silently (``rho`` and ``active_links`` already had).  The
+# registry is extensible: subsystems that add metric streams register a
+# reducer for them (`repro.obs.trace` registers its aggregates at import),
+# and `collect` *warns* on streams nothing registered instead of dropping
+# them without a trace.
+
+_REDUCERS: dict[str, tuple[str, Callable[[np.ndarray], float]]] = {}
+
+
+def register_reducer(key: str, out_key: str, fn: Callable[[np.ndarray], float]) -> None:
+    """Register ``fn`` to reduce the per-tick stream ``key`` ([T] per cell)
+    into the cell-record field ``out_key``."""
+    _REDUCERS[key] = (out_key, fn)
+
+
+def register_final(key: str) -> None:
+    """Reduce ``key`` to its final tick as ``final_<key>``."""
+    register_reducer(key, f"final_{key}", lambda a: float(a[-1]))
+
+
+def register_mean(key: str) -> None:
+    """Reduce ``key`` to its tick-mean as ``mean_<key>`` (keys already
+    ``mean_``-prefixed keep their name — no double prefix)."""
+    out = key if key.startswith("mean_") else f"mean_{key}"
+    register_reducer(key, out, lambda a: float(a.mean()))
+
+
+for _k in ("loss", "consensus_dist", "ef_residual_norm", "rho"):
+    register_final(_k)
+for _k in ("delivered_frac", "mean_staleness", "screened_frac", "usable_in",
+           "wire_bits_per_edge", "wire_bytes_total", "active_links"):
+    register_mean(_k)
 
 
 def collect(cells: Sequence[Cell], metrics: dict, *, meta: dict | None = None) -> "GridResult":
     """Summarize engine metrics (``[E, T]`` leaves) into a `GridResult`."""
     host = {k: np.asarray(v) for k, v in metrics.items()}
+    unregistered = sorted(k for k in host if k not in _REDUCERS)
+    if unregistered:
+        warnings.warn(
+            f"metric streams {unregistered} have no registered reducer and are "
+            f"dropped from cell records; add one via "
+            f"repro.sim.results.register_reducer/register_final/register_mean",
+            stacklevel=2)
     records = []
     for i, c in enumerate(cells):
         rec = {
@@ -38,12 +79,9 @@ def collect(cells: Sequence[Cell], metrics: dict, *, meta: dict | None = None) -
             "mask_seed": c.mask_seed,
             "theta": None if c.theta is None else [float(x) for x in c.theta],
         }
-        for k in _FINAL_KEYS:
+        for k, (out_key, fn) in _REDUCERS.items():
             if k in host:
-                rec[f"final_{k}"] = float(host[k][i, -1])
-        for k in _MEAN_KEYS:
-            if k in host:
-                rec[f"mean_{k}" if not k.startswith("mean_") else k] = float(host[k][i].mean())
+                rec[out_key] = fn(host[k][i])
         records.append(rec)
     return GridResult(cells=records, meta=dict(meta or {}))
 

@@ -1,0 +1,331 @@
+"""repro.obs: trace inertness, forensics quality, and the divergence sentinel.
+
+The obs contract (ISSUE 6 acceptance):
+* (a) tracing is BIT-INERT — params and metric streams with
+  ``TraceSpec`` on are bitwise equal to the untraced run, across
+  rule x attack x codec, sync + net paths, dense + sparse layouts,
+  aggregate + reservoir modes, and ``decide_stride`` subsampling;
+* (b) tracing OFF is structurally absent — ``state.obs is None`` and no obs
+  metric streams appear;
+* (c) the per-edge trim-frequency counters rank true Byzantine in-edges
+  above honest edges (Mann-Whitney AUC);
+* (d) the NaN sentinel locates the first non-finite tick, end-to-end through
+  `BreakdownEngine` (divergence is *located*, not inferred from NaN soup);
+plus unit coverage of the decision twins, the aggregate folds, and the
+forensics/streaming collision guard.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.adversary.breakdown import BreakdownConfig, BreakdownEngine
+from repro.core import BridgeConfig, BridgeTrainer, erdos_renyi, replicate, screening
+from repro.core.bridge import stack_batches
+from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
+from repro.obs import EventLog, TraceSpec, read_events
+from repro.obs import trace as obs_trace
+from repro.sim import ExperimentGrid, GridEngine
+
+M, D, T = 12, 5, 25
+
+
+def quad_grad_fn(params, batch):
+    w, c = params["w"], batch
+    loss = 0.5 * jnp.sum((w - c) ** 2)
+    return loss, {"w": w - c}
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return erdos_renyi(M, 0.8, 2, seed=1)
+
+
+@pytest.fixture(scope="module")
+def targets():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+
+
+def init_fn(seed):
+    return replicate({"w": jnp.zeros(D)}, M, perturb=0.1, key=jax.random.PRNGKey(seed))
+
+
+@pytest.fixture(scope="module")
+def batches(targets):
+    return stack_batches(lambda i: targets, T)
+
+
+def _sync_run(topo, targets, *, rule="trimmed_mean", attack="alie",
+              codec="identity", sparse=False, trace=None, ticks=T, b=2):
+    cfg = BridgeConfig(topology=topo, rule=rule, num_byzantine=b, attack=attack,
+                       codec=codec, sparse=sparse, trace=trace, lam=1.0, t0=10.0)
+    tr = BridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    streams = {"loss": [], "consensus_dist": []}
+    for _ in range(ticks):
+        st, m = tr.step(st, targets)
+        for k in streams:
+            streams[k].append(m[k])
+    return tr, st, {k: np.asarray(jnp.stack(v)) for k, v in streams.items()}
+
+
+def _net_run(topo, batches, *, sparse, trace=None):
+    cfg = AsyncBridgeConfig(
+        topology=topo, rule="trimmed_mean", num_byzantine=2, attack="alie",
+        channel=ChannelConfig(drop_prob=0.1), staleness_bound=2,
+        lam=1.0, t0=10.0, sparse=sparse, trace=trace)
+    tr = AsyncBridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    st, metrics = tr.run_scan(st, batches)
+    return tr, st, metrics
+
+
+# ---------------------------------------------------------------------------
+# (a) bit-inertness: traced trajectory == untraced trajectory, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule,attack,codec,sparse,b", [
+    ("trimmed_mean", "alie", "identity", False, 2),
+    ("trimmed_mean", "sign_flip", "int8", False, 2),
+    ("median", "alie", "identity", True, 2),
+    ("krum", "random", "identity", False, 2),
+    # bulyan needs in-degree >= 4b+1 > this graph's 6; its twin is covered
+    # bitwise by test_decision_twins_match_plain_rules
+])
+def test_sync_trace_bit_inert(topo, targets, rule, attack, codec, sparse, b):
+    """Aggregates + reservoir compiled into the step change NOTHING about the
+    trajectory — params and metric streams are bitwise equal."""
+    spec = TraceSpec(reservoir=3, stride=8)
+    _, st_off, ms_off = _sync_run(topo, targets, rule=rule, attack=attack,
+                                  codec=codec, sparse=sparse, trace=None, b=b)
+    tr, st_on, ms_on = _sync_run(topo, targets, rule=rule, attack=attack,
+                                 codec=codec, sparse=sparse, trace=spec, b=b)
+    np.testing.assert_array_equal(np.asarray(st_off.params["w"]),
+                                  np.asarray(st_on.params["w"]))
+    for k in ms_off:
+        np.testing.assert_array_equal(ms_off[k], ms_on[k],
+                                      err_msg=f"metric {k} diverged under tracing")
+    # and the aggregates actually observed the run
+    assert st_off.obs is None
+    assert float(jnp.sum(st_on.obs.edge_seen)) > 0
+    assert float(jnp.sum(st_on.obs.bits_hist)) > 0  # wire-bits binned
+    summary = obs_trace.summarize(spec, st_on.obs, byz_mask=np.asarray(tr.byz_mask))
+    assert set(summary["reservoir"]["ticks"]) == {8, 16, 24}
+
+
+@pytest.mark.parametrize("stride", [2, 5])
+def test_decide_stride_still_bit_inert(topo, targets, stride):
+    """Coordinate-subsampled membership (`decide_stride` > 1) trades counter
+    variance only — the aggregate y stays exact, so the trajectory stays
+    bitwise equal and the counters still accumulate."""
+    _, st_off, ms_off = _sync_run(topo, targets, sparse=True, trace=None)
+    _, st_on, ms_on = _sync_run(topo, targets, sparse=True,
+                                trace=TraceSpec(decide_stride=stride))
+    np.testing.assert_array_equal(np.asarray(st_off.params["w"]),
+                                  np.asarray(st_on.params["w"]))
+    np.testing.assert_array_equal(ms_off["loss"], ms_on["loss"])
+    assert float(jnp.sum(st_on.obs.edge_trim)) > 0
+
+
+@pytest.mark.parametrize("sparse", [False, True])
+def test_net_trace_bit_inert(topo, batches, sparse):
+    """The network-runtime path (drops, staleness, mailboxes): traced run is
+    bitwise the untraced one, and the staleness histogram fills."""
+    _, st_off, ms_off = _net_run(topo, batches, sparse=sparse, trace=None)
+    _, st_on, ms_on = _net_run(topo, batches, sparse=sparse, trace=TraceSpec())
+    np.testing.assert_array_equal(np.asarray(st_off.params["w"]),
+                                  np.asarray(st_on.params["w"]))
+    np.testing.assert_array_equal(np.asarray(ms_off["loss"]),
+                                  np.asarray(ms_on["loss"]))
+    assert st_off.obs is None
+    assert float(jnp.sum(st_on.obs.stale_hist)) > 0
+
+
+def test_grid_trace_bit_inert_and_stacked(topo, batches):
+    """The batched grid engine: an engine-wide spec stacks obs over [E]
+    without perturbing any cell's trajectory."""
+    grid = ExperimentGrid(topo, ("trimmed_mean", "median"), ("alie",), (2,),
+                          (0, 1), lam=1.0, t0=10.0)
+    spec = TraceSpec()
+    eng_off = GridEngine(grid, quad_grad_fn)
+    fin_off, ms_off = eng_off.run(eng_off.init(init_fn), batches)
+    eng_on = GridEngine(grid, quad_grad_fn, trace=spec)
+    fin_on, ms_on = eng_on.run(eng_on.init(init_fn), batches)
+    np.testing.assert_array_equal(np.asarray(fin_off.params["w"]),
+                                  np.asarray(fin_on.params["w"]))
+    np.testing.assert_array_equal(np.asarray(ms_off["loss"]),
+                                  np.asarray(ms_on["loss"]))
+    assert fin_on.obs.edge_seen.shape == (eng_on.num_cells, M, M)
+    senders = eng_on.sender_grid()
+    for i in range(eng_on.num_cells):
+        obs_i = jax.tree_util.tree_map(lambda leaf: leaf[i], fin_on.obs)
+        s = obs_trace.summarize(spec, obs_i, byz_mask=eng_on.byz_masks[i],
+                                senders=senders)
+        assert s["auc_byzantine_edges"] is not None
+
+
+# ---------------------------------------------------------------------------
+# decision twins: same y op graph as the plain rules, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule", sorted(screening.RULES_WITH_DECISIONS))
+@pytest.mark.parametrize("stride", [1, 3])
+def test_decision_twins_match_plain_rules(rule, stride):
+    rng = np.random.default_rng(7)
+    n, d, b = 9, 6, 2
+    v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    mask = jnp.asarray(rng.random(n) < 0.8).at[: 2 * b + 1].set(True)
+    sv = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    y_plain = screening.RULES[rule](v, mask, sv, b)
+    y_twin, trim = screening.RULES_WITH_DECISIONS[rule](
+        v, mask, sv, b, decide_stride=stride)
+    np.testing.assert_array_equal(np.asarray(y_plain), np.asarray(y_twin),
+                                  err_msg=f"{rule} twin y diverged from plain rule")
+    assert trim.shape == (n,)
+    t = np.asarray(trim)
+    assert np.all((t >= 0) & (t <= 1))
+    assert np.all(t[~np.asarray(mask)] == 0)  # dead edges never counted
+
+
+# ---------------------------------------------------------------------------
+# (b) off = structurally absent; forensics/streaming collision is loud
+# ---------------------------------------------------------------------------
+
+
+def test_trace_off_is_structurally_absent(topo, targets):
+    cfg = BridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                       attack="alie", lam=1.0, t0=10.0)
+    tr = BridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    assert st.obs is None
+    st, metrics = tr.step(st, targets)
+    assert st.obs is None
+    assert "obs_trim_frac" not in metrics
+
+
+def test_check_decide_streams_raises(topo, targets):
+    with pytest.raises(ValueError, match="forensics"):
+        screening.check_decide_streams(["trimmed_mean"], d=100, chunk=10)
+    # krum never streams coordinates -> no collision
+    screening.check_decide_streams(["krum"], d=100, chunk=10)
+    # end-to-end: forensics where streaming would engage fails at trace time
+    cfg = BridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                       attack="alie", lam=1.0, t0=10.0, screen_chunk=2,
+                       trace=TraceSpec())
+    tr = BridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    with pytest.raises(ValueError, match="forensics"):
+        tr.step(st, targets)
+
+
+def test_trace_spec_validation():
+    with pytest.raises(ValueError, match="TraceSpec"):
+        TraceSpec(decide_stride=0)
+    with pytest.raises(ValueError, match="TraceSpec"):
+        TraceSpec(reservoir=-1)
+    with pytest.raises(ValueError, match="TraceSpec"):
+        TraceSpec(stride=0)
+
+
+# ---------------------------------------------------------------------------
+# (c) forensics quality: counters rank Byzantine in-edges
+# ---------------------------------------------------------------------------
+
+
+def test_trim_counters_rank_byzantine_edges(topo, targets):
+    spec = TraceSpec()
+    tr, st, _ = _sync_run(topo, targets, trace=spec)
+    senders = obs_trace.sender_grid(M, adjacency=topo.adjacency)
+    summary = obs_trace.summarize(spec, st.obs, byz_mask=np.asarray(tr.byz_mask),
+                                  senders=senders)
+    assert summary["auc_byzantine_edges"] >= 0.7
+    sv = summary["survival"]
+    assert sv["byz_trim_freq"] > sv["honest_trim_freq"]
+    # the suspicion ranking leads with a true Byzantine sender
+    assert summary["top_edges"][0]["byzantine"] is True
+
+
+def test_ranking_auc():
+    assert obs_trace.ranking_auc([0.9, 0.8, 0.1, 0.2], [1, 1, 0, 0]) == 1.0
+    assert obs_trace.ranking_auc([0.1, 0.2, 0.9, 0.8], [1, 1, 0, 0]) == 0.0
+    assert obs_trace.ranking_auc([0.5, 0.5, 0.5, 0.5], [1, 1, 0, 0]) == 0.5
+    assert obs_trace.ranking_auc([0.5, 0.5], [1, 1]) is None  # one-class
+
+
+# ---------------------------------------------------------------------------
+# aggregate folds: histograms, reservoir round-robin, EMA
+# ---------------------------------------------------------------------------
+
+
+def test_update_folds_histograms_and_reservoir():
+    spec = TraceSpec(reservoir=2, stride=2, hist_bins=4, stale_max=8, ema=0.5)
+    st = obs_trace.init_state(spec, 3, 3)
+    live = jnp.ones((3, 3), bool)
+    byz = jnp.zeros((3, 3), bool).at[:, 0].set(True)
+    trim = jnp.where(byz, 0.9, 0.1)
+    for t in range(6):
+        st = obs_trace.update(
+            spec, st, t=t, loss=float(t), consensus=0.0, trim_frac=trim,
+            live=live, byz_edge=byz, staleness=jnp.full((3, 3), 5),
+            wire_bits=8 * D, d=D, live_edges=9.0)
+    # staleness 5 with bin width ceil(8/4)=2 -> bin 2, 9 live edges x 6 ticks
+    np.testing.assert_array_equal(np.asarray(st.stale_hist), [0, 0, 54, 0])
+    assert float(jnp.sum(st.bits_hist)) == 54.0  # 9 edges x 6 ticks
+    # slots written at t=0,2,4 round-robin over 2 -> final ticks {4, 2}
+    assert set(np.asarray(st.res_tick).tolist()) == {4, 2}
+    # EMA: l_0 = 0, then l_t = 0.5 l_{t-1} + 0.5 t  ->  l_5 = 4.03125
+    assert float(st.loss_trace) == pytest.approx(4.03125)
+    assert float(st.byz_trim) == pytest.approx(0.9 * 3 * 6)
+    assert float(st.hon_trim) == pytest.approx(0.1 * 6 * 6)
+    assert int(st.first_bad) == -1
+
+
+# ---------------------------------------------------------------------------
+# (d) divergence sentinel: first bad tick, end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_sentinel_locates_first_bad_tick(topo, targets):
+    bad_at = 7
+
+    def batch_fn(i):
+        return jnp.full_like(targets, jnp.inf) if i == bad_at else targets
+
+    spec = TraceSpec(forensics=False, sentinel=True)
+    cfg = BridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                       attack="alie", lam=1.0, t0=10.0, trace=spec)
+    tr = BridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    for i in range(T):
+        st, _ = tr.step(st, batch_fn(i))
+    assert int(st.obs.first_bad) == bad_at  # first, not last, non-finite tick
+    assert obs_trace.summarize(spec, st.obs)["first_bad_tick"] == bad_at
+
+
+def test_breakdown_engine_locates_divergence(topo, batches, tmp_path):
+    """Regression: `BreakdownEngine`'s default sentinel-only trace records
+    WHEN each diverging probe went non-finite and emits ``obs.divergence``
+    events, instead of reporting an opaque NaN final loss."""
+
+    def unstable_grad_fn(params, batch):
+        # effective step size ~1e3 >> 2: the quadratic iteration overflows
+        # f32 within a few ticks, the divergence the sentinel must date
+        w, c = params["w"], batch
+        loss = 0.5e4 * jnp.sum((w - c) ** 2)
+        return loss, {"w": 1e4 * (w - c)}
+
+    events_path = tmp_path / "events.jsonl"
+    cfg = BreakdownConfig(mode="ladder", seeds=(0,), b_max=2)
+    with EventLog(str(events_path)) as ev:
+        eng = BreakdownEngine(topo, ("trimmed_mean",), ("random",),
+                              unstable_grad_fn, init_fn, batches,
+                              lam=1.0, t0=10.0, config=cfg, events=ev)
+        eng.run()
+    for key, rec in eng.probes.items():
+        assert not rec["finite"], key
+        assert rec["first_bad_tick"] is not None and 0 <= rec["first_bad_tick"] < T
+    names = [e["tag"] for e in read_events(str(events_path))]
+    assert "obs.divergence" in names
