@@ -5,6 +5,12 @@ nodes broadcast random garbage every iteration (the paper's attack model),
 with DGD (breaks) vs BRIDGE-T (survives).
 
     PYTHONPATH=src python examples/quickstart.py
+
+This is the single-cell path everything else generalizes: `repro.sim`
+batches whole rule x attack grids of it into one compiled program,
+`repro.net` runs it over unreliable links, `repro.obs` / `repro.trust`
+bolt forensics and reputation onto the same step — see README.md and
+docs/ARCHITECTURE.md for the map.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

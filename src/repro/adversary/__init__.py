@@ -10,6 +10,10 @@ The red-team side of BRIDGE as a first-class subsystem:
 * `adaptive` — omniscient attacks that optimize per tick: inner maximization
   through the differentiable screening step, online-sigma ALIE, IPM, and
   time-coupled dissensus.
+* `equivocation` — protocol-level adversaries the trust layer exists for:
+  equivocators (per-receiver inconsistent lies — only the echo protocol
+  sees them) and slanderers (honest values, forged gossip digests — the
+  echo quorum defeats them).
 * `breakdown` — certification engine: binary-search the breakdown point b*
   per (rule, topology, adversary) with batched probe rounds on the grid
   engine, emitting ``BENCH_breakdown.json`` (import explicitly:
@@ -19,6 +23,7 @@ The red-team side of BRIDGE as a first-class subsystem:
   explicitly, same reason).
 """
 from repro.adversary import adaptive as _adaptive  # noqa: F401  (registers)
+from repro.adversary import equivocation as _equivocation  # noqa: F401  (registers)
 from repro.adversary.protocols import (
     ADVERSARIES,
     THETA_DIM,
@@ -26,9 +31,11 @@ from repro.adversary.protocols import (
     AdvCtx,
     AdvState,
     adversary_bank,
+    apply_accuse_bank,
     apply_adversary_bank,
     apply_message_adversary_bank,
     attack_names,
+    bank_accuses,
     bank_engaged,
     bank_stateful,
     cell_theta,
@@ -40,7 +47,8 @@ from repro.adversary.protocols import (
 
 __all__ = [
     "ADVERSARIES", "THETA_DIM", "Adversary", "AdvCtx", "AdvState",
-    "adversary_bank", "apply_adversary_bank", "apply_message_adversary_bank",
-    "attack_names", "bank_engaged", "bank_stateful", "cell_theta",
-    "default_thetas", "get_adversary", "init_state", "registry_tiers",
+    "adversary_bank", "apply_accuse_bank", "apply_adversary_bank",
+    "apply_message_adversary_bank", "attack_names", "bank_accuses",
+    "bank_engaged", "bank_stateful", "cell_theta", "default_thetas",
+    "get_adversary", "init_state", "registry_tiers",
 ]

@@ -84,9 +84,25 @@ class BreakdownEngine:
     """Certifies b* for every (rule, adversary) pair over one topology.
 
     ``grad_fn`` / ``init_fn`` / ``batches`` are exactly the `GridEngine`
-    contract (synchronous broadcast path); ``eval_fn(params, honest_mask)``,
-    when given, scores one cell's final ``[M, ...]`` params host-side
-    (higher = better, e.g. honest test accuracy).
+    contract; ``eval_fn(params, honest_mask)``, when given, scores one cell's
+    final ``[M, ...]`` params host-side (higher = better, e.g. honest test
+    accuracy).
+
+    ``scenario`` moves every probe from the synchronous broadcast path onto
+    the unreliable-network runtime (a `repro.net.scenarios` name; ``"ideal"``
+    = mailbox exchange over a perfect channel).  This is what the
+    equivocation study needs — per-receiver lies only exist at message
+    granularity.  ``trust`` compiles a `repro.trust.TrustSpec` into every
+    probe, so the engine can certify *detect-and-expel* breakdown points:
+    the trust arm of ``benchmarks/trust_bench.py`` runs the same ladder
+    twice — static rule vs reputation-weighted rule + trust — and gates on
+    the b* gap.
+
+    Minimal usage::
+
+        eng = BreakdownEngine(topo, ["trimmed_mean"], ["alie_online"],
+                              grad_fn, init_fn, batches)
+        result = eng.run()          # result["rules"][rule]["adversaries"][adv]["bstar"]
     """
 
     def __init__(self, topology, rules: Sequence[str], adversaries: Sequence[str],
@@ -95,7 +111,8 @@ class BreakdownEngine:
                  config: BreakdownConfig = BreakdownConfig(),
                  eval_fn: Callable | None = None,
                  engine_chunk: int | None = None,
-                 trace=_DEFAULT_TRACE, events=None):
+                 trace=_DEFAULT_TRACE, trust=None,
+                 scenario: str | None = None, events=None):
         if "none" in adversaries:
             raise ValueError("'none' is the reference, not a certifiable adversary")
         self.topology = topology
@@ -113,6 +130,10 @@ class BreakdownEngine:
         # bit-inert, so certification verdicts are unchanged
         self.trace = (TraceSpec(forensics=False, sentinel=True)
                       if trace is _DEFAULT_TRACE else trace)
+        self.trust = trust
+        self.scenario = scenario
+        # net-mode grids need the schedule length up front
+        self.num_ticks = int(jax.tree_util.tree_leaves(batches)[0].shape[0])
         self.events = events
         self.compiles = 0
         self.cells_run = 0
@@ -129,6 +150,7 @@ class BreakdownEngine:
         return ExperimentGrid(
             self.topology, self.rules, ("none",), byzantine_counts=(0,),
             seeds=self.config.seeds,
+            scenarios=None if self.scenario is None else (self.scenario,),
             adversaries=("none",) + self.adversaries,
             lam=self.lam, t0=self.t0,
         )
@@ -139,9 +161,12 @@ class BreakdownEngine:
         keys = [k for k in keys if k not in self.probes]
         if not keys:
             return
-        cells = [Cell(rule, "none", b, s, adversary=adv, mask_seed=s)
+        cells = [Cell(rule, "none", b, s, scenario=self.scenario,
+                      adversary=adv, mask_seed=s)
                  for (rule, adv, b) in keys for s in self.config.seeds]
-        engine = GridEngine(self._grid(), self.grad_fn, cells=cells, trace=self.trace)
+        engine = GridEngine(self._grid(), self.grad_fn, cells=cells,
+                            trace=self.trace, trust=self.trust,
+                            num_ticks=self.num_ticks if self.scenario else None)
         state = engine.init(self.init_fn)
         t0 = time.perf_counter()
         final, metrics = engine.run(state, self.batches, chunk=self.engine_chunk)
@@ -240,6 +265,8 @@ class BreakdownEngine:
             "mode": self.config.mode, "seeds": list(self.config.seeds),
             "loss_ratio": self.config.loss_ratio,
             "adversaries": list(self.adversaries),
+            "scenario": self.scenario,
+            "trust": self.trust is not None,
         }}
         for rule in self.rules:
             rrec = {"feasible_b": self.feasible[rule],

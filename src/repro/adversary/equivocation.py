@@ -1,0 +1,133 @@
+"""Protocol-level adversaries: equivocators and slanderers.
+
+The adaptive tier (`repro.adversary.adaptive`) attacks consensus *values* —
+every lie is a single per-tick row the whole network sees.  Two strictly
+nastier families attack the *protocol*:
+
+* ``equivocate`` — the sender tells different receivers different lies:
+  receiver j gets ``mu + sgn(j, i) * z * sigma`` (the ALIE collusion point,
+  but on *alternating sides* of the honest spread by receiver/sender
+  parity).  Each individual payload is band-hugging and survives value
+  screening on its own; the inconsistency is only visible by comparing
+  receptions — which is exactly what the commit-then-gossip echo protocol
+  (`repro.trust.echo`) does.  On the broadcast path a sender physically has
+  one payload, so the registration degrades to the one-sided ALIE point.
+* ``slander`` — the dual attack, aimed at the trust layer itself: Byzantine
+  nodes send *honest* values (value screening sees nothing, ever) but forge
+  the digest rows they gossip (`Adversary.accuse_fn`), accusing every
+  honest in-neighbor of equivocation.  The echo protocol's ``b + 1`` witness
+  quorum is what defeats it — at most b forged votes can never confirm an
+  accusation — and the trust bench asserts honest evictions stay at 0 under
+  this attack.
+
+Both register in the banked adversary dispatch like any other, under their
+own `registry_tiers` tiers (``equivocator`` / ``slanderer``).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.adversary.protocols import (
+    Adversary,
+    observe,
+    register,
+)
+from repro.adversary.adaptive import _pick, _substitute
+
+
+# ---------------------------------------------------------------------------
+# Equivocation: per-receiver inconsistent ALIE
+# ---------------------------------------------------------------------------
+
+
+def _equiv_core(state, theta, w, byz_mask):
+    """(state', mu, band): the tracked honest center and the per-coordinate
+    half-width ``z * sigma`` the per-receiver lies sit at."""
+    state, mu, sigma, _ = observe(state, w, byz_mask)
+    z = _pick(theta[0], 1.5)
+    return state, mu, z * sigma
+
+
+def _sign_grid(m: int) -> jnp.ndarray:
+    """``[receiver, sender]`` alternating-side matrix: +1 or -1 by
+    receiver/sender parity, so each Byzantine sender splits its audience
+    into two groups holding contradictory payloads (and two senders never
+    split the audience identically)."""
+    j = jnp.arange(m)
+    return 1.0 - 2.0 * ((j[:, None] + j[None, :]) % 2).astype(jnp.float32)
+
+
+def _equivocate_fn(ctx, state, theta, w, byz_mask, key, t):
+    # broadcast path: one payload per sender by construction — equivocation
+    # is structurally impossible, degrade to the minus-side collusion point
+    state, mu, band = _equiv_core(state, theta, w, byz_mask)
+    crafted = mu - band
+    return _substitute(w, byz_mask, crafted[None, :]), state
+
+
+def _equivocate_message_fn(ctx, state, theta, w, byz_mask, adjacency, key, t):
+    state, mu, band = _equiv_core(state, theta, w, byz_mask)
+    m = w.shape[0]
+    sgn = _sign_grid(m)  # [receiver, sender]
+    base = jnp.broadcast_to(w[None, :, :], (m,) + w.shape)
+    lie = mu[None, None, :] + sgn[:, :, None] * band[None, None, :]
+    if ctx.deliver_mask is not None:
+        # waste nothing on coordinates the capped channel will backfill
+        lie = jnp.where(ctx.deliver_mask[None, None, :], lie, base)
+    msgs = jnp.where(byz_mask[None, :, None], lie, base)
+    # no single broadcast value exists: Byzantine nodes screen truthfully
+    return msgs, w, state
+
+
+def _equivocate_sparse_message_fn(ctx, state, theta, w, byz_mask, nbr, live, key, t):
+    del live
+    state, mu, band = _equiv_core(state, theta, w, byz_mask)
+    # the dense sign matrix gathered through the table — the bitwise gather
+    # of the dense lie tensor (dense <-> sparse parity contract)
+    sgn = nbr.gather_edges(_sign_grid(nbr.num_nodes))  # [M, K]
+    base = nbr.gather_rows(w)  # [M, K, d]
+    lie = mu[None, None, :] + sgn[:, :, None] * band[None, None, :]
+    if ctx.deliver_mask is not None:
+        lie = jnp.where(ctx.deliver_mask[None, None, :], lie, base)
+    msgs = jnp.where(nbr.gather_senders(byz_mask, fill=False)[:, :, None], lie, base)
+    return msgs, w, state
+
+
+register(Adversary(
+    "equivocate", _equivocate_fn, stateful=True, tier="equivocator",
+    message_fn=_equivocate_message_fn,
+    sparse_message_fn=_equivocate_sparse_message_fn,
+    # theta: [z (band half-width in sigmas)]
+    default_theta=(1.5, 0.0, 0.0, 0.0),
+    theta_bounds=((0.5, 3.0), (0.0, 0.0), (0.0, 0.0), (0.0, 0.0)),
+))
+
+
+# ---------------------------------------------------------------------------
+# Slander: honest values, forged gossip
+# ---------------------------------------------------------------------------
+
+
+def _slander_fn(ctx, state, theta, w, byz_mask, key, t):
+    # values stay honest — the attack lives entirely in accuse_fn
+    del ctx, theta, byz_mask, key, t
+    return w, state
+
+
+def _slander_accuse_fn(theta, digests, byz_mask, key, t):
+    """Forge the rows Byzantine nodes report: shift every digest by a large
+    constant so the forged row disagrees with every honest witness about
+    every sender — the maximal framing attempt.  ``theta[0]`` scales the
+    shift (0 selects the default)."""
+    del key, t
+    mag = _pick(theta[0], 1e3)
+    return digests + jnp.where(byz_mask[:, None, None], mag, 0.0)
+
+
+register(Adversary(
+    "slander", _slander_fn, stateful=False, tier="slanderer",
+    accuse_fn=_slander_accuse_fn,
+    # theta: [digest forgery magnitude]
+    default_theta=(1e3, 0.0, 0.0, 0.0),
+    theta_bounds=((1.0, 1e6), (0.0, 0.0), (0.0, 0.0), (0.0, 0.0)),
+))

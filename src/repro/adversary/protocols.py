@@ -141,11 +141,23 @@ class Adversary:
     ``default_theta`` / ``theta_bounds`` describe the `THETA_DIM`
     hyperparameter slots (`repro.adversary.search` samples inside the
     bounds; ``(0, 0)`` marks an unused slot).
+
+    ``tier`` places the adversary in the attack namespace taxonomy
+    (`registry_tiers`): ``"adversary"`` for value-crafting attacks,
+    ``"equivocator"`` for per-receiver inconsistent senders (only the echo
+    protocol can catch them — see `repro.trust.echo`), ``"slanderer"`` for
+    protocol-level liars whose *values* are honest but whose reported
+    digests (``accuse_fn``) frame honest senders.  ``accuse_fn``
+    (``(theta, digests [M, M, q], byz_mask [M], key, t) -> digests'``)
+    forges the digest rows Byzantine nodes gossip in the echo protocol's
+    cross-check stage; None reports honestly.
     """
 
     name: str
     fn: Callable
     stateful: bool = False
+    tier: str = "adversary"
+    accuse_fn: Callable | None = None
     message_fn: Callable | None = None
     # neighbor-indexed twin of message_fn (repro.core.neighbors):
     # ``(ctx, state, theta, w, byz_mask, nbr, live [M,K], key, t)
@@ -160,6 +172,8 @@ class Adversary:
     def __post_init__(self):
         if len(self.default_theta) != THETA_DIM or len(self.theta_bounds) != THETA_DIM:
             raise ValueError(f"adversary {self.name!r}: theta spec must have {THETA_DIM} slots")
+        if self.tier not in ("adversary", "equivocator", "slanderer"):
+            raise ValueError(f"adversary {self.name!r}: unknown tier {self.tier!r}")
 
 
 def lift_message(adv: Adversary) -> Callable:
@@ -237,7 +251,7 @@ def get_adversary(name: str) -> Adversary:
 
 
 def registry_tiers() -> dict[str, frozenset[str]]:
-    """The four attack-namespace tiers.  Every registered name belongs to
+    """The six attack-namespace tiers.  Every registered name belongs to
     exactly ONE tier (validated by ``tests/test_adversary.py``):
 
     * ``broadcast`` — static `byzantine.Attack`s (also usable as stateless
@@ -247,19 +261,31 @@ def registry_tiers() -> dict[str, frozenset[str]]:
       equivalent, e.g. ``selective_victim``).
     * ``wire`` — codeword-domain `byzantine.WireAttack`s.
     * ``adversary`` — adaptive stateful adversaries (this package).
+    * ``equivocator`` — per-receiver inconsistent senders: each receiver
+      gets an individually plausible payload, so value screening alone
+      cannot see the attack (the echo protocol can —
+      `repro.trust.echo`).
+    * ``slanderer`` — honest-valued protocol liars that forge the digest
+      rows they gossip (`Adversary.accuse_fn`), attacking the trust layer
+      itself rather than the consensus values.
     """
+    adaptive = frozenset(ADVERSARIES) - frozenset(byz_lib.ATTACKS)
+    by_tier = {
+        tier: frozenset(n for n in adaptive if ADVERSARIES[n].tier == tier)
+        for tier in ("adversary", "equivocator", "slanderer")
+    }
     return {
         "broadcast": frozenset(byz_lib.ATTACKS),
         "message": frozenset(
             n for n, a in byz_lib.MESSAGE_ATTACKS.items() if a.broadcast is None
         ),
         "wire": frozenset(byz_lib.WIRE_ATTACKS) - {"none"},
-        "adversary": frozenset(ADVERSARIES) - frozenset(byz_lib.ATTACKS),
+        **by_tier,
     }
 
 
 def attack_names() -> list[str]:
-    """Every name in the full four-tier namespace (sorted, deduplicated)."""
+    """Every name in the full six-tier namespace (sorted, deduplicated)."""
     tiers = registry_tiers()
     return sorted(set().union(*tiers.values()))
 
@@ -286,6 +312,13 @@ def bank_stateful(bank: Sequence[Adversary] | None) -> bool:
     return bank is not None and any(a.stateful for a in bank)
 
 
+def bank_accuses(bank: Sequence[Adversary] | None) -> bool:
+    """True when any bank entry forges gossiped digests (`accuse_fn`) — the
+    echo protocol inserts its forging stage iff so, keeping slander-free
+    banks on the exact honest-gossip program."""
+    return bank is not None and any(a.accuse_fn is not None for a in bank)
+
+
 def default_thetas(bank: Sequence[Adversary]) -> jnp.ndarray:
     """[len(bank), THETA_DIM] registered defaults (row per bank entry)."""
     return jnp.asarray([a.default_theta for a in bank], jnp.float32)
@@ -309,6 +342,22 @@ def apply_adversary_bank(bank, adv_idx, ctx, state, theta, w, byz_mask, key, t):
         for a in bank
     ]
     return jax.lax.switch(adv_idx, branches, state, theta, w, byz_mask, key, t)
+
+
+def apply_accuse_bank(bank, adv_idx, theta, digests, byz_mask, key, t):
+    """Digest-forging stage of the echo protocol: the selected bank entry's
+    `Adversary.accuse_fn` rewrites the rows Byzantine nodes gossip (entries
+    without one report honestly — identity).  ``digests`` is the dense
+    ``[M, M, q]`` reported-digest tensor from `repro.trust.echo`."""
+    fns = [a.accuse_fn if a.accuse_fn is not None
+           else (lambda th, dg, bm, k, tt: dg) for a in bank]
+    if len(fns) == 1:
+        return fns[0](theta, digests, byz_mask, key, t)
+    branches = [
+        (lambda fn: lambda th, dg, bm, k, tt: fn(th, dg, bm, k, tt))(fn)
+        for fn in fns
+    ]
+    return jax.lax.switch(adv_idx, branches, theta, digests, byz_mask, key, t)
 
 
 def apply_message_adversary_bank(bank, adv_idx, ctx, state, theta, w, byz_mask,

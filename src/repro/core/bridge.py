@@ -49,6 +49,10 @@ class BridgeState(NamedTuple):
     # forensics, histograms, and the divergence sentinel; None (the default)
     # keeps the untraced program shape bit-for-bit
     obs: Any = None
+    # trust carry (repro.trust.reputation.TrustState): per-edge suspicion,
+    # reputation weights, and latched evictions; None (the default) keeps the
+    # trust-free program shape bit-for-bit
+    trust: Any = None
 
 
 class CellParams(NamedTuple):
@@ -89,6 +93,11 @@ class CellParams(NamedTuple):
     # a spec compiles forensic aggregation into the step (bit-inert for the
     # trajectory — property-tested).
     trace: Any = None
+    # trust spec (repro.trust.reputation.TrustSpec): structural like `trace`
+    # — None keeps the exact trust-free program; a spec compiles reputation
+    # updates, eviction masking, and (net path) the echo protocol into the
+    # step.  Unlike `trace`, trust ON deliberately changes the trajectory.
+    trust: Any = None
 
 
 def cell_step_size(cell: CellParams, t: jax.Array) -> jax.Array:
@@ -99,6 +108,28 @@ def cell_step_size(cell: CellParams, t: jax.Array) -> jax.Array:
 
 @dataclasses.dataclass(frozen=True)
 class BridgeConfig:
+    """Everything one BRIDGE trainer needs: graph, screening rule, threat
+    model, wire format, step-size schedule, and the optional observability /
+    trust specs.  Frozen — a config is a value, and `BridgeTrainer` derives
+    all jit structure from it once at construction.
+
+    Minimal usage::
+
+        from repro.core.bridge import BridgeConfig, BridgeTrainer, replicate
+        from repro.core.graph import erdos_renyi
+
+        topo = erdos_renyi(10, 0.8, 2, seed=1)
+        cfg = BridgeConfig(topology=topo, rule="trimmed_mean",
+                           num_byzantine=2, attack="sign_flip")
+        trainer = BridgeTrainer(cfg, grad_fn)          # grad_fn(params, batch)
+        state = trainer.init(replicate(params0, 10))
+        state, metrics = trainer.step(state, batch)
+
+    See docs/ARCHITECTURE.md for the full one-tick dataflow the trainer
+    compiles (attack -> adversary -> codec -> exchange -> screen -> apply ->
+    obs/trust).
+    """
+
     topology: Topology
     rule: str = "trimmed_mean"  # trimmed_mean | median | krum | bulyan | mean
     num_byzantine: int = 0  # the bound b given to the screening rule
@@ -121,6 +152,11 @@ class BridgeConfig:
     sparse: bool = False
     # observability (repro.obs.trace.TraceSpec); None = untraced (default)
     trace: Any = None
+    # trust layer (repro.trust.reputation.TrustSpec); None = off (default,
+    # bit-inert) — a spec turns on reputation-weighted screening + eviction
+    # (pair it with a rule from screening.WEIGHTED_RULES for soft weighting;
+    # any rule gets hard eviction through the mask)
+    trust: Any = None
 
     def step_size(self, t: jax.Array) -> jax.Array:
         if self.lr > 0:
@@ -177,6 +213,10 @@ COMM_SALT = 0x636D6D30
 WIRE_SALT = 0x77697230
 # Salt for the adaptive-adversary stream (repro.adversary).
 ADV_SALT = 0x61647630
+# Salt for the trust layer's echo-digest stream (repro.trust.echo): the
+# tick's public random projection derives from this fold, decorrelated from
+# every other consumer of the step subkey.
+TRUST_SALT = 0x74727530
 
 
 def _cell_codec_idx(cell: CellParams):
@@ -309,20 +349,25 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
             w_hat, adjacency, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
             self_vals=self_vals)
 
-    def screen_decide(w_hat, self_vals, cell):
+    def screen_decide(w_hat, self_vals, cell, stride, weights=None, evicted=None):
         # decision-instrumented twin: same y op graph (bitwise), plus the
-        # [M, W] per-edge trim fractions the obs aggregates fold in
-        stride = cell.trace.decide_stride
+        # [M, W] per-edge trim fractions the obs/trust aggregates fold in.
+        # `weights`/`evicted` (repro.trust) thread reputation into the rules
+        # and latched evictions into the mask; both None keeps the exact
+        # trust-free call.
         if neighbors is not None:
+            mask = neighbors.valid_dev if evicted is None else neighbors.valid_dev & ~evicted
             return screening.screen_views_decide_banked(
-                neighbors.gather_rows(w_hat), neighbors.valid_dev, self_vals,
-                rules, cell.rule_idx, cell.b, decide_stride=stride)
+                neighbors.gather_rows(w_hat), mask, self_vals,
+                rules, cell.rule_idx, cell.b, decide_stride=stride, weights=weights)
+        adj = adjacency if evicted is None else jnp.asarray(adjacency, bool) & ~evicted
         return screening.screen_all_decide_banked(
-            w_hat, adjacency, rules, cell.rule_idx, cell.b, self_vals=self_vals,
-            decide_stride=stride)
+            w_hat, adj, rules, cell.rule_idx, cell.b, self_vals=self_vals,
+            decide_stride=stride, weights=weights)
 
     def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         spec = cell.trace  # static: TraceSpec or None (zero-leaf aux data)
+        tspec = cell.trust  # static: TrustSpec or None (zero-leaf aux data)
         w, unflatten = stack_flatten(state.params)
         d = w.shape[1]
         key, sub = jax.random.split(state.key)
@@ -353,9 +398,22 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
         # wire; the node's own iterate never travels and stays uncompressed
         trim = None
         with jax.named_scope("bridge.screen"):
-            if spec is not None and spec.forensics:
+            if tspec is not None:
+                # trust on: always the decide path (the trim fractions are
+                # the evidence), reputation weights into the weighted rules,
+                # evicted edges cleared from the mask
+                from repro.trust import reputation as trust_lib
+
                 screening.check_decide_streams(rules, d, screen_chunk)
-                y, trim = screen_decide(w_hat, w_bcast, cell)
+                stride = (spec.decide_stride if spec is not None and spec.forensics
+                          else tspec.decide_stride)
+                y, trim = screen_decide(
+                    w_hat, w_bcast, cell, stride,
+                    weights=trust_lib.edge_weights(tspec, state.trust),
+                    evicted=state.trust.evicted)
+            elif spec is not None and spec.forensics:
+                screening.check_decide_streams(rules, d, screen_chunk)
+                y, trim = screen_decide(w_hat, w_bcast, cell, spec.decide_stride)
             else:
                 y = screen(w_hat, w_bcast, cell)
         with jax.named_scope("bridge.apply"):
@@ -384,8 +442,24 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
                     live=live, byz_edge=byz_edge, staleness=None,
                     wire_bits=comm_lib.wire_bits_bank(codec_bank, _cell_codec_idx(cell), d),
                     live_edges=n_edges, d=d)
+        new_trust = state.trust
+        if tspec is not None:
+            from repro.trust import reputation as trust_lib
+
+            with jax.named_scope("bridge.trust"):
+                # no echo on the broadcast path: one payload per sender, so
+                # equivocation is structurally impossible — trim evidence only
+                if neighbors is not None:
+                    live_t = neighbors.valid_dev & ~state.trust.evicted
+                else:
+                    live_t = jnp.asarray(adjacency, bool) & ~state.trust.evicted
+                new_trust = trust_lib.update(
+                    tspec, state.trust, t=state.t,
+                    trim_frac=jnp.where(live_t, trim, 0.0), live=live_t)
+                metrics["trust_evicted_frac"] = jnp.mean(
+                    new_trust.evicted.astype(jnp.float32))
         return BridgeState(new_params, state.t + 1, key, state.net, new_comm,
-                           new_adv, new_obs), metrics
+                           new_adv, new_obs, new_trust), metrics
 
     return step
 
@@ -439,6 +513,7 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
 
     def step(cell: CellParams, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         spec = cell.trace  # static: TraceSpec or None (zero-leaf aux data)
+        tspec = cell.trust  # static: TrustSpec or None (zero-leaf aux data)
         w, unflatten = stack_flatten(state.params)
         d = w.shape[1]
         m = w.shape[0]
@@ -529,8 +604,24 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
         # fresh) messages each node holds; nodes starved below the rule's
         # minimum usable count keep their own iterate this tick.
         trim = None
+        mask_eff = mask
         with jax.named_scope("bridge.screen"):
-            if spec is not None and spec.forensics:
+            if tspec is not None:
+                # trust on: decide path (trim fractions are the evidence),
+                # reputation weights into the weighted rules, evicted edges
+                # cleared from the usable mask as if the link had died
+                from repro.trust import reputation as trust_lib
+
+                screening.check_decide_streams(rules, d, screen_chunk)
+                stride = (spec.decide_stride if spec is not None and spec.forensics
+                          else tspec.decide_stride)
+                mask_eff = mask & ~state.trust.evicted
+                y_rule, trim = screening.screen_views_decide_banked(
+                    views, mask_eff, w_self, rules, cell.rule_idx, cell.b,
+                    decide_stride=stride,
+                    weights=trust_lib.edge_weights(tspec, state.trust),
+                )
+            elif spec is not None and spec.forensics:
                 screening.check_decide_streams(rules, d, screen_chunk)
                 y_rule, trim = screening.screen_views_decide_banked(
                     views, mask, w_self, rules, cell.rule_idx, cell.b,
@@ -541,7 +632,7 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
                     views, mask, w_self, rules, cell.rule_idx, cell.b, chunk=screen_chunk,
                 )
             need = screening.min_neighbors_banked(rules, cell.rule_idx, cell.b)
-            enough = jnp.sum(mask, axis=1) >= need
+            enough = jnp.sum(mask_eff, axis=1) >= need
             y = jnp.where(enough[:, None], y_rule, w_self)
         with jax.named_scope("bridge.apply"):
             new_params, metrics = _grad_update_and_metrics(
@@ -559,7 +650,8 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
                 if trim is not None:
                     # nodes starved below the Table-II minimum fell back to
                     # their own iterate — their rows never screened this tick
-                    live = mask & enough[:, None]
+                    # (mask_eff == mask when trust is off)
+                    live = mask_eff & enough[:, None]
                     trim = jnp.where(live, trim, 0.0)
                     byz_edge = byz_link & live
                     live_f = live.astype(jnp.float32)
@@ -572,8 +664,61 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
                     staleness=obs_trace.staleness_of(net, state.t),
                     wire_bits=wire_bits,
                     live_edges=jnp.sum(adj_t).astype(jnp.float32), d=d)
+        new_trust = state.trust
+        if tspec is not None:
+            from repro.trust import echo as echo_lib
+            from repro.trust import reputation as trust_lib
+            from repro.net import mailbox as mb
+
+            echo_ev = None
+            if tspec.echo:
+                # (commit-then-gossip) digest what each node holds, exchange
+                # digest rows one hop, and cross-check within matching send
+                # generations — quorum-confirmed mismatches are equivocation
+                with jax.named_scope("bridge.echo"):
+                    trust_key = jax.random.fold_in(sub, TRUST_SALT)
+                    gens = getattr(net, "send_tick", None)
+                    if gens is None:
+                        # net-less runtime (ideal synchronous exchange): every
+                        # usable view was sent this tick
+                        gens = jnp.where(mask, state.t, mb.NEVER)
+                    if nbr is not None:
+                        vals_d = echo_lib.scatter_dense(nbr, views, 0.0)
+                        gens_d = echo_lib.scatter_dense(nbr, gens, mb.NEVER)
+                        valid_d = echo_lib.scatter_dense(nbr, mask_eff, False)
+                        gossip_d = echo_lib.scatter_dense(nbr, adj_t, False)
+                    else:
+                        vals_d, gens_d, valid_d = views, gens, mask_eff
+                        gossip_d = jnp.asarray(adj_t, bool)
+                    dig_d = echo_lib.digest_all(tspec, vals_d, trust_key)
+                    if adv_engaged and adv_lib.bank_accuses(adv_bank):
+                        # slanderers forge the digest rows they *report*
+                        # (their own receptions stay honest — value screening
+                        # sees nothing; only the gossip lies)
+                        theta_acc = adv_lib.cell_theta(
+                            adv_bank, _cell_adv_idx(cell), cell.adv_theta)
+                        dig_d = adv_lib.apply_accuse_bank(
+                            adv_bank, _cell_adv_idx(cell), theta_acc, dig_d,
+                            cell.byz_mask, trust_key, state.t)
+                    ev_d, _mism = echo_lib.equivocation_evidence(
+                        dig_d, gens_d, valid_d, gossip_d, cell.b,
+                        tol=tspec.echo_tol)
+                    if nbr is not None:
+                        echo_ev = nbr.gather_edges(ev_d, 0.0)
+                    else:
+                        echo_ev = ev_d
+            with jax.named_scope("bridge.trust"):
+                # rows starved below the rule minimum never screened: their
+                # trim fractions are fallback artifacts, not evidence
+                screened = mask_eff & enough[:, None]
+                new_trust = trust_lib.update(
+                    tspec, state.trust, t=state.t,
+                    trim_frac=jnp.where(screened, trim, 0.0),
+                    live=mask_eff, echo_evidence=echo_ev)
+                metrics["trust_evicted_frac"] = jnp.mean(
+                    new_trust.evicted.astype(jnp.float32))
         return BridgeState(new_params, state.t + 1, key, net, comm_full,
-                           new_adv, new_obs), metrics
+                           new_adv, new_obs, new_trust), metrics
 
     return step
 
@@ -665,6 +810,7 @@ class BridgeTrainer:
             adv_idx=adv_idx,
             adv_theta=adv_theta,
             trace=cfg.trace,
+            trust=cfg.trust,
         )
 
     @property
@@ -689,17 +835,21 @@ class BridgeTrainer:
             comm = comm_lib.init_residual((m, dim), (self.codec,))
         if adv_lib.bank_stateful(self._adv_bank):
             adv = adv_lib.init_state(dim)
-        obs = None
+        obs = trust = None
+        nbr = (self.neighbors if self.runtime is None
+               else getattr(self.runtime, "neighbors", None))
+        width = m if nbr is None else nbr.k
         if self.config.trace is not None:
             from repro.obs import trace as obs_trace
 
-            nbr = (self.neighbors if self.runtime is None
-                   else getattr(self.runtime, "neighbors", None))
-            obs = obs_trace.init_state(self.config.trace, m,
-                                       m if nbr is None else nbr.k)
+            obs = obs_trace.init_state(self.config.trace, m, width)
+        if self.config.trust is not None:
+            from repro.trust import reputation as trust_lib
+
+            trust = trust_lib.init_state(self.config.trust, m, width)
         return BridgeState(params=params, t=jnp.zeros((), jnp.int32),
                            key=jax.random.PRNGKey(seed), net=net, comm=comm,
-                           adv=adv, obs=obs)
+                           adv=adv, obs=obs, trust=trust)
 
     def step(self, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         return self._jit_step(self._cell, state, batch)

@@ -96,6 +96,13 @@ def _shift(delta: float = 5.0):
     return fn
 
 
+# The broadcast-attack registry (Definition 1's granularity: one lie per
+# sender per tick).  Attacks here are auto-lifted into MESSAGE_ATTACKS (the
+# per-link tier) and re-registered as stateless adversaries in
+# `repro.adversary` — `repro.adversary.registry_tiers()` is the single
+# source of truth for the full namespace (broadcast / message / wire /
+# adversary / equivocator / slanderer); register a new name in exactly one
+# tier, and the bank builders pick it up by name.
 ATTACKS: dict[str, Attack] = {
     "none": Attack("none", _none),
     "random": Attack("random", _random_gaussian()),

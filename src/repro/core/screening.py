@@ -335,6 +335,130 @@ def mean(values: jax.Array, mask: jax.Array, self_value: jax.Array, b: int = 0) 
     return total / (count + 1).astype(values.dtype)
 
 
+# ---------------------------------------------------------------------------
+# Reputation-aware rules (repro.trust)
+# ---------------------------------------------------------------------------
+#
+# The trust layer carries per-edge reputation weights (``clip(1 - suspicion,
+# 0, 1)``, 0 = evicted) and feeds them to these rules through the ``weights``
+# keyword of the decide-banked dispatch.  With ``weights=None`` they act with
+# uniform weights, so they remain valid standalone registry entries; rules
+# outside `WEIGHTED_RULES` simply ignore the weights operand (eviction still
+# reaches them through the screening mask).  Because detection-and-eviction
+# removes attackers instead of out-voting them, the rep variants advertise a
+# weaker MIN_NEIGHBORS requirement (b + 1 instead of 2b + 1) — the degree
+# headroom the detect-and-expel breakdown study spends (benchmarks/
+# trust_bench.py).
+
+
+def _rep_trim_window(values, mask, b):
+    """Shared kept-window core: boundary order statistics of the masked sort
+    (the same dynamic row gathers the decision twins use)."""
+    count = jnp.sum(mask)
+    b_eff = effective_trim(b, count)
+    masked = jnp.where(mask[:, None], _sanitize(values), _MASKED)
+    order = sort_rows(masked)
+    lo = jax.lax.dynamic_index_in_dim(order, b_eff, 0, keepdims=False)
+    hi = jax.lax.dynamic_index_in_dim(
+        order, jnp.maximum(count - b_eff - 1, b_eff), 0, keepdims=False)
+    kept = mask[:, None] & (masked >= lo[None, :]) & (masked <= hi[None, :])
+    return masked, order, kept
+
+
+def rep_trimmed_mean(values, mask, self_value, b, *, weights=None):
+    """Reputation-weighted BRIDGE-T: trim the b largest / b smallest per
+    coordinate as usual, then average the survivors with per-edge reputation
+    weights (self always weight 1): ``y = (sum_i w_i kept_i v_i + self) /
+    (sum_i w_i kept_i + 1)``.  Uniform weights recover a tie-inclusive
+    trimmed mean; weight-0 (evicted) edges drop out exactly."""
+    n = values.shape[0]
+    masked, order, kept = _rep_trim_window(values, mask, b)
+    w = jnp.ones((n,), values.dtype) if weights is None else jnp.asarray(
+        weights, values.dtype)
+    wk = jnp.where(kept, w[:, None], 0.0)
+    total = sum_rows_mat(wk * jnp.where(kept, masked, 0.0)) + self_value
+    y = total / (sum_rows_mat(wk) + 1.0)
+    anchor = jnp.min(order)  # sort-materialization anchor, see trimmed_mean
+    return jnp.where(anchor == anchor, y, jnp.zeros_like(y))
+
+
+def rep_median(values, mask, self_value, b=0, *, weights=None):
+    """Reputation-weighted coordinate median: per coordinate, the smallest
+    value whose cumulative reputation weight reaches half the total (self
+    carries weight 1, masked rows weight 0).  Uniform weights recover the
+    lower-median pick of BRIDGE-M."""
+    del b
+    n1 = values.shape[0] + 1
+    stacked = jnp.concatenate([values, self_value[None, :]], axis=0)
+    fm = jnp.concatenate([mask, jnp.ones((1,), bool)], axis=0)
+    w = (jnp.ones(values.shape[:1], values.dtype) if weights is None
+         else jnp.asarray(weights, values.dtype))
+    wfull = jnp.concatenate([jnp.where(mask, w, 0.0), jnp.ones((1,), values.dtype)])
+    sv = jnp.where(fm[:, None], _sanitize(stacked), _MASKED)
+    order_idx = jnp.argsort(sv, axis=0)
+    sorted_vals = jnp.take_along_axis(sv, order_idx, axis=0)
+    sorted_w = jnp.take_along_axis(
+        jnp.broadcast_to(wfull[:, None], (n1,) + sv.shape[1:]), order_idx, axis=0)
+    cum = jnp.cumsum(sorted_w, axis=0)
+    first = jnp.argmax(cum >= 0.5 * cum[-1][None, :], axis=0)
+    return jnp.take_along_axis(sorted_vals, first[None, :], axis=0)[0]
+
+
+def rep_trimmed_mean_with_decisions(values, mask, self_value, b, *, weights=None,
+                                    decide_stride=1):
+    n = values.shape[0]
+    masked, order, kept = _rep_trim_window(values, mask, b)
+    w = jnp.ones((n,), values.dtype) if weights is None else jnp.asarray(
+        weights, values.dtype)
+    wk = jnp.where(kept, w[:, None], 0.0)
+    total = sum_rows_mat(wk * jnp.where(kept, masked, 0.0)) + self_value
+    y = total / (sum_rows_mat(wk) + 1.0)
+    s = decide_stride
+    trim = jnp.mean((mask[:, None] & ~kept[:, ::s]).astype(jnp.float32), axis=1)
+    anchor = jnp.min(order)
+    y = jnp.where(anchor == anchor, y, jnp.zeros_like(y))
+    trim = jnp.where(anchor == anchor, trim, jnp.zeros_like(trim))
+    return y, trim
+
+
+def rep_median_with_decisions(values, mask, self_value, b=0, *, weights=None,
+                              decide_stride=1):
+    y = rep_median(values, mask, self_value, b, weights=weights)
+    # trim membership mirrors coordinate_median_with_decisions: a value
+    # "survives" when it sits inside the (unweighted) middle-rank window of
+    # the stacked values — what feeds suspicion is who keeps landing in the
+    # tails, which is a rank property independent of the weights
+    stacked = jnp.concatenate([values, self_value[None, :]], axis=0)
+    full_mask = jnp.concatenate([mask, jnp.ones((1,), dtype=bool)], axis=0)
+    n1 = stacked.shape[0]
+    count = jnp.sum(full_mask)
+    masked = jnp.where(full_mask[:, None], _sanitize(stacked), _MASKED)
+    order = sort_rows(masked)
+    lo = (count - 1) // 2
+    hi = count // 2
+    idx = jnp.arange(n1)[:, None]
+    pick_lo = jnp.sum(jnp.where(idx == lo, order, 0.0), axis=0)
+    pick_hi = jnp.sum(jnp.where(idx == hi, order, 0.0), axis=0)
+    s = decide_stride
+    kept = (masked[:, ::s] >= pick_lo[None, ::s]) & (masked[:, ::s] <= pick_hi[None, ::s])
+    trim = jnp.mean((full_mask[:, None] & ~kept).astype(jnp.float32), axis=1)
+    return y, trim[:-1]
+
+
+# Rules that consume per-edge reputation weights (the rest ignore the
+# operand; eviction still reaches them through the screening mask).
+WEIGHTED_RULES: frozenset = frozenset({"rep_trimmed_mean", "rep_median"})
+
+
+# The screening-rule registry.  Names here are what `--rules`, ExperimentGrid
+# and the banked lax.switch dispatch resolve; adding a rule means adding an
+# entry in each of: RULES, MIN_NEIGHBORS (its Table-II degree requirement —
+# `rep_*` rules advertise b + 1, backed by trust-layer eviction rather than
+# out-voting), RULES_WITH_DECISIONS if it can report per-edge trim decisions
+# (repro.obs forensics), and WEIGHTED_RULES if it consumes reputation
+# weights.  Every rule takes masked `[n, d]` neighbor values (absent rows
+# carry the +inf sentinel) and must stay total-ordered under inf/NaN decode
+# garbage — see docs/ARCHITECTURE.md ("bridge.screen") for where this runs.
 RULES: dict[str, Callable] = {
     "trimmed_mean": trimmed_mean,
     "median": coordinate_median,
@@ -343,6 +467,8 @@ RULES: dict[str, Callable] = {
     "geomedian": geometric_median,
     "clipped_mean": clipped_mean,
     "mean": mean,
+    "rep_trimmed_mean": rep_trimmed_mean,
+    "rep_median": rep_median,
 }
 
 
@@ -486,6 +612,8 @@ RULES_WITH_DECISIONS: dict[str, Callable] = {
     "geomedian": geometric_median_with_decisions,
     "clipped_mean": clipped_mean_with_decisions,
     "mean": mean_with_decisions,
+    "rep_trimmed_mean": rep_trimmed_mean_with_decisions,
+    "rep_median": rep_median_with_decisions,
 }
 
 
@@ -508,6 +636,11 @@ MIN_NEIGHBORS: dict[str, Callable[[int], int]] = {
     "geomedian": lambda b: 2 * b + 1,
     "clipped_mean": lambda b: 1,
     "mean": lambda b: 0,
+    # detect-and-expel variants: eviction removes attackers instead of
+    # out-voting them, so the static degree requirement relaxes to b + 1
+    # honest-majority headroom (the trust breakdown study's premise)
+    "rep_trimmed_mean": lambda b: b + 1,
+    "rep_median": lambda b: 1,
 }
 
 
@@ -530,6 +663,8 @@ _MIN_NEIGHBORS_TRACEABLE: dict[str, Callable] = {
     "geomedian": lambda b: 2 * b + 1,
     "clipped_mean": lambda b: 0 * b + 1,
     "mean": lambda b: 0 * b,
+    "rep_trimmed_mean": lambda b: b + 1,
+    "rep_median": lambda b: 0 * b + 1,
 }
 
 
@@ -751,8 +886,26 @@ def check_decide_streams(rules: Sequence[str], d: int, chunk: int | None) -> Non
             f"TraceSpec(forensics=False)")
 
 
-def _rule_branch_decide(rule: str, decide_stride: int):
+def _rule_branch_decide(rule: str, decide_stride: int, weighted: bool = False):
     fn = RULES_WITH_DECISIONS[rule]
+    if weighted:
+        # reputation-weighted dispatch (repro.trust): every branch of the
+        # switch takes the [M, n] weight rows so signatures stay uniform;
+        # rules outside WEIGHTED_RULES ignore the operand (eviction reaches
+        # them through the mask)
+        if rule in WEIGHTED_RULES:
+            def run(values_per_node, mask_per_node, self_vals, b, weights):
+                return jax.vmap(
+                    lambda v, m, s, wt: fn(v, m, s, b, weights=wt,
+                                           decide_stride=decide_stride))(
+                    values_per_node, mask_per_node, self_vals, weights)
+        else:
+            def run(values_per_node, mask_per_node, self_vals, b, weights):
+                del weights
+                return jax.vmap(lambda v, m, s: fn(v, m, s, b,
+                                                   decide_stride=decide_stride))(
+                    values_per_node, mask_per_node, self_vals)
+        return run
 
     def run(values_per_node, mask_per_node, self_vals, b):
         return jax.vmap(lambda v, m, s: fn(v, m, s, b, decide_stride=decide_stride))(
@@ -761,8 +914,22 @@ def _rule_branch_decide(rule: str, decide_stride: int):
     return run
 
 
-def _rule_branch_broadcast_decide(rule: str, decide_stride: int):
+def _rule_branch_broadcast_decide(rule: str, decide_stride: int, weighted: bool = False):
     fn = RULES_WITH_DECISIONS[rule]
+    if weighted:
+        if rule in WEIGHTED_RULES:
+            def run(w, adjacency, b, self_vals, weights):
+                return jax.vmap(
+                    lambda m, s, wt: fn(w, m, s, b, weights=wt,
+                                        decide_stride=decide_stride))(
+                    adjacency, self_vals, weights)
+        else:
+            def run(w, adjacency, b, self_vals, weights):
+                del weights
+                return jax.vmap(lambda m, s: fn(w, m, s, b,
+                                                decide_stride=decide_stride))(
+                    adjacency, self_vals)
+        return run
 
     def run(w, adjacency, b, self_vals):
         return jax.vmap(lambda m, s: fn(w, m, s, b, decide_stride=decide_stride))(
@@ -780,13 +947,22 @@ def screen_all_decide_banked(
     *,
     self_vals: jax.Array | None = None,
     decide_stride: int = 1,
+    weights: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """`screen_all_banked` returning ``(y, trim_frac)`` — ``y`` bitwise-equal
     to the plain path, ``trim_frac[j, i]`` the fraction of coordinates on
     which receiver j excluded sender i this tick (estimated on every
-    ``decide_stride``-th coordinate when > 1)."""
+    ``decide_stride``-th coordinate when > 1).  ``weights`` (``[M, n]``
+    reputation rows, `repro.trust`) routes to rules in `WEIGHTED_RULES`;
+    ``None`` keeps the exact unweighted program shape."""
     if self_vals is None:
         self_vals = w
+    if weights is not None:
+        branches = [_rule_branch_broadcast_decide(r, decide_stride, weighted=True)
+                    for r in rules]
+        if len(branches) == 1:
+            return branches[0](w, adjacency, b, self_vals, weights)
+        return jax.lax.switch(rule_idx, branches, w, adjacency, b, self_vals, weights)
     branches = [_rule_branch_broadcast_decide(r, decide_stride) for r in rules]
     if len(branches) == 1:
         return branches[0](w, adjacency, b, self_vals)
@@ -802,9 +978,16 @@ def screen_views_decide_banked(
     b,
     *,
     decide_stride: int = 1,
+    weights: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """`screen_views_banked` returning ``(y, trim_frac)`` (see
-    `screen_all_decide_banked`)."""
+    `screen_all_decide_banked`); ``weights`` as there."""
+    if weights is not None:
+        branches = [_rule_branch_decide(r, decide_stride, weighted=True)
+                    for r in rules]
+        if len(branches) == 1:
+            return branches[0](views, mask, self_vals, b, weights)
+        return jax.lax.switch(rule_idx, branches, views, mask, self_vals, b, weights)
     branches = [_rule_branch_decide(r, decide_stride) for r in rules]
     if len(branches) == 1:
         return branches[0](views, mask, self_vals, b)

@@ -193,7 +193,7 @@ def run_grid_mode(args) -> None:
         jax.profiler.start_trace(args.profile)
     engine = GridEngine(grid, grad_fn, cells=pending,
                         num_ticks=ticks if scenarios else None, sparse=args.sparse,
-                        trace=trace_spec, events=events)
+                        trace=trace_spec, trust=_trust_spec(args), events=events)
     t0 = time.time()
     state = engine.init(init_fn)
     state, metrics = engine.run(state, batches, chunk=args.grid_chunk)
@@ -252,6 +252,16 @@ def run_grid_mode(args) -> None:
         print(f"  {row[0]:60s} acc={rec['accuracy']:.4f} loss={rec['final_loss']:.4f}")
 
 
+def _trust_spec(args):
+    """The `repro.trust.TrustSpec` the --trust flags describe (None when
+    --trust is off — the trust-free program, bit-identical to PR 6)."""
+    if not args.trust:
+        return None
+    from repro.trust import TrustSpec
+
+    return TrustSpec(evict_threshold=args.trust_evict, warmup=args.trust_warmup)
+
+
 def run_breakdown_mode(args) -> None:
     """Breakdown-point certification on the paper's MNIST-like linear task
     (extreme non-iid partition — consensus is *required* for honest test
@@ -264,7 +274,14 @@ def run_breakdown_mode(args) -> None:
     adversaries = (args.adversaries or "random,alie,ipm,inner_max").split(",")
     m, ticks = args.grid_nodes, args.grid_ticks
     # the topology must admit the whole probed ladder, not just b=1
-    topo = default_topology(m, rules, [max(args.breakdown_b_max, 1)], seed=0)
+    if args.trust:
+        # echo quorums need gossip triangles: witnesses of a sender must be
+        # adjacent to the receiver, so trust runs get the complete graph
+        from repro.core import complete_graph
+
+        topo = complete_graph(m, max(args.breakdown_b_max, 1))
+    else:
+        topo = default_topology(m, rules, [max(args.breakdown_b_max, 1)], seed=0)
     task = linear_task(m, ticks, batch=args.grid_batch,
                        num_train=args.grid_train, num_test=args.grid_test, seed=0)
     events = None
@@ -281,7 +298,8 @@ def run_breakdown_mode(args) -> None:
                                b_max=args.breakdown_b_max,
                                loss_ratio=args.breakdown_loss_ratio,
                                score_drop=args.breakdown_score_drop),
-        eval_fn=task.eval_accuracy, engine_chunk=args.grid_chunk, events=events)
+        eval_fn=task.eval_accuracy, engine_chunk=args.grid_chunk,
+        trust=_trust_spec(args), scenario=args.breakdown_scenario, events=events)
     result = engine.run()
     if events is not None:
         events.close()
@@ -340,6 +358,10 @@ def main(argv=None):
     ap.add_argument("--breakdown-score-drop", type=float, default=0.15,
                     help="diverged when honest test accuracy drops this far "
                          "below the faultless reference")
+    ap.add_argument("--breakdown-scenario", default=None,
+                    help="run breakdown probes through the net runtime on this "
+                         "repro.net scenario (e.g. ideal) — required for "
+                         "equivocators, whose lies only exist per message")
     ap.add_argument("--grid-nodes", type=int, default=12)
     ap.add_argument("--grid-ticks", type=int, default=60)
     ap.add_argument("--grid-batch", type=int, default=32)
@@ -359,6 +381,15 @@ def main(argv=None):
                          "(render with `python -m repro.obs.report DIR`)")
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of the grid run into DIR")
+    # trust flags (repro.trust; grid + breakdown modes)
+    ap.add_argument("--trust", action="store_true",
+                    help="compile reputation-weighted screening + eviction "
+                         "into every cell (repro.trust) — pair with rep_* "
+                         "rules for soft down-weighting")
+    ap.add_argument("--trust-evict", type=float, default=0.5,
+                    help="suspicion threshold that latches an edge out")
+    ap.add_argument("--trust-warmup", type=int, default=8,
+                    help="ticks before evictions can latch")
     args = ap.parse_args(argv)
     if args.out is None:
         args.out = {"net": "experiments/net", "grid": "experiments/grid",

@@ -45,13 +45,20 @@ def build_trainer(args, topo, grad_fn):
         from repro.obs import TraceSpec
 
         trace = TraceSpec(reservoir=args.trace_reservoir)
+    trust = None
+    if args.trust:
+        from repro.trust import TrustSpec
+
+        trust = TrustSpec(evict_threshold=args.trust_evict,
+                          warmup=args.trust_warmup,
+                          echo=not args.trust_no_echo)
     use_net = args.net or (args.attack not in ATTACKS and args.attack not in WIRE_ATTACKS)
     if not use_net:
         bcfg = BridgeConfig(
             topology=topo, rule=args.rule, num_byzantine=args.byzantine,
             attack=args.attack, adversary=args.adversary, codec=args.codec,
             lam=args.lam, t0=args.t0, lr=args.lr, sparse=args.sparse,
-            trace=trace,
+            trace=trace, trust=trust,
         )
         return BridgeTrainer(bcfg, grad_fn)
     from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
@@ -70,7 +77,7 @@ def build_trainer(args, topo, grad_fn):
         channel=channel, staleness_bound=args.net_staleness,
         schedule=scenario_schedule(args.net_schedule, topo, args.steps,
                                    seed=args.seed, churn_prob=args.net_churn_prob),
-        trace=trace,
+        trace=trace, trust=trust,
     )
     return AsyncBridgeTrainer(acfg, grad_fn)
 
@@ -162,6 +169,18 @@ def main(argv=None):
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of the training loop "
                          "into DIR (phases are jax.named_scope-annotated)")
+    # trust flags (repro.trust)
+    ap.add_argument("--trust", action="store_true",
+                    help="reputation-weighted screening + eviction "
+                         "(repro.trust); pair with --rule rep_trimmed_mean / "
+                         "rep_median for soft down-weighting, any rule gets "
+                         "hard eviction")
+    ap.add_argument("--trust-evict", type=float, default=0.5,
+                    help="suspicion threshold that latches an edge out")
+    ap.add_argument("--trust-warmup", type=int, default=8,
+                    help="ticks before evictions can latch")
+    ap.add_argument("--trust-no-echo", action="store_true",
+                    help="disable the equivocation echo protocol (net path)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -259,6 +278,23 @@ def main(argv=None):
                         os.path.join(args.trace, "events.jsonl"))
         print(f"obs summary -> {path}  "
               f"(render: python -m repro.obs.report {args.trace})")
+    if args.trust:
+        from repro.obs import trace as obs_trace
+        from repro.trust import summarize as trust_summarize
+
+        nbr = (trainer.neighbors if trainer.runtime is None
+               else getattr(trainer.runtime, "neighbors", None))
+        if nbr is not None:
+            senders = obs_trace.sender_grid(args.nodes, neighbors=nbr)
+        else:
+            senders = obs_trace.sender_grid(
+                args.nodes,
+                adjacency=None if trainer.runtime is not None else topo.adjacency)
+        rec = trust_summarize(trainer.config.trust, state.trust,
+                              byz_mask=np.asarray(trainer.byz_mask), senders=senders)
+        print(f"trust: evicted {rec['edges_evicted']} edges "
+              f"(byz {rec.get('byz_evicted', 0)}, honest {rec.get('honest_evicted', 0)}, "
+              f"max suspicion {rec['max_suspicion']:.2f})")
     print("done.")
 
 

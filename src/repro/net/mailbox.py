@@ -116,6 +116,16 @@ def staleness(state: MailboxState, tick: jax.Array) -> jax.Array:
                      jnp.iinfo(jnp.int32).max)
 
 
+def generation_match(send_tick_a: jax.Array, send_tick_b: jax.Array) -> jax.Array:
+    """True where two mailbox entries hold payloads from the *same send
+    tick* (and both hold one at all — `NEVER` never matches).  The echo
+    protocol (`repro.trust.echo`) only cross-checks digests across matching
+    generations, so drops and variable latency — which leave receivers
+    holding different-aged copies — are excluded from comparison instead of
+    being miscounted as equivocation."""
+    return (send_tick_a > NEVER) & (send_tick_a == send_tick_b)
+
+
 def usable_mask(state: MailboxState, tick: jax.Array, bound: int) -> jax.Array:
     """[M, W] entries that have ever arrived and are at most ``bound`` ticks
     stale — the mask asynchronous screening feeds to the rules.  Written as a

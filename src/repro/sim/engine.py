@@ -185,6 +185,19 @@ class GridEngine:
     union of all scenario schedules (mailboxes ``[E, M, K, L, d]``), sync
     grids screen gathered views — each cell bit-identical to its dense twin
     (``tests/test_sparse.py``) and the only layout that fits large M.
+
+    Usage — a rule x attack x seed product as one compiled program::
+
+        grid = ExperimentGrid(topology, rules=("trimmed_mean", "median"),
+                              attacks=("random", "alie"),
+                              byzantine_counts=(1,), seeds=(0, 1, 2, 3))
+        engine = GridEngine(grid, grad_fn, trace=TraceSpec(),
+                            trust=TrustSpec())
+        final, metrics = engine.run(engine.init(init_fn), batches)
+        losses = metrics["loss"]        # [E, T], ordered like engine.cells
+
+    See ``examples/quickstart.py`` for the single-cell path this engine
+    batches, and ``docs/ARCHITECTURE.md`` for what one tick does.
     """
 
     def __init__(
@@ -199,13 +212,17 @@ class GridEngine:
         group: bool = True,
         sparse: bool = False,
         trace=None,
+        trust=None,
         events=None,
     ):
         # observability (repro.obs): `trace` is an engine-wide TraceSpec
         # compiled into every cell's step (None = untraced, the default);
+        # `trust` the engine-wide repro.trust.TrustSpec (None = trust-free,
+        # bit-identical to the pre-trust program);
         # `events` an EventLog receiving run/chunk/divergence records from
         # the host-side loop around the jitted scans
         self._trace_spec = trace
+        self._trust_spec = trust
         self._events = events
         self.grid = grid
         self.cells = list(cells) if cells is not None else grid.cells()
@@ -340,6 +357,7 @@ class GridEngine:
             adv_idx=adv_idx,
             adv_theta=adv_theta,
             trace=self._trace_spec,  # zero-leaf aux data: no vmapped axis
+            trust=self._trust_spec,  # zero-leaf aux data: no vmapped axis
         )
 
     def set_cells(self, cells: Sequence[Cell]) -> None:
@@ -471,14 +489,19 @@ class GridEngine:
         # through untouched (all-zeros in, all-zeros out)
         adv = adv_lib.init_state(dim, lead=(e,)) if self._adv_stateful else None
         # observability carry (repro.obs): engine-wide spec, stacked over [E]
-        obs = None
+        obs = trust = None
+        width = m if self.neighbors is None else self.neighbors.k
         if self._trace_spec is not None:
             from repro.obs import trace as obs_trace
 
-            width = m if self.neighbors is None else self.neighbors.k
             obs = obs_trace.init_state(self._trace_spec, m, width, lead=(e,))
+        # trust carry (repro.trust): engine-wide spec, stacked over [E]
+        if self._trust_spec is not None:
+            from repro.trust import reputation as trust_lib
+
+            trust = trust_lib.init_state(self._trust_spec, m, width, lead=(e,))
         return BridgeState(params=stacked, t=t, key=keys, net=net, comm=comm,
-                           adv=adv, obs=obs)
+                           adv=adv, obs=obs, trust=trust)
 
     def run(self, state: BridgeState, batches, *, chunk: int | None = None):
         """Scan all cells over ``batches`` (a pytree of ``[T, ...]`` arrays,

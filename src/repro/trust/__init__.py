@@ -1,0 +1,22 @@
+"""repro.trust — reputation-weighted screening + equivocation echo protocol.
+
+Turns the `repro.obs` suspicion statistic (per-edge trim frequency) into an
+online robustness mechanism: an in-carry ``[M, W]`` reputation state decays
+per-edge screening weights, a commit-then-gossip echo protocol surfaces
+equivocation as quorum-confirmed mismatches, and an eviction threshold
+zeroes confirmed attackers out of the screening gather.  Off by default and
+bit-inert when off — see `repro.trust.reputation` for the full contract and
+docs/ARCHITECTURE.md for where the trust stage sits in the tick.
+"""
+from repro.trust.reputation import (  # noqa: F401
+    TrustSpec,
+    TrustState,
+    edge_weights,
+    init_state,
+    summarize,
+    update,
+)
+from repro.trust import echo  # noqa: F401
+
+__all__ = ["TrustSpec", "TrustState", "edge_weights", "init_state",
+           "summarize", "update", "echo"]

@@ -1,0 +1,97 @@
+"""Commit-then-gossip echo protocol: equivocation detection (repro.trust).
+
+An equivocator sends *different* payloads to different receivers — value
+screening alone can never see this, because every individual receiver gets a
+plausible message.  The echo protocol cross-checks receptions:
+
+1. **commit** — each receiver digests what it currently holds from each
+   in-neighbor with a cheap rolling random projection: ``h = payload @ R_t``
+   where ``R_t`` is a fresh public ``[d, q]`` Gaussian drawn from the tick
+   key (q = ``TrustSpec.digest_dim`` floats per edge instead of d — the
+   commitment a sender implicitly makes by broadcasting);
+2. **gossip** — one-hop neighbors exchange their digest rows over the
+   tick's live links (the same links the payloads travelled);
+3. **cross-check** — receivers j and l compare digests of a common sender i
+   only when `repro.net.mailbox.generation_match` says both mailbox entries
+   stem from the *same send tick* — drops and latency produce generation
+   mismatches that are *excluded*, never counted as accusations;
+4. **quorum** — an edge (j <- i) earns evidence 1.0 only when at least
+   ``b + 1`` gossip witnesses disagree with j's digest.  At most b Byzantine
+   witnesses exist, so slanderers forging their reported digest rows
+   (`Adversary.accuse_fn`) can muster at most b votes and can never frame an
+   honest sender — the slander bench asserts honest evictions stay at 0.
+   An equivocator, by contrast, is contradicted by every honest witness in
+   the *other* payload group at once, including at receivers it told the
+   truth to.
+
+The cross-check is computed in the dense ``[M, M]`` sender space on both
+layouts (the sparse path scatters its ``[M, K]`` slots out and gathers the
+evidence back), which keeps dense <-> sparse bitwise identical and costs
+O(M^2 q + M^3) — fine at the study scales the trust layer targets (M <= ~64);
+a neighborhood-local sparse gossip is future work (see docs/ARCHITECTURE.md).
+
+Only the net/mailbox path runs the echo: the synchronous broadcast path has
+one payload per sender by construction, so equivocation is structurally
+impossible there and the trust layer falls back to trim evidence alone.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.net import mailbox as mb
+
+
+def digest_matrix(key: jax.Array, dim: int, digest_dim: int) -> jax.Array:
+    """The tick's public random projection ``R_t [d, q]``.  Every node uses
+    the same matrix (it is derived from the shared tick key, not a secret),
+    so digests of identical payloads are identical floats."""
+    return jax.random.normal(key, (dim, digest_dim), jnp.float32)
+
+
+def digest_all(spec, values: jax.Array, key: jax.Array) -> jax.Array:
+    """``[M, M, d] -> [M, M, q]`` honest digests of the mailbox contents."""
+    r = digest_matrix(key, values.shape[-1], spec.digest_dim)
+    return values @ r
+
+
+def scatter_dense(neighbors, x: jax.Array, fill) -> jax.Array:
+    """``[M, K, ...] -> [M, M, ...]``: slot (j, k) lands at column
+    ``idx[j, k]``; padded slots are routed to a dropped out-of-range column,
+    so they can never clobber a real sender's entry."""
+    m = neighbors.num_nodes
+    idx = jnp.where(neighbors.valid_dev, neighbors.safe_idx, m)  # m = drop
+    rows = jnp.arange(m)[:, None]
+    out = jnp.full((m, m) + x.shape[2:], fill, x.dtype)
+    return out.at[rows, idx].set(x, mode="drop")
+
+
+def equivocation_evidence(digests, gens, valid, gossip, b, *,
+                          tol: float) -> tuple[jax.Array, jax.Array]:
+    """Quorum cross-check in dense sender space.
+
+    ``digests [M, M, q]`` — row j holds j's *reported* digests of what it
+    received from each sender (slanderers have already forged their rows via
+    `repro.adversary.protocols.apply_accuse_bank` by the time this runs);
+    ``gens [M, M]`` the mailbox send-tick generations, ``valid [M, M]`` the
+    usable-entry mask, ``gossip [M, M]`` the tick's live links
+    (``gossip[j, l]`` = j hears l's digest row this tick), ``b`` the cell's
+    Byzantine bound (traced int32), ``tol`` the spec's relative digest
+    tolerance (a Python float — the spec is jit structure).  Returns
+    ``(evidence [M, M] f32 in {0, 1}, mismatches [M, M] f32 witness counts)``.
+    """
+    # comparable (j, l, i): both j and l hold a usable entry from i, from the
+    # SAME send generation, and l's row reached j this tick
+    both = (valid[:, None, :] & valid[None, :, :]
+            & mb.generation_match(gens[:, None, :], gens[None, :, :]))
+    cmp = gossip[:, :, None] & both
+    # relative digest comparison: exact payload copies digest to exact floats
+    # (same public R_t), so tol only absorbs deliberate looseness (lossy
+    # per-edge codecs — see repro.trust.reputation docstring)
+    dj = digests[:, None, :, :]
+    dl = digests[None, :, :, :]
+    scale = 1.0 + jnp.maximum(jnp.abs(dj), jnp.abs(dl))
+    differs = jnp.any(jnp.abs(dj - dl) > tol * scale, axis=-1)
+    mism = jnp.sum(jnp.where(cmp & differs, 1.0, 0.0), axis=1)
+    evidence = (mism >= (jnp.asarray(b, jnp.int32) + 1)).astype(jnp.float32)
+    return evidence, mism

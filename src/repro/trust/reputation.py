@@ -1,0 +1,217 @@
+"""Reputation-weighted screening: in-carry per-edge trust state (repro.trust).
+
+BRIDGE screens *values* but never *identifies* attackers — a Byzantine node
+can equivocate or keep landing in the trim window forever, and static 2b+1
+redundancy pays the full degree tax at every tick.  `repro.obs` (PR 6) built
+the detection statistic: per-edge trim-frequency counters rank true Byzantine
+in-edges at AUC >= 0.95, in-scan and bit-inert.  This module closes the loop
+and makes that statistic *act*:
+
+* **suspicion** ``[M, W]`` — an EMA over per-tick evidence: the trim fraction
+  each live in-edge contributed this tick (from the decision-instrumented
+  screening twins, `repro.core.screening.RULES_WITH_DECISIONS`) plus any
+  equivocation evidence from the echo protocol (`repro.trust.echo`);
+* **reputation weights** — ``clip(1 - suspicion, 0, 1)``, consumed by the
+  reputation-aware rules (``rep_trimmed_mean`` / ``rep_median``) registered
+  in the banked rule dispatch;
+* **eviction** — once suspicion crosses ``evict_threshold`` (after
+  ``warmup`` ticks), the edge is latched out of the screening gather: its
+  mask bit is cleared for the rest of the run, exactly as if the link had
+  died.
+
+The spec rides on `repro.core.bridge.CellParams` as *structural* auxiliary
+data — `TrustSpec`, like `TraceSpec`, is a zero-leaf pytree, so it is jit
+cache key, not operand.  ``trust=None`` (the default everywhere) keeps every
+step builder's exact pre-trust program shape: trust off is bit-inert by
+construction (property-tested in ``tests/test_trust.py``).
+
+Minimal usage::
+
+    from repro.core.bridge import BridgeConfig, BridgeTrainer
+    from repro.trust import TrustSpec
+
+    cfg = BridgeConfig(num_nodes=10, num_byzantine=2, rule="rep_trimmed_mean",
+                       attack="sign_flip", trust=TrustSpec())
+    trainer = BridgeTrainer(cfg, grad_fn, topology.adjacency)
+
+Caveats stated once (see docs/ARCHITECTURE.md):
+
+* honest edges get trimmed too — under trimmed-mean an honest edge's
+  steady-state trim frequency is ~2b/n, and under median almost every edge
+  is "trimmed" almost every tick (only the middle ranks survive).  Raw trim
+  fractions would therefore evict honest edges; the trim evidence is
+  **centered per receiver** — ``relu(trim_frac - mean over live in-edges)``
+  — so only edges trimmed *more than their neighborhood's average* accrue
+  suspicion.  Honest edges sit at or below the center and stay at ~0;
+* per-edge *lossy* codecs (e.g. int8 with edge-keyed stochastic rounding)
+  make honest payloads legitimately differ per receiver — raise
+  ``echo_tol`` or keep the echo off under such codecs (the quorum rule
+  already damps isolated false mismatches).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TrustSpec:
+    """What the compiled step distrusts.  Hashable and frozen: it is jit
+    *structure* (a zero-leaf pytree), so changing any field retraces — which
+    is correct, the program genuinely differs."""
+
+    # suspicion EMA: s' = decay * s + (1 - decay) * evidence, on live edges
+    decay: float = 0.9
+    # evidence = trim_weight * centered_trim + echo_weight * echo_evidence,
+    # where centered_trim = relu(trim_frac - per-receiver live mean): edges
+    # trimmed more than their neighborhood's average accrue suspicion (echo
+    # evidence is 0/1 per edge — a confirmed equivocation quorum — so the
+    # echo_weight default makes one confirmed equivocation evict within a
+    # few ticks while trim evidence needs a sustained streak)
+    trim_weight: float = 1.0
+    echo_weight: float = 4.0
+    # eviction latch: suspicion > evict_threshold after `warmup` ticks
+    # permanently clears the edge's screening-mask bit
+    evict_threshold: float = 0.5
+    warmup: int = 8
+    # commit-then-gossip echo protocol (net path only — the synchronous
+    # broadcast path has a single per-sender payload, so equivocation is
+    # structurally impossible there and the echo stage is elided)
+    echo: bool = True
+    # rolling random-projection digest width q (cheap commitment: q floats
+    # per edge instead of d)
+    digest_dim: int = 4
+    # relative tolerance for digest comparison (0 would be exact; the
+    # default absorbs benign reduction-order noise, and lossy per-edge
+    # codecs need it raised — see module docstring)
+    echo_tol: float = 1e-3
+    # coordinate subsampling for the trim-membership pass, as TraceSpec
+    decide_stride: int = 1
+
+    def __post_init__(self):
+        if (not 0.0 <= self.decay < 1.0 or self.trim_weight < 0.0
+                or self.echo_weight < 0.0 or not 0.0 < self.evict_threshold <= 1.0
+                or self.warmup < 0 or self.digest_dim < 1 or self.echo_tol < 0.0
+                or self.decide_stride < 1):
+            raise ValueError(f"invalid TrustSpec: {self}")
+
+
+# Zero-leaf pytree registration: the spec flattens to no children and rides
+# in the treedef — jit cache key, never a vmapped operand (TraceSpec idiom).
+jax.tree_util.register_pytree_node(TrustSpec, lambda s: ((), s), lambda aux, _: aux)
+
+
+class TrustState(NamedTuple):
+    """The scanned trust carry (one per cell; the grid stacks a leading [E]).
+    ``W`` is the per-node edge-slot count: M dense, K neighbor-indexed."""
+
+    suspicion: jax.Array  # [M, W] f32 evidence EMA in [0, 1]
+    evicted: jax.Array  # [M, W] bool latched eviction bits
+    echo_mism: jax.Array  # [M, W] f32 accumulated confirmed-equivocation counts
+
+
+def init_state(spec: TrustSpec | None, num_nodes: int, width: int, *,
+               lead: tuple = ()) -> TrustState | None:
+    """Fresh all-trusting state for one cell (``lead=(E,)`` stacks a grid's
+    worth).  Every edge starts at suspicion 0 / weight 1 / not evicted."""
+    if spec is None:
+        return None
+    mw = lead + (num_nodes, width)
+    return TrustState(
+        suspicion=jnp.zeros(mw, jnp.float32),
+        evicted=jnp.zeros(mw, bool),
+        echo_mism=jnp.zeros(mw, jnp.float32),
+    )
+
+
+def edge_weights(spec: TrustSpec, st: TrustState) -> jax.Array:
+    """``[M, W]`` reputation weights the reputation-aware rules consume:
+    ``clip(1 - suspicion, 0, 1)``, hard-zeroed on evicted edges."""
+    w = jnp.clip(1.0 - st.suspicion, 0.0, 1.0)
+    return jnp.where(st.evicted, 0.0, w)
+
+
+def update(spec: TrustSpec, st: TrustState, *, t, trim_frac, live,
+           echo_evidence=None) -> TrustState:
+    """Fold one tick of evidence into the carry.  ``trim_frac``/``live`` are
+    this tick's ``[M, W]`` trim fractions (already zeroed outside ``live``)
+    and live-edge mask; ``echo_evidence`` the 0/1 confirmed-equivocation
+    matrix from `repro.trust.echo` (None on the synchronous path).  Every op
+    is vmap-safe (the grid maps this over [E])."""
+    kw: dict[str, Any] = {}
+    live_f = jnp.asarray(live, jnp.float32)
+    trim32 = jnp.asarray(trim_frac, jnp.float32)
+    # centered trim evidence: only trimming above the receiver's live-edge
+    # average is suspicious (see module docstring — median-family rules trim
+    # nearly everyone, and honest edges must stay at ~0 evidence)
+    center = (jnp.sum(trim32 * live_f, axis=-1, keepdims=True)
+              / jnp.maximum(jnp.sum(live_f, axis=-1, keepdims=True), 1.0))
+    ev = spec.trim_weight * jnp.maximum(trim32 - center, 0.0)
+    if echo_evidence is not None:
+        ev = ev + spec.echo_weight * jnp.asarray(echo_evidence, jnp.float32)
+        kw["echo_mism"] = st.echo_mism + echo_evidence
+    susp = jnp.clip(spec.decay * st.suspicion + (1.0 - spec.decay) * ev, 0.0, 1.0)
+    susp = jnp.where(live, susp, st.suspicion)
+    kw["suspicion"] = susp
+    kw["evicted"] = st.evicted | (
+        (jnp.asarray(t) >= spec.warmup) & (susp > spec.evict_threshold))
+    return st._replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# Host-side summaries (report / bench inputs)
+# ---------------------------------------------------------------------------
+
+
+def summarize(spec: TrustSpec, state: TrustState, *, byz_mask=None,
+              senders: np.ndarray | None = None) -> dict:
+    """One cell's trust state as a JSON-ready record: eviction counts split
+    honest-vs-Byzantine against the known sender mask (the slander-bench
+    acceptance metric is ``honest_evicted == 0``), plus the AUC of the
+    suspicion scores ranking Byzantine in-edges."""
+    from repro.obs.trace import ranking_auc
+
+    susp = np.asarray(state.suspicion, np.float64)
+    evicted = np.asarray(state.evicted, bool)
+    mism = np.asarray(state.echo_mism, np.float64)
+    out: dict[str, Any] = {
+        "spec": dataclasses.asdict(spec),
+        "edges_evicted": int(evicted.sum()),
+        "echo_mismatch_total": float(mism.sum()),
+        "max_suspicion": float(susp.max()) if susp.size else 0.0,
+    }
+    if senders is not None and byz_mask is not None:
+        byz = np.asarray(byz_mask, bool)
+        live_slot = senders >= 0
+        recv, slot = np.nonzero(live_slot)
+        send = senders[recv, slot]
+        # trust, like forensics, is the honest nodes' view of their in-edges
+        keep = ~byz[recv]
+        recv, slot, send = recv[keep], slot[keep], send[keep]
+        byz_edge = byz[send]
+        ev = evicted[recv, slot]
+        out["byz_edges"] = int(byz_edge.sum())
+        out["honest_edges"] = int((~byz_edge).sum())
+        out["byz_evicted"] = int(ev[byz_edge].sum())
+        out["honest_evicted"] = int(ev[~byz_edge].sum())
+        out["honest_eviction_rate"] = (
+            float(ev[~byz_edge].mean()) if (~byz_edge).any() else 0.0)
+        out["byz_eviction_rate"] = (
+            float(ev[byz_edge].mean()) if byz_edge.any() else 0.0)
+        out["auc_byzantine_edges"] = ranking_auc(susp[recv, slot], byz_edge)
+    return out
+
+
+# Trust metric streams registered with the grid result reducers (the sim
+# layer warns on unregistered streams instead of dropping them silently).
+def _register_reducers() -> None:
+    from repro.sim import results as results_lib
+
+    results_lib.register_mean("trust_evicted_frac")
+
+
+_register_reducers()

@@ -80,13 +80,14 @@ def _run_trainer(topo, targets, *, rule="trimmed_mean", b=0, adversary="none",
 
 
 # ---------------------------------------------------------------------------
-# registry: the four-tier namespace partition
+# registry: the six-tier namespace partition
 # ---------------------------------------------------------------------------
 
 
 def test_registry_tiers_partition_every_name_exactly_once():
     tiers = registry_tiers()
-    assert set(tiers) == {"broadcast", "message", "wire", "adversary"}
+    assert set(tiers) == {"broadcast", "message", "wire", "adversary",
+                          "equivocator", "slanderer"}
     names = [n for tier in tiers.values() for n in tier]
     dupes = {n for n in names if names.count(n) > 1}
     assert not dupes, f"names in more than one tier: {dupes}"
@@ -100,6 +101,12 @@ def test_registry_tiers_partition_every_name_exactly_once():
         assert not get_adversary(n).stateful
     for n in ADAPTIVE:
         assert n in tiers["adversary"] and get_adversary(n).stateful
+    # the protocol-level tiers (repro.adversary.equivocation): equivocators
+    # lie per receiver, slanderers lie only in the gossiped digests
+    assert "equivocate" in tiers["equivocator"]
+    assert "slander" in tiers["slanderer"]
+    for n in tiers["slanderer"]:
+        assert get_adversary(n).accuse_fn is not None
     with pytest.raises(ValueError, match="unknown adversary"):
         get_adversary("not_an_adversary")
 

@@ -1,0 +1,78 @@
+"""`tools/check_docs.py`: the docs gate itself is tested — a checker that
+silently matches nothing (regex rot, fence mis-tracking) would wave broken
+docs through CI forever."""
+import importlib.util
+import os
+
+_TOOL = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                     "tools", "check_docs.py")
+_spec = importlib.util.spec_from_file_location("check_docs", _TOOL)
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _write(path, text):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+
+
+def test_repo_docs_pass_link_check():
+    assert check_docs.check_links(REPO_ROOT) == []
+
+
+def test_broken_relative_link_is_reported(tmp_path):
+    _write(str(tmp_path / "README.md"), "see [gone](docs/NOPE.md)\n")
+    problems = check_docs.check_links(str(tmp_path))
+    assert len(problems) == 1
+    assert "README.md:1" in problems[0] and "docs/NOPE.md" in problems[0]
+
+
+def test_anchor_fragments_resolve_against_github_slugs(tmp_path):
+    _write(str(tmp_path / "docs" / "A.md"),
+           "# Top\n\n## Trust layer (`repro.trust`)\n")
+    _write(str(tmp_path / "README.md"),
+           "[ok](docs/A.md#trust-layer-reprotrust)\n"
+           "[bad](docs/A.md#no-such-heading)\n")
+    problems = check_docs.check_links(str(tmp_path))
+    assert len(problems) == 1
+    assert "no-such-heading" in problems[0]
+
+
+def test_code_spans_and_fences_are_not_links(tmp_path):
+    _write(str(tmp_path / "README.md"),
+           "shape `[M, K](gathered)` is code\n"
+           "```\n[also](not/a/link.md)\n```\n"
+           "but [this](missing.md) is real\n")
+    problems = check_docs.check_links(str(tmp_path))
+    assert len(problems) == 1
+    assert "missing.md" in problems[0]
+
+
+def test_external_urls_are_skipped(tmp_path):
+    _write(str(tmp_path / "README.md"),
+           "[arxiv](https://arxiv.org/abs/1908.08098) "
+           "[mail](mailto:x@y.z)\n")
+    assert check_docs.check_links(str(tmp_path)) == []
+
+
+def test_duplicate_headings_get_suffixed_slugs(tmp_path):
+    _write(str(tmp_path / "docs" / "A.md"), "## Setup\n\n## Setup\n")
+    slugs = check_docs.heading_slugs(str(tmp_path / "docs" / "A.md"))
+    assert {"setup", "setup-1"} <= slugs
+
+
+def test_main_exit_codes(tmp_path, capsys):
+    _write(str(tmp_path / "README.md"), "[ok](docs/A.md)\n")
+    _write(str(tmp_path / "docs" / "A.md"), "# A\n")
+    assert check_docs.main(["--root", str(tmp_path), "--no-help-smoke"]) == 0
+    _write(str(tmp_path / "README.md"), "[bad](gone.md)\n")
+    assert check_docs.main(["--root", str(tmp_path), "--no-help-smoke"]) == 1
+    assert "docs check FAILED" in capsys.readouterr().out
+
+
+def test_help_smoke_runs_documented_clis():
+    # the real thing CI runs: every CLI the docs name answers --help
+    assert check_docs.check_help(REPO_ROOT) == []

@@ -1,0 +1,437 @@
+"""repro.trust: reputation-weighted screening + the equivocation echo protocol.
+
+The trust contract (ISSUE 7 acceptance):
+* (a) trust OFF is structurally absent (``state.trust is None``, no trust
+  metric streams), and trust ON is BIT-INERT until it acts — with a plain
+  (unweighted) rule and ``warmup`` beyond the horizon the trajectory is
+  bitwise the trust-free one, across rule x attack x codec, sync + net
+  paths, dense + sparse layouts;
+* (b) the echo protocol catches equivocators: per-receiver lies surface as
+  quorum-confirmed digest mismatches, the lying sender's in-edges are
+  evicted, and honest edges are NEVER evicted;
+* (c) slander is structurally impossible: <= b forged accusations can never
+  meet the b + 1 disagreeing-witness quorum, so a slandered honest sender
+  keeps its edges;
+* (d) the dense and sparse layouts agree bitwise with trust compiled in;
+plus unit coverage of the evidence quorum, the reputation fold, the
+weighted rules, and the relaxed degree requirement the breakdown study
+spends (``rep_* : b + 1`` vs ``2b + 1``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BridgeConfig, BridgeTrainer, complete_graph, erdos_renyi, replicate, screening
+from repro.core.bridge import stack_batches
+from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
+from repro.net import mailbox as mb
+from repro.sim import ExperimentGrid, GridEngine
+from repro.trust import TrustSpec, echo, edge_weights, init_state, summarize, update
+
+M, D, T = 12, 5, 12
+
+
+def quad_grad_fn(params, batch):
+    w, c = params["w"], batch
+    loss = 0.5 * jnp.sum((w - c) ** 2)
+    return loss, {"w": w - c}
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return erdos_renyi(M, 0.8, 2, seed=1)
+
+
+@pytest.fixture(scope="module")
+def targets():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+
+
+def init_fn(seed):
+    return replicate({"w": jnp.zeros(D)}, M, perturb=0.1, key=jax.random.PRNGKey(seed))
+
+
+@pytest.fixture(scope="module")
+def batches(targets):
+    return stack_batches(lambda i: targets, T)
+
+
+# trust that runs every tick but cannot act: plain rules ignore the weights
+# and warmup past the horizon keeps the eviction mask all-False
+INERT = TrustSpec(warmup=T + 1)
+
+
+def _sync_run(topo, targets, *, rule="trimmed_mean", attack="alie",
+              codec="identity", sparse=False, trust=None, ticks=T, b=2):
+    cfg = BridgeConfig(topology=topo, rule=rule, num_byzantine=b, attack=attack,
+                       codec=codec, sparse=sparse, trust=trust, lam=1.0, t0=10.0)
+    tr = BridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    losses = []
+    for _ in range(ticks):
+        st, m = tr.step(st, targets)
+        losses.append(m["loss"])
+    return tr, st, np.asarray(jnp.stack(losses))
+
+
+def _net_run(topo, batches, *, sparse, trust=None):
+    cfg = AsyncBridgeConfig(
+        topology=topo, rule="trimmed_mean", num_byzantine=2, attack="alie",
+        channel=ChannelConfig(drop_prob=0.1), staleness_bound=2,
+        lam=1.0, t0=10.0, sparse=sparse, trust=trust)
+    tr = AsyncBridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    st, metrics = tr.run_scan(st, batches)
+    return tr, st, metrics
+
+
+# ---------------------------------------------------------------------------
+# (a) off = absent; on-but-inert = bitwise the trust-free trajectory
+# ---------------------------------------------------------------------------
+
+
+def test_trust_off_is_structurally_absent(topo, targets):
+    cfg = BridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                       attack="alie", lam=1.0, t0=10.0)
+    tr = BridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    assert st.trust is None
+    st, metrics = tr.step(st, targets)
+    assert st.trust is None
+    assert "trust_evicted_frac" not in metrics
+
+
+@pytest.mark.parametrize("rule,attack,codec,sparse", [
+    ("trimmed_mean", "alie", "identity", False),
+    ("trimmed_mean", "sign_flip", "int8", False),
+    ("median", "alie", "identity", True),
+    ("krum", "random", "identity", False),
+])
+def test_sync_trust_bit_inert(topo, targets, rule, attack, codec, sparse):
+    """Echo + reputation compiled into the step change NOTHING about the
+    trajectory until an eviction latches or a weighted rule consumes the
+    weights — with a plain rule and warmup > T, bitwise equality."""
+    _, st_off, ls_off = _sync_run(topo, targets, rule=rule, attack=attack,
+                                  codec=codec, sparse=sparse, trust=None)
+    _, st_on, ls_on = _sync_run(topo, targets, rule=rule, attack=attack,
+                                codec=codec, sparse=sparse, trust=INERT)
+    np.testing.assert_array_equal(np.asarray(st_off.params["w"]),
+                                  np.asarray(st_on.params["w"]))
+    np.testing.assert_array_equal(ls_off, ls_on)
+    assert st_off.trust is None
+    assert not bool(jnp.any(st_on.trust.evicted))
+
+
+@pytest.mark.parametrize("sparse", [False, True])
+def test_net_trust_bit_inert(topo, batches, sparse):
+    """The network-runtime path (drops, staleness, real send generations)."""
+    _, st_off, ms_off = _net_run(topo, batches, sparse=sparse, trust=None)
+    _, st_on, ms_on = _net_run(topo, batches, sparse=sparse, trust=INERT)
+    np.testing.assert_array_equal(np.asarray(st_off.params["w"]),
+                                  np.asarray(st_on.params["w"]))
+    np.testing.assert_array_equal(np.asarray(ms_off["loss"]),
+                                  np.asarray(ms_on["loss"]))
+    assert "trust_evicted_frac" in ms_on
+
+
+def test_grid_trust_bit_inert(topo, batches):
+    grid = ExperimentGrid(topo, ("trimmed_mean", "median"), ("alie",), (2,),
+                          (0, 1), lam=1.0, t0=10.0)
+    eng_off = GridEngine(grid, quad_grad_fn)
+    fin_off, ms_off = eng_off.run(eng_off.init(init_fn), batches)
+    eng_on = GridEngine(grid, quad_grad_fn, trust=INERT)
+    fin_on, ms_on = eng_on.run(eng_on.init(init_fn), batches)
+    np.testing.assert_array_equal(np.asarray(fin_off.params["w"]),
+                                  np.asarray(fin_on.params["w"]))
+    np.testing.assert_array_equal(np.asarray(ms_off["loss"]),
+                                  np.asarray(ms_on["loss"]))
+    assert fin_on.trust.suspicion.shape[0] == eng_on.num_cells
+
+
+def test_trust_spec_validation():
+    with pytest.raises(ValueError, match="TrustSpec"):
+        TrustSpec(decay=1.5)
+    with pytest.raises(ValueError, match="TrustSpec"):
+        TrustSpec(evict_threshold=0.0)
+    with pytest.raises(ValueError, match="TrustSpec"):
+        TrustSpec(digest_dim=0)
+    with pytest.raises(ValueError, match="TrustSpec"):
+        TrustSpec(warmup=-1)
+
+
+def test_trust_spec_is_zero_leaf_pytree():
+    spec = TrustSpec()
+    assert jax.tree_util.tree_leaves(spec) == []
+    assert jax.tree_util.tree_map(lambda x: x, spec) == spec
+
+
+# ---------------------------------------------------------------------------
+# (b) + (c) end-to-end: equivocators evicted, slander impossible
+# ---------------------------------------------------------------------------
+
+
+def _detection_grid(adversaries, *, m=10, b=1, ticks=8, warmup=2):
+    # complete graph: one-hop digest gossip needs triangles — every pair of
+    # witnesses of a sender must also be adjacent to the receiver
+    topo = complete_graph(m, b)
+    rng = np.random.default_rng(3)
+    targets = jnp.asarray(rng.normal(size=(m, D)), jnp.float32)
+
+    def ifn(seed):
+        return replicate({"w": jnp.zeros(D)}, m, perturb=0.1,
+                         key=jax.random.PRNGKey(seed))
+
+    spec = TrustSpec(warmup=warmup)
+    grid = ExperimentGrid(topo, ("rep_trimmed_mean",), ("none",), (b,), (0,),
+                          scenarios=("ideal",), adversaries=adversaries,
+                          lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn, num_ticks=ticks, trust=spec)
+    final, _ = engine.run(engine.init(ifn),
+                          stack_batches(lambda i: targets, ticks))
+    records = {}
+    for i, cell in enumerate(engine.cells):
+        trust_i = jax.tree_util.tree_map(lambda leaf: leaf[i], final.trust)
+        records[cell.adversary] = summarize(spec, trust_i,
+                                            byz_mask=engine.byz_masks[i],
+                                            senders=engine.sender_grid())
+    return records, final, engine
+
+
+def test_equivocators_evicted_honest_edges_kept():
+    records, _, _ = _detection_grid(("equivocate",))
+    rec = records["equivocate"]
+    assert rec["byz_eviction_rate"] >= 0.8
+    assert rec["honest_evicted"] == 0
+    assert rec["auc_byzantine_edges"] >= 0.9
+
+
+def test_slander_cannot_frame_honest_senders():
+    # b = 2 slanderers forge every digest they gossip; the b + 1 = 3 quorum
+    # means no honest receiver ever sees enough disagreeing witnesses
+    records, _, _ = _detection_grid(("slander",), b=2)
+    rec = records["slander"]
+    assert rec["honest_evicted"] == 0
+    assert rec["byz_evicted"] == 0  # slander alone never convicts anyone
+
+
+def test_trust_dense_sparse_grids_agree_bitwise():
+    """(d) the echo protocol is computed in dense [M, M] space on BOTH
+    layouts, so trust-on trajectories agree across them bitwise."""
+    m, b, ticks = 10, 1, 8
+    topo = complete_graph(m, b)
+    rng = np.random.default_rng(3)
+    targets = jnp.asarray(rng.normal(size=(m, D)), jnp.float32)
+
+    def ifn(seed):
+        return replicate({"w": jnp.zeros(D)}, m, perturb=0.1,
+                         key=jax.random.PRNGKey(seed))
+
+    spec = TrustSpec(warmup=2)
+    grid = ExperimentGrid(topo, ("rep_trimmed_mean",), ("none",), (b,), (0,),
+                          scenarios=("ideal",), adversaries=("equivocate",),
+                          lam=1.0, t0=10.0)
+    outs = []
+    for sparse in (False, True):
+        eng = GridEngine(grid, quad_grad_fn, num_ticks=ticks, trust=spec,
+                         sparse=sparse)
+        fin, _ = eng.run(eng.init(ifn), stack_batches(lambda i: targets, ticks))
+        outs.append(np.asarray(fin.params["w"]))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+# ---------------------------------------------------------------------------
+# echo protocol units: quorum math, generation gating, layouts
+# ---------------------------------------------------------------------------
+
+
+def _echo_setup(m=6, q=3, b=1):
+    digests = jnp.zeros((m, m, q), jnp.float32)  # [holder, sender, q]
+    gens = jnp.zeros((m, m), jnp.int32)
+    valid = jnp.ones((m, m), bool)
+    gossip = jnp.asarray(~np.eye(m, dtype=bool))
+    return digests, gens, valid, gossip
+
+
+def test_equivocation_evidence_quorum():
+    digests, gens, valid, gossip = _echo_setup()
+    # sender 0 lied to receiver 1: all 5 other holders (including sender 0's
+    # own row) disagree with receiver 1's digest
+    digests = digests.at[1, 0].set(5.0)
+    ev, mism = echo.equivocation_evidence(digests, gens, valid, gossip, 1,
+                                          tol=1e-3)
+    assert float(mism[1, 0]) == 5.0
+    assert bool(ev[1, 0])  # 5 disagreeing witnesses >= b + 1 = 2
+    # each majority-payload holder sees exactly ONE disagreeing witness
+    # (receiver 1) — below quorum, so the lie only convicts at receiver 1
+    assert not bool(jnp.any(ev.at[1, 0].set(False)))
+
+
+def test_equivocation_evidence_below_quorum():
+    digests, gens, valid, gossip = _echo_setup()
+    digests = digests.at[1, 0].set(5.0)
+    # 5 disagreeing witnesses: the quorum b + 1 is met up to b = 4 ...
+    ev4, _ = echo.equivocation_evidence(digests, gens, valid, gossip, 4,
+                                        tol=1e-3)
+    assert bool(ev4[1, 0])
+    # ... and structurally unreachable at b = 5 (only 5 witnesses exist)
+    ev5, _ = echo.equivocation_evidence(digests, gens, valid, gossip, 5,
+                                        tol=1e-3)
+    assert not bool(jnp.any(ev5))
+
+
+def test_equivocation_evidence_generation_gated():
+    """Stale or never-delivered copies are excluded: only witnesses holding
+    the SAME send generation may testify (drops/latency != equivocation)."""
+    digests, gens, valid, gossip = _echo_setup()
+    digests = digests.at[1, 0].set(5.0)
+    gens = gens.at[2, 0].set(mb.NEVER).at[3, 0].set(7)  # two witnesses out
+    ev, mism = echo.equivocation_evidence(digests, gens, valid, gossip, 2,
+                                          tol=1e-3)
+    assert float(mism[1, 0]) == 3.0  # holders 0, 4, 5 — 2 and 3 excluded
+    assert bool(ev[1, 0])  # 3 >= b + 1 = 3, exactly at quorum
+    ev3, _ = echo.equivocation_evidence(digests, gens, valid, gossip, 3,
+                                        tol=1e-3)
+    assert not bool(jnp.any(ev3))  # quorum 4 unreachable once gens gate
+
+
+def test_scatter_dense_roundtrip():
+    from repro.core.neighbors import NeighborTable
+
+    adj = np.asarray(complete_graph(6, 1).adjacency)
+    nbr = NeighborTable.from_adjacency(jnp.asarray(adj))
+    rng = np.random.default_rng(0)
+    dense = jnp.asarray(rng.normal(size=(6, 6)), jnp.float32)
+    gathered = nbr.gather_edges(dense, 0.0)
+    back = echo.scatter_dense(nbr, gathered, 0.0)
+    np.testing.assert_array_equal(np.asarray(back * adj),
+                                  np.asarray(dense * adj))
+
+
+# ---------------------------------------------------------------------------
+# reputation fold units
+# ---------------------------------------------------------------------------
+
+
+def test_reputation_update_and_eviction_latch():
+    spec = TrustSpec(decay=0.5, trim_weight=1.0, echo_weight=4.0,
+                     evict_threshold=0.5, warmup=2)
+    st = init_state(spec, 2, 2)
+    live = jnp.ones((2, 2), bool)
+    hot = jnp.zeros((2, 2), bool).at[0, 1].set(True)
+    for t in range(4):
+        st = update(spec, st, t=jnp.asarray(t), trim_frac=jnp.zeros((2, 2)),
+                    live=live, echo_evidence=hot.astype(jnp.float32))
+    # echo evidence saturates suspicion on the hot edge only
+    assert float(st.suspicion[0, 1]) > 0.9
+    assert float(jnp.max(jnp.where(hot, 0.0, st.suspicion))) == 0.0
+    assert bool(st.evicted[0, 1])  # latched once t >= warmup
+    assert int(jnp.sum(st.evicted)) == 1
+    w = edge_weights(spec, st)
+    assert float(w[0, 1]) == 0.0
+    assert float(jnp.min(jnp.where(hot, 1.0, w))) == 1.0
+    # the latch never releases, even if the evidence stops
+    st = update(spec, st, t=jnp.asarray(9), trim_frac=jnp.zeros((2, 2)),
+                live=live, echo_evidence=None)
+    assert bool(st.evicted[0, 1])
+
+
+def test_reputation_centered_trim_and_frozen_dead_edges():
+    spec = TrustSpec(decay=0.5, warmup=0)
+    st = init_state(spec, 1, 2)
+    # edge 1 trimmed far above the live average (0.5) -> accrues suspicion;
+    # edge 0 sits below the average -> relu clamps it to exactly zero
+    st = update(spec, st, t=jnp.asarray(0), trim_frac=jnp.asarray([[0.0, 1.0]]),
+                live=jnp.ones((1, 2), bool))
+    assert float(st.suspicion[0, 0]) == 0.0
+    before = float(st.suspicion[0, 1])
+    assert before == pytest.approx(0.25)  # 0.5 * relu(1 - 0.5)
+    st = update(spec, st, t=jnp.asarray(1), trim_frac=jnp.zeros((1, 2)),
+                live=jnp.asarray([[True, False]]))
+    assert float(st.suspicion[0, 1]) == before  # no decay while unreachable
+
+
+def test_summarize_splits_honest_and_byzantine():
+    spec = TrustSpec(warmup=0)
+    st = init_state(spec, 3, 3)
+    st = st._replace(
+        evicted=jnp.zeros((3, 3), bool).at[0, 2].set(True),
+        suspicion=jnp.zeros((3, 3)).at[0, 2].set(0.9).at[1, 2].set(0.8))
+    senders = np.tile(np.arange(3), (3, 1))  # slot j holds sender j
+    byz = np.asarray([False, False, True])
+    rec = summarize(spec, st, byz_mask=byz, senders=senders)
+    assert rec["byz_evicted"] == 1 and rec["honest_evicted"] == 0
+    assert rec["byz_eviction_rate"] == pytest.approx(0.5)  # 1 of 2 byz edges
+    # both Byzantine in-edges outrank every honest edge's 0 suspicion
+    assert rec["auc_byzantine_edges"] == 1.0
+
+
+# ---------------------------------------------------------------------------
+# weighted rules + the relaxed degree table
+# ---------------------------------------------------------------------------
+
+
+def _ref_rep_trimmed_mean(v, w, sv, b):
+    """Independent oracle: per coordinate, keep values inside the [b-th,
+    (n-1-b)-th] order-statistic window, then reputation-weighted average
+    with self at weight 1."""
+    out = []
+    for c in range(v.shape[1]):
+        col = v[:, c]
+        order = np.sort(col)
+        lo, hi = order[b], order[-b - 1]
+        kept = (col >= lo) & (col <= hi)
+        out.append((np.sum(w * kept * col) + sv[c]) / (np.sum(w * kept) + 1.0))
+    return np.asarray(out)
+
+
+def test_rep_trimmed_mean_matches_oracle_with_zero_weight():
+    rng = np.random.default_rng(7)
+    n, d, b = 9, 6, 2
+    v = rng.normal(size=(n, d)).astype(np.float32)
+    sv = rng.normal(size=(d,)).astype(np.float32)
+    # a zero-weight (evicted) edge and a down-weighted one: the trim window
+    # is computed mask-wise, the weights act on the kept average only
+    w = np.ones((n,), np.float32)
+    w[3], w[5] = 0.0, 0.25
+    y = screening.rep_trimmed_mean(jnp.asarray(v), jnp.ones((n,), bool),
+                                   jnp.asarray(sv), b, weights=jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(y), _ref_rep_trimmed_mean(v, w, sv, b),
+                               rtol=1e-5)
+
+
+def test_rep_median_weight_zero_equals_masked_out():
+    rng = np.random.default_rng(7)
+    n, d = 9, 6
+    v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    sv = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    w = jnp.ones((n,)).at[3].set(0.0)
+    y_w = screening.rep_median(v, jnp.ones((n,), bool), sv, weights=w)
+    y_m = screening.rep_median(v, jnp.ones((n,), bool).at[3].set(False), sv,
+                               weights=w)
+    np.testing.assert_array_equal(np.asarray(y_w), np.asarray(y_m))
+    # and an overwhelming-reputation edge pins the weighted median
+    y_pin = screening.rep_median(v, jnp.ones((n,), bool), sv,
+                                 weights=jnp.ones((n,)).at[3].set(100.0))
+    np.testing.assert_array_equal(np.asarray(y_pin), np.asarray(v[3]))
+
+
+def test_rep_trimmed_mean_uniform_weights_is_tie_inclusive_trim():
+    rng = np.random.default_rng(11)
+    n, d, b = 7, 4, 1
+    v = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    mask = jnp.ones((n,), bool)
+    sv = jnp.asarray(rng.normal(size=(d,)), jnp.float32)
+    y = screening.rep_trimmed_mean(v, mask, sv, b)
+    # tie-free draws: the kept window is exactly the sorted interior, so the
+    # uniform-weight answer is the classic trimmed mean (self included)
+    vs = np.sort(np.asarray(v), axis=0)[b:-b]
+    expect = (vs.sum(0) + np.asarray(sv)) / (vs.shape[0] + 1)
+    np.testing.assert_allclose(np.asarray(y), expect, rtol=1e-5)
+
+
+def test_rep_rules_relax_min_neighbors():
+    assert screening.min_neighbors("trimmed_mean", 3) == 7   # 2b + 1
+    assert screening.min_neighbors("rep_trimmed_mean", 3) == 4  # b + 1
+    assert screening.min_neighbors("rep_median", 3) == 1

@@ -1,0 +1,170 @@
+"""Docs checker: every markdown link must resolve, every documented CLI must
+answer ``--help``.
+
+    python tools/check_docs.py [--root .] [--no-help-smoke]
+
+Two classes of doc rot this catches, both cheap to prevent and embarrassing
+to ship:
+
+* **Dead links.**  Inline links in ``README.md``, ``docs/*.md``, and the
+  top-level ``*.md`` project files are extracted (code fences and inline
+  code spans are stripped first — ``[M, K]`` is an array shape, not a link),
+  and every relative target must exist on disk.  Fragments are checked too:
+  ``docs/FILE.md#some-heading`` must match a real heading's GitHub-style
+  anchor slug in that file.  External ``http(s)://`` / ``mailto:`` targets
+  are *not* fetched — CI must not flake on someone else's server.
+* **Stale CLI references.**  The entry points the docs tell people to run
+  (``repro.launch.train``, ``repro.launch.sweep``, ``repro.obs.report``)
+  are invoked with ``--help`` in a subprocess with ``PYTHONPATH=src``; a
+  refactor that renames or breaks an entry point fails the docs job, not a
+  user.
+
+Stdlib only (no pip deps) so the CI job needs nothing but a checkout and a
+Python. Exit status: 0 clean, 1 any problem; every problem is printed as
+``file:line: message``.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+# the CLIs the docs instruct readers to run — keep in sync with README
+HELP_SMOKE_MODULES = (
+    "repro.launch.train",
+    "repro.launch.sweep",
+    "repro.obs.report",
+)
+
+_FENCE = re.compile(r"^(```|~~~)")
+_INLINE_CODE = re.compile(r"`[^`]*`")
+# [text](target) — target may carry a #fragment; images (![alt](...)) match
+# too via the optional bang, and are checked the same way
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING = re.compile(r"^(#{1,6})\s+(.*)$")
+
+
+def doc_files(root: str) -> list[str]:
+    """README + docs/*.md + the top-level project markdown files."""
+    found = []
+    for name in sorted(os.listdir(root)):
+        if name.endswith(".md"):
+            found.append(os.path.join(root, name))
+    docs_dir = os.path.join(root, "docs")
+    if os.path.isdir(docs_dir):
+        for name in sorted(os.listdir(docs_dir)):
+            if name.endswith(".md"):
+                found.append(os.path.join(docs_dir, name))
+    return found
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: drop code ticks/punctuation, spaces to hyphens."""
+    text = heading.strip().lower().replace("`", "")
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set[str]:
+    slugs: dict[str, int] = {}
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for line in f:
+            if _FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            m = _HEADING.match(line)
+            if not m:
+                continue
+            slug = github_slug(m.group(2))
+            # repeated headings get -1, -2, ... suffixes on GitHub
+            n = slugs.get(slug, -1) + 1
+            slugs[slug] = n
+            if n:
+                slugs[f"{slug}-{n}"] = 0
+    return set(slugs)
+
+
+def iter_links(path: str):
+    """Yield (lineno, target) for every inline link outside code."""
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if _FENCE.match(line):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            scrubbed = _INLINE_CODE.sub("", line)
+            for m in _LINK.finditer(scrubbed):
+                yield lineno, m.group(1)
+
+
+def check_links(root: str) -> list[str]:
+    problems = []
+    for path in doc_files(root):
+        rel = os.path.relpath(path, root)
+        for lineno, target in iter_links(path):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            base, _, frag = target.partition("#")
+            dest = path if not base else os.path.normpath(
+                os.path.join(os.path.dirname(path), base))
+            if base and not os.path.exists(dest):
+                problems.append(f"{rel}:{lineno}: broken link -> {target}")
+                continue
+            if frag and dest.endswith(".md"):
+                if frag not in heading_slugs(dest):
+                    problems.append(
+                        f"{rel}:{lineno}: missing anchor -> {target}")
+    return problems
+
+
+def check_help(root: str) -> list[str]:
+    problems = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), env.get("PYTHONPATH")) if p)
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    for mod in HELP_SMOKE_MODULES:
+        proc = subprocess.run(
+            [sys.executable, "-m", mod, "--help"],
+            cwd=root, env=env, capture_output=True, text=True, timeout=300)
+        if proc.returncode != 0:
+            tail = (proc.stderr or proc.stdout).strip().splitlines()[-1:]
+            problems.append(
+                f"{mod}: --help exited {proc.returncode}"
+                + (f" ({tail[0]})" if tail else ""))
+    return problems
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    ap.add_argument("--no-help-smoke", action="store_true",
+                    help="only check markdown links (fast, no subprocesses)")
+    args = ap.parse_args(argv)
+
+    problems = check_links(args.root)
+    if not args.no_help_smoke:
+        problems += check_help(args.root)
+    for p in problems:
+        print(p)
+    n_docs = len(doc_files(args.root))
+    if problems:
+        print(f"docs check FAILED: {len(problems)} problem(s) "
+              f"across {n_docs} markdown file(s)")
+        return 1
+    print(f"docs check ok: {n_docs} markdown file(s), links resolve"
+          + ("" if args.no_help_smoke else
+             f", {len(HELP_SMOKE_MODULES)} CLIs answer --help"))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
