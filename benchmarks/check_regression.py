@@ -45,7 +45,7 @@ SKIP_PREFIXES = ("subprocess_baseline.", "sequential_inprocess_baseline.")
 
 DEFAULT_NAMES = ("BENCH_grid.json", "BENCH_net.json", "BENCH_comm.json",
                  "BENCH_kernels.json", "BENCH_breakdown.json", "BENCH_scale.json",
-                 "BENCH_obs.json", "BENCH_trust.json")
+                 "BENCH_obs.json", "BENCH_trust.json", "BENCH_stream.json")
 
 
 def _higher_is_better(leaf: str) -> bool:

@@ -1,0 +1,220 @@
+"""Chunk-streaming benchmark: the model zoo under attack through
+``repro.stream`` — writes ``BENCH_stream.json``.
+
+Three measurements (ISSUE 8 acceptance):
+
+* **peak-memory bound** — a multi-million-parameter qwen3-family transformer
+  trains end-to-end under a Byzantine attack through `StreamBridgeTrainer`.
+  The jitted step's optimized HLO is scanned with
+  `repro.launch.hlo_analysis.largest_tensor_bytes` to *prove* the streaming
+  path never materializes the flat ``[M, d]`` f32 matrix: the largest live
+  tensor must stay strictly below ``M * d * 4`` bytes (the flat path's
+  smallest full-parameter tensor — `stack_flatten`'s output, before the
+  ``[M, M, d]``/``[M, K, d]`` exchange views it feeds).
+* **throughput** — steady-state seconds per streaming step (compile
+  excluded), gated against the committed baseline by
+  ``benchmarks.check_regression``.
+* **loss parity** — at small ``d`` a tiny transformer runs flat AND
+  streaming under a deterministic attack: trajectories must be bitwise
+  identical (so loss parity is exact, not approximate).
+
+CI runs ``--smoke`` (the ~6.6M-param ``--small`` config from
+``examples/train_llm.py``, few steps), so the committed artifact AND baseline
+are smoke-sized; the full run (no flag) uses the ~100M-param config and
+overwrites ``BENCH_stream.json`` with timings NOT comparable against the
+smoke baseline.
+
+    PYTHONPATH=src python -m benchmarks.stream_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import replicate
+from repro.core.bridge import BridgeConfig, BridgeTrainer, stack_flatten
+from repro.core.graph import erdos_renyi
+from repro.data.tokens import TokenPipeline
+from repro.launch import hlo_analysis
+from repro.models import api as model_api
+from repro.stream import StreamBridgeTrainer
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(_ROOT, "BENCH_stream.json")
+
+RULE = "trimmed_mean"
+ATTACK = "sign_flip"  # deterministic: streaming == flat bitwise at any chunk
+M, B = 4, 1
+CHUNK = 1 << 16
+
+
+def _model(smoke: bool):
+    base = get_config("qwen3-4b")
+    if smoke:  # the train_llm.py --small config (~6.6M params)
+        cfg = base.reduced(num_layers=4, d_model=256, num_heads=4,
+                           num_kv_heads=2, d_ff=512, vocab_size=8192,
+                           head_dim=64)
+        seq, batch = 64, 1
+    else:  # the ~100M-param real config
+        cfg = dataclasses.replace(
+            base, num_layers=12, d_model=768, num_heads=12, num_kv_heads=4,
+            d_ff=2048, vocab_size=32768, head_dim=64, kv_chunk=256, q_chunk=128)
+        seq, batch = 256, 2
+    return cfg, seq, batch
+
+
+def _tiny_model():
+    """Small enough that the flat [M, d] path is cheap — the parity oracle."""
+    cfg = get_config("qwen3-4b").reduced(
+        num_layers=2, d_model=64, num_heads=2, num_kv_heads=1, d_ff=128,
+        vocab_size=512, head_dim=32)
+    return cfg, 32, 1
+
+
+def _build(cfg, seq, batch, *, flat: bool, chunk: int):
+    api = model_api.build(cfg)
+    topo = erdos_renyi(M, 0.9, B, seed=1)
+    bcfg = BridgeConfig(topology=topo, rule=RULE, num_byzantine=B,
+                        attack=ATTACK, lr=0.02,
+                        screen_chunk=(1 << 30) if flat else chunk)
+    tr = (BridgeTrainer(bcfg, api.grad_fn()) if flat
+          else StreamBridgeTrainer(bcfg, api.grad_fn()))
+    key = jax.random.PRNGKey(0)
+    params = replicate(api.init_params(key, cfg), M, perturb=0.005, key=key)
+    state = tr.init(params, seed=0)
+    pipe = TokenPipeline(cfg.vocab_size, seq, batch, M, seed=0)
+    batch_fn = lambda i: jax.tree_util.tree_map(jnp.asarray, pipe.batch(i))
+    return tr, state, batch_fn
+
+
+def _time_steps(tr, state, batch_fn, steps: int):
+    """Steady-state s/step (compile excluded via a warm-up step on the same
+    shapes), the compile cost, and the per-step losses."""
+    t0 = time.perf_counter()
+    warm, _ = tr.step(state, batch_fn(0))
+    jax.block_until_ready(warm.params)
+    wall_first = time.perf_counter() - t0
+    losses = []
+    t0 = time.perf_counter()
+    st = state
+    for i in range(steps):
+        st, m = tr.step(st, batch_fn(i))
+        losses.append(m["loss"])
+    jax.block_until_ready(st.params)
+    wall = time.perf_counter() - t0
+    per_step = wall / steps
+    return per_step, max(wall_first - per_step, 0.0), np.asarray(
+        jax.device_get(losses), np.float64), st
+
+
+def hlo_stream_bound(tr, state, batch_fn) -> dict:
+    """Lower the jitted streaming step, scan the optimized HLO: the largest
+    tensor must be strictly below the flat path's [M, d] f32 matrix."""
+    d = sum(p.size for p in tr.spec.leaves)
+    lowered = jax.jit(tr._raw_step).lower(tr._cell, state, batch_fn(0))
+    text = lowered.compile().as_text()
+    largest = hlo_analysis.largest_tensor_bytes(text)
+    flat_bytes = M * d * 4
+    k = M if tr.neighbors is None else tr.neighbors.k
+    return {
+        "num_nodes": M, "dim": int(d), "chunk": int(tr.spec.chunk),
+        "largest_tensor_bytes": int(largest),
+        "flat_Md_bytes": int(flat_bytes),
+        "MKchunk_bytes": int(M * k * tr.spec.max_block * 4),
+        "largest_over_flat": largest / flat_bytes,
+        "below_flat_matrix": bool(largest < flat_bytes),
+    }
+
+
+def _parity() -> dict:
+    """Flat vs streaming on the tiny transformer: bitwise trajectories."""
+    cfg, seq, batch = _tiny_model()
+    steps = 3
+    tr_f, st_f, bf = _build(cfg, seq, batch, flat=True, chunk=CHUNK)
+    tr_s, st_s, _ = _build(cfg, seq, batch, flat=False, chunk=8192)
+    loss_f = loss_s = None
+    for i in range(steps):
+        st_f, mf = tr_f.step(st_f, bf(i))
+        st_s, ms = tr_s.step(st_s, bf(i))
+        loss_f, loss_s = float(mf["loss"]), float(ms["loss"])
+    identical = bool(jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.all(a == b)), st_f.params, st_s.params)))
+    d = int(stack_flatten(st_f.params)[0].shape[-1])
+    return {
+        "dim": d, "steps": steps, "stream_chunk": 8192,
+        "num_blocks": int(tr_s.spec.num_blocks),
+        "flat_loss": loss_f, "stream_loss": loss_s,
+        "loss_abs_diff": abs(loss_f - loss_s),
+        "bit_identical": identical,
+    }
+
+
+def run(smoke: bool = False) -> dict:
+    steps = 3 if smoke else 5
+    cfg, seq, batch = _model(smoke)
+    n_params = model_api.param_count(cfg)
+
+    parity = _parity()
+
+    tr, state, batch_fn = _build(cfg, seq, batch, flat=False, chunk=CHUNK)
+    hlo = hlo_stream_bound(tr, state, batch_fn)
+    s_per_step, compile_s, losses, _ = _time_steps(tr, state, batch_fn, steps)
+
+    record = {
+        "backend": jax.default_backend(),
+        "config": {
+            "model_params": int(n_params), "num_nodes": M, "b": B,
+            "rule": RULE, "attack": ATTACK, "chunk": CHUNK,
+            "seq": seq, "batch": batch, "steps": steps, "smoke": smoke,
+        },
+        "stream": {
+            "us_per_step": s_per_step * 1e6,
+            "compile_s": compile_s,
+            "first_loss": float(losses[0]), "last_loss": float(losses[-1]),
+            "loss_finite": bool(np.isfinite(losses).all()),
+            "hlo": hlo,
+        },
+        "parity": parity,
+        "acceptance": {
+            "trains_under_attack": bool(np.isfinite(losses).all()),
+            "peak_below_flat_matrix": hlo["below_flat_matrix"],
+            "flat_stream_bit_identical": parity["bit_identical"],
+        },
+    }
+    return record
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (the ~6.6M-param config, fewer steps)")
+    args = ap.parse_args(argv)
+    record = run(smoke=args.smoke)
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+    st = record["stream"]
+    print(f"{record['config']['model_params']/1e6:.1f}M params x {M} nodes "
+          f"under {ATTACK}: {st['us_per_step']/1e6:.2f} s/step, "
+          f"loss {st['first_loss']:.4f} -> {st['last_loss']:.4f}")
+    print(f"largest HLO tensor {st['hlo']['largest_tensor_bytes']:,} B = "
+          f"{st['hlo']['largest_over_flat']:.3f} of the flat [M,d] matrix "
+          f"({st['hlo']['flat_Md_bytes']:,} B)")
+    print(f"parity at d={record['parity']['dim']} "
+          f"({record['parity']['num_blocks']} blocks): "
+          f"bit_identical={record['parity']['bit_identical']}")
+    print("acceptance:", record["acceptance"])
+    print(f"wrote {BENCH_JSON}")
+    if not all(record["acceptance"].values()):
+        raise SystemExit(f"stream acceptance failed: {record['acceptance']}")
+
+
+if __name__ == "__main__":
+    main()

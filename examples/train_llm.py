@@ -1,11 +1,20 @@
 """End-to-end driver: decentralized BRIDGE training of a ~100M-parameter
 transformer for a few hundred steps on the synthetic token pipeline.
 
-This exercises the FULL stack — model zoo config, BRIDGE trainer with
-screening + Byzantine injection, data pipeline, checkpointing — on local
-devices.  At ~100M params x 4 nodes this is CPU-heavy; trim with --small.
+This exercises the FULL stack — model zoo config, chunk-streaming BRIDGE
+(`repro.stream`, the default: screening runs per coordinate block, never
+materializing the flat [M, d] matrix), topology builders, wire codecs,
+observability traces, trust/reputation, Byzantine injection, data pipeline,
+checkpointing — on local devices.  At ~100M params x 4 nodes this is
+CPU-heavy; trim with --small.
 
     PYTHONPATH=src python examples/train_llm.py --steps 200 [--small]
+    PYTHONPATH=src python examples/train_llm.py --small --topology small_world:3 \\
+        --sparse --codec int8 --trust --trace --attack sign_flip
+
+``--flat`` selects the legacy flat-matrix `BridgeTrainer` (small models
+only); ``--resume`` restores the full state — including comm/trust carries —
+from the newest checkpoint, bit-identical to an uninterrupted run.
 """
 import sys, os
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -19,19 +28,40 @@ import jax.numpy as jnp
 
 from repro import checkpoint
 from repro.configs import get_config
-from repro.core import BridgeConfig, BridgeTrainer, erdos_renyi, replicate
+from repro.core import BridgeConfig, BridgeTrainer, replicate
+from repro.core.graph import make_topology
 from repro.data.tokens import TokenPipeline
 from repro.models import api as model_api
+from repro.stream import StreamBridgeTrainer
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--steps", type=int, default=200)
 ap.add_argument("--nodes", type=int, default=4)
 ap.add_argument("--byzantine", type=int, default=1)
 ap.add_argument("--attack", default="random")
+ap.add_argument("--rule", default="trimmed_mean",
+                help="screening rule (streaming: coordinate-wise rules only)")
+ap.add_argument("--topology", default="erdos_renyi:0.9",
+                help="name[:arg] from repro.core.graph.TOPOLOGIES")
+ap.add_argument("--sparse", action="store_true",
+                help="neighbor-indexed [M, K] screening layout")
+ap.add_argument("--codec", default="identity",
+                help="wire codec (identity | int8 | int4 | topk<P> | randk<P>)")
+ap.add_argument("--trace", action="store_true",
+                help="compile screening forensics into the step (repro.obs)")
+ap.add_argument("--trust", action="store_true",
+                help="reputation-weighted screening + eviction (repro.trust)")
+ap.add_argument("--flat", action="store_true",
+                help="legacy flat [M, d] BridgeTrainer instead of repro.stream")
+ap.add_argument("--chunk", type=int, default=1 << 16,
+                help="streaming block width (coordinates per block)")
 ap.add_argument("--seq", type=int, default=256)
 ap.add_argument("--batch", type=int, default=2)
 ap.add_argument("--small", action="store_true", help="~5M params instead of ~100M")
 ap.add_argument("--ckpt", default="/tmp/bridge_llm_ckpt")
+ap.add_argument("--ckpt-every", type=int, default=100)
+ap.add_argument("--resume", action="store_true",
+                help="restore the newest checkpoint (full state incl. carries)")
 args = ap.parse_args()
 
 # a ~100M-param qwen3-family config (12 layers, d=768)
@@ -48,24 +78,55 @@ api = model_api.build(cfg)
 n = model_api.param_count(cfg)
 print(f"model: {cfg.name}-derived, {n/1e6:.1f}M params x {args.nodes} nodes")
 
-topo = erdos_renyi(args.nodes, 0.9, args.byzantine, seed=0)
-bcfg = BridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=args.byzantine,
-                    attack=args.attack, lr=0.02, screen_chunk=1 << 20)
-trainer = BridgeTrainer(bcfg, api.grad_fn())
+trace = trust = None
+if args.trace:
+    from repro.obs.trace import TraceSpec
+
+    trace = TraceSpec()
+if args.trust:
+    from repro.trust.reputation import TrustSpec
+
+    # no echo on the broadcast paths; the streaming engine rejects it anyway
+    trust = TrustSpec(echo=False)
+
+topo = make_topology(args.topology, args.nodes, args.byzantine, seed=0)
+bcfg = BridgeConfig(topology=topo, rule=args.rule, num_byzantine=args.byzantine,
+                    attack=args.attack, codec=args.codec, lr=0.02,
+                    sparse=args.sparse, trace=trace, trust=trust,
+                    screen_chunk=(1 << 20) if args.flat else args.chunk)
+trainer = (BridgeTrainer(bcfg, api.grad_fn()) if args.flat
+           else StreamBridgeTrainer(bcfg, api.grad_fn()))
+mode = "flat" if args.flat else f"stream(chunk={args.chunk})"
+print(f"trainer: {mode}  rule={args.rule}  topology={args.topology}  "
+      f"codec={args.codec}  sparse={args.sparse}  trace={args.trace}  "
+      f"trust={args.trust}")
+
 key = jax.random.PRNGKey(0)
 params = replicate(api.init_params(key, cfg), args.nodes, perturb=0.005, key=key)
 state = trainer.init(params)
+start = 0
+if args.resume:
+    latest = checkpoint.latest_step(args.ckpt)
+    if latest is not None:
+        # template-based restore: the freshly init'ed state provides the
+        # exact pytree (params AND comm/net/trust carries + PRNG key)
+        state, _ = checkpoint.restore(args.ckpt, state, step=latest)
+        start = latest
+        print(f"resumed from step {latest}")
 pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, args.nodes, seed=0)
 
 t0 = time.time()
-for step in range(args.steps):
+for step in range(start, args.steps):
     batch = jax.tree_util.tree_map(jnp.asarray, pipe.batch(step))
     state, metrics = trainer.step(state, batch)
-    if (step + 1) % 10 == 0:
+    if (step + 1) % 10 == 0 or step + 1 == args.steps:
+        extra = ""
+        if args.trust:
+            extra += f"  evicted {float(metrics['trust_evicted_frac']):.2f}"
         print(f"step {step+1:4d}  loss {float(metrics['loss']):.4f}  "
-              f"consensus {float(metrics['consensus_dist']):.3f}  "
-              f"{(time.time()-t0)/(step+1):.2f}s/step", flush=True)
-    if (step + 1) % 100 == 0:
-        path = checkpoint.save(args.ckpt, step + 1, (state.params, state.t))
+              f"consensus {float(metrics['consensus_dist']):.3f}{extra}  "
+              f"{(time.time()-t0)/(step-start+1):.2f}s/step", flush=True)
+    if (step + 1) % args.ckpt_every == 0:
+        path = checkpoint.save(args.ckpt, step + 1, state)
         print(f"checkpoint -> {path}")
 print("done.")

@@ -199,3 +199,17 @@ def max_wire_bits(bank: Sequence[Codec], d: int) -> int:
     """The largest message in the bank — what mailbox rings must be sized
     for when channels charge serialization ticks from wire bits."""
     return max(c.wire_bits(d) for c in bank)
+
+
+def wire_bits_blocks(bank: Sequence[Codec], codec_idx, sizes: Sequence[int]):
+    """Total bits on the wire for one logical message streamed as independent
+    per-block codewords (`repro.stream`): each coordinate block is encoded on
+    its own, so per-message overhead — scale factors, top-k index headers —
+    is paid once per block, and sparsifying codecs keep their budget per
+    block rather than globally.  Summing `wire_bits_bank` over the true
+    (unpadded) block sizes is therefore the exact accounting for the chunked
+    path, not an approximation of the flat one."""
+    total = 0
+    for s in sizes:
+        total = total + wire_bits_bank(bank, codec_idx, s)
+    return total

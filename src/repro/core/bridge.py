@@ -176,17 +176,27 @@ def stack_batches(batch_fn: Callable[[int], Any], num_ticks: int) -> Any:
 
 
 def stack_flatten(params: Any) -> tuple[jax.Array, Callable[[jax.Array], Any]]:
-    """[M, ...] pytree -> ([M, D] matrix, unflatten)."""
+    """[M, ...] pytree -> ([M, D] f32 matrix, unflatten).
+
+    Screening always runs in f32; ``unflatten`` restores each leaf's own
+    storage dtype, so mixed bf16/f32 pytrees round-trip without a silent
+    upcast (regression-pinned by ``tests/test_bridge.py``).  The per-leaf
+    dtypes are captured as *static* values — not by closing over the input
+    leaves — so the closure never pins the original arrays alive across a
+    step.  Note the f32 flat copy itself is the cost this function cannot
+    avoid; `repro.stream` exists so LLM-scale runs never call it.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(params)
     m = leaves[0].shape[0]
     shapes = [l.shape[1:] for l in leaves]
     sizes = [int(np.prod(s)) if s else 1 for s in shapes]
+    dtypes = [jnp.dtype(l.dtype) for l in leaves]
     flat = jnp.concatenate([l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
 
     def unflatten(w: jax.Array) -> Any:
         outs, off = [], 0
-        for shape, size, ref in zip(shapes, sizes, leaves):
-            outs.append(w[:, off : off + size].reshape((m,) + shape).astype(ref.dtype))
+        for shape, size, dtype in zip(shapes, sizes, dtypes):
+            outs.append(w[:, off : off + size].reshape((m,) + shape).astype(dtype))
             off += size
         return jax.tree_util.tree_unflatten(treedef, outs)
 
@@ -721,6 +731,20 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
                            new_adv, new_obs, new_trust), metrics
 
     return step
+
+
+def build_stream_cell_step(grad_fn, spec, adjacency, rules, attacks, **kwargs):
+    """The chunk-streaming twin of `build_cell_step` /
+    `build_cell_runtime_step`: the same attack -> codec -> (exchange ->)
+    screen -> apply tick, executed per coordinate block of a parameter-pytree
+    partition ``spec`` (`repro.stream.blocks.BlockSpec`) so the flat ``[M, d]``
+    matrix of `stack_flatten` never materializes.  Thin delegator — the
+    implementation lives in `repro.stream.engine` (imported lazily; the
+    streaming subsystem imports this module for `BridgeState`/`CellParams`).
+    """
+    from repro.stream.engine import build_stream_cell_step as _impl
+
+    return _impl(grad_fn, spec, adjacency, rules, attacks, **kwargs)
 
 
 class BridgeTrainer:

@@ -692,6 +692,28 @@ def _streams(rule: str, d: int, chunk: int | None) -> bool:
     return rule not in ("krum", "bulyan") and chunk is not None and d > chunk
 
 
+# Rules whose output on a coordinate block equals the same block sliced out of
+# the full-d output — the block-streaming contract of `repro.stream`.  This is
+# strictly stronger than what `_streams` gates: geomedian's Weiszfeld weights
+# and clipped_mean's clipping radii are functions of *full-vector* norms, so
+# chunked evaluation changes their result (only tolerable inside `_apply_rule`
+# because the default ``screen_chunk`` exceeds every experiment's d); the
+# rules here are purely per-coordinate, so block results are bitwise equal.
+STREAMABLE_RULES: frozenset = frozenset(
+    {"trimmed_mean", "median", "mean", "rep_trimmed_mean", "rep_median"})
+
+
+def check_streamable(rules: Sequence[str]) -> None:
+    """Raise for rules whose blockwise result differs from the full-d result
+    (`repro.stream` refuses them instead of silently changing the rule)."""
+    bad = [r for r in rules if r not in STREAMABLE_RULES]
+    if bad:
+        raise ValueError(
+            f"rules {bad} are not coordinate-decomposable and cannot stream "
+            f"over parameter blocks (repro.stream); streamable rules: "
+            f"{sorted(STREAMABLE_RULES)}")
+
+
 def _apply_rule(fn, rule, values, mask_j, self_j, b, chunk):
     """One node's screening over its received value matrix ``values [n, d]``,
     optionally streaming coordinate-wise rules over chunks of the coordinate

@@ -130,5 +130,58 @@ def usable_mask(state: MailboxState, tick: jax.Array, bound: int) -> jax.Array:
     """[M, W] entries that have ever arrived and are at most ``bound`` ticks
     stale — the mask asynchronous screening feeds to the rules.  Written as a
     bound on ``send_tick`` (never as ``tick - NEVER``), so it stays exact at
-    arbitrary tick counts."""
+    arbitrary tick counts.  Duck-typed on ``send_tick`` so the chunk-streaming
+    `BlockMailboxState` shares it (as does `staleness` above)."""
     return (state.send_tick > NEVER) & (state.send_tick >= tick - bound)
+
+
+# ---------------------------------------------------------------------------
+# Per-block mailbox (repro.stream)
+# ---------------------------------------------------------------------------
+#
+# The chunk-streaming runtime stores payloads per parameter *leaf* instead of
+# one [M, W, d] matrix, and updates them one coordinate block at a time inside
+# the scan-over-chunks loop — the only payload tensors live at any point of
+# the streaming screen are [M, W, chunk] slices.  Metadata stays a single
+# shared [M, W] ``send_tick``: all blocks of a tick's message travel the same
+# (broadcast) channel together, so there is exactly one arrival event per
+# edge per tick and `staleness` / `usable_mask` / `generation_match` apply
+# unchanged.  Total resident payload memory still sums to O(M * W * d) — a
+# mailbox must hold the newest copy of every coordinate — the win is that no
+# *transient* full-d tensor (flat views, screening temporaries) exists.
+
+
+class BlockMailboxState(NamedTuple):
+    send_tick: jax.Array  # [M, W] int32 tick the stored payload was sent
+    values: tuple  # per-leaf [M, W, s_l] f32 newest delivered payloads
+
+
+def init_block_mailbox(num_nodes: int, sizes: tuple[int, ...], *,
+                       width: int | None = None) -> BlockMailboxState:
+    """``sizes`` are the per-leaf coordinate counts (`BlockSpec` leaf sizes);
+    ``width`` as in `init_mailbox`."""
+    m = num_nodes
+    w = num_nodes if width is None else int(width)
+    return BlockMailboxState(
+        send_tick=jnp.full((m, w), NEVER, jnp.int32),
+        values=tuple(jnp.zeros((m, w, s), jnp.float32) for s in sizes),
+    )
+
+
+def stamp(send_tick: jax.Array, arrived: jax.Array, tick: jax.Array) -> jax.Array:
+    """Advance the shared metadata for this tick's arrivals (once per tick,
+    outside the block loop)."""
+    return jnp.where(arrived, tick, send_tick)
+
+
+def push_block(values_leaf: jax.Array, msgs_blk: jax.Array, arrived: jax.Array,
+               start) -> jax.Array:
+    """Write one coordinate block of this tick's arrivals into a leaf's
+    payload store: ``msgs_blk [M, W, c]`` lands at column ``start`` of
+    ``values_leaf [M, W, s]`` on edges where ``arrived [M, W]``; dropped
+    edges keep the previous (now stale) payload.  Slot columns update in
+    place, so the peak live tensor of the push is the block itself."""
+    m, w, c = msgs_blk.shape
+    cur = jax.lax.dynamic_slice(values_leaf, (0, 0, start), (m, w, c))
+    blk = jnp.where(arrived[:, :, None], msgs_blk, cur)
+    return jax.lax.dynamic_update_slice(values_leaf, blk, (0, 0, start))

@@ -178,6 +178,16 @@ def update(spec: TraceSpec, st: TraceState, *, t, loss, consensus,
     return st._replace(**kw)
 
 
+# Metric key of the per-block trim-fraction stream the chunk-streaming step
+# (`repro.stream`) emits alongside the scalar ``obs_trim_frac``: one [NB]
+# vector per tick — the live-edge-mean trim fraction of each coordinate block
+# in global block order.  A layer whose block suddenly trims everything while
+# the others stay quiet is a *localized* payload attack the scalar would
+# dilute away; `repro.sim.results` registers a mean reducer for the key so
+# grid collection folds the [T, NB] stream without warning.
+BLOCK_TRIM_STREAM = "stream_block_trim_frac"
+
+
 def staleness_of(net, t):
     """Delivered-message ages ``[M, W]`` of a mailbox-style net state (duck
     typed on ``send_tick``), or None when the runtime carries none."""

@@ -59,6 +59,10 @@ for _k in ("loss", "consensus_dist", "ef_residual_norm", "rho"):
 for _k in ("delivered_frac", "mean_staleness", "screened_frac", "usable_in",
            "wire_bits_per_edge", "wire_bytes_total", "active_links"):
     register_mean(_k)
+# chunk-streaming per-block trim stream (repro.stream / repro.obs): a [T, NB]
+# stream per cell; the mean reducer collapses ticks AND blocks, matching the
+# scalar obs_trim_frac semantics at NB = 1
+register_mean("stream_block_trim_frac")
 
 
 def collect(cells: Sequence[Cell], metrics: dict, *, meta: dict | None = None) -> "GridResult":

@@ -1,0 +1,20 @@
+"""repro.stream — chunk-streaming BRIDGE over parameter pytrees.
+
+Screens the real model zoo (``src/repro/models``) under attack without ever
+materializing `stack_flatten`'s flat ``[M, d]`` matrix: a `BlockSpec`
+partitions the stacked parameter pytree into per-leaf coordinate blocks, and
+the tick loops attack -> codec -> (exchange ->) screen -> apply over blocks,
+keeping peak live state at ``[M, K, chunk]`` even at LLM ``d``.  See
+`repro.stream.engine` for the bit-identity contracts vs the flat path.
+"""
+from repro.stream.blocks import BlockSpec, LeafPlan
+from repro.stream.engine import StreamChannelConfig, build_stream_cell_step
+from repro.stream.trainer import StreamBridgeTrainer
+
+__all__ = [
+    "BlockSpec",
+    "LeafPlan",
+    "StreamChannelConfig",
+    "StreamBridgeTrainer",
+    "build_stream_cell_step",
+]

@@ -1,0 +1,128 @@
+"""Static coordinate-block partitioning of stacked parameter pytrees.
+
+`BlockSpec` is the compile-time plan the chunk-streaming step iterates over:
+every leaf of an ``[M, ...]`` pytree is viewed as an ``[M, s]`` coordinate
+matrix and cut into blocks of at most ``chunk`` coordinates.  Blocks never
+span leaves — a leaf's dtype, and the per-leaf error-feedback / mailbox
+carries keyed off it, stay uniform within a block — so the partition is
+"per-leaf, then per-``chunk``-columns", and the concatenation of all blocks
+in global order visits exactly the coordinates of `repro.core.bridge.
+stack_flatten`, in the same order (pinned by ``tests/test_stream.py``).
+
+Everything here is host-side static: block starts/sizes are Python ints baked
+into the jitted streaming step, which is what lets the tail block of each
+leaf run at its exact (unpadded) size — no padded coordinates ever enter
+screening, so per-block trim fractions and wire-bit counts are exact.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class LeafPlan(NamedTuple):
+    """One leaf's slice of the global coordinate space (all fields static)."""
+
+    shape: tuple  # trailing (per-node) shape of the leaf
+    dtype: Any  # per-leaf storage dtype, preserved on write-back
+    size: int  # prod(shape) — coordinates per node in this leaf
+    offset: int  # global coordinate offset (stack_flatten order)
+    block0: int  # global index of this leaf's first block
+    num_full: int  # number of chunk-sized blocks
+    tail: int  # size of the final partial block (0 when size % chunk == 0)
+
+    @property
+    def num_blocks(self) -> int:
+        return self.num_full + (1 if self.tail else 0)
+
+
+class BlockSpec(NamedTuple):
+    """The full partition: ``treedef`` + per-leaf plans + the chunk width."""
+
+    treedef: Any
+    leaves: tuple[LeafPlan, ...]
+    chunk: int
+    num_nodes: int
+
+    @classmethod
+    def from_params(cls, params: Any, chunk: int | None) -> "BlockSpec":
+        """Plan the partition of a stacked ``[M, ...]`` pytree.  ``chunk`` is
+        the maximum coordinates per block; ``None`` means one block per leaf
+        (pure per-leaf streaming)."""
+        leaves, treedef = jax.tree_util.tree_flatten(params)
+        if not leaves:
+            raise ValueError("empty parameter pytree")
+        m = leaves[0].shape[0]
+        plans, offset, block0 = [], 0, 0
+        for leaf in leaves:
+            if leaf.shape[:1] != (m,):
+                raise ValueError(
+                    f"leaf leading axis {leaf.shape[:1]} != node axis ({m},)")
+            if not jnp.issubdtype(leaf.dtype, jnp.floating):
+                raise ValueError(
+                    f"non-float leaf dtype {leaf.dtype}: screening is defined "
+                    f"over real coordinates only")
+            size = int(np.prod(leaf.shape[1:])) if leaf.shape[1:] else 1
+            c = size if chunk is None else min(int(chunk), size)
+            if c < 1:
+                raise ValueError(f"chunk must be >= 1, got {chunk}")
+            plan = LeafPlan(shape=tuple(leaf.shape[1:]), dtype=leaf.dtype,
+                            size=size, offset=offset, block0=block0,
+                            num_full=size // c, tail=size % c)
+            plans.append(plan)
+            offset += size
+            block0 += plan.num_blocks
+        return cls(treedef=treedef, leaves=tuple(plans),
+                   chunk=(max(p.size for p in plans) if chunk is None
+                          else int(chunk)),
+                   num_nodes=m)
+
+    @property
+    def total_dim(self) -> int:
+        return sum(p.size for p in self.leaves)
+
+    @property
+    def num_blocks(self) -> int:
+        return sum(p.num_blocks for p in self.leaves)
+
+    @property
+    def max_block(self) -> int:
+        """Largest actual block width (<= chunk) — the streaming path's peak
+        per-block coordinate count, the ``chunk`` of its [M, K, chunk] bound."""
+        return max(min(self.chunk, p.size) for p in self.leaves)
+
+    def block_sizes(self) -> tuple[int, ...]:
+        """Per-block coordinate counts in global block order — what the
+        per-block wire-bit accounting sums over."""
+        out: list[int] = []
+        for p in self.leaves:
+            c = min(self.chunk, p.size)
+            out.extend([c] * p.num_full)
+            if p.tail:
+                out.append(p.tail)
+        return tuple(out)
+
+    def leaf_mats(self, params: Any) -> list[jax.Array]:
+        """The ``[M, s]`` coordinate-matrix views of a matching pytree (pure
+        reshapes in the leaf's own dtype — no f32 upcast, no concatenation)."""
+        leaves = jax.tree_util.tree_flatten(params)[0]
+        if len(leaves) != len(self.leaves):
+            raise ValueError("pytree does not match this BlockSpec")
+        return [l.reshape(self.num_nodes, -1) for l in leaves]
+
+    def unflatten(self, mats: list[jax.Array]) -> Any:
+        """Per-leaf ``[M, s]`` matrices back to the original pytree (dtypes
+        are whatever the matrices carry — the streaming step writes each
+        leaf's buffer in its own storage dtype)."""
+        outs = [mat.reshape((self.num_nodes,) + p.shape)
+                for mat, p in zip(mats, self.leaves)]
+        return jax.tree_util.tree_unflatten(self.treedef, outs)
+
+
+# BlockSpec is structural data (all-static NamedTuples): registering it as a
+# zero-leaf pytree node would collide with NamedTuple flattening, so the
+# streaming step simply closes over it — it is part of the program, never an
+# operand, exactly like the rule/attack banks.

@@ -1,0 +1,145 @@
+"""`StreamBridgeTrainer` — the `BridgeTrainer` twin that screens parameter
+pytrees block by block (`repro.stream.engine`) instead of flattening them.
+
+It consumes the same `BridgeConfig`; ``screen_chunk`` is reinterpreted as the
+streaming block width (coordinates per block, blocks never spanning leaves),
+and ``sparse=True`` selects the neighbor-indexed gather exactly as on the
+flat path.  The optional ``channel`` argument switches to the streaming
+network path (per-edge drops + staleness over a per-block mailbox).
+
+Because the block partition is a property of the parameter *pytree*, the
+jitted step is built lazily on the first `init` call — unlike the flat
+trainer, whose step only depends on the config.  Subsequent `init` calls
+with a structurally different pytree rebuild the step.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm import codec as codec_lib
+from repro.comm import exchange as comm_lib
+from repro.core import byzantine as byz_lib
+from repro.core import screening
+from repro.core.bridge import BridgeConfig, BridgeState, BridgeTrainer
+from repro.core.neighbors import NeighborTable
+from repro.net import mailbox as mb
+from repro.stream.blocks import BlockSpec
+from repro.stream.engine import StreamChannelConfig, build_stream_cell_step
+
+
+class StreamBridgeTrainer:
+    """Chunk-streaming BRIDGE over parameter pytrees.  API-compatible with
+    `BridgeTrainer` (``init`` / ``step`` / ``run`` / ``_raw_step`` /
+    ``_cell``); bit-identity contracts vs the flat trainer are documented on
+    `repro.stream.engine` and pinned by ``tests/test_stream.py``."""
+
+    def __init__(self, config: BridgeConfig, grad_fn: Callable, *,
+                 channel: StreamChannelConfig | None = None):
+        config.topology.validate_for_rule(config.rule)
+        screening.check_streamable((config.rule,))
+        if config.adversary != "none":
+            raise NotImplementedError(
+                "adaptive adversaries observe the full flat trajectory and are "
+                "not supported on the streaming path; use BridgeTrainer")
+        if channel is not None and config.trust is not None and config.trust.echo:
+            raise ValueError(
+                "the echo protocol digests whole messages and cannot stream; "
+                "use TrustSpec(echo=False) with the streaming network path")
+        self.config = config
+        self.grad_fn = grad_fn
+        self.channel = channel
+        m = config.topology.num_nodes
+        nbyz = min(config.num_byzantine, m)
+        if (config.attack == "none" and config.adversary == "none") or nbyz == 0:
+            self.byz_mask = jnp.zeros((m,), dtype=bool)
+        else:
+            self.byz_mask = byz_lib.pick_byzantine_mask(m, nbyz, config.byzantine_seed)
+        self.codec = codec_lib.get_codec(config.codec)
+        # the network path is neighbor-indexed by construction; the broadcast
+        # path follows the config's sparse flag like the flat trainer
+        self.neighbors = None
+        if channel is not None or config.sparse:
+            self.neighbors = NeighborTable.from_adjacency(config.topology.adjacency)
+        self._attack = byz_lib.get_attack(config.attack)
+        self._wire_bank = byz_lib.wire_attack_bank((config.attack,))
+        self._codec_bank = codec_lib.codec_bank((config.codec,))
+        self._lossless = (comm_lib.bank_is_lossless(self._codec_bank)
+                          and all(a.name == "none" for a in self._wire_bank))
+        self._cell = BridgeTrainer.cell_params(self)  # same single-entry banks
+        self.spec: BlockSpec | None = None
+        self._raw_step = None
+        self._jit_step = None
+
+    # the flat trainer's cell_params reads self._adv_bank; streaming has none
+    _adv_bank = None
+
+    @property
+    def honest_mask(self) -> jax.Array:
+        return ~self.byz_mask
+
+    def cell_params(self):
+        return BridgeTrainer.cell_params(self)
+
+    def _build(self, params: Any) -> None:
+        spec = BlockSpec.from_params(params, self.config.screen_chunk)
+        if self.spec is not None and spec == self.spec:
+            return
+        self.spec = spec
+        self._raw_step = build_stream_cell_step(
+            self.grad_fn, spec,
+            None if self.neighbors is not None else self.config.topology.adjacency,
+            (self.config.rule,), (self._attack,),
+            codecs=(self.config.codec,), wire_attacks=self._wire_bank,
+            neighbors=self.neighbors, channel=self.channel,
+        )
+        self._jit_step = jax.jit(self._raw_step)
+
+    def init(self, params: Any, seed: int = 0) -> BridgeState:
+        m = self.config.topology.num_nodes
+        lead = jax.tree_util.tree_leaves(params)[0].shape[0]
+        if lead != m:
+            raise ValueError(f"params leading axis {lead} != num_nodes {m}")
+        self._build(params)
+        sizes = tuple(p.size for p in self.spec.leaves)
+        comm = net = None
+        if not self._lossless:
+            # per-leaf EF carries: one codec state per sender per leaf (the
+            # streaming wire is a broadcast codeword per sender, per block)
+            comm = tuple(comm_lib.init_residual((m, s), (self.codec,))
+                         for s in sizes)
+        if self.channel is not None:
+            net = mb.init_block_mailbox(m, sizes, width=self.neighbors.k)
+        obs = trust = None
+        width = m if self.neighbors is None else self.neighbors.k
+        if self.config.trace is not None:
+            from repro.obs import trace as obs_trace
+
+            obs = obs_trace.init_state(self.config.trace, m, width)
+        if self.config.trust is not None:
+            from repro.trust import reputation as trust_lib
+
+            trust = trust_lib.init_state(self.config.trust, m, width)
+        return BridgeState(params=params, t=jnp.zeros((), jnp.int32),
+                           key=jax.random.PRNGKey(seed), net=net, comm=comm,
+                           adv=None, obs=obs, trust=trust)
+
+    def step(self, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
+        if self._jit_step is None:
+            self._build(state.params)
+        return self._jit_step(self._cell, state, batch)
+
+    def run(self, state: BridgeState, batch_fn: Callable[[int], Any],
+            num_steps: int, eval_fn: Callable | None = None,
+            eval_every: int = 0) -> tuple[BridgeState, list[dict]]:
+        history = []
+        for i in range(num_steps):
+            state, metrics = self.step(state, batch_fn(i))
+            if eval_fn is not None and eval_every and (i + 1) % eval_every == 0:
+                metrics = dict(metrics)
+                metrics.update(eval_fn(state))
+                metrics["step"] = i + 1
+                history.append(jax.device_get(metrics))
+        return state, history

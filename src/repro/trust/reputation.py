@@ -135,6 +135,20 @@ def edge_weights(spec: TrustSpec, st: TrustState) -> jax.Array:
     return jnp.where(st.evicted, 0.0, w)
 
 
+def accumulate_trim(acc: jax.Array, trim_blk: jax.Array, frac: float) -> jax.Array:
+    """Fold one coordinate block's ``[M, W]`` trim fractions into a tick's
+    evidence accumulator (`repro.stream`): ``frac`` is the static weight
+    ``block_size / d``, so the weights over a tick's blocks sum to 1 and the
+    accumulated matrix is the all-coordinate trim fraction `update` expects —
+    screening evidence is gathered *across* chunks but folded into the
+    reputation carry exactly once per tick, keeping the carry one ``[M, W]``
+    matrix regardless of d.  With a single block ``frac == 1.0`` and the fold
+    is bitwise the identity (``x * 1.0 + 0.0``), which is what lets the
+    streaming trust path match the flat decide path bit-for-bit at small d
+    (pinned by ``tests/test_stream.py``)."""
+    return acc + trim_blk * frac
+
+
 def update(spec: TrustSpec, st: TrustState, *, t, trim_frac, live,
            echo_evidence=None) -> TrustState:
     """Fold one tick of evidence into the carry.  ``trim_frac``/``live`` are

@@ -1,0 +1,425 @@
+"""repro.stream — chunk-streaming pytree screening.
+
+Pins the subsystem's contracts:
+
+* `BlockSpec` partitions cover every coordinate exactly once, in
+  `stack_flatten` order, with exact (unpadded) tail blocks.
+* **Single block** (one leaf, chunk >= d): bitwise equality with the flat
+  `BridgeTrainer` across the full rule x attack x codec product, including
+  stochastic attacks and stochastic-rounding codecs (the per-block PRNG key
+  is the step subkey itself).
+* **Many blocks**: bitwise equality for every deterministic attack/codec
+  combination, on multi-leaf mixed-dtype pytrees, at any chunk width.
+* Trust/forensics: the decide path streams (per-block trim evidence folds
+  into one [M, W] carry) — bitwise vs flat at a single block, and the
+  trajectory stays exact under chunking for deterministic combos.
+* The network path: ideal channel == streaming broadcast bitwise; lossy
+  channels deliver/starve sanely.
+* HLO: the streaming step's largest tensor stays strictly below the flat
+  [M, d] f32 matrix at multi-leaf d — the [M, K, chunk] memory claim.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import screening
+from repro.core.bridge import BridgeConfig, BridgeTrainer, replicate, stack_flatten
+from repro.core.graph import erdos_renyi
+from repro.stream import BlockSpec, StreamBridgeTrainer, StreamChannelConfig
+
+M, B = 8, 1
+TOPO = erdos_renyi(M, 0.9, B, seed=1)
+
+
+def _params_single(d=24):
+    p0 = {"w": jax.random.normal(jax.random.PRNGKey(0), (d,))}
+    return replicate(p0, M, perturb=0.1, key=jax.random.PRNGKey(1))
+
+
+def _params_multi():
+    """Three leaves, mixed bf16/f32, sizes that don't divide small chunks."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    p0 = {
+        "emb": jax.random.normal(k1, (5, 3), jnp.float32),
+        "w": jax.random.normal(k2, (7,), jnp.bfloat16),
+        "b": jax.random.normal(k3, ()),
+    }
+    return replicate(p0, M, perturb=0.1, key=jax.random.PRNGKey(1))
+
+
+def _task(params):
+    targets = jax.tree_util.tree_map(
+        lambda l: jax.random.normal(jax.random.PRNGKey(9), l.shape,
+                                    jnp.float32).astype(l.dtype), params)
+
+    def grad_fn(p, batch):
+        diffs = jax.tree_util.tree_map(
+            lambda a, t: a.astype(jnp.float32) - t.astype(jnp.float32), p, batch)
+        loss = sum(0.5 * jnp.sum(d * d) for d in jax.tree_util.tree_leaves(diffs))
+        grads = jax.tree_util.tree_map(lambda d, l: d.astype(l.dtype), diffs, p)
+        return loss, grads
+
+    return grad_fn, targets
+
+
+def _run(trainer, params, batch, steps=4):
+    state = trainer.init(params, seed=0)
+    metrics = None
+    for _ in range(steps):
+        state, metrics = trainer.step(state, batch)
+    return state, metrics
+
+
+def _bitwise(a, b):
+    return jax.tree_util.tree_all(
+        jax.tree_util.tree_map(lambda x, y: bool(jnp.all(x == y)), a, b))
+
+
+def _flat_vs_stream(params, steps=4, channel=None, flat_chunk=None, **cfg_kw):
+    cfg_kw.setdefault("lr", 0.05)
+    cfg_kw.setdefault("num_byzantine", B)
+    grad_fn, targets = _task(params)
+    cfg = BridgeConfig(topology=TOPO, **cfg_kw)
+    # the flat reference may need an unchunked screen (e.g. forensics rejects
+    # coordinate streaming — the restriction repro.stream lifts)
+    fcfg = (cfg if flat_chunk is None
+            else dataclasses.replace(cfg, screen_chunk=flat_chunk))
+    fs, fm = _run(BridgeTrainer(fcfg, grad_fn), params, targets, steps)
+    ss, sm = _run(StreamBridgeTrainer(cfg, grad_fn, channel=channel),
+                  params, targets, steps)
+    return fs, ss, fm, sm
+
+
+# ---------------------------------------------------------------------------
+# BlockSpec
+# ---------------------------------------------------------------------------
+
+
+def test_blockspec_partition_covers_stack_flatten_order():
+    params = _params_multi()
+    spec = BlockSpec.from_params(params, 4)
+    sizes = spec.block_sizes()
+    assert sum(sizes) == spec.total_dim == 15 + 7 + 1
+    assert len(sizes) == spec.num_blocks
+    assert max(sizes) == spec.max_block <= 4
+    # per-leaf offsets line up with stack_flatten's concatenation order
+    offsets = [p.offset for p in spec.leaves]
+    leaf_sizes = [p.size for p in spec.leaves]
+    assert offsets == [0, leaf_sizes[0], leaf_sizes[0] + leaf_sizes[1]]
+    # tails are exact, never padded
+    for p in spec.leaves:
+        c = min(spec.chunk, p.size)
+        assert p.num_full * c + p.tail == p.size
+
+
+def test_blockspec_chunk_none_is_per_leaf():
+    params = _params_multi()
+    spec = BlockSpec.from_params(params, None)
+    assert spec.num_blocks == len(spec.leaves)
+    assert all(p.num_full == 1 and p.tail == 0 for p in spec.leaves)
+
+
+def test_blockspec_rejects_int_leaves():
+    bad = {"w": jnp.zeros((M, 4), jnp.int32)}
+    with pytest.raises(ValueError, match="non-float"):
+        BlockSpec.from_params(bad, 4)
+
+
+def test_streaming_rejects_vector_rules():
+    with pytest.raises(ValueError, match="not coordinate-decomposable"):
+        screening.check_streamable(("trimmed_mean", "krum"))
+    grad_fn, _ = _task(_params_single())
+    cfg = BridgeConfig(topology=erdos_renyi(M, 1.0, B, seed=1), rule="geomedian",
+                       num_byzantine=B)
+    with pytest.raises(ValueError, match="not coordinate-decomposable"):
+        StreamBridgeTrainer(cfg, grad_fn)
+
+
+# ---------------------------------------------------------------------------
+# Bit-identity vs the flat path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("attack", ["none", "random", "sign_flip", "alie",
+                                    "same_value", "shift"])
+def test_single_block_bitwise_all_attacks(attack):
+    params = _params_single()
+    fs, ss, _, _ = _flat_vs_stream(params, attack=attack, rule="trimmed_mean")
+    assert _bitwise(fs.params, ss.params)
+
+
+@pytest.mark.parametrize("codec", ["identity", "int8", "topk50", "randk25"])
+def test_single_block_bitwise_all_codecs(codec):
+    params = _params_single()
+    fs, ss, fm, sm = _flat_vs_stream(params, attack="sign_flip", codec=codec,
+                                     rule="trimmed_mean")
+    assert _bitwise(fs.params, ss.params)
+    assert float(fm["wire_bits_per_edge"]) == float(sm["wire_bits_per_edge"])
+    assert np.isclose(float(fm["ef_residual_norm"]), float(sm["ef_residual_norm"]))
+
+
+@pytest.mark.parametrize("rule", ["trimmed_mean", "median", "mean"])
+def test_single_block_bitwise_rules_stochastic(rule):
+    params = _params_single()
+    fs, ss, _, _ = _flat_vs_stream(params, attack="random", rule=rule)
+    assert _bitwise(fs.params, ss.params)
+
+
+@pytest.mark.parametrize("attack", ["none", "sign_flip", "alie", "same_value",
+                                    "shift"])
+def test_multi_block_bitwise_deterministic_attacks(attack):
+    params = _params_multi()
+    fs, ss, _, _ = _flat_vs_stream(params, attack=attack, rule="trimmed_mean",
+                                   screen_chunk=4)
+    assert _bitwise(fs.params, ss.params)
+    # dtypes preserved leaf-for-leaf (the streaming path inherits the
+    # stack_flatten mixed-dtype guarantee by construction)
+    for fl, sl in zip(jax.tree_util.tree_leaves(fs.params),
+                      jax.tree_util.tree_leaves(ss.params)):
+        assert fl.dtype == sl.dtype
+
+
+@pytest.mark.parametrize("chunk", [1, 5, 64])
+def test_chunk_width_invariance(chunk):
+    """Deterministic combos give the same trajectory at ANY chunk width."""
+    params = _params_multi()
+    fs, ss, _, _ = _flat_vs_stream(params, attack="alie", rule="median",
+                                   screen_chunk=chunk)
+    assert _bitwise(fs.params, ss.params)
+
+
+def test_sparse_streaming_bitwise():
+    params = _params_single()
+    fs, ss, _, _ = _flat_vs_stream(params, attack="random", rule="trimmed_mean",
+                                   sparse=True)
+    assert _bitwise(fs.params, ss.params)
+
+
+def test_multi_block_sparse_deterministic_bitwise():
+    params = _params_multi()
+    fs, ss, _, _ = _flat_vs_stream(params, attack="sign_flip",
+                                   rule="trimmed_mean", sparse=True,
+                                   screen_chunk=3)
+    assert _bitwise(fs.params, ss.params)
+
+
+# ---------------------------------------------------------------------------
+# Trust / forensics on the streaming path
+# ---------------------------------------------------------------------------
+
+
+def test_trust_single_block_bitwise():
+    from repro.trust.reputation import TrustSpec
+
+    params = _params_single()
+    fs, ss, fm, sm = _flat_vs_stream(
+        params, attack="sign_flip", rule="rep_trimmed_mean", sparse=True,
+        trust=TrustSpec(echo=False))
+    assert _bitwise(fs.params, ss.params)
+    assert float(fm["trust_evicted_frac"]) == float(sm["trust_evicted_frac"])
+
+
+def test_trust_multi_block_deterministic_bitwise():
+    """Chunked trim evidence folds to the exact all-coordinate fraction
+    (static block/d weights summing to 1), so even the *feedback* trajectory
+    — reputation weights into the next tick's screening — stays close to the
+    flat decide path; with the per-tick evidence aggregated from exact block
+    fractions the trajectories agree to float tolerance."""
+    from repro.trust.reputation import TrustSpec
+
+    params = _params_multi()
+    fs, ss, _, _ = _flat_vs_stream(
+        params, attack="sign_flip", rule="rep_trimmed_mean", sparse=True,
+        trust=TrustSpec(echo=False), screen_chunk=4, flat_chunk=1 << 20)
+    for fl, sl in zip(jax.tree_util.tree_leaves(fs.params),
+                      jax.tree_util.tree_leaves(ss.params)):
+        np.testing.assert_allclose(np.asarray(fl, np.float32),
+                                   np.asarray(sl, np.float32),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_forensics_streams_and_emits_block_stream():
+    from repro.obs.trace import BLOCK_TRIM_STREAM, TraceSpec
+
+    params = _params_multi()
+    grad_fn, targets = _task(params)
+    cfg = BridgeConfig(topology=TOPO, rule="trimmed_mean", num_byzantine=B,
+                       attack="sign_flip", lr=0.05, screen_chunk=4,
+                       trace=TraceSpec())
+    tr = StreamBridgeTrainer(cfg, grad_fn)
+    state, metrics = _run(tr, params, targets, steps=2)
+    nb = tr.spec.num_blocks
+    assert metrics[BLOCK_TRIM_STREAM].shape == (nb,)
+    assert "obs_trim_frac" in metrics
+    # forensics stays bit-inert for the trajectory, chunked or not
+    cfg_off = BridgeConfig(topology=TOPO, rule="trimmed_mean", num_byzantine=B,
+                           attack="sign_flip", lr=0.05, screen_chunk=4)
+    state_off, _ = _run(StreamBridgeTrainer(cfg_off, grad_fn), params, targets,
+                        steps=2)
+    assert _bitwise(state.params, state_off.params)
+    # flat forensics would refuse to stream at this d/chunk; streaming's
+    # per-block decide path is exactly what lifts the restriction
+    with pytest.raises(ValueError, match="forensics cannot stream"):
+        screening.check_decide_streams(("trimmed_mean",), 23, 4)
+
+
+def test_trust_rejects_echo_on_network_path():
+    from repro.trust.reputation import TrustSpec
+
+    grad_fn, _ = _task(_params_single())
+    cfg = BridgeConfig(topology=TOPO, rule="rep_trimmed_mean", num_byzantine=B,
+                       attack="sign_flip", trust=TrustSpec(echo=True))
+    with pytest.raises(ValueError, match="echo"):
+        StreamBridgeTrainer(cfg, grad_fn, channel=StreamChannelConfig())
+
+
+def test_streaming_rejects_adversaries():
+    grad_fn, _ = _task(_params_single())
+    cfg = BridgeConfig(topology=TOPO, rule="trimmed_mean", num_byzantine=B,
+                       attack="none", adversary="ipm")
+    with pytest.raises(NotImplementedError):
+        StreamBridgeTrainer(cfg, grad_fn)
+
+
+# ---------------------------------------------------------------------------
+# Network path (per-block mailbox)
+# ---------------------------------------------------------------------------
+
+
+def test_network_ideal_channel_matches_broadcast():
+    params = _params_multi()
+    grad_fn, targets = _task(params)
+    cfg = BridgeConfig(topology=TOPO, rule="trimmed_mean", num_byzantine=B,
+                       attack="sign_flip", lr=0.05, screen_chunk=4)
+    sync, _ = _run(StreamBridgeTrainer(cfg, grad_fn), params, targets)
+    net, nm = _run(StreamBridgeTrainer(cfg, grad_fn,
+                                       channel=StreamChannelConfig(drop_prob=0.0)),
+                   params, targets)
+    assert _bitwise(sync.params, net.params)
+    assert float(nm["delivered_frac"]) == 1.0
+    assert float(nm["screened_frac"]) == 1.0
+
+
+def test_network_drop_channel_trains_and_reports():
+    params = _params_multi()
+    grad_fn, targets = _task(params)
+    cfg = BridgeConfig(topology=TOPO, rule="trimmed_mean", num_byzantine=B,
+                       attack="sign_flip", lr=0.05, screen_chunk=4)
+    ch = StreamChannelConfig(drop_prob=0.4, staleness_bound=2)
+    state, m = _run(StreamBridgeTrainer(cfg, grad_fn, channel=ch),
+                    params, targets, steps=6)
+    assert np.isfinite(float(m["loss"]))
+    assert 0.0 < float(m["delivered_frac"]) < 1.0
+    assert float(m["mean_staleness"]) >= 0.0
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+
+
+def test_network_mailbox_is_per_leaf():
+    from repro.net.mailbox import BlockMailboxState
+
+    params = _params_multi()
+    grad_fn, targets = _task(params)
+    cfg = BridgeConfig(topology=TOPO, rule="trimmed_mean", num_byzantine=B,
+                       attack="sign_flip", lr=0.05, screen_chunk=4)
+    tr = StreamBridgeTrainer(cfg, grad_fn, channel=StreamChannelConfig())
+    state = tr.init(params, seed=0)
+    assert isinstance(state.net, BlockMailboxState)
+    sizes = tuple(v.shape[-1] for v in state.net.values)
+    assert sizes == tuple(p.size for p in tr.spec.leaves)
+    assert all(v.shape[:2] == (M, tr.neighbors.k) for v in state.net.values)
+
+
+# ---------------------------------------------------------------------------
+# HLO memory bound
+# ---------------------------------------------------------------------------
+
+
+def test_hlo_largest_tensor_below_flat_matrix():
+    """At multi-leaf d, the streaming step's largest tensor is strictly below
+    the flat path's [M, d] f32 matrix — the tensors that remain are leaf- or
+    block-scale."""
+    from repro.launch import hlo_analysis
+
+    m, per_leaf, leaves = 6, 40_000, 4
+    d = per_leaf * leaves
+    keys = jax.random.split(jax.random.PRNGKey(0), leaves)
+    p0 = {f"l{i}": jax.random.normal(k, (per_leaf,)) for i, k in enumerate(keys)}
+    params = replicate(p0, m, perturb=0.1, key=jax.random.PRNGKey(1))
+    grad_fn, targets = _task(params)
+    cfg = BridgeConfig(topology=erdos_renyi(m, 1.0, 1, seed=0),
+                       rule="trimmed_mean", num_byzantine=1,
+                       attack="sign_flip", lr=0.05, screen_chunk=8192,
+                       sparse=True)
+    tr = StreamBridgeTrainer(cfg, grad_fn)
+    state = tr.init(params, seed=0)
+    text = (jax.jit(tr._raw_step)
+            .lower(tr._cell, state, targets).compile().as_text())
+    largest = hlo_analysis.largest_tensor_bytes(text)
+    flat_bytes = m * d * 4
+    assert largest < flat_bytes, (largest, flat_bytes)
+    # and the bound is leaf/block-scale: well under half the flat matrix
+    assert largest <= max(m * per_leaf * 4, m * tr.neighbors.k * 8192 * 4) * 2
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing mid-run: comm/trust carries survive save/restore
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_restores_stream_carries_bitwise(tmp_path):
+    """Save the FULL streaming state (params + per-leaf EF residuals + trust
+    reputation + PRNG key) after 3 ticks, restore into a fresh-init template,
+    run 3 more — bitwise equal to the uninterrupted 6-tick run.  This is the
+    contract `train_llm.py --resume` relies on."""
+    from repro import checkpoint
+    from repro.trust.reputation import TrustSpec
+
+    params = _params_single()
+    grad_fn, targets = _task(params)
+    cfg = BridgeConfig(topology=TOPO, rule="rep_trimmed_mean", num_byzantine=B,
+                       attack="sign_flip", codec="int8", sparse=True, lr=0.05,
+                       trust=TrustSpec(echo=False))
+    tr = StreamBridgeTrainer(cfg, grad_fn)
+
+    full = tr.init(params, seed=0)
+    for _ in range(6):
+        full, _ = tr.step(full, targets)
+
+    state = tr.init(params, seed=0)
+    for _ in range(3):
+        state, _ = tr.step(state, targets)
+    assert state.comm is not None and state.trust is not None
+    checkpoint.save(str(tmp_path), 3, state)
+
+    template = StreamBridgeTrainer(cfg, grad_fn).init(params, seed=0)
+    resumed, step = checkpoint.restore(str(tmp_path), template)
+    assert step == 3
+    assert _bitwise(resumed, state)  # carries round-trip exactly
+    for _ in range(3):
+        resumed, _ = tr.step(resumed, targets)
+    assert _bitwise(full.params, resumed.params)
+    assert _bitwise(full.comm, resumed.comm)
+    assert _bitwise(full.trust, resumed.trust)
+
+
+# ---------------------------------------------------------------------------
+# stack_flatten mixed-dtype regression (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_stack_flatten_mixed_dtype_roundtrip():
+    params = {
+        "a": jnp.ones((M, 3), jnp.bfloat16) * 1.5,
+        "b": jnp.full((M, 2), 0.1, jnp.float32),
+        "c": jnp.ones((M,), jnp.float16),
+    }
+    flat, unflatten = stack_flatten(params)
+    assert flat.dtype == jnp.float32 and flat.shape == (M, 6)
+    back = unflatten(flat)
+    for k in params:
+        assert back[k].dtype == params[k].dtype, k
+        assert bool(jnp.all(back[k] == params[k])), k
