@@ -1,7 +1,7 @@
-"""Observability-layer benchmark: trace overhead + forensics quality —
-writes ``BENCH_obs.json`` and a CI-uploadable traced-run artifact dir.
+"""Observability-layer benchmark: trace overhead + live-telemetry overhead +
+forensics quality — writes ``BENCH_obs.json`` and a CI-uploadable artifact dir.
 
-Two measurements (ISSUE 6 acceptance):
+Three measurements (ISSUE 6 + ISSUE 9 acceptance):
 
 * **aggregate-mode trace overhead** — a sparse small-world BRIDGE cell
   (M = 512, K <= 16 full; CI ``--smoke`` runs M = 128) through the
@@ -16,6 +16,17 @@ Two measurements (ISSUE 6 acceptance):
   shows up as +100..400% here).  Steady-state walls only (min over ``reps``
   cached runs; compile split out per the bench-timing convention), asserting
   the traced trajectory is BIT-IDENTICAL to the untraced one on both cells.
+* **live-metric overhead** (ISSUE 9) — the same paper-scale cell through the
+  chunked runner (`run_chunks`: host loop over jitted scans with donated
+  carries) twice: ``metrics=None`` vs a compiled-in `MetricSpec` ring whose
+  flushes stream through a background `MetricWriter` to ``metrics.jsonl``.
+  The full run measures the M = 512 replication workload against the < 10%
+  acceptance budget; ``--smoke`` runs M = 128 with a noise-bound loose gate.
+  Asserts the metrics-on trajectory is BIT-IDENTICAL to metrics-off and that
+  the streamed row set is gapless.  The run leaves the full live-telemetry
+  artifact set in ``OUT/live`` — ``metrics.jsonl`` + ``manifest.json`` +
+  ``events.jsonl`` + an exported Perfetto ``trace.json`` — so CI uploads a
+  dir that `python -m repro.obs.monitor` can render as a "killed run".
 * **forensics are actionable** — a traced M = 64 grid (rule x attack cells,
   known Byzantine mask) written out as the real artifact set: ``events.jsonl``
   (`repro.obs.events.EventLog`), ``obs_summary.json`` (per-cell
@@ -46,9 +57,12 @@ from repro.core import erdos_renyi, replicate
 from repro.core.bridge import stack_batches
 from repro.core.graph import small_world
 from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
-from repro.obs import EventLog, TraceSpec, read_events
+from repro.obs import (AlertRules, EventLog, MetricSpec, MetricWriter,
+                       TraceSpec, read_events, write_manifest)
+from repro.obs import perfetto as obs_perfetto
 from repro.obs import report as obs_report
 from repro.obs import trace as obs_trace
+from repro.obs.metrics import read_metrics
 from repro.sim import ExperimentGrid, GridEngine
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -61,7 +75,7 @@ DIM = 64
 
 
 def _build(num_nodes: int, trace: TraceSpec | None, seed: int = 0,
-           paper: bool = False):
+           paper: bool = False, metrics: MetricSpec | None = None):
     """One sparse small-world BRIDGE cell.  ``paper=False``: a synthetic
     quadratic at d = 64, where the screening/obs work dominates — the worst
     case for the overhead ratio.  ``paper=True``: the replication workload
@@ -87,7 +101,7 @@ def _build(num_nodes: int, trace: TraceSpec | None, seed: int = 0,
     cfg = AsyncBridgeConfig(
         topology=topo, rule=RULE, num_byzantine=B, attack="alie",
         channel=ChannelConfig(drop_prob=0.05), staleness_bound=2,
-        lam=1.0, t0=100.0, sparse=True, trace=trace,
+        lam=1.0, t0=100.0, sparse=True, trace=trace, metrics=metrics,
     )
     tr = AsyncBridgeTrainer(cfg, grad_fn)
     state = tr.init(params, seed=seed)
@@ -148,6 +162,94 @@ def trace_overhead(num_nodes: int, ticks: int, reps: int, budget: float,
         "bit_identical": identical,
         "auc_byzantine_edges": summary["auc_byzantine_edges"],
         "survival": summary["survival"],
+    }
+
+
+def _steady_wall_chunks(tr, state, batch_at, ticks: int, reps: int, *,
+                        writer=None, events=None):
+    """`_steady_wall` for the chunked runner.  `run_chunks` donates its state
+    carry, so each run starts from a fresh device-side copy (made OUTSIDE the
+    timer) instead of the possibly-invalidated original."""
+    tree = jax.tree_util.tree_map
+
+    def once():
+        st = tree(jnp.copy, state)
+        t0 = time.perf_counter()
+        st, _ = tr.run_chunks(st, batch_at, ticks, writer=writer, events=events)
+        jax.block_until_ready(st.params)
+        return time.perf_counter() - t0, st
+
+    wall_first, st = once()
+    walls = []
+    for _ in range(reps):
+        w, st = once()
+        walls.append(w)
+    steady = min(walls)
+    return steady, max(wall_first - steady, 0.0), st
+
+
+def metrics_overhead(num_nodes: int, ticks: int, reps: int, budget: float,
+                     *, paper: bool = False, live_dir: str | None = None,
+                     capacity: int | None = None) -> dict:
+    """Metrics-off vs metrics-on through `run_chunks` on the same cell as
+    `trace_overhead`.  The on-run streams to ``live_dir`` through a real
+    `MetricWriter` (+ EventLog + manifest + Perfetto export), so the quoted
+    overhead includes the device-side ring copy, the enqueue, and the
+    background drain — the whole production path, not just the in-graph
+    fold."""
+    # capacity < ticks: the ring wraps and the host loop runs >= 2 chunks
+    # (a full-width chunk AND the flush-before-overwrite discipline are both
+    # on the measured path)
+    capacity = capacity if capacity is not None else max(ticks // 2, 1)
+    tr_off, st_off, bf = _build(num_nodes, None, paper=paper)
+    tr_on, st_on, _ = _build(num_nodes, None, paper=paper,
+                             metrics=MetricSpec(capacity=capacity))
+    batches = stack_batches(bf, ticks)
+    batch_at = lambda i: jax.tree_util.tree_map(lambda x: x[i], batches)
+    steady_off, compile_off, fin_off = _steady_wall_chunks(
+        tr_off, st_off, batch_at, ticks, reps)
+    writer = events = None
+    artifacts = {}
+    if live_dir is not None:
+        os.makedirs(live_dir, exist_ok=True)
+        write_manifest(live_dir, kind="obs-bench-live",
+                       config={"num_nodes": num_nodes, "ticks": ticks,
+                               "reps": reps, "paper": paper,
+                               "capacity": capacity})
+        events = EventLog(os.path.join(live_dir, "events.jsonl"))
+        writer = MetricWriter(os.path.join(live_dir, "metrics.jsonl"),
+                              alerts=AlertRules(), events=events)
+    steady_on, compile_on, fin_on = _steady_wall_chunks(
+        tr_on, st_on, batch_at, ticks, reps, writer=writer, events=events)
+    rows = None
+    if writer is not None:
+        writer.close()
+        events.close()
+        write_manifest(live_dir, extra={"ended": True,
+                                        "steady_state_s": steady_on})
+        # rep re-runs replay ticks 0..T-1; the writer dedups by tick, so the
+        # artifact stream is exactly one row per tick
+        rows = len(read_metrics(os.path.join(live_dir, "metrics.jsonl")))
+        trace_path = obs_perfetto.export(live_dir)
+        artifacts = {"metrics": os.path.join(live_dir, "metrics.jsonl"),
+                     "manifest": os.path.join(live_dir, "manifest.json"),
+                     "events": os.path.join(live_dir, "events.jsonl"),
+                     "perfetto": trace_path}
+    identical = bool(jax.tree_util.tree_all(jax.tree_util.tree_map(
+        lambda a, b: bool(jnp.all(a == b)), fin_off.params, fin_on.params)))
+    overhead = steady_on / steady_off - 1.0
+    d = sum(leaf.size for leaf in jax.tree_util.tree_leaves(fin_on.params)) // num_nodes
+    return {
+        "num_nodes": num_nodes, "k": int(tr_on.runtime.neighbors.k),
+        "dim": d, "ticks": ticks, "reps": reps, "capacity": capacity,
+        "metrics_off_us_per_tick": steady_off / ticks * 1e6,
+        "metrics_on_us_per_tick": steady_on / ticks * 1e6,
+        "metrics_off_steady_state_s": steady_off,
+        "metrics_on_steady_state_s": steady_on,
+        "metrics_off_compile_s": compile_off, "metrics_on_compile_s": compile_on,
+        "overhead_frac": overhead, "overhead_budget": budget,
+        "bit_identical": identical, "rows_streamed": rows,
+        "artifacts": artifacts,
     }
 
 
@@ -213,18 +315,24 @@ def traced_grid_artifacts(out_dir: str, num_nodes: int = 64, ticks: int = 40,
 
 
 def run(smoke: bool = False, out_dir: str | None = None) -> dict:
+    out_dir = out_dir or os.path.join(_ROOT, "obs_run")
+    live_dir = os.path.join(out_dir, "live")
     if smoke:
         m = 128  # CI-sized; walls are noise-bound, budgets are loose
         stress = trace_overhead(m, ticks=10, reps=2, budget=0.5)
         paper = trace_overhead(m, ticks=3, reps=2, budget=0.25,
                                paper=True, decide_stride=16)
+        mets = metrics_overhead(m, ticks=4, reps=2, budget=0.25,
+                                paper=True, live_dir=live_dir)
     else:
         m = 512
         stress = trace_overhead(m, ticks=20, reps=3, budget=0.5)
-        # THE acceptance cell: < 10% on the M = 512 replication workload
+        # THE acceptance cells: < 10% on the M = 512 replication workload
         paper = trace_overhead(m, ticks=3, reps=2, budget=0.10,
                                paper=True, decide_stride=16)
-    artifacts = traced_grid_artifacts(out_dir or os.path.join(_ROOT, "obs_run"))
+        mets = metrics_overhead(m, ticks=4, reps=2, budget=0.10,
+                                paper=True, live_dir=live_dir)
+    artifacts = traced_grid_artifacts(out_dir)
     aucs = [c["auc_byzantine_edges"] for c in artifacts["cells"]]
     aucs.append(stress["auc_byzantine_edges"])
     record = {
@@ -232,6 +340,7 @@ def run(smoke: bool = False, out_dir: str | None = None) -> dict:
         "config": {"rule": RULE, "b": B, "smoke": smoke,
                    "topology": f"small_world(nearest={NEAREST})"},
         "overhead": {"paper_scale": paper, "screen_stress": stress},
+        "metrics": {"paper_scale": mets},
         "forensics": artifacts,
         "acceptance": {
             "trace_bit_inert": bool(paper["bit_identical"]
@@ -241,6 +350,11 @@ def run(smoke: bool = False, out_dir: str | None = None) -> dict:
                 and stress["overhead_frac"] < stress["overhead_budget"]),
             "byzantine_edges_ranked": bool(
                 all(a is not None and a >= 0.7 for a in aucs)),
+            "metrics_bit_inert": bool(mets["bit_identical"]),
+            "metrics_overhead_within_budget": bool(
+                mets["overhead_frac"] < mets["overhead_budget"]),
+            "metrics_stream_complete": bool(
+                mets["rows_streamed"] == mets["ticks"]),
         },
     }
     return record
@@ -262,6 +376,13 @@ def main(argv=None):
               f"{ov['traced_us_per_tick']:.0f} us/tick -> "
               f"{ov['overhead_frac'] * 100:+.1f}% (budget "
               f"{ov['overhead_budget'] * 100:.0f}%, bit-identical: {ov['bit_identical']})")
+    mv = record["metrics"]["paper_scale"]
+    print(f"metrics M={mv['num_nodes']} d={mv['dim']}: off "
+          f"{mv['metrics_off_us_per_tick']:.0f} us/tick vs on "
+          f"{mv['metrics_on_us_per_tick']:.0f} us/tick -> "
+          f"{mv['overhead_frac'] * 100:+.1f}% (budget "
+          f"{mv['overhead_budget'] * 100:.0f}%, bit-identical: "
+          f"{mv['bit_identical']}, rows: {mv['rows_streamed']})")
     for c in record["forensics"]["cells"]:
         print(f"  {c['tag']}: auc={c['auc_byzantine_edges']:.3f} "
               f"byz_trim={c['byz_trim_freq']:.3f} honest_trim={c['honest_trim_freq']:.3f}")

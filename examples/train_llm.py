@@ -49,6 +49,12 @@ ap.add_argument("--codec", default="identity",
                 help="wire codec (identity | int8 | int4 | topk<P> | randk<P>)")
 ap.add_argument("--trace", action="store_true",
                 help="compile screening forensics into the step (repro.obs)")
+ap.add_argument("--metrics", default=None, metavar="DIR",
+                help="stream per-tick live metrics (repro.obs.metrics) to "
+                     "DIR/metrics.jsonl via the chunked runner; watch with "
+                     "`python -m repro.obs.monitor DIR`")
+ap.add_argument("--profile", default=None, metavar="DIR",
+                help="capture a jax.profiler trace of the loop into DIR")
 ap.add_argument("--trust", action="store_true",
                 help="reputation-weighted screening + eviction (repro.trust)")
 ap.add_argument("--flat", action="store_true",
@@ -89,10 +95,16 @@ if args.trust:
     # no echo on the broadcast paths; the streaming engine rejects it anyway
     trust = TrustSpec(echo=False)
 
+mspec = None
+if args.metrics:
+    from repro.obs import MetricSpec
+
+    mspec = MetricSpec()
+
 topo = make_topology(args.topology, args.nodes, args.byzantine, seed=0)
 bcfg = BridgeConfig(topology=topo, rule=args.rule, num_byzantine=args.byzantine,
                     attack=args.attack, codec=args.codec, lr=0.02,
-                    sparse=args.sparse, trace=trace, trust=trust,
+                    sparse=args.sparse, trace=trace, trust=trust, metrics=mspec,
                     screen_chunk=(1 << 20) if args.flat else args.chunk)
 trainer = (BridgeTrainer(bcfg, api.grad_fn()) if args.flat
            else StreamBridgeTrainer(bcfg, api.grad_fn()))
@@ -115,18 +127,53 @@ if args.resume:
         print(f"resumed from step {latest}")
 pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, args.nodes, seed=0)
 
+if args.profile:
+    os.makedirs(args.profile, exist_ok=True)
+    jax.profiler.start_trace(args.profile)
+
 t0 = time.time()
-for step in range(start, args.steps):
-    batch = jax.tree_util.tree_map(jnp.asarray, pipe.batch(step))
-    state, metrics = trainer.step(state, batch)
-    if (step + 1) % 10 == 0 or step + 1 == args.steps:
-        extra = ""
-        if args.trust:
-            extra += f"  evicted {float(metrics['trust_evicted_frac']):.2f}"
-        print(f"step {step+1:4d}  loss {float(metrics['loss']):.4f}  "
-              f"consensus {float(metrics['consensus_dist']):.3f}{extra}  "
-              f"{(time.time()-t0)/(step-start+1):.2f}s/step", flush=True)
-    if (step + 1) % args.ckpt_every == 0:
-        path = checkpoint.save(args.ckpt, step + 1, state)
+if args.metrics:
+    # chunked scan loop with donated carries (both trainers share it): the
+    # metric ring streams to DIR/metrics.jsonl through a background writer
+    from repro.obs import AlertRules, EventLog, MetricWriter, write_manifest
+
+    os.makedirs(args.metrics, exist_ok=True)
+    write_manifest(args.metrics, kind="train-llm", config=vars(args))
+    events = EventLog(os.path.join(args.metrics, "events.jsonl"))
+    writer = MetricWriter(os.path.join(args.metrics, "metrics.jsonl"),
+                          alerts=AlertRules(), events=events)
+    batch_at = lambda i: jax.tree_util.tree_map(jnp.asarray, pipe.batch(i))
+    done = start
+    while done < args.steps:
+        n = min(args.ckpt_every, args.steps - done)
+        state, ms = trainer.run_chunks(state, batch_at, n, writer=writer,
+                                       events=events, start=done)
+        done += n
+        print(f"step {done:4d}  loss {float(ms['loss'][-1]):.4f}  "
+              f"consensus {float(ms['consensus_dist'][-1]):.3f}  "
+              f"{(time.time()-t0)/(done-start):.2f}s/step", flush=True)
+        path = checkpoint.save(args.ckpt, done, state)
         print(f"checkpoint -> {path}")
+    writer.close()
+    events.close()
+    write_manifest(args.metrics, extra={"ended": True, "wall_s": time.time() - t0})
+    print(f"metric stream -> {os.path.join(args.metrics, 'metrics.jsonl')}")
+else:
+    for step in range(start, args.steps):
+        batch = jax.tree_util.tree_map(jnp.asarray, pipe.batch(step))
+        state, metrics = trainer.step(state, batch)
+        if (step + 1) % 10 == 0 or step + 1 == args.steps:
+            extra = ""
+            if args.trust:
+                extra += f"  evicted {float(metrics['trust_evicted_frac']):.2f}"
+            print(f"step {step+1:4d}  loss {float(metrics['loss']):.4f}  "
+                  f"consensus {float(metrics['consensus_dist']):.3f}{extra}  "
+                  f"{(time.time()-t0)/(step-start+1):.2f}s/step", flush=True)
+        if (step + 1) % args.ckpt_every == 0:
+            path = checkpoint.save(args.ckpt, step + 1, state)
+            print(f"checkpoint -> {path}")
+
+if args.profile:
+    jax.profiler.stop_trace()
+    print(f"profiler trace -> {args.profile}")
 print("done.")

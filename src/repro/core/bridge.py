@@ -15,6 +15,8 @@ Two execution paths share the same screening code:
 from __future__ import annotations
 
 import dataclasses
+import time
+import warnings
 from typing import Any, Callable, NamedTuple
 
 import jax
@@ -53,6 +55,11 @@ class BridgeState(NamedTuple):
     # reputation weights, and latched evictions; None (the default) keeps the
     # trust-free program shape bit-for-bit
     trust: Any = None
+    # live-metric ring (repro.obs.metrics.MetricState): the [C, S] per-tick
+    # scalar streams the chunked runners flush to metrics.jsonl between
+    # dispatches; None (the default) keeps the metric-free program shape
+    # bit-for-bit
+    mets: Any = None
 
 
 class CellParams(NamedTuple):
@@ -98,6 +105,11 @@ class CellParams(NamedTuple):
     # updates, eviction masking, and (net path) the echo protocol into the
     # step.  Unlike `trace`, trust ON deliberately changes the trajectory.
     trust: Any = None
+    # live-metric spec (repro.obs.metrics.MetricSpec): structural like
+    # `trace` — None keeps the exact metric-free program; a spec compiles the
+    # per-tick scalar ring into the step (bit-inert for the trajectory —
+    # the ring only reads values the step already computes).
+    metrics: Any = None
 
 
 def cell_step_size(cell: CellParams, t: jax.Array) -> jax.Array:
@@ -157,6 +169,10 @@ class BridgeConfig:
     # (pair it with a rule from screening.WEIGHTED_RULES for soft weighting;
     # any rule gets hard eviction through the mask)
     trust: Any = None
+    # live metrics (repro.obs.metrics.MetricSpec); None = off (default,
+    # bit-inert) — a spec compiles the per-tick scalar ring into the step
+    # and `run_chunks` flushes it to metrics.jsonl between dispatches
+    metrics: Any = None
 
     def step_size(self, t: jax.Array) -> jax.Array:
         if self.lr > 0:
@@ -321,7 +337,41 @@ def _grad_update_and_metrics(grad_fn, cell: CellParams, state: BridgeState, batc
         "consensus_dist": cons,
         "rho": rho,
     }
+    if cell.metrics is not None:
+        # honest-mean per-node gradient norm — the live-metric ring's
+        # grad_norm column; gated on the (static) spec so the metric-free
+        # program shape is untouched.  The fence severs CSE with the loss
+        # reduction (grad_fn often shares g*g subexpressions with its loss),
+        # which would otherwise re-fuse and ULP-shift the loss stream —
+        # breaking metrics-on bit-inertness
+        gf = screening.fence(g)
+        gn = jnp.sqrt(jnp.sum(gf * gf, axis=1))
+        metrics["grad_norm"] = jnp.sum(jnp.where(hm, gn, 0.0)) / cnt
     return new_params, metrics
+
+
+def _fold_metric_ring(mspec, state: BridgeState, metrics: dict, *,
+                      staleness=None, live=None):
+    """Fold the tick's already-computed scalars into the live-metric ring
+    (`repro.obs.metrics`).  Reads only — bit-inert for the trajectory; the
+    whole call is gated on the (static) spec so ``metrics=None`` keeps the
+    exact pre-metrics program."""
+    if mspec is None:
+        return state.mets
+    from repro.obs import metrics as obs_metrics
+
+    with jax.named_scope("bridge.metrics"):
+        vals = {k: metrics[k]
+                for k in ("loss", "consensus_dist", "grad_norm", "rho",
+                          "wire_bits_per_edge", "wire_bytes_total")
+                if k in metrics}
+        if "obs_trim_frac" in metrics:
+            vals["trim_frac"] = metrics["obs_trim_frac"]
+        if "trust_evicted_frac" in metrics:
+            vals["evicted_frac"] = metrics["trust_evicted_frac"]
+        if staleness is not None and live is not None:
+            vals.update(obs_metrics.stale_quantiles(staleness, live))
+        return obs_metrics.update(mspec, state.mets, t=state.t, vals=vals)
 
 
 def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
@@ -468,8 +518,9 @@ def build_cell_step(grad_fn, adjacency, rules: tuple[str, ...], attacks, *,
                     trim_frac=jnp.where(live_t, trim, 0.0), live=live_t)
                 metrics["trust_evicted_frac"] = jnp.mean(
                     new_trust.evicted.astype(jnp.float32))
+        new_mets = _fold_metric_ring(cell.metrics, state, metrics)
         return BridgeState(new_params, state.t + 1, key, state.net, new_comm,
-                           new_adv, new_obs, new_trust), metrics
+                           new_adv, new_obs, new_trust, new_mets), metrics
 
     return step
 
@@ -727,8 +778,15 @@ def build_cell_runtime_step(grad_fn, runtime, rules: tuple[str, ...], message_at
                     live=mask_eff, echo_evidence=echo_ev)
                 metrics["trust_evicted_frac"] = jnp.mean(
                     new_trust.evicted.astype(jnp.float32))
+        stale_m = None
+        if cell.metrics is not None:
+            from repro.obs import trace as obs_trace
+
+            stale_m = obs_trace.staleness_of(net, state.t)
+        new_mets = _fold_metric_ring(cell.metrics, state, metrics,
+                                     staleness=stale_m, live=mask)
         return BridgeState(new_params, state.t + 1, key, net, comm_full,
-                           new_adv, new_obs, new_trust), metrics
+                           new_adv, new_obs, new_trust, new_mets), metrics
 
     return step
 
@@ -835,6 +893,7 @@ class BridgeTrainer:
             adv_theta=adv_theta,
             trace=cfg.trace,
             trust=cfg.trust,
+            metrics=cfg.metrics,
         )
 
     @property
@@ -871,9 +930,14 @@ class BridgeTrainer:
             from repro.trust import reputation as trust_lib
 
             trust = trust_lib.init_state(self.config.trust, m, width)
+        mets = None
+        if self.config.metrics is not None:
+            from repro.obs import metrics as obs_metrics
+
+            mets = obs_metrics.init_state(self.config.metrics)
         return BridgeState(params=params, t=jnp.zeros((), jnp.int32),
                            key=jax.random.PRNGKey(seed), net=net, comm=comm,
-                           adv=adv, obs=obs, trust=trust)
+                           adv=adv, obs=obs, trust=trust, mets=mets)
 
     def step(self, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         return self._jit_step(self._cell, state, batch)
@@ -889,6 +953,78 @@ class BridgeTrainer:
                 metrics["step"] = i + 1
                 history.append(jax.device_get(metrics))
         return state, history
+
+    # -- chunked host loop (the live-telemetry / grid-throughput hook) ------
+
+    def _chunk_scan(self):
+        """The jitted scan-over-one-chunk with a DONATED state carry.  jax
+        caches compilations per chunk length, so a run costs one trace for
+        the full-width chunks plus one for a ragged tail."""
+        fn = getattr(self, "_chunk_scan_fn", None)
+        if fn is None:
+            raw = self._raw_step
+
+            def scan_chunk(cell, st, xs):
+                return jax.lax.scan(lambda s, b: raw(cell, s, b), st, xs)
+
+            fn = self._chunk_scan_fn = jax.jit(scan_chunk, donate_argnums=(1,))
+        return fn
+
+    def run_chunks(self, state: BridgeState, batch_fn: Callable[[int], Any],
+                   num_steps: int, *, chunk: int | None = None, writer=None,
+                   events=None, tag: str = "train",
+                   start: int = 0) -> tuple[BridgeState, dict]:
+        """Run ``num_steps`` ticks as a host loop over jitted scan *chunks*
+        with donated carries — dispatch never waits for host I/O.
+
+        After each chunk the live-metric ring is handed to ``writer``
+        (`repro.obs.metrics.MetricWriter` — which copies it device-side
+        before the next dispatch invalidates the donated buffer) and a
+        ``train.chunk`` record lands in ``events``.  ``chunk`` defaults to
+        the metric spec's ring capacity (no tick overwritten before it is
+        flushed), or 64 without one.  Returns ``(final_state, metrics)``
+        with ``[T]`` metric streams, bitwise identical to step-at-a-time /
+        single-scan execution (pinned by ``tests/test_metrics.py``).
+        """
+        mspec = getattr(self.config, "metrics", None)
+        if chunk is None:
+            chunk = mspec.capacity if mspec is not None else 64
+        if chunk < 1:
+            raise ValueError(f"chunk must be >= 1, got {chunk}")
+        if mspec is not None and chunk > mspec.capacity:
+            raise ValueError(
+                f"chunk {chunk} exceeds MetricSpec.capacity {mspec.capacity}: "
+                f"the ring would overwrite unflushed ticks")
+        scan_chunk = self._chunk_scan()
+        tree = jax.tree_util.tree_map
+        chunks_ms = []
+        done = start
+        while done < start + num_steps:
+            hi = min(done + chunk, start + num_steps)
+            xs = stack_batches(lambda i: batch_fn(done + i), hi - done)
+            t_chunk = time.perf_counter()
+            with warnings.catch_warnings():
+                # backends without buffer donation (older CPU jaxlibs) warn
+                # per compile; the donation is an optimization, not a
+                # correctness requirement
+                warnings.filterwarnings(
+                    "ignore", message=".*[Dd]onat.*", category=UserWarning)
+                state, ms = scan_chunk(self._cell, state, xs)
+            # host work below overlaps the dispatched device computation:
+            # the writer copies the ring and device_gets on its own thread
+            if writer is not None:
+                writer.flush(state.mets, tag=tag)
+            if events is not None:
+                # dispatch wall, deliberately not block_until_ready — the
+                # overlap IS the feature (grid.chunk events block instead)
+                # `train_tag`, not `tag`: EventLog.emit's first argument IS
+                # the record's "tag" field and fields must not collide
+                events.emit("train.chunk", train_tag=tag, lo=done, hi=hi,
+                            dispatch_s=time.perf_counter() - t_chunk)
+            chunks_ms.append(ms)
+            done = hi
+        metrics = tree(lambda *xs: jnp.concatenate(xs, axis=0), *chunks_ms)
+        return state, metrics
 
 
 def replicate(params: Any, num_nodes: int, *, perturb: float = 0.0, key=None) -> Any:

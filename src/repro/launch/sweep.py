@@ -181,24 +181,42 @@ def run_grid_mode(args) -> None:
         return replicate(small.init_linear(key), m, perturb=0.01, key=key)
 
     trace_spec, events = None, None
+    run_dir = args.trace or args.metrics
+    if run_dir is not None:
+        from repro.obs import EventLog, write_manifest
+
+        os.makedirs(run_dir, exist_ok=True)
+        write_manifest(run_dir, kind="sweep-grid", config=vars(args))
+        events = EventLog(os.path.join(run_dir, "events.jsonl"))
     if args.trace is not None:
-        from repro.obs import EventLog, TraceSpec
+        from repro.obs import TraceSpec
         from repro.obs import trace as obs_trace
 
-        os.makedirs(args.trace, exist_ok=True)
         trace_spec = TraceSpec()
-        events = EventLog(os.path.join(args.trace, "events.jsonl"))
+    metric_spec, mwriter = None, None
+    if args.metrics is not None:
+        from repro.obs import AlertRules, MetricSpec, MetricWriter
+
+        metric_spec = MetricSpec(capacity=args.metrics_capacity)
+        mwriter = MetricWriter(os.path.join(args.metrics, "metrics.jsonl"),
+                               alerts=AlertRules(), events=events)
     if args.profile is not None:
         os.makedirs(args.profile, exist_ok=True)
         jax.profiler.start_trace(args.profile)
     engine = GridEngine(grid, grad_fn, cells=pending,
                         num_ticks=ticks if scenarios else None, sparse=args.sparse,
-                        trace=trace_spec, trust=_trust_spec(args), events=events)
+                        trace=trace_spec, trust=_trust_spec(args),
+                        metrics=metric_spec, events=events)
     t0 = time.time()
     state = engine.init(init_fn)
-    state, metrics = engine.run(state, batches, chunk=args.grid_chunk)
+    state, metrics = engine.run(state, batches, chunk=args.grid_chunk,
+                                metric_writer=mwriter)
     jax.block_until_ready(state.params)
     wall = time.time() - t0
+    if mwriter is not None:
+        mwriter.close()
+        print(f"metric stream -> {os.path.join(args.metrics, 'metrics.jsonl')}  "
+              f"(watch: python -m repro.obs.monitor {args.metrics})")
     if args.profile is not None:
         jax.profiler.stop_trace()
         if events is not None:
@@ -222,8 +240,14 @@ def run_grid_mode(args) -> None:
             for j in hm.nonzero()[0]
         ]
         rec["accuracy"] = float(sum(accs) / max(len(accs), 1))
-    if trace_spec is not None:
+    if events is not None:
         events.close()
+    if run_dir is not None:
+        from repro.obs import write_manifest
+
+        write_manifest(run_dir, extra={"ended": True, "wall_s": wall,
+                                       "cells": len(pending)})
+    if trace_spec is not None:
         senders = engine.sender_grid()
         cells_out = []
         for i, c in enumerate(pending):
@@ -381,6 +405,14 @@ def main(argv=None):
                          "(render with `python -m repro.obs.report DIR`)")
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of the grid run into DIR")
+    ap.add_argument("--metrics", default=None, metavar="DIR",
+                    help="compile the live metric ring into every cell (grid "
+                         "mode, bit-inert) and stream per-tick rows tagged by "
+                         "cell to DIR/metrics.jsonl; watch with "
+                         "`python -m repro.obs.monitor DIR`")
+    ap.add_argument("--metrics-capacity", type=int, default=64,
+                    help="on-device metric ring slots per cell; grids stream "
+                         "the last `capacity` ticks of each chunk")
     # trust flags (repro.trust; grid + breakdown modes)
     ap.add_argument("--trust", action="store_true",
                     help="compile reputation-weighted screening + eviction "

@@ -52,13 +52,18 @@ def build_trainer(args, topo, grad_fn):
         trust = TrustSpec(evict_threshold=args.trust_evict,
                           warmup=args.trust_warmup,
                           echo=not args.trust_no_echo)
+    mspec = None
+    if args.metrics is not None:
+        from repro.obs import MetricSpec
+
+        mspec = MetricSpec(capacity=args.metrics_capacity)
     use_net = args.net or (args.attack not in ATTACKS and args.attack not in WIRE_ATTACKS)
     if not use_net:
         bcfg = BridgeConfig(
             topology=topo, rule=args.rule, num_byzantine=args.byzantine,
             attack=args.attack, adversary=args.adversary, codec=args.codec,
             lam=args.lam, t0=args.t0, lr=args.lr, sparse=args.sparse,
-            trace=trace, trust=trust,
+            trace=trace, trust=trust, metrics=mspec,
         )
         return BridgeTrainer(bcfg, grad_fn)
     from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
@@ -77,7 +82,7 @@ def build_trainer(args, topo, grad_fn):
         channel=channel, staleness_bound=args.net_staleness,
         schedule=scenario_schedule(args.net_schedule, topo, args.steps,
                                    seed=args.seed, churn_prob=args.net_churn_prob),
-        trace=trace, trust=trust,
+        trace=trace, trust=trust, metrics=mspec,
     )
     return AsyncBridgeTrainer(acfg, grad_fn)
 
@@ -169,6 +174,19 @@ def main(argv=None):
     ap.add_argument("--profile", default=None, metavar="DIR",
                     help="capture a jax.profiler trace of the training loop "
                          "into DIR (phases are jax.named_scope-annotated)")
+    ap.add_argument("--metrics", default=None, metavar="DIR",
+                    help="compile the live metric ring into the step "
+                         "(bit-inert) and stream per-tick scalar rows to "
+                         "DIR/metrics.jsonl via the chunked runner; watch "
+                         "with `python -m repro.obs.monitor DIR`, export "
+                         "with `python -m repro.obs.perfetto DIR`; pass the "
+                         "same DIR as --trace to keep all artifacts together")
+    ap.add_argument("--metrics-capacity", type=int, default=64,
+                    help="on-device metric ring slots (= the chunked "
+                         "runner's scan chunk length)")
+    ap.add_argument("--wire-budget-bytes", type=float, default=None,
+                    help="alert (obs.alert event) when cumulative wire bytes "
+                         "cross this budget")
     # trust flags (repro.trust)
     ap.add_argument("--trust", action="store_true",
                     help="reputation-weighted screening + eviction "
@@ -219,15 +237,32 @@ def main(argv=None):
 
     pipe = TokenPipeline(cfg.vocab_size, args.seq, args.batch, args.nodes, seed=args.seed)
 
+    # run-bracket artifacts (repro.obs): one directory holds the event log,
+    # the live metric stream, and the manifest — pass the same DIR to both
+    # --trace and --metrics to keep everything together
+    run_dir = args.trace or args.metrics
     events = None
-    if args.trace is not None:
-        from repro.obs import EventLog
+    if run_dir is not None:
+        from repro.obs import EventLog, write_manifest
 
-        os.makedirs(args.trace, exist_ok=True)
-        events = EventLog(os.path.join(args.trace, "events.jsonl"))
+        os.makedirs(run_dir, exist_ok=True)
+        extra = {}
+        if trainer.runtime is not None:
+            extra["network"] = trainer.runtime.describe()
+        write_manifest(run_dir, kind="train", config=vars(args), extra=extra)
+        events = EventLog(os.path.join(run_dir, "events.jsonl"))
         events.emit("run.start", kind="train", arch=cfg.name, nodes=args.nodes,
                     steps=args.steps, rule=args.rule, attack=args.attack,
                     net=bool(trainer.runtime is not None), resumed_at=start)
+    mwriter = None
+    if args.metrics is not None:
+        from repro.obs import AlertRules, MetricWriter
+
+        os.makedirs(args.metrics, exist_ok=True)
+        mwriter = MetricWriter(
+            os.path.join(args.metrics, "metrics.jsonl"),
+            alerts=AlertRules(wire_budget_bytes=args.wire_budget_bytes),
+            events=events)
     if args.profile is not None:
         os.makedirs(args.profile, exist_ok=True)
         jax.profiler.start_trace(args.profile)
@@ -235,31 +270,59 @@ def main(argv=None):
     t_run = time.time()
     compile_s = 0.0
     t_last = time.time()
-    for step in range(start, args.steps):
-        batch = jax.tree_util.tree_map(jnp.asarray, pipe.batch(step))
-        state, metrics = trainer.step(state, batch)
-        if step == start:
-            # the first step's wall is compile + one step: close enough to the
-            # compile cost that the steady-state remainder is honest
-            jax.block_until_ready(state.params)
-            compile_s = time.time() - t_run
-        if (step + 1) % args.log_every == 0:
+    if mwriter is not None:
+        # chunked tick loop: jitted scan chunks with donated carries, the
+        # metric ring flushed to the writer thread after each chunk (the
+        # blocking device_get overlaps the next chunk's compute)
+        def batch_at(i):
+            return jax.tree_util.tree_map(jnp.asarray, pipe.batch(i))
+
+        seg = args.ckpt_every if args.ckpt else max(args.steps - start, 1)
+        done = start
+        while done < args.steps:
+            n = min(seg, args.steps - done)
+            state, ms = trainer.run_chunks(state, batch_at, n, writer=mwriter,
+                                           events=events, start=done)
+            if done == start:
+                # the first segment's wall is compile + n steps: close
+                # enough that the steady-state remainder is honest
+                jax.block_until_ready(state.params)
+                compile_s = time.time() - t_run
+            done += n
+            if args.ckpt:
+                checkpoint.save(args.ckpt, done, tuple(state))
             dt = time.time() - t_last
             t_last = time.time()
-            net = ""
-            if "delivered_frac" in metrics:
-                net = (f"  delivered {float(metrics['delivered_frac']):.2f}"
-                       f"  stale {float(metrics['mean_staleness']):.1f}")
-            if args.codec != "identity" and "wire_bits_per_edge" in metrics:
-                net += f"  wire {float(metrics['wire_bits_per_edge'])/8:.0f}B/edge"
-            print(
-                f"step {step+1:5d}  loss {float(metrics['loss']):.4f}  "
-                f"consensus {float(metrics['consensus_dist']):.4f}  "
-                f"rho {float(metrics['rho']):.5f}{net}  {dt/args.log_every:.2f}s/step",
-                flush=True,
-            )
-        if args.ckpt and (step + 1) % args.ckpt_every == 0:
-            checkpoint.save(args.ckpt, step + 1, tuple(state))
+            print(f"step {done:5d}  loss {float(ms['loss'][-1]):.4f}  "
+                  f"consensus {float(ms['consensus_dist'][-1]):.4f}  "
+                  f"rho {float(ms['rho'][-1]):.5f}  {dt/n:.2f}s/step",
+                  flush=True)
+    else:
+        for step in range(start, args.steps):
+            batch = jax.tree_util.tree_map(jnp.asarray, pipe.batch(step))
+            state, metrics = trainer.step(state, batch)
+            if step == start:
+                # the first step's wall is compile + one step: close enough to
+                # the compile cost that the steady-state remainder is honest
+                jax.block_until_ready(state.params)
+                compile_s = time.time() - t_run
+            if (step + 1) % args.log_every == 0:
+                dt = time.time() - t_last
+                t_last = time.time()
+                net = ""
+                if "delivered_frac" in metrics:
+                    net = (f"  delivered {float(metrics['delivered_frac']):.2f}"
+                           f"  stale {float(metrics['mean_staleness']):.1f}")
+                if args.codec != "identity" and "wire_bits_per_edge" in metrics:
+                    net += f"  wire {float(metrics['wire_bits_per_edge'])/8:.0f}B/edge"
+                print(
+                    f"step {step+1:5d}  loss {float(metrics['loss']):.4f}  "
+                    f"consensus {float(metrics['consensus_dist']):.4f}  "
+                    f"rho {float(metrics['rho']):.5f}{net}  {dt/args.log_every:.2f}s/step",
+                    flush=True,
+                )
+            if args.ckpt and (step + 1) % args.ckpt_every == 0:
+                checkpoint.save(args.ckpt, step + 1, tuple(state))
     state = jax.block_until_ready(state)
     wall = time.time() - t_run
     if args.profile is not None:
@@ -267,17 +330,28 @@ def main(argv=None):
         if events is not None:
             events.emit("profile.capture", dir=args.profile)
         print(f"profiler trace -> {args.profile}")
+    if mwriter is not None:
+        mwriter.close()
+        print(f"metric stream -> {os.path.join(args.metrics, 'metrics.jsonl')}  "
+              f"(watch: python -m repro.obs.monitor {args.metrics})")
     if events is not None:
-        first_bad = int(np.asarray(state.obs.first_bad))
         events.emit("run.end", steps=args.steps - start, wall_s=wall,
                     compile_s=compile_s, steady_state_s=max(wall - compile_s, 0.0))
-        if first_bad >= 0:
-            events.emit("obs.divergence", cell="train", first_bad_tick=first_bad)
+        if state.obs is not None:
+            first_bad = int(np.asarray(state.obs.first_bad))
+            if first_bad >= 0:
+                events.emit("obs.divergence", cell="train", first_bad_tick=first_bad)
         events.close()
+    if args.trace is not None:
         path = dump_obs(args, trainer, state, topo,
-                        os.path.join(args.trace, "events.jsonl"))
+                        os.path.join(run_dir, "events.jsonl"))
         print(f"obs summary -> {path}  "
               f"(render: python -m repro.obs.report {args.trace})")
+    if run_dir is not None:
+        from repro.obs import write_manifest
+
+        write_manifest(run_dir, extra={"ended": True, "wall_s": wall,
+                                       "steps": args.steps})
     if args.trust:
         from repro.obs import trace as obs_trace
         from repro.trust import summarize as trust_summarize

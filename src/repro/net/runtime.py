@@ -20,6 +20,8 @@ flow inside the step.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 import jax
@@ -51,6 +53,11 @@ class SynchronousRuntime:
 
     def __init__(self, topology_or_schedule):
         self._schedule = _as_schedule(topology_or_schedule)
+
+    def describe(self) -> dict:
+        """JSON-able summary for run manifests (`repro.obs.manifest`)."""
+        return {"runtime": "synchronous", "num_nodes": int(self._schedule.shape[1]),
+                "num_ticks": self.num_ticks}
 
     @property
     def num_ticks(self) -> int:
@@ -99,6 +106,12 @@ class UnreliableRuntime:
         self._schedule = _as_schedule(topology_or_schedule)
         self.channel = channel
         self.staleness_bound = staleness_bound
+
+    def describe(self) -> dict:
+        """JSON-able summary for run manifests (`repro.obs.manifest`)."""
+        return {"runtime": "unreliable", "num_nodes": int(self._schedule.shape[1]),
+                "num_ticks": self.num_ticks, "staleness_bound": self.staleness_bound,
+                "channel": dataclasses.asdict(self.channel)}
 
     @property
     def num_ticks(self) -> int:
@@ -214,6 +227,12 @@ class SparseUnreliableRuntime:
                 f"neighbor table is for {self.neighbors.num_nodes} nodes, "
                 f"schedule has {sched_np.shape[1]}")
         self._live = jnp.asarray(self.neighbors.live_schedule(sched_np))  # [T, M, K]
+
+    def describe(self) -> dict:
+        """JSON-able summary for run manifests (`repro.obs.manifest`)."""
+        return {"runtime": "sparse_unreliable", "num_nodes": self.neighbors.num_nodes,
+                "num_ticks": self.num_ticks, "staleness_bound": self.staleness_bound,
+                "k": self.neighbors.k, "channel": dataclasses.asdict(self.channel)}
 
     @property
     def num_ticks(self) -> int:

@@ -1,11 +1,24 @@
 """repro.obs — observability for the BRIDGE stack.
 
 `TraceSpec`-driven in-graph forensics (`repro.obs.trace`), the async JSONL
-event log (`repro.obs.events`), and the report renderer
-(``python -m repro.obs.report``).  Tracing is OFF by default everywhere
-(``trace=None``) and bit-inert when on — see ``tests/test_obs.py``.
+event log (`repro.obs.events`), live per-tick metric rings + threshold
+alerting (`repro.obs.metrics`), run manifests (`repro.obs.manifest`), the
+Perfetto/Chrome-trace exporter (``python -m repro.obs.perfetto``), the live
+run monitor (``python -m repro.obs.monitor``), and the report renderer
+(``python -m repro.obs.report``).  Tracing AND metrics are OFF by default
+everywhere (``trace=None`` / ``metrics=None``) and bit-inert when on — see
+``tests/test_obs.py`` / ``tests/test_metrics.py``.
 """
 from repro.obs.events import EventLog, read_events
+from repro.obs.manifest import read_manifest, write_manifest
+from repro.obs.metrics import (
+    AlertEngine,
+    AlertRules,
+    MetricSpec,
+    MetricState,
+    MetricWriter,
+    read_metrics,
+)
 from repro.obs.trace import (
     TraceSpec,
     TraceState,
@@ -20,6 +33,14 @@ from repro.obs.trace import (
 __all__ = [
     "EventLog",
     "read_events",
+    "AlertEngine",
+    "AlertRules",
+    "MetricSpec",
+    "MetricState",
+    "MetricWriter",
+    "read_metrics",
+    "read_manifest",
+    "write_manifest",
     "TraceSpec",
     "TraceState",
     "init_state",

@@ -39,9 +39,16 @@ def _jsonable(x):
 
 
 class EventLog:
-    """Append-only JSONL event stream; safe to emit from any thread."""
+    """Append-only JSONL event stream; safe to emit from any thread.
 
-    def __init__(self, path: str):
+    Writes are batched: the drain thread flushes at most every
+    ``flush_interval`` seconds (and whenever its queue runs dry, and on
+    close), so a high-rate chunk-event stream costs one buffered ``write``
+    per record instead of one ``fsync``-ish flush each — the dispatch loop
+    never serializes on the log.
+    """
+
+    def __init__(self, path: str, *, flush_interval: float = 0.2):
         parent = os.path.dirname(os.path.abspath(path))
         os.makedirs(parent, exist_ok=True)
         self.path = path
@@ -49,6 +56,7 @@ class EventLog:
         self._t0 = time.perf_counter()
         self._q: queue.Queue = queue.Queue()
         self._closed = False
+        self._flush_interval = max(float(flush_interval), 0.0)
         self._thread = threading.Thread(target=self._drain, daemon=True,
                                         name="obs-eventlog")
         self._thread.start()
@@ -62,12 +70,22 @@ class EventLog:
         self._q.put(rec)
 
     def _drain(self) -> None:
+        last_flush = time.perf_counter()
         while True:
-            rec = self._q.get()
+            try:
+                rec = self._q.get(timeout=self._flush_interval or 0.05)
+            except queue.Empty:
+                self._f.flush()
+                last_flush = time.perf_counter()
+                continue
             if rec is _SENTINEL:
                 break
             self._f.write(json.dumps(rec, sort_keys=True, default=_jsonable) + "\n")
-            self._f.flush()
+            now = time.perf_counter()
+            if self._q.empty() or now - last_flush >= self._flush_interval:
+                self._f.flush()
+                last_flush = now
+        self._f.flush()
 
     def close(self) -> None:
         if self._closed:
@@ -75,6 +93,11 @@ class EventLog:
         self._closed = True
         self._q.put(_SENTINEL)
         self._thread.join(timeout=10.0)
+        if self._thread.is_alive():
+            # the drain thread is still writing (slow disk, huge backlog):
+            # closing the file here would race it into "I/O operation on
+            # closed file" — leave the fd to the daemon thread instead
+            return
         self._f.close()
 
     def __enter__(self) -> "EventLog":

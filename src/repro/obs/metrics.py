@@ -1,0 +1,370 @@
+"""Live per-tick metric rings: in-graph scalar streams for running runs.
+
+`repro.obs.trace` answers *post-mortem* questions — its aggregates only
+leave the device when the whole scan returns.  This module is the *live*
+layer: a `MetricSpec` compiles a small ``[C, S]`` ring buffer of per-tick
+scalar streams (loss, grad norm, trim fraction, eviction fraction, wire
+bits, staleness quantiles, non-finite sentinel) into the step, the tick
+loop runs as a host loop over jitted scan *chunks* with donated carries
+(`repro.core.bridge.BridgeTrainer.run_chunks`), and after each chunk a
+`MetricWriter` background thread ``device_get``s the ring and appends one
+JSON line per tick to ``metrics.jsonl`` — without ever blocking dispatch.
+
+The spec follows the `TraceSpec`/`TrustSpec` pattern exactly: a frozen
+zero-leaf pytree riding `CellParams`/`BridgeConfig` as jit *structure*.
+``metrics=None`` (the default everywhere) keeps each step builder's exact
+pre-metrics program shape, and metrics ON is bit-inert for the trajectory —
+the ring only *reads* values the step already computes (property-tested in
+``tests/test_metrics.py``).
+
+Ring semantics: ``buf[count % capacity]`` is overwritten round-robin, so a
+chunk of up to ``capacity`` ticks survives intact between flushes (the
+chunked runners default their chunk length to the spec's capacity).  Columns
+a configuration does not produce (staleness on the synchronous path, the
+eviction fraction without a trust spec) hold NaN and render as ``null``.
+
+Threshold alerting (`AlertRules`/`AlertEngine`) is shared host-side logic:
+the writer evaluates it on every flushed row and emits ``obs.alert`` events
+into the run's `EventLog`; the live monitor (`repro.obs.monitor`) runs the
+same engine over a tailed ``metrics.jsonl`` so a killed run still alerts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import queue
+import threading
+import time
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# The fixed column schema of the ring (S = len(COLUMNS)).  Order is the
+# on-device layout AND the JSONL field order; appending a column is a
+# compatible change (old readers index by name), reordering is not.
+COLUMNS = (
+    "tick",                # written from state.t — the ring's dedup key
+    "loss",                # honest-mean loss
+    "consensus_dist",      # max honest deviation from the honest mean
+    "grad_norm",           # honest-mean per-node gradient l2 norm
+    "rho",                 # step size
+    "trim_frac",           # live-edge-mean screening trim fraction (decide path)
+    "wire_bits_per_edge",  # codec codeword size
+    "wire_bytes_total",    # bytes put on the wire this tick
+    "evicted_frac",        # trust-layer evicted edge fraction
+    "stale_p50",           # delivered-message age median (net paths)
+    "stale_p90",           # delivered-message age 90th percentile
+    "nonfinite",           # 1.0 the tick loss/consensus went non-finite
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """What the compiled step streams.  Hashable and frozen: jit *structure*
+    (a zero-leaf pytree), exactly like `repro.obs.trace.TraceSpec`."""
+
+    # ring slots; the chunked runners flush once per chunk and default the
+    # chunk length to this, so no tick is overwritten before it is read
+    capacity: int = 64
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"invalid MetricSpec: {self}")
+
+
+jax.tree_util.register_pytree_node(MetricSpec, lambda s: ((), s), lambda aux, _: aux)
+
+
+class MetricState(NamedTuple):
+    """The scanned metric carry (one per cell; grids stack a leading [E])."""
+
+    buf: jax.Array    # [capacity, S] f32, NaN = slot never written
+    count: jax.Array  # i32 scalar — ticks folded so far
+
+
+def init_state(spec: MetricSpec | None, *, lead: tuple = ()) -> MetricState | None:
+    """A fresh NaN-filled ring (``lead=(E,)`` stacks a grid's worth)."""
+    if spec is None:
+        return None
+    return MetricState(
+        buf=jnp.full(lead + (spec.capacity, len(COLUMNS)), jnp.nan, jnp.float32),
+        count=jnp.zeros(lead, jnp.int32),
+    )
+
+
+def update(spec: MetricSpec, st: MetricState, *, t, vals: dict) -> MetricState:
+    """Fold one tick's scalars into the ring.  ``vals`` maps column names to
+    this tick's traced scalars; absent columns stay NaN.  Every op is
+    vmap-safe (the grid maps this over [E])."""
+    row = []
+    for name in COLUMNS:
+        if name == "tick":
+            row.append(jnp.asarray(t, jnp.float32))
+        elif name == "nonfinite":
+            bad = ~(jnp.isfinite(jnp.asarray(vals["loss"], jnp.float32))
+                    & jnp.isfinite(jnp.asarray(vals["consensus_dist"], jnp.float32)))
+            row.append(bad.astype(jnp.float32))
+        else:
+            v = vals.get(name)
+            row.append(jnp.full((), jnp.nan, jnp.float32) if v is None
+                       else jnp.asarray(v, jnp.float32))
+    return MetricState(
+        buf=st.buf.at[st.count % spec.capacity].set(jnp.stack(row)),
+        count=st.count + 1,
+    )
+
+
+def stale_quantiles(staleness, live) -> dict:
+    """The ``stale_p50``/``stale_p90`` columns from a ``[M, W]`` delivered-
+    message age tensor and its live mask (NaN quantiles over dead slots)."""
+    vals = jnp.where(live, jnp.asarray(staleness, jnp.float32), jnp.nan)
+    return {"stale_p50": jnp.nanquantile(vals, 0.5),
+            "stale_p90": jnp.nanquantile(vals, 0.9)}
+
+
+def rows_of(buf, count, *, after: int = -1) -> list[dict]:
+    """Host-side ring decode: tick-ordered JSON-ready rows, skipping ticks
+    ``<= after`` (the writer's per-tag dedup across overlapping flushes) and
+    rendering NaN columns as None."""
+    buf = np.asarray(buf)
+    count = int(count)
+    c = buf.shape[0]
+    rows = []
+    for i in range(max(count - c, 0), count):
+        row = buf[i % c]
+        if not np.isfinite(row[0]):
+            continue  # slot never written (short first chunk)
+        tick = int(row[0])
+        if tick <= after:
+            continue
+        rec: dict[str, Any] = {"tick": tick}
+        for name, v in zip(COLUMNS[1:], row[1:]):
+            rec[name] = float(v) if math.isfinite(float(v)) else None
+        rows.append(rec)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Threshold alert rules (shared by the writer and the live monitor)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AlertRules:
+    """Host-side thresholds evaluated on every metric row.  Each kind latches
+    per (tag, kind) so a persistent condition alerts once, not per tick."""
+
+    divergence: bool = True  # the nonfinite sentinel fired
+    # loss > factor * the running minimum (a blow-up, not normal noise)
+    loss_spike_factor: float = 100.0
+    # evicted_frac rose by more than this between consecutive rows
+    evict_spike: float = 0.25
+    # cumulative wire_bytes_total crossed this budget (None = unmetered)
+    wire_budget_bytes: float | None = None
+
+
+class AlertEngine:
+    """Stateful evaluator: ``feed(tag, row) -> [alert dicts]``."""
+
+    def __init__(self, rules: AlertRules | None = None):
+        self.rules = rules or AlertRules()
+        self._loss_min: dict[str, float] = {}
+        self._evicted: dict[str, float] = {}
+        self._wire: dict[str, float] = {}
+        self._fired: set[tuple[str, str]] = set()
+
+    def _fire(self, tag: str, kind: str, tick: int, **fields) -> dict | None:
+        if (tag, kind) in self._fired:
+            return None
+        self._fired.add((tag, kind))
+        return {"kind": kind, "tag": tag, "tick": tick, **fields}
+
+    def feed(self, tag: str, row: dict) -> list[dict]:
+        r = self.rules
+        tick = int(row.get("tick", -1))
+        out = []
+        if r.divergence and (row.get("nonfinite") or 0.0) > 0.0:
+            a = self._fire(tag, "divergence", tick)
+            if a:
+                out.append(a)
+        loss = row.get("loss")
+        if loss is not None and math.isfinite(loss):
+            lo = self._loss_min.get(tag)
+            if (lo is not None and lo > 0.0
+                    and loss > r.loss_spike_factor * lo):
+                a = self._fire(tag, "loss_spike", tick, loss=loss, running_min=lo)
+                if a:
+                    out.append(a)
+            self._loss_min[tag] = loss if lo is None else min(lo, loss)
+        ev = row.get("evicted_frac")
+        if ev is not None:
+            prev = self._evicted.get(tag, 0.0)
+            if ev - prev > r.evict_spike:
+                a = self._fire(tag, "eviction_spike", tick,
+                               evicted_frac=ev, previous=prev)
+                if a:
+                    out.append(a)
+            self._evicted[tag] = ev
+        wire = row.get("wire_bytes_total")
+        if r.wire_budget_bytes is not None and wire is not None:
+            tot = self._wire.get(tag, 0.0) + wire
+            self._wire[tag] = tot
+            if tot > r.wire_budget_bytes:
+                a = self._fire(tag, "wire_budget", tick, wire_bytes_cumulative=tot,
+                               budget=r.wire_budget_bytes)
+                if a:
+                    out.append(a)
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The background writer
+# ---------------------------------------------------------------------------
+
+_SENTINEL = object()
+
+
+class MetricWriter:
+    """Appends flushed rings to ``metrics.jsonl`` from a daemon thread.
+
+    ``flush(mstate, tag=...)`` enqueues a *device-side copy* of the ring and
+    returns immediately: the chunked runners donate their carries, so the
+    original buffer is invalidated at the very next dispatch — the copy is
+    what makes the overlap safe.  The thread's blocking ``device_get`` then
+    overlaps device compute instead of stalling it.
+
+    One JSON line per tick: ``{"tag", "wall", <COLUMNS...>}``.  Overlapping
+    flushes of the same tag are deduped by tick; per-row walls are
+    interpolated between consecutive flush walls (the Perfetto counter
+    track's timestamps).  ``alerts``/``events`` wire the flushed rows
+    through an `AlertEngine` into ``obs.alert`` event records.
+    """
+
+    def __init__(self, path: str, *, alerts: AlertRules | None = None,
+                 events=None, flush_interval: float = 0.2):
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self.path = path
+        self._f = open(path, "a")
+        self._t0 = time.perf_counter()
+        self._q: queue.Queue = queue.Queue()
+        self._closed = False
+        self._flush_interval = flush_interval
+        self._last_tick: dict[str, int] = {}
+        self._last_wall: dict[str, float] = {}
+        self._alerts = None if alerts is None else AlertEngine(alerts)
+        self._events = events
+        self.rows_written = 0
+        self._thread = threading.Thread(target=self._drain, daemon=True,
+                                        name="obs-metricwriter")
+        self._thread.start()
+
+    def flush(self, mstate, *, tag: str = "train", tags=None) -> None:
+        """Enqueue one ring (``[C, S]`` buf) or a stacked batch of rings
+        (``[E, C, S]`` buf with ``tags`` naming each row)."""
+        if mstate is None or self._closed:
+            return
+        # device-side copy BEFORE the caller's next (donating) dispatch
+        buf = jnp.copy(mstate.buf)
+        count = jnp.copy(mstate.count)
+        self._q.put((tag, tags, buf, count, time.perf_counter() - self._t0))
+
+    def _write_rows(self, tag: str, buf, count, wall: float) -> None:
+        rows = rows_of(buf, count, after=self._last_tick.get(tag, -1))
+        if not rows:
+            return
+        w0 = self._last_wall.get(tag, wall)
+        for i, rec in enumerate(rows):
+            rec_wall = w0 + (wall - w0) * (i + 1) / len(rows)
+            line = {"tag": tag, "wall": round(rec_wall, 6), **rec}
+            self._f.write(json.dumps(line) + "\n")
+            self.rows_written += 1
+            if self._alerts is not None:
+                for alert in self._alerts.feed(tag, rec):
+                    if self._events is not None:
+                        # `stream`, not `tag`: the event record's "tag" field
+                        # is the event name and fields must not collide
+                        a = dict(alert)
+                        a["stream"] = a.pop("tag")
+                        self._events.emit("obs.alert", **a)
+        self._last_tick[tag] = rows[-1]["tick"]
+        self._last_wall[tag] = wall
+
+    def _drain(self) -> None:
+        while True:
+            try:
+                item = self._q.get(timeout=self._flush_interval)
+            except queue.Empty:
+                self._f.flush()
+                continue
+            if item is _SENTINEL:
+                break
+            tag, tags, buf, count, wall = item
+            # the blocking transfer happens HERE, overlapping device compute
+            buf = jax.device_get(buf)
+            count = jax.device_get(count)
+            if tags is not None:
+                for i, t in enumerate(tags):
+                    self._write_rows(str(t), buf[i], count[i], wall)
+            else:
+                self._write_rows(tag, buf, count, wall)
+            if self._q.empty():
+                self._f.flush()
+        self._f.flush()
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self._q.put(_SENTINEL)
+        self._thread.join(timeout=30.0)
+        if self._thread.is_alive():
+            # a wedged transfer: leave the file to the daemon thread rather
+            # than closing it out from under an in-flight write
+            return
+        self._f.close()
+
+    def __enter__(self) -> "MetricWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def read_metrics(path: str, *, after: int = -1, tag: str | None = None) -> list[dict]:
+    """Parse ``metrics.jsonl`` back into row dicts (monitor/report/perfetto
+    input); tolerates a truncated final line from a killed run."""
+    rows = []
+    if not os.path.exists(path):
+        return rows
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if tag is not None and rec.get("tag") != tag:
+                continue
+            if int(rec.get("tick", -1)) <= after:
+                continue
+            rows.append(rec)
+    return rows
+
+
+# Metric streams the metrics-on step adds to the engine metrics dict,
+# registered with the grid result reducers so `repro.sim.results.collect`
+# folds them instead of warning (satellite: reducer coverage for obs_*).
+def _register_reducers() -> None:
+    from repro.sim import results as results_lib
+
+    results_lib.register_mean("grad_norm")
+
+
+_register_reducers()

@@ -29,9 +29,44 @@ def _table(header, rows) -> list[str]:
 
 
 def render(summary: dict | None = None, events: list[dict] | None = None,
-           *, top: int = 10) -> str:
-    """The full text report; either input may be None."""
+           *, top: int = 10, manifest: dict | None = None,
+           metrics_rows: list[dict] | None = None) -> str:
+    """The full text report; every input may be None."""
     out: list[str] = ["== BRIDGE observability report =="]
+
+    if manifest:
+        env = manifest.get("environment") or {}
+        out.append("-- run manifest --")
+        out.append(f"kind: {manifest.get('kind', '?')}  "
+                   f"git: {(manifest.get('git_sha') or '?')[:12]}  "
+                   f"config: {manifest.get('config_digest', '?')}")
+        out.append(f"jax {env.get('jax', '?')} / jaxlib {env.get('jaxlib', '?')} "
+                   f"on {env.get('backend', '?')} "
+                   f"({env.get('device_kind', '?')} x{env.get('device_count', '?')})")
+        argv = manifest.get("argv")
+        if argv:
+            out.append("argv: " + " ".join(str(a) for a in argv))
+        out.append("")
+
+    if metrics_rows:
+        out.append("-- live metric streams (metrics.jsonl) --")
+        by_tag: dict[str, list[dict]] = {}
+        for r in metrics_rows:
+            by_tag.setdefault(r.get("tag", "train"), []).append(r)
+        mrows = []
+        for tag, rows in sorted(by_tag.items()):
+            last = rows[-1]
+            bad = sum(1 for r in rows if (r.get("nonfinite") or 0.0) > 0.0)
+            mrows.append((
+                tag, len(rows), last.get("tick"),
+                "n/a" if last.get("loss") is None else f"{last['loss']:.4g}",
+                "n/a" if last.get("consensus_dist") is None
+                else f"{last['consensus_dist']:.4g}",
+                bad,
+            ))
+        out += _table(("stream", "rows", "last_tick", "last_loss",
+                       "last_consensus", "nonfinite_rows"), mrows)
+        out.append("")
 
     if summary is not None:
         cells = summary.get("cells", [])
@@ -100,6 +135,13 @@ def render(summary: dict | None = None, events: list[dict] | None = None,
             out.append("-- divergence events --")
             out += _table(("cell", "first_bad_tick"),
                           [(r.get("cell", "?"), r.get("first_bad_tick")) for r in div])
+        alerts = [r for r in events if r["tag"] == "obs.alert"]
+        if alerts:
+            out.append("")
+            out.append("-- alerts (threshold rules over the live metric stream) --")
+            out += _table(("kind", "stream", "tick"),
+                          [(r.get("kind", "?"), r.get("stream", "?"), r.get("tick"))
+                           for r in alerts])
 
     return "\n".join(out) + "\n"
 
@@ -122,10 +164,18 @@ def main(argv=None) -> None:
         with open(spath) as f:
             summary = json.load(f)
     events = read_events(epath) if epath and os.path.exists(epath) else None
-    if summary is None and events is None:
-        raise SystemExit(f"no obs_summary.json or events.jsonl found "
-                         f"(looked at {spath!r}, {epath!r})")
-    text = render(summary, events, top=args.top)
+    manifest = metrics_rows = None
+    if args.run_dir:
+        from repro.obs.manifest import read_manifest
+        from repro.obs.metrics import read_metrics
+
+        manifest = read_manifest(args.run_dir)
+        metrics_rows = read_metrics(os.path.join(args.run_dir, "metrics.jsonl")) or None
+    if summary is None and events is None and manifest is None and metrics_rows is None:
+        raise SystemExit(f"no obs_summary.json, events.jsonl, manifest.json or "
+                         f"metrics.jsonl found (looked at {spath!r}, {epath!r})")
+    text = render(summary, events, top=args.top, manifest=manifest,
+                  metrics_rows=metrics_rows)
     print(text, end="")
     if args.out:
         with open(args.out, "w") as f:

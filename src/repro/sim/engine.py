@@ -213,16 +213,21 @@ class GridEngine:
         sparse: bool = False,
         trace=None,
         trust=None,
+        metrics=None,
         events=None,
     ):
         # observability (repro.obs): `trace` is an engine-wide TraceSpec
         # compiled into every cell's step (None = untraced, the default);
         # `trust` the engine-wide repro.trust.TrustSpec (None = trust-free,
         # bit-identical to the pre-trust program);
+        # `metrics` the engine-wide repro.obs.metrics.MetricSpec — per-tick
+        # scalar rings stacked over [E], flushed per chunk to a MetricWriter
+        # passed to `run` (None = metric-free, bit-identical program);
         # `events` an EventLog receiving run/chunk/divergence records from
         # the host-side loop around the jitted scans
         self._trace_spec = trace
         self._trust_spec = trust
+        self._metric_spec = metrics
         self._events = events
         self.grid = grid
         self.cells = list(cells) if cells is not None else grid.cells()
@@ -358,6 +363,7 @@ class GridEngine:
             adv_theta=adv_theta,
             trace=self._trace_spec,  # zero-leaf aux data: no vmapped axis
             trust=self._trust_spec,  # zero-leaf aux data: no vmapped axis
+            metrics=self._metric_spec,  # zero-leaf aux data: no vmapped axis
         )
 
     def set_cells(self, cells: Sequence[Cell]) -> None:
@@ -500,10 +506,17 @@ class GridEngine:
             from repro.trust import reputation as trust_lib
 
             trust = trust_lib.init_state(self._trust_spec, m, width, lead=(e,))
-        return BridgeState(params=stacked, t=t, key=keys, net=net, comm=comm,
-                           adv=adv, obs=obs, trust=trust)
+        # metric rings (repro.obs.metrics): engine-wide spec, stacked over [E]
+        mets = None
+        if self._metric_spec is not None:
+            from repro.obs import metrics as obs_metrics
 
-    def run(self, state: BridgeState, batches, *, chunk: int | None = None):
+            mets = obs_metrics.init_state(self._metric_spec, lead=(e,))
+        return BridgeState(params=stacked, t=t, key=keys, net=net, comm=comm,
+                           adv=adv, obs=obs, trust=trust, mets=mets)
+
+    def run(self, state: BridgeState, batches, *, chunk: int | None = None,
+            metric_writer=None):
         """Scan all cells over ``batches`` (a pytree of ``[T, ...]`` arrays,
         shared across cells).  Returns ``(final_state, metrics)`` with state
         leaves ``[E, ...]`` and metric leaves ``[E, T]``, in the order of
@@ -513,10 +526,20 @@ class GridEngine:
         bound): each group's ragged last chunk is padded with copies of its
         final cell so all of a group's chunks share one compilation, then
         trimmed — compilations scale with the number of groups, never E.
+
+        ``metric_writer`` (a `repro.obs.metrics.MetricWriter`, requires the
+        engine's ``metrics=`` spec) streams each cell's per-tick scalar ring
+        to ``metrics.jsonl`` tagged by cell — per finished chunk on the
+        chunked path, once at the end otherwise.  The ring holds the last
+        ``capacity`` ticks of each cell, so grid metric streams are a tail
+        window, not the full trajectory (use per-cell trainers via
+        ``run_chunks`` for gapless streams).
         """
         e = self.num_cells
         tree = jax.tree_util.tree_map
         perm, inv = self._perm, self._inv
+        if metric_writer is not None and self._metric_spec is None:
+            raise ValueError("metric_writer needs GridEngine(..., metrics=MetricSpec(...))")
         cells_p = self._cell_perm
         state_p = tree(lambda x: x[perm], state)
         ev = self._events
@@ -561,12 +584,19 @@ class GridEngine:
                         ev.emit("grid.chunk", group=gi, lo=int(lo), hi=int(hi),
                                 wall_s=time.perf_counter() - t_chunk)
                     valid = hi - lo
-                    finals.append(tree(lambda x: x[:valid], f))
+                    f = tree(lambda x: x[:valid], f)
+                    if metric_writer is not None:
+                        metric_writer.flush(
+                            f.mets,
+                            tags=[self.cells[perm[j]].tag for j in range(lo, hi)])
+                    finals.append(f)
                     mss.append(tree(lambda x: x[:, :valid], ms))
             final_p = tree(lambda *xs: jnp.concatenate(xs, axis=0), *finals)
             ms_p = tree(lambda *xs: jnp.concatenate(xs, axis=1), *mss)
         final = tree(lambda x: x[inv], final_p)
         ms = tree(lambda x: jnp.swapaxes(x[:, inv], 0, 1), ms_p)
+        if metric_writer is not None and (chunk is None or chunk >= e):
+            metric_writer.flush(final.mets, tags=[c.tag for c in self.cells])
         if ev is not None:
             final = jax.block_until_ready(final)
             ev.emit("run.end", kind="grid", wall_s=time.perf_counter() - t_run,

@@ -73,7 +73,8 @@ def collect(cells: Sequence[Cell], metrics: dict, *, meta: dict | None = None) -
         warnings.warn(
             f"metric streams {unregistered} have no registered reducer and are "
             f"dropped from cell records; add one via "
-            f"repro.sim.results.register_reducer/register_final/register_mean",
+            f"repro.sim.results.register_reducer/register_final/register_mean "
+            f"(registered: {sorted(_REDUCERS)})",
             stacklevel=2)
     records = []
     for i, c in enumerate(cells):

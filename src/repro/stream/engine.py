@@ -65,6 +65,7 @@ from repro.core.bridge import (
     BridgeState,
     CellParams,
     _cell_codec_idx,
+    _fold_metric_ring,
     cell_step_size,
 )
 from repro.core.neighbors import NeighborTable
@@ -305,6 +306,18 @@ def build_stream_cell_step(grad_fn, spec: BlockSpec, adjacency, rules, attacks, 
             "consensus_dist": jnp.sqrt(jnp.max(cons_sq)),
             "rho": rho,
         }
+        if cell.metrics is not None:
+            # honest-mean per-node gradient norm for the live-metric ring;
+            # summed leaf-wise so the flat [M, d] matrix never materializes.
+            # Each leaf goes through the fence first: the squares would
+            # otherwise CSE with the loss computation inside grad_fn and
+            # re-fuse its reduction — ULP-shifting the loss stream and
+            # breaking metrics-on bit-inertness
+            gn_sq = sum(jnp.sum(jnp.square(screening.fence(
+                            g.astype(jnp.float32))), axis=1)
+                        for g in g_mats)
+            gn = jnp.sqrt(gn_sq)
+            metrics["grad_norm"] = jnp.sum(jnp.where(hm, gn, 0.0)) / hcnt
         bits = comm_lib.wire_bits_blocks(codec_bank, cidx, spec.block_sizes())
         live_edges = (jnp.sum(mask_live).astype(jnp.float32)
                       if channel is not None else n_edges)
@@ -366,7 +379,13 @@ def build_stream_cell_step(grad_fn, spec: BlockSpec, adjacency, rules, attacks, 
                         live=mask_eff)
                 metrics["trust_evicted_frac"] = jnp.mean(
                     new_trust.evicted.astype(jnp.float32))
+        stale_m = live_m = None
+        if cell.metrics is not None and channel is not None:
+            stale_m = jnp.where(mask_live, state.t - send_tick, 0)
+            live_m = mask_live
+        new_mets = _fold_metric_ring(cell.metrics, state, metrics,
+                                     staleness=stale_m, live=live_m)
         return BridgeState(new_params, state.t + 1, key, new_net, new_comm,
-                           state.adv, new_obs, new_trust), metrics
+                           state.adv, new_obs, new_trust, new_mets), metrics
 
     return step

@@ -88,6 +88,7 @@ class StreamBridgeTrainer:
         if self.spec is not None and spec == self.spec:
             return
         self.spec = spec
+        self._chunk_scan_fn = None  # rebuilt with the step (run_chunks cache)
         self._raw_step = build_stream_cell_step(
             self.grad_fn, spec,
             None if self.neighbors is not None else self.config.topology.adjacency,
@@ -122,9 +123,14 @@ class StreamBridgeTrainer:
             from repro.trust import reputation as trust_lib
 
             trust = trust_lib.init_state(self.config.trust, m, width)
+        mets = None
+        if self.config.metrics is not None:
+            from repro.obs import metrics as obs_metrics
+
+            mets = obs_metrics.init_state(self.config.metrics)
         return BridgeState(params=params, t=jnp.zeros((), jnp.int32),
                            key=jax.random.PRNGKey(seed), net=net, comm=comm,
-                           adv=None, obs=obs, trust=trust)
+                           adv=None, obs=obs, trust=trust, mets=mets)
 
     def step(self, state: BridgeState, batch: Any) -> tuple[BridgeState, dict]:
         if self._jit_step is None:
@@ -143,3 +149,13 @@ class StreamBridgeTrainer:
                 metrics["step"] = i + 1
                 history.append(jax.device_get(metrics))
         return state, history
+
+    # the chunked host loop with donated carries + live-metric flushes; the
+    # flat trainer's implementation duck-types on (_raw_step, _cell, config)
+    _chunk_scan = BridgeTrainer._chunk_scan
+
+    def run_chunks(self, state: BridgeState, batch_fn: Callable[[int], Any],
+                   num_steps: int, **kw) -> tuple[BridgeState, dict]:
+        if self._raw_step is None:
+            self._build(state.params)
+        return BridgeTrainer.run_chunks(self, state, batch_fn, num_steps, **kw)

@@ -1,0 +1,410 @@
+"""repro.obs.metrics: live metric rings, the chunked runner, and the writer.
+
+The live-telemetry contract (ISSUE 9 acceptance):
+* (a) metrics OFF is structurally absent — ``state.mets is None`` and the
+  programs are the exact pre-feature ones (params + metric streams bitwise
+  equal to a build that never mentions metrics), across rule x attack x
+  codec, sync + net paths, flat + stream trainers;
+* (b) metrics ON is BIT-INERT — the ring only reads values the step already
+  computes, so the trajectory is bitwise unchanged;
+* (c) ``run_chunks`` (host loop over jitted scan chunks with donated
+  carries) is bitwise identical to step-at-a-time execution, including
+  ragged tails, and refuses chunks that would overwrite unflushed ticks;
+* (d) the background `MetricWriter` streams a gapless, deduped row set and
+  ``close()`` drains durably; threshold alerts land as ``obs.alert`` events;
+plus unit coverage of the ring decode, the alert engine, and the EventLog
+batching/close semantics (ISSUE 9 satellites a+b).
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BridgeConfig, BridgeTrainer, erdos_renyi, replicate
+from repro.core.bridge import stack_batches
+from repro.net import AsyncBridgeConfig, AsyncBridgeTrainer, ChannelConfig
+from repro.obs import EventLog, read_events
+from repro.obs.metrics import (COLUMNS, AlertEngine, AlertRules, MetricSpec,
+                               MetricWriter, init_state, read_metrics, rows_of,
+                               update)
+from repro.sim import ExperimentGrid, GridEngine
+from repro.stream import StreamBridgeTrainer
+
+M, D, T = 12, 5, 25
+
+
+def quad_grad_fn(params, batch):
+    w, c = params["w"], batch
+    loss = 0.5 * jnp.sum((w - c) ** 2)
+    return loss, {"w": w - c}
+
+
+@pytest.fixture(scope="module")
+def topo():
+    return erdos_renyi(M, 0.8, 2, seed=1)
+
+
+@pytest.fixture(scope="module")
+def targets():
+    rng = np.random.default_rng(0)
+    return jnp.asarray(rng.normal(size=(M, D)), jnp.float32)
+
+
+def init_fn(seed):
+    return replicate({"w": jnp.zeros(D)}, M, perturb=0.1, key=jax.random.PRNGKey(seed))
+
+
+def _sync_run(topo, targets, *, rule="trimmed_mean", attack="alie",
+              codec="identity", metrics=None, stream=False, ticks=T):
+    cfg = BridgeConfig(topology=topo, rule=rule, num_byzantine=2, attack=attack,
+                       codec=codec, lam=1.0, t0=10.0, metrics=metrics)
+    cls = StreamBridgeTrainer if stream else BridgeTrainer
+    tr = cls(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    streams = {"loss": [], "consensus_dist": []}
+    for _ in range(ticks):
+        st, m = tr.step(st, targets)
+        for k in streams:
+            streams[k].append(m[k])
+    return tr, st, {k: np.asarray(jnp.stack(v)) for k, v in streams.items()}
+
+
+def _net_run(topo, batches, *, metrics=None):
+    cfg = AsyncBridgeConfig(
+        topology=topo, rule="trimmed_mean", num_byzantine=2, attack="alie",
+        channel=ChannelConfig(drop_prob=0.1), staleness_bound=2,
+        lam=1.0, t0=10.0, metrics=metrics)
+    tr = AsyncBridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    st, ms = tr.run_scan(st, batches)
+    return tr, st, ms
+
+
+def _col(buf, name):
+    return np.asarray(buf)[:, COLUMNS.index(name)]
+
+
+# ---------------------------------------------------------------------------
+# the ring itself
+# ---------------------------------------------------------------------------
+
+
+def test_spec_is_zero_leaf_structure():
+    assert jax.tree_util.tree_leaves(MetricSpec()) == []
+    with pytest.raises(ValueError):
+        MetricSpec(capacity=0)
+
+
+def test_ring_wraparound_and_decode():
+    spec = MetricSpec(capacity=4)
+    st = init_state(spec)
+    for t in range(10):
+        st = update(spec, st, t=t, vals={"loss": float(t), "consensus_dist": 0.1})
+    assert int(st.count) == 10
+    rows = rows_of(st.buf, st.count)
+    # the ring keeps the LAST capacity ticks, tick-ordered
+    assert [r["tick"] for r in rows] == [6, 7, 8, 9]
+    assert [r["loss"] for r in rows] == [6.0, 7.0, 8.0, 9.0]
+    # dedup across overlapping flushes: `after` drops already-written ticks
+    assert [r["tick"] for r in rows_of(st.buf, st.count, after=7)] == [8, 9]
+    # absent columns hold NaN on device and decode as None (JSON null)
+    assert rows[0]["evicted_frac"] is None
+    assert rows[0]["stale_p50"] is None
+
+
+def test_short_first_chunk_skips_unwritten_slots():
+    spec = MetricSpec(capacity=8)
+    st = init_state(spec)
+    for t in range(3):
+        st = update(spec, st, t=t, vals={"loss": 1.0, "consensus_dist": 0.0})
+    assert [r["tick"] for r in rows_of(st.buf, st.count)] == [0, 1, 2]
+
+
+def test_nonfinite_sentinel_column():
+    spec = MetricSpec(capacity=2)
+    st = init_state(spec)
+    st = update(spec, st, t=0, vals={"loss": 1.0, "consensus_dist": 0.0})
+    st = update(spec, st, t=1, vals={"loss": float("nan"), "consensus_dist": 0.0})
+    rows = rows_of(st.buf, st.count)
+    assert rows[0]["nonfinite"] == 0.0
+    assert rows[1]["nonfinite"] == 1.0
+    assert rows[1]["loss"] is None  # NaN loss itself renders as null
+
+
+# ---------------------------------------------------------------------------
+# (a)+(b) metrics off = absent; metrics on = bit-inert
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("rule,attack,codec,stream", [
+    ("trimmed_mean", "alie", "identity", False),
+    ("trimmed_mean", "sign_flip", "int8", False),
+    ("median", "random", "identity", False),
+    ("trimmed_mean", "alie", "identity", True),
+    ("median", "sign_flip", "int8", True),
+])
+def test_sync_metrics_bit_inert(topo, targets, rule, attack, codec, stream):
+    """The ring compiled into the step changes NOTHING about the trajectory,
+    on both the flat and the chunk-streaming trainer."""
+    _, st_off, ms_off = _sync_run(topo, targets, rule=rule, attack=attack,
+                                  codec=codec, metrics=None, stream=stream)
+    _, st_on, ms_on = _sync_run(topo, targets, rule=rule, attack=attack,
+                                codec=codec, metrics=MetricSpec(capacity=T),
+                                stream=stream)
+    assert st_off.mets is None
+    np.testing.assert_array_equal(np.asarray(st_off.params["w"]),
+                                  np.asarray(st_on.params["w"]))
+    for k in ms_off:
+        np.testing.assert_array_equal(ms_off[k], ms_on[k],
+                                      err_msg=f"metric {k} diverged under metrics")
+    # and the ring actually observed the run
+    assert int(st_on.mets.count) == T
+    rows = rows_of(st_on.mets.buf, st_on.mets.count)
+    np.testing.assert_allclose([r["loss"] for r in rows], ms_on["loss"],
+                               rtol=1e-6)
+    assert all(r["grad_norm"] is not None and r["grad_norm"] > 0 for r in rows)
+
+
+def test_net_metrics_bit_inert_and_staleness_columns(topo, targets):
+    """The network-runtime path: bitwise unchanged, and the delivered-message
+    staleness quantiles populate (NaN on the sync path)."""
+    batches = stack_batches(lambda i: targets, T)
+    _, st_off, ms_off = _net_run(topo, batches, metrics=None)
+    _, st_on, ms_on = _net_run(topo, batches, metrics=MetricSpec(capacity=T))
+    assert st_off.mets is None
+    np.testing.assert_array_equal(np.asarray(st_off.params["w"]),
+                                  np.asarray(st_on.params["w"]))
+    np.testing.assert_array_equal(np.asarray(ms_off["loss"]),
+                                  np.asarray(ms_on["loss"]))
+    p50 = _col(st_on.mets.buf, "stale_p50")
+    assert np.isfinite(p50).any(), "net path should fill staleness quantiles"
+
+
+# ---------------------------------------------------------------------------
+# (c) run_chunks == step-at-a-time, bitwise
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("stream,chunk", [(False, 7), (False, T), (True, 7)])
+def test_run_chunks_matches_step_loop(topo, targets, stream, chunk):
+    """Chunked scans with donated carries (including a ragged tail: 25 = 3x7
+    + 4) reproduce the step loop bit-for-bit, params AND metric streams."""
+    _, st_step, ms_step = _sync_run(topo, targets,
+                                    metrics=MetricSpec(capacity=T), stream=stream)
+    cfg = BridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                       attack="alie", lam=1.0, t0=10.0,
+                       metrics=MetricSpec(capacity=T))
+    tr = (StreamBridgeTrainer if stream else BridgeTrainer)(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    st, ms = tr.run_chunks(st, lambda i: targets, T, chunk=chunk)
+    np.testing.assert_array_equal(np.asarray(st_step.params["w"]),
+                                  np.asarray(st.params["w"]))
+    for k in ms_step:
+        np.testing.assert_array_equal(ms_step[k], np.asarray(ms[k]))
+    assert int(st.mets.count) == T
+
+
+def test_run_chunks_rejects_chunk_beyond_capacity(topo, targets):
+    cfg = BridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                       attack="alie", lam=1.0, t0=10.0,
+                       metrics=MetricSpec(capacity=4))
+    tr = BridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    with pytest.raises(ValueError, match="capacity"):
+        tr.run_chunks(st, lambda i: targets, 8, chunk=6)
+    with pytest.raises(ValueError):
+        tr.run_chunks(st, lambda i: targets, 8, chunk=0)
+
+
+def test_run_chunks_defaults_chunk_to_capacity(topo, targets):
+    """No explicit chunk: the runner picks the ring capacity, so a writer
+    flushing once per chunk never loses a tick."""
+    cfg = BridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                       attack="alie", lam=1.0, t0=10.0,
+                       metrics=MetricSpec(capacity=6))
+    tr = BridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    st, ms = tr.run_chunks(st, lambda i: targets, T)
+    assert int(st.mets.count) == T
+    assert np.asarray(ms["loss"]).shape == (T,)
+
+
+# ---------------------------------------------------------------------------
+# (d) the background writer + the chunked runner, end to end
+# ---------------------------------------------------------------------------
+
+
+def test_writer_streams_gapless_rows(topo, targets, tmp_path):
+    path = os.path.join(tmp_path, "metrics.jsonl")
+    cfg = BridgeConfig(topology=topo, rule="trimmed_mean", num_byzantine=2,
+                       attack="alie", lam=1.0, t0=10.0,
+                       metrics=MetricSpec(capacity=8))
+    tr = BridgeTrainer(cfg, quad_grad_fn)
+    st = tr.init(init_fn(0), seed=0)
+    events_path = os.path.join(tmp_path, "events.jsonl")
+    with EventLog(events_path) as ev, MetricWriter(path, events=ev) as w:
+        st, _ = tr.run_chunks(st, lambda i: targets, T, writer=w, events=ev)
+    rows = read_metrics(path)
+    # gapless and deduped: exactly one row per tick, in order
+    assert [r["tick"] for r in rows] == list(range(T))
+    assert all(r["tag"] == "train" for r in rows)
+    # per-row walls interpolate monotonically between flush walls
+    walls = [r["wall"] for r in rows]
+    assert walls == sorted(walls)
+    # the runner logged one train.chunk event per dispatched chunk (25 = 3x8+1)
+    chunks = [e for e in read_events(events_path) if e["tag"] == "train.chunk"]
+    assert [(e["lo"], e["hi"]) for e in chunks] == [(0, 8), (8, 16), (16, 24),
+                                                    (24, 25)]
+    assert all(e["train_tag"] == "train" for e in chunks)
+
+
+def test_writer_close_drains_durably(tmp_path):
+    """Everything enqueued before close() is on disk after close() — the
+    writer joins its drain thread instead of dropping the queue."""
+    spec = MetricSpec(capacity=16)
+    st = init_state(spec)
+    for t in range(16):
+        st = update(spec, st, t=t, vals={"loss": 1.0, "consensus_dist": 0.0})
+    path = os.path.join(tmp_path, "m.jsonl")
+    w = MetricWriter(path)
+    w.flush(st, tag="a")
+    w.flush(st, tag="b")
+    w.flush(st, tag="a")  # dedup: same ticks again write nothing
+    w.close()
+    assert w.rows_written == 32
+    rows = read_metrics(path)
+    assert len(rows) == 32
+    assert len(read_metrics(path, tag="a")) == 16
+    assert len(read_metrics(path, after=9, tag="b")) == 6
+    w.close()  # idempotent
+    w.flush(st, tag="c")  # post-close flush is a no-op, not a crash
+    assert len(read_metrics(path)) == 32
+
+
+def test_writer_emits_alert_events(tmp_path):
+    """A divergent row crosses the writer -> AlertEngine -> EventLog path as
+    an ``obs.alert`` record whose stream tag rides a non-colliding field."""
+    spec = MetricSpec(capacity=4)
+    st = init_state(spec)
+    st = update(spec, st, t=0, vals={"loss": 1.0, "consensus_dist": 0.0})
+    st = update(spec, st, t=1, vals={"loss": float("nan"), "consensus_dist": 0.0})
+    mpath = os.path.join(tmp_path, "m.jsonl")
+    epath = os.path.join(tmp_path, "e.jsonl")
+    with EventLog(epath) as ev:
+        with MetricWriter(mpath, alerts=AlertRules(), events=ev) as w:
+            w.flush(st, tag="cell0")
+    alerts = [e for e in read_events(epath) if e["tag"] == "obs.alert"]
+    assert len(alerts) == 1
+    assert alerts[0]["kind"] == "divergence"
+    assert alerts[0]["stream"] == "cell0"
+    assert alerts[0]["tick"] == 1
+
+
+def test_grid_engine_streams_per_cell_tags(topo, targets, tmp_path):
+    """The grid engine flushes a stacked [E] ring batch with per-cell tags
+    (engine cell order, not compile order).  Grid cells scan all their ticks
+    inside one compiled bank, so each stream is the documented TAIL window of
+    the last ``capacity`` ticks — capacity >= ticks makes it gapless."""
+    grid = ExperimentGrid(topo, ("trimmed_mean", "median"), ("alie",), (2,),
+                          (0, 1), lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn, metrics=MetricSpec(capacity=8))
+    state = engine.init(init_fn)
+    batches = stack_batches(lambda i: targets, 8)
+    path = os.path.join(tmp_path, "m.jsonl")
+    with MetricWriter(path) as w:
+        final, _ = engine.run(state, batches, chunk=3, metric_writer=w)
+    rows = read_metrics(path)
+    tags = {c.tag for c in engine.cells}
+    assert len(tags) == 4
+    assert {r["tag"] for r in rows} == tags
+    for tag in tags:
+        assert [r["tick"] for r in read_metrics(path, tag=tag)] == list(range(8))
+
+
+def test_grid_engine_small_ring_keeps_tail(topo, targets, tmp_path):
+    grid = ExperimentGrid(topo, ("trimmed_mean",), ("alie",), (2,), (0,),
+                          lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn, metrics=MetricSpec(capacity=4))
+    state = engine.init(init_fn)
+    path = os.path.join(tmp_path, "m.jsonl")
+    with MetricWriter(path) as w:
+        engine.run(state, stack_batches(lambda i: targets, 8), metric_writer=w)
+    assert [r["tick"] for r in read_metrics(path)] == [4, 5, 6, 7]
+
+
+def test_grid_engine_rejects_writer_without_spec(topo, targets, tmp_path):
+    grid = ExperimentGrid(topo, ("trimmed_mean",), ("alie",), (2,), (0,),
+                          lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn)
+    state = engine.init(init_fn)
+    with MetricWriter(os.path.join(tmp_path, "m.jsonl")) as w:
+        with pytest.raises(ValueError, match="metrics"):
+            engine.run(state, stack_batches(lambda i: targets, 4),
+                       metric_writer=w)
+
+
+# ---------------------------------------------------------------------------
+# the alert engine (shared by writer and live monitor)
+# ---------------------------------------------------------------------------
+
+
+def test_alert_engine_latches_per_kind():
+    eng = AlertEngine(AlertRules())
+    row_bad = {"tick": 3, "nonfinite": 1.0}
+    assert [a["kind"] for a in eng.feed("t", row_bad)] == ["divergence"]
+    assert eng.feed("t", dict(row_bad, tick=4)) == []  # latched
+    # an independent stream tag fires its own alert
+    assert [a["kind"] for a in eng.feed("u", row_bad)] == ["divergence"]
+
+
+def test_alert_engine_loss_spike_tracks_running_min():
+    eng = AlertEngine(AlertRules(loss_spike_factor=10.0))
+    assert eng.feed("t", {"tick": 0, "loss": 5.0}) == []
+    assert eng.feed("t", {"tick": 1, "loss": 1.0}) == []
+    assert eng.feed("t", {"tick": 2, "loss": 9.0}) == []  # < 10x min
+    out = eng.feed("t", {"tick": 3, "loss": 11.0})
+    assert out[0]["kind"] == "loss_spike" and out[0]["running_min"] == 1.0
+
+
+def test_alert_engine_eviction_and_wire_budget():
+    eng = AlertEngine(AlertRules(evict_spike=0.2, wire_budget_bytes=100.0))
+    out = eng.feed("t", {"tick": 0, "evicted_frac": 0.5,
+                         "wire_bytes_total": 60.0})
+    assert [a["kind"] for a in out] == ["eviction_spike"]
+    out = eng.feed("t", {"tick": 1, "evicted_frac": 0.5,
+                         "wire_bytes_total": 60.0})  # cumulative 120 > 100
+    assert [a["kind"] for a in out] == ["wire_budget"]
+    assert out[0]["wire_bytes_cumulative"] == 120.0
+
+
+# ---------------------------------------------------------------------------
+# EventLog batching + close semantics (ISSUE 9 satellites a+b)
+# ---------------------------------------------------------------------------
+
+
+def test_eventlog_close_drains_batched_queue(tmp_path):
+    """With a long flush interval nothing may have hit the disk yet; close()
+    must still drain every queued record durably before returning."""
+    path = os.path.join(tmp_path, "e.jsonl")
+    log = EventLog(path, flush_interval=60.0)
+    for i in range(200):
+        log.emit("unit.test", i=i)
+    log.close()
+    recs = read_events(path)
+    assert [r["i"] for r in recs] == list(range(200))
+    log.close()  # idempotent
+    log.emit("unit.test", i=999)  # post-close emit is a no-op
+    assert len(read_events(path)) == 200
+
+
+def test_eventlog_records_are_json_lines(tmp_path):
+    path = os.path.join(tmp_path, "e.jsonl")
+    with EventLog(path) as log:
+        log.emit("a.b", x=1.5, s="hi")
+    with open(path) as f:
+        rec = json.loads(f.readline())
+    assert rec["tag"] == "a.b" and rec["x"] == 1.5 and rec["s"] == "hi"
+    assert "wall" in rec and "time" in rec
