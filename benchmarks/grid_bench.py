@@ -159,6 +159,7 @@ def grid_throughput(
         for leaf_g, leaf_s in zip(
             jax.tree_util.tree_leaves(state.params),
             jax.tree_util.tree_leaves(base_final[sample.tag]),
+            strict=True,
         )
     ]
     max_diff = max(diffs)

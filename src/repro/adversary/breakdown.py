@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Sequence
+from collections.abc import Callable, Sequence
 
 import jax
 import numpy as np

@@ -33,7 +33,8 @@ one grid axis covers both.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, NamedTuple, Sequence
+from collections.abc import Callable, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -247,7 +248,7 @@ def get_adversary(name: str) -> Adversary:
         raise ValueError(
             f"unknown adversary {name!r}; options: {sorted(ADVERSARIES)} "
             f"(adaptive adversaries register via repro.adversary.adaptive)"
-        )
+        ) from None
 
 
 def registry_tiers() -> dict[str, frozenset[str]]:
@@ -396,3 +397,20 @@ def apply_sparse_message_adversary_bank(bank, adv_idx, ctx, state, theta, w, byz
         for fn in fns
     ]
     return jax.lax.switch(adv_idx, branches, state, theta, w, byz_mask, live, key, t)
+
+
+# ---------------------------------------------------------------------------
+# static-analysis contracts (checked by `python -m repro.analysis`)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import Contract  # noqa: E402  (dependency-light)
+
+CONTRACTS: tuple[Contract, ...] = (
+    Contract(
+        "adversary.tiers.partition", "lint",
+        "every name in the attack namespace belongs to exactly one of the "
+        "six registry tiers (broadcast / message / wire / adversary / "
+        "equivocator / slanderer)",
+        params=(("check", "adversary_tiers"),),
+    ),
+)

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Sequence
+from collections.abc import Callable, Sequence
 
 import numpy as np
 
@@ -50,7 +50,7 @@ def _sample_theta(rng: np.random.Generator, bounds) -> tuple[float, ...]:
 
 def _mutate_theta(rng: np.random.Generator, theta, bounds, scale: float) -> tuple[float, ...]:
     out = []
-    for x, (lo, hi) in zip(theta, bounds):
+    for x, (lo, hi) in zip(theta, bounds, strict=True):
         if hi <= lo:
             out.append(0.0)
             continue

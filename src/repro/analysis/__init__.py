@@ -1,0 +1,36 @@
+"""repro.analysis — contract-driven static analysis of the BRIDGE stack.
+
+Five passes over three artifact levels:
+
+* **prng** (`repro.analysis.prng`)       — jaxpr: no key feeds two draws;
+* **fence** (`repro.analysis.hlo`)       — optimized HLO: fences survive CSE;
+* **memory** (`repro.analysis.hlo`)      — optimized HLO: byte budgets,
+  donation aliasing;
+* **retrace** (`repro.analysis.retrace`) — runtime counters: compiled-program
+  caches stay warm across the promised update patterns;
+* **lint** (`repro.analysis.lint`)       — AST/registries: partitions,
+  completeness, zero-leaf specs, seed plumbing.
+
+Contracts live NEXT TO governed code as module-level ``CONTRACTS`` tuples
+(see `repro.analysis.contracts.GOVERNED_MODULES`); the CLI is
+``python -m repro.analysis``.
+
+This package's top level re-exports only the dependency-light contract
+vocabulary: governed modules import `repro.analysis.contracts` at module
+load, so importing programs/driver here would recreate the cycle the
+layering avoids.
+"""
+from repro.analysis.contracts import (
+    GOVERNED_MODULES,
+    KINDS,
+    CheckResult,
+    Contract,
+    by_kind,
+    collect,
+    summarize,
+)
+
+__all__ = [
+    "GOVERNED_MODULES", "KINDS", "CheckResult", "Contract",
+    "by_kind", "collect", "summarize",
+]

@@ -1,0 +1,40 @@
+"""``python -m repro.analysis`` — the static-analysis gate.
+
+Collects every governed module's CONTRACTS, builds the five canonical
+programs, runs the selected passes, prints the verdict table, and exits
+nonzero on any FAIL (the CI contract).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.analysis import driver
+from repro.analysis.contracts import KINDS, summarize
+from repro.analysis.programs import PROGRAM_NAMES
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="contract-driven static analysis of the compiled "
+                    "BRIDGE program")
+    ap.add_argument("--programs", nargs="+", choices=PROGRAM_NAMES,
+                    metavar="PROG",
+                    help=f"canonical programs to build (default: all of "
+                         f"{', '.join(PROGRAM_NAMES)})")
+    ap.add_argument("--passes", nargs="+", choices=KINDS, metavar="PASS",
+                    help=f"passes to run (default: all of {', '.join(KINDS)})")
+    ap.add_argument("-q", "--quiet", action="store_true",
+                    help="suppress progress lines (verdict table only)")
+    args = ap.parse_args(argv)
+
+    log = None if args.quiet else lambda msg: print(f"  .. {msg}", flush=True)
+    results = driver.run_all(program_names=args.programs, kinds=args.passes,
+                             log=log)
+    print(summarize(results))
+    return 1 if any(not r.ok for r in results) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,142 @@
+"""Driver: collect every CONTRACTS declaration, build the canonical
+programs, route each contract to the pass that can discharge it, and
+aggregate verdicts.
+
+Routing is by contract ``kind`` plus pass-specific params:
+
+* ``prng``    — runs `prng.find_reuse` on the jaxpr of every program the
+  contract names in its ``("programs", ...)`` param;
+* ``fence``   — a ``min_fences`` param checks the floor on every selected
+  program; a ``delta`` param compares the metrics-on/off twins;
+* ``memory``  — a ``budget`` param resolves against the byte ceilings the
+  programs declare (`programs.Program.budgets`); ``("check", "donation")``
+  reads the chunk-scan's aliasing table;
+* ``retrace`` — a ``max_traces`` param drives `run_chunks` on a FRESH flat
+  program (trace counters must start cold); otherwise the grid
+  `set_cells` zero-retrace check;
+* ``lint``    — dispatched wholesale to `lint.run_lint` over the source tree.
+
+A contract whose inputs were deselected (``--programs``/``--passes``)
+reports SKIP, never silently disappears — the summary line counts it.
+"""
+from __future__ import annotations
+
+import pathlib
+
+from repro.analysis import hlo as hlo_pass
+from repro.analysis import lint as lint_pass
+from repro.analysis import prng as prng_pass
+from repro.analysis import programs as programs_lib
+from repro.analysis import retrace as retrace_pass
+from repro.analysis.contracts import KINDS, CheckResult, collect
+
+#: source root (the directory holding ``repro/``) for the lint pass
+SRC_ROOT = pathlib.Path(__file__).resolve().parents[2]
+
+
+def _skip(c, detail: str, program: str = "") -> CheckResult:
+    return CheckResult(contract=c.name, kind=c.kind, status="SKIP",
+                       detail=detail, program=program)
+
+
+def _run_prng(c, programs) -> list[CheckResult]:
+    out = []
+    for pname in c.param("programs", tuple(programs)):
+        prog = programs.get(pname)
+        if prog is None:
+            out.append(_skip(c, "program not selected", pname))
+            continue
+        reuse = prng_pass.find_reuse(prog.jaxpr)
+        out.append(CheckResult(
+            contract=c.name, kind="prng", program=pname,
+            status="PASS" if not reuse else "FAIL",
+            detail=(f"every key feeds exactly one draw "
+                    f"({len(prog.jaxpr.eqns)} top-level eqns walked)"
+                    if not reuse else
+                    f"{len(reuse)} reused key(s): "
+                    + " | ".join(str(r) for r in reuse[:3]))))
+    return out
+
+
+def _run_fence(c, programs) -> list[CheckResult]:
+    delta = c.param("delta")
+    if delta is not None:
+        flat, met = programs.get("flat"), programs.get("metrics")
+        if flat is None or met is None:
+            return [_skip(c, "needs both the flat and metrics programs")]
+        return [hlo_pass.check_metrics_fence_delta(c, flat.hlo, met.hlo,
+                                                   delta=int(delta))]
+    floor = int(c.param("min_fences", 1))
+    return [hlo_pass.check_fence_floor(c, p.name, p.hlo, min_fences=floor)
+            for p in programs.values()]
+
+
+def _run_memory(c, programs) -> list[CheckResult]:
+    if c.param("check") == "donation":
+        prog = programs.get("flat")
+        if prog is None:
+            return [_skip(c, "needs the flat program")]
+        return [hlo_pass.check_donation(c, prog.name, prog.chunk_hlo,
+                                        hlo_pass.donation_supported())]
+    budget_id = c.param("budget")
+    out = []
+    governed = [p for p in programs.values() if budget_id in p.budgets]
+    if not governed:
+        return [_skip(c, f"no selected program declares budget {budget_id!r}")]
+    for prog in governed:
+        byte_ceiling, label = prog.budgets[budget_id]
+        out.append(hlo_pass.check_budget(c, prog.name, prog.hlo,
+                                         byte_ceiling, label))
+    return out
+
+
+def _run_retrace(c, programs) -> list[CheckResult]:
+    if c.param("max_traces") is not None:
+        if "flat" not in programs:
+            return [_skip(c, "needs the flat program")]
+        # a FRESH trainer: the shared flat program's jit caches are already
+        # warm from the fence/memory passes, which would mask a retrace
+        prog = programs_lib.build_flat()
+        return [retrace_pass.check_run_chunks(
+            c, prog.trainer, prog.state, prog.batch_fn, num_steps=8, chunk=4)]
+    engine, state_fn, batches = programs_lib.build_grid()
+    return [retrace_pass.check_grid_set_cells(c, engine, state_fn, batches)]
+
+
+def run_all(program_names=None, kinds=None, src_root=SRC_ROOT,
+            log=None) -> list[CheckResult]:
+    """Run the selected passes over the selected canonical programs.
+
+    ``program_names``/``kinds`` default to everything; ``log`` (optional
+    callable) receives progress lines."""
+    say = log or (lambda *_: None)
+    kinds = tuple(kinds) if kinds else KINDS
+    names = tuple(program_names) if program_names else programs_lib.PROGRAM_NAMES
+    contracts = collect()
+    say(f"{len(contracts)} contracts collected from governed modules")
+
+    needs_programs = any(k in kinds for k in ("prng", "fence", "memory"))
+    programs = {}
+    if needs_programs:
+        for n in names:
+            say(f"building canonical program: {n}")
+            programs[n] = programs_lib.BUILDERS[n]()
+
+    results: list[CheckResult] = []
+    for c in contracts:
+        if c.kind not in kinds:
+            results.append(_skip(c, f"pass {c.kind!r} not selected"))
+            continue
+        say(f"checking {c.name} [{c.kind}]")
+        if c.kind == "prng":
+            results.extend(_run_prng(c, programs))
+        elif c.kind == "fence":
+            results.extend(_run_fence(c, programs))
+        elif c.kind == "memory":
+            results.extend(_run_memory(c, programs))
+        elif c.kind == "retrace":
+            results.extend(_run_retrace(c, programs))
+    lint_contracts = [c for c in contracts if c.kind == "lint"]
+    if "lint" in kinds and lint_contracts:
+        results.extend(lint_pass.run_lint(lint_contracts, src_root))
+    return results

@@ -1,0 +1,122 @@
+"""Fence-integrity and memory-contract passes over optimized HLO.
+
+Both passes read ``jit(...).lower(...).compile().as_text()`` — the program
+XLA will actually run, *after* CSE, fusion, and loop simplification — so they
+check what survived optimization, not what the tracer emitted.
+
+**Fence integrity.**  `repro.core.screening.fence` rounds a value to storage
+precision behind a length-2 ``lax.scan`` precisely because XLA's while-loop
+simplifier unrolls trip-count-<=1 loops (which would re-fuse the producer and
+void the fence).  Survival is therefore a checkable property of the optimized
+program: each fence is a ``while`` whose condition bounds trip count 2.  The
+pass counts trip-2 loops per program and asserts (a) every canonical program
+keeps at least the declared floor, and (b) the metrics-on program keeps
+exactly one MORE than its metrics-off twin — the grad-norm fence that severs
+CSE between the metric's reduction and the loss reduction (PR 9's
+bit-inertness condition: without it, XLA re-fuses the shared ``g*g``
+subexpressions and ULP-shifts the loss stream).
+
+**Memory contract.**  Declared per-program byte budgets over the largest
+array typed anywhere in the HLO (`launch.hlo_analysis.largest_tensor_bytes`
+— parameters, results, tuple elements): the sparse path must never
+materialize a dense ``[M, M, d]`` float tensor, the streaming path must stay
+under the flat ``[M, d]`` it exists to avoid, and ``donate_argnums`` on the
+chunk-scan carry must survive into the module's ``input_output_alias`` table
+(jax silently warns-and-copies when a donation is dropped — the table is the
+ground truth).
+"""
+from __future__ import annotations
+
+from repro.analysis.contracts import CheckResult
+from repro.launch import hlo_analysis
+
+#: a surviving screening fence == a while loop with this trip count
+FENCE_TRIP_COUNT = 2
+
+
+def count_fences(hlo_text: str) -> int:
+    """Trip-count-2 while loops in the optimized program (nested computations
+    included)."""
+    return sum(1 for w in hlo_analysis.while_loops(hlo_text)
+               if w.trip_count == FENCE_TRIP_COUNT)
+
+
+def check_fence_floor(contract, program_name: str, hlo_text: str,
+                      min_fences: int = 1) -> CheckResult:
+    """Every canonical program must keep >= ``min_fences`` surviving fences."""
+    n = count_fences(hlo_text)
+    ok = n >= min_fences
+    return CheckResult(
+        contract=contract.name, kind="fence", program=program_name,
+        status="PASS" if ok else "FAIL",
+        detail=(f"{n} trip-2 while loop(s) survive optimization"
+                if ok else
+                f"only {n} trip-2 while loop(s) survive (declared floor "
+                f"{min_fences}) — a fence was stripped or unrolled"))
+
+
+def check_metrics_fence_delta(contract, flat_hlo: str, metrics_hlo: str,
+                              delta: int = 1) -> CheckResult:
+    """metrics-on keeps exactly ``delta`` more fences than metrics-off: the
+    grad-norm fence exists, and turning metrics on did not strip any."""
+    n_flat, n_met = count_fences(flat_hlo), count_fences(metrics_hlo)
+    ok = n_met == n_flat + delta
+    return CheckResult(
+        contract=contract.name, kind="fence", program="metrics",
+        status="PASS" if ok else "FAIL",
+        detail=(f"fences: metrics-off {n_flat}, metrics-on {n_met} "
+                f"(grad-norm reduction stays un-CSE'd from the loss)"
+                if ok else
+                f"fences: metrics-off {n_flat}, metrics-on {n_met}, expected "
+                f"+{delta} — the grad-norm fence is missing or a rule fence "
+                f"was lost when metrics engaged"))
+
+
+def check_budget(contract, program_name: str, hlo_text: str,
+                 budget_bytes: int, label: str) -> CheckResult:
+    """Largest single tensor in the program strictly under ``budget_bytes``."""
+    largest = hlo_analysis.largest_tensor_bytes(hlo_text)
+    ok = largest < budget_bytes
+    top = hlo_analysis.largest_tensors(hlo_text, top=1)
+    shape = f"{top[0][1]}{list(top[0][2])}" if top else "?"
+    return CheckResult(
+        contract=contract.name, kind="memory", program=program_name,
+        status="PASS" if ok else "FAIL",
+        detail=(f"largest tensor {shape} = {largest} B < {label} "
+                f"budget {budget_bytes} B"
+                if ok else
+                f"largest tensor {shape} = {largest} B >= {label} "
+                f"budget {budget_bytes} B — a dense intermediate "
+                f"materialized on a path that promises not to"))
+
+
+def check_donation(contract, program_name: str, chunk_hlo: str,
+                   backend_supports: bool) -> CheckResult:
+    """The chunk-scan's donated state carry appears in the aliasing table."""
+    if not backend_supports:
+        return CheckResult(
+            contract=contract.name, kind="memory", program=program_name,
+            status="SKIP",
+            detail="backend emits no input_output_alias for donated "
+                   "buffers (donation unsupported here); not checkable")
+    aliased = hlo_analysis.donated_params(chunk_hlo)
+    ok = len(aliased) > 0
+    return CheckResult(
+        contract=contract.name, kind="memory", program=program_name,
+        status="PASS" if ok else "FAIL",
+        detail=(f"{len(aliased)} output(s) alias donated parameters "
+                f"(state carry reuses its buffers)"
+                if ok else
+                "input_output_alias table is empty: the donated scan carry "
+                "was silently copied, doubling peak state memory"))
+
+
+def donation_supported() -> bool:
+    """Probe once whether this backend honors donation at all (an identity
+    add with a donated same-shape operand must alias)."""
+    import jax
+    import jax.numpy as jnp
+
+    txt = (jax.jit(lambda x: x + 1.0, donate_argnums=(0,))
+           .lower(jnp.zeros((4,), jnp.float32)).compile().as_text())
+    return len(hlo_analysis.donated_params(txt)) > 0

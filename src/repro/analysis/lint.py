@@ -1,0 +1,242 @@
+"""Repo-lint pass: the registry contracts, mechanized at the AST/import level.
+
+Four invariant families that previously lived only as prose in docstrings or
+scattered test assertions:
+
+* **partition** — every screening rule sits in exactly one of
+  ``STREAMABLE_RULES`` / ``STREAM_REJECTED_RULES``; every name in the attack
+  namespace sits in exactly one of the six `adversary.protocols` tiers;
+* **completeness** — the per-rule side tables (``MIN_NEIGHBORS``, the
+  traceable twins, the decision-instrumented twins) cover exactly
+  ``RULES``'s keys: a rule added to one registry but not the others would
+  otherwise only fail at dispatch time, deep inside a compiled grid;
+* **zero-leaf specs** — ``TraceSpec`` / ``MetricSpec`` / ``TrustSpec`` are
+  jit *structure*: ``tree_leaves(spec) == []``, or a vmapped `CellParams`
+  would try to batch them;
+* **seed plumbing** — no naked ``jax.random.PRNGKey(...)`` in ``src/``
+  outside declared seed-plumbing sites: every other key must descend from a
+  plumbed seed via split/fold_in, or two entry points could silently share
+  a stream.  A site is plumbed when its argument expression mentions a seed
+  (``seed``, ``args.seed``, ``c.seed``...) or when it carries a waiver in
+  the governing contract (each waiver names the file and enclosing
+  function, so a moved call site invalidates loudly).
+
+Checks import the live registries (not a parallel list that could itself go
+stale) and parse source with ``ast`` — nothing here executes jax programs.
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import pathlib
+
+from repro.analysis.contracts import CheckResult, Contract
+
+
+def _result(contract: Contract, ok: bool, ok_detail: str, bad_detail: str) -> CheckResult:
+    return CheckResult(contract=contract.name, kind="lint",
+                       status="PASS" if ok else "FAIL",
+                       detail=ok_detail if ok else bad_detail)
+
+
+# ---------------------------------------------------------------------------
+# registry partitions / completeness
+# ---------------------------------------------------------------------------
+
+
+def check_stream_partition(contract: Contract) -> CheckResult:
+    from repro.core import screening
+
+    rules = set(screening.RULES)
+    streamable = set(screening.STREAMABLE_RULES)
+    rejected = set(screening.STREAM_REJECTED_RULES)
+    overlap = streamable & rejected
+    missing = rules - streamable - rejected
+    phantom = (streamable | rejected) - rules
+    ok = not overlap and not missing and not phantom
+    return _result(
+        contract, ok,
+        f"{len(rules)} rules partitioned: {len(streamable)} streamable, "
+        f"{len(rejected)} rejected",
+        f"stream partition broken — overlap={sorted(overlap)}, "
+        f"unassigned={sorted(missing)}, phantom={sorted(phantom)}")
+
+
+def check_registry_completeness(contract: Contract) -> CheckResult:
+    from repro.core import screening
+
+    rules = set(screening.RULES)
+    problems = []
+    for label, table in (
+        ("MIN_NEIGHBORS", screening.MIN_NEIGHBORS),
+        ("_MIN_NEIGHBORS_TRACEABLE", screening._MIN_NEIGHBORS_TRACEABLE),
+        ("RULES_WITH_DECISIONS", screening.RULES_WITH_DECISIONS),
+    ):
+        if set(table) != rules:
+            problems.append(
+                f"{label}: missing={sorted(rules - set(table))}, "
+                f"extra={sorted(set(table) - rules)}")
+    weighted = set(screening.WEIGHTED_RULES)
+    if not weighted <= rules:
+        problems.append(f"WEIGHTED_RULES outside RULES: {sorted(weighted - rules)}")
+    return _result(
+        contract, not problems,
+        f"side tables cover all {len(rules)} rules",
+        "; ".join(problems))
+
+
+def check_adversary_tiers(contract: Contract) -> CheckResult:
+    from repro.adversary import protocols
+
+    tiers = protocols.registry_tiers()
+    names: dict[str, list[str]] = {}
+    for tier, members in tiers.items():
+        for n in members:
+            names.setdefault(n, []).append(tier)
+    multi = {n: hs for n, hs in names.items() if len(hs) > 1}
+    uncovered = set(protocols.attack_names()) - set(names)
+    ok = not multi and not uncovered
+    return _result(
+        contract, ok,
+        f"{len(names)} names across {len(tiers)} tiers, each in exactly one",
+        f"tier partition broken — multi-homed={multi}, "
+        f"uncovered={sorted(uncovered)}")
+
+
+def check_zero_leaf_specs(contract: Contract) -> CheckResult:
+    import jax
+
+    bad = []
+    for spec_path in contract.param("classes", ()):
+        modname, clsname = spec_path.split(":")
+        cls = getattr(importlib.import_module(modname), clsname)
+        leaves = jax.tree_util.tree_leaves(cls())
+        if leaves:
+            bad.append(f"{spec_path} has {len(leaves)} leaves")
+    return _result(
+        contract, not bad,
+        f"{len(contract.param('classes', ()))} spec classes are zero-leaf "
+        f"pytrees (pure jit structure)",
+        "; ".join(bad))
+
+
+def check_salts_distinct(contract: Contract) -> CheckResult:
+    from repro.core import bridge
+
+    names = contract.param("salts", ())
+    vals = {n: getattr(bridge, n) for n in names}
+    dupes = {v: [n for n, vv in vals.items() if vv == v]
+             for v in vals.values()
+             if sum(vv == v for vv in vals.values()) > 1}
+    return _result(
+        contract, not dupes,
+        f"{len(names)} stream salts pairwise distinct",
+        f"colliding salts (streams would correlate): {dupes}")
+
+
+def check_kernel_ref_twins(contract: Contract) -> CheckResult:
+    """Every public dispatcher in kernels/ops.py routes to BOTH a `_pallas`
+    implementation and a `ref.` twin — the parity contract that lets CPU CI
+    stand in for the TPU path."""
+    modname = contract.param("module", "repro.kernels.ops")
+    mod = importlib.import_module(modname)
+    tree = ast.parse(pathlib.Path(mod.__file__).read_text())
+    bad = []
+    for node in tree.body:
+        if not isinstance(node, ast.FunctionDef) or node.name.startswith("_"):
+            continue
+        src = ast.unparse(node)
+        if "_pallas" not in src or "ref." not in src:
+            bad.append(node.name)
+    return _result(
+        contract, not bad,
+        "every kernel dispatcher has a pallas path and a ref twin",
+        f"dispatchers missing a pallas path or ref twin: {bad}")
+
+
+# ---------------------------------------------------------------------------
+# naked-PRNGKey scan
+# ---------------------------------------------------------------------------
+
+
+def _prngkey_sites(root: pathlib.Path) -> list[tuple[str, str, int, str]]:
+    """Every ``PRNGKey(...)`` call under ``root`` as
+    ``(relpath, enclosing_function, lineno, arg_source)``."""
+    sites = []
+    for path in sorted(root.rglob("*.py")):
+        rel = path.relative_to(root.parent).as_posix()
+        tree = ast.parse(path.read_text())
+        # map each node to its enclosing function name
+        parents: dict[ast.AST, str] = {}
+
+        def visit(node, fname):
+            for child in ast.iter_child_nodes(node):
+                cf = fname
+                if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    cf = child.name
+                parents[child] = cf
+                visit(child, cf)
+
+        parents[tree] = "<module>"
+        visit(tree, "<module>")
+        for node, fname in parents.items():
+            if not isinstance(node, ast.Call):
+                continue
+            fn = node.func
+            name = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else "")
+            if name != "PRNGKey":
+                continue
+            arg_src = ", ".join(ast.unparse(a) for a in node.args)
+            sites.append((rel, fname, node.lineno, arg_src))
+    return sites
+
+
+def check_seed_plumbing(contract: Contract, src_root: str | pathlib.Path) -> CheckResult:
+    root = pathlib.Path(src_root) / "repro"
+    waivers = set(contract.param("waivers", ()))
+    sites = _prngkey_sites(root)
+    violations = []
+    for rel, fname, lineno, arg in sites:
+        if "seed" in arg.lower():
+            continue  # plumbed: the key IS the seed argument
+        if (rel, fname) in waivers:
+            continue
+        violations.append(f"{rel}:{lineno} in {fname}(PRNGKey({arg}))")
+    unused = [w for w in waivers
+              if not any((rel, fname) == w for rel, fname, _, _ in sites)]
+    ok = not violations and not unused
+    return _result(
+        contract, ok,
+        "every PRNGKey call is seed plumbing or carries a waiver",
+        ("naked PRNGKey outside seed plumbing: " + "; ".join(violations)
+         if violations else "")
+        + (f" stale waivers (site moved/removed): {unused}" if unused else ""))
+
+
+#: dispatch by the short check id each lint contract declares
+CHECKS = {
+    "stream_partition": check_stream_partition,
+    "registry_completeness": check_registry_completeness,
+    "adversary_tiers": check_adversary_tiers,
+    "zero_leaf_specs": check_zero_leaf_specs,
+    "salts_distinct": check_salts_distinct,
+    "kernel_ref_twins": check_kernel_ref_twins,
+}
+
+
+def run_lint(contracts: list[Contract], src_root) -> list[CheckResult]:
+    out = []
+    for c in contracts:
+        if c.kind != "lint":
+            continue
+        check_id = c.param("check")
+        if check_id == "seed_plumbing":
+            out.append(check_seed_plumbing(c, src_root))
+        elif check_id in CHECKS:
+            out.append(CHECKS[check_id](c))
+        else:
+            out.append(CheckResult(contract=c.name, kind="lint", status="SKIP",
+                                   detail=f"no lint check registered for "
+                                          f"{check_id!r}"))
+    return out

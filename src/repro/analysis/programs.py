@@ -1,0 +1,233 @@
+"""The five canonical programs the static-analysis CLI checks.
+
+Small enough to trace and compile in seconds on CPU, but each one exercises a
+distinct compiled shape of the BRIDGE stack:
+
+* ``flat``    — dense broadcast path, a *drawing* attack (``random``) plus the
+  int8 wire codec, so the step's key tree is maximally populated;
+* ``sparse``  — neighbor-indexed layout on a genuinely sparse graph
+  (max degree + 1 < M), where the dense ``[M, M, d]`` budget has headroom
+  and any dense materialization is a real violation, not the gather;
+* ``stream``  — the chunk-streaming trainer over a two-leaf model, whose
+  peak tensor must stay under the flat ``[M, d]`` it replaces;
+* ``net``     — the unreliable-runtime path (drops + staleness), whose
+  per-edge channel draws stress the PRNG discipline hardest;
+* ``metrics`` — the flat program with the live-metric ring compiled in; its
+  optimized HLO must keep exactly one more fence than ``flat``'s (the
+  grad-norm/loss CSE sever).
+
+Everything derived from a program (jaxpr, optimized HLO, chunk-scan HLO) is
+computed lazily and cached — passes share one trace/compile per program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections.abc import Callable
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bridge import (
+    BridgeConfig,
+    BridgeTrainer,
+    replicate,
+    stack_batches,
+)
+from repro.core.graph import erdos_renyi
+
+#: bytes per f32 element
+_F32 = 4
+
+
+def quad_grad_fn(params, batch):
+    """The analysis workload: per-node quadratic pull toward ``batch``.
+
+    Shares ``w - c`` between loss and gradient on purpose — exactly the
+    subexpression sharing that makes the grad-norm fence necessary."""
+    w, c = params["w"], batch
+    loss = 0.5 * jnp.sum((w - c) ** 2)
+    return loss, {"w": w - c}
+
+
+def two_leaf_grad_fn(params, batch):
+    """Stream-path workload: two leaves so the block schedule is nontrivial."""
+    loss = 0.0
+    grads = {}
+    for name, w in params.items():
+        c = batch[name]
+        loss = loss + 0.5 * jnp.sum((w - c) ** 2)
+        grads[name] = w - c
+    return loss, grads
+
+
+@dataclasses.dataclass
+class Program:
+    """One canonical program: a trainer plus everything the passes read."""
+
+    name: str
+    trainer: Any
+    state: Any
+    batch: Any
+    batch_fn: Callable[[int], Any]
+    #: budget id -> (byte ceiling, human label); referenced by memory
+    #: contracts via their ("budget", "<id>") param
+    budgets: dict[str, tuple[int, str]] = dataclasses.field(default_factory=dict)
+
+    @functools.cached_property
+    def jaxpr(self):
+        """Closed jaxpr of the raw (unjitted) step — the PRNG pass input."""
+        return jax.make_jaxpr(self.trainer._raw_step)(
+            self.trainer._cell, self.state, self.batch)
+
+    @functools.cached_property
+    def hlo(self) -> str:
+        """Optimized HLO of the jitted step — fence + memory pass input."""
+        return (jax.jit(self.trainer._raw_step)
+                .lower(self.trainer._cell, self.state, self.batch)
+                .compile().as_text())
+
+    @functools.cached_property
+    def chunk_hlo(self) -> str:
+        """Optimized HLO of the donated chunk scan (4 ticks) — donation pass
+        input."""
+        xs = stack_batches(self.batch_fn, 4)
+        return (self.trainer._chunk_scan()
+                .lower(self.trainer._cell, self.state, xs)
+                .compile().as_text())
+
+
+def _const_batch_fn(batch):
+    return lambda i: batch
+
+
+def _flat_pieces(metrics=None, runtime=None):
+    m, d = 8, 5
+    topo = erdos_renyi(m, 0.9, 1, seed=1)
+    cfg = BridgeConfig(topology=topo, rule="median", num_byzantine=1,
+                      attack="random", codec="int8", lam=1.0, t0=10.0,
+                      metrics=metrics)
+    trainer = BridgeTrainer(cfg, quad_grad_fn, runtime=runtime)
+    init_seed = 0
+    params = replicate({"w": jnp.zeros(d)}, m, perturb=0.1,
+                       key=jax.random.PRNGKey(init_seed))
+    state = trainer.init(params, seed=0)
+    batch = jnp.linspace(-1.0, 1.0, m * d, dtype=jnp.float32).reshape(m, d)
+    return trainer, state, batch
+
+
+def build_flat() -> Program:
+    trainer, state, batch = _flat_pieces()
+    return Program("flat", trainer, state, batch, _const_batch_fn(batch))
+
+
+def build_metrics() -> Program:
+    from repro.obs.metrics import MetricSpec
+
+    trainer, state, batch = _flat_pieces(metrics=MetricSpec(capacity=8))
+    return Program("metrics", trainer, state, batch, _const_batch_fn(batch))
+
+
+def build_net() -> Program:
+    from repro.net import ChannelConfig, UnreliableRuntime
+
+    m, d = 8, 5
+    topo = erdos_renyi(m, 0.9, 1, seed=1)
+    rt = UnreliableRuntime(topo, ChannelConfig(drop_prob=0.2),
+                           staleness_bound=5)
+    cfg = BridgeConfig(topology=topo, rule="median", num_byzantine=1,
+                      attack="sign_flip", codec="int8", lam=1.0, t0=10.0)
+    trainer = BridgeTrainer(cfg, quad_grad_fn, runtime=rt)
+    init_seed = 0
+    params = replicate({"w": jnp.zeros(d)}, m, perturb=0.1,
+                       key=jax.random.PRNGKey(init_seed))
+    state = trainer.init(params, seed=0)
+    batch = jnp.linspace(-1.0, 1.0, m * d, dtype=jnp.float32).reshape(m, d)
+    return Program("net", trainer, state, batch, _const_batch_fn(batch))
+
+
+def build_sparse() -> Program:
+    m, d = 12, 16
+    topo = erdos_renyi(m, 0.45, 1, seed=3)
+    # the budget only means something on a genuinely sparse graph: the
+    # screening gather is [M, K+1, d], and K+1 must be < M for "no dense
+    # [M, M, d]" to be distinguishable from the gather itself
+    kp1 = int(topo.adjacency.sum(axis=1).max()) + 1
+    if kp1 >= m:
+        raise AssertionError(
+            f"canonical sparse graph degenerated: max degree+1 = {kp1} >= "
+            f"M = {m}; pick a sparser topology")
+    cfg = BridgeConfig(topology=topo, rule="median", num_byzantine=1,
+                      attack="sign_flip", codec="identity", lam=1.0, t0=10.0,
+                      sparse=True)
+    trainer = BridgeTrainer(cfg, quad_grad_fn)
+    init_seed = 0
+    params = replicate({"w": jnp.zeros(d)}, m, perturb=0.1,
+                       key=jax.random.PRNGKey(init_seed))
+    state = trainer.init(params, seed=0)
+    batch = jnp.linspace(-1.0, 1.0, m * d, dtype=jnp.float32).reshape(m, d)
+    prog = Program("sparse", trainer, state, batch, _const_batch_fn(batch))
+    prog.budgets["dense_mmd"] = (m * m * d * _F32, f"dense [M,M,d]=[{m},{m},{d}]")
+    return prog
+
+
+def build_stream() -> Program:
+    from repro.stream.trainer import StreamBridgeTrainer
+
+    m, leaves = 8, {"w1": 512, "w2": 256}
+    d = sum(leaves.values())
+    topo = erdos_renyi(m, 0.9, 1, seed=1)
+    cfg = BridgeConfig(topology=topo, rule="median", num_byzantine=1,
+                      attack="sign_flip", codec="int8", lam=1.0, t0=10.0,
+                      screen_chunk=64)
+    trainer = StreamBridgeTrainer(cfg, two_leaf_grad_fn)
+    init_seed = 0
+    params = replicate({k: jnp.zeros(n) for k, n in leaves.items()}, m,
+                       perturb=0.1, key=jax.random.PRNGKey(init_seed))
+    state = trainer.init(params, seed=0)
+    batch = {k: jnp.linspace(-1.0, 1.0, m * n, dtype=jnp.float32).reshape(m, n)
+             for k, n in leaves.items()}
+    prog = Program("stream", trainer, state, batch, _const_batch_fn(batch))
+    prog.budgets["flat_md"] = (m * d * _F32, f"flat [M,d]=[{m},{d}]")
+    return prog
+
+
+BUILDERS: dict[str, Callable[[], Program]] = {
+    "flat": build_flat,
+    "sparse": build_sparse,
+    "stream": build_stream,
+    "net": build_net,
+    "metrics": build_metrics,
+}
+
+PROGRAM_NAMES = tuple(BUILDERS)
+
+
+def build(names=PROGRAM_NAMES) -> dict[str, Program]:
+    return {n: BUILDERS[n]() for n in names}
+
+
+# -- the grid fixture for the set_cells retrace contract --------------------
+
+
+def build_grid():
+    """A small two-rule grid plus its init/batches, for the zero-retrace
+    check (`analysis.retrace.check_grid_set_cells`)."""
+    from repro.sim.engine import GridEngine
+    from repro.sim.grid import ExperimentGrid
+
+    m, d, ticks = 8, 5, 6
+    topo = erdos_renyi(m, 0.9, 1, seed=1)
+    grid = ExperimentGrid(topo, ("median", "trimmed_mean"), ("sign_flip",),
+                          (1,), (0,), lam=1.0, t0=10.0)
+    engine = GridEngine(grid, quad_grad_fn)
+
+    def state_fn():
+        return engine.init(
+            lambda seed: replicate({"w": jnp.zeros(d)}, m, perturb=0.1,
+                                   key=jax.random.PRNGKey(seed)))
+
+    batch = jnp.linspace(-1.0, 1.0, m * d, dtype=jnp.float32).reshape(m, d)
+    batches = stack_batches(lambda i: batch, ticks)
+    return engine, state_fn, batches

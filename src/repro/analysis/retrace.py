@@ -1,0 +1,92 @@
+"""Retrace guard: statically prove the compiled-program caches stay warm.
+
+The grid engine's whole value proposition is ONE compiled program per group
+reused across generations of cell data (`sim.engine.GridEngine.set_cells`),
+and `BridgeTrainer.run_chunks`'s is one trace per distinct chunk length.
+Both promises are Python-side-effect observable: the traced functions bump a
+counter that only executes while tracing (``GridEngine.trace_count``,
+``BridgeTrainer.chunk_trace_count``), so "no retrace" is an exact, cheap
+assertion — not a heuristic over timings.
+
+This pass drives the canonical programs through the update patterns the
+promises cover (cell swaps at fixed structure; uniform and ragged chunk
+schedules) and asserts the counters land exactly on the contract's budget.
+`guard` is the reusable context-manager form for embedding the same
+assertion in drivers and tests.
+"""
+from __future__ import annotations
+
+import contextlib
+
+from repro.analysis.contracts import CheckResult
+
+
+class RetraceError(AssertionError):
+    """A compiled-program cache went cold inside a `guard` block."""
+
+
+@contextlib.contextmanager
+def guard(obj, attr: str = "trace_count", budget: int = 0):
+    """Assert ``obj.<attr>`` grows by at most ``budget`` inside the block.
+
+    ``budget=0`` (the default) is the zero-retrace contract: every call in
+    the block must hit an existing compilation."""
+    before = getattr(obj, attr, 0)
+    yield
+    after = getattr(obj, attr, 0)
+    grew = after - before
+    if grew > budget:
+        raise RetraceError(
+            f"{type(obj).__name__}.{attr} grew by {grew} (budget {budget}): "
+            f"a compiled-program cache went cold — some jit structure "
+            f"(shape, dtype, static arg, spec) changed between calls")
+
+
+def check_run_chunks(contract, trainer, state, batch_fn, *, num_steps: int,
+                     chunk: int) -> CheckResult:
+    """Uniform-chunk `run_chunks` compiles exactly once; a second run with a
+    fresh state stays on the cached program (trace budget from the
+    contract, default 1)."""
+    budget = int(contract.param("max_traces", 1))
+    trainer.chunk_trace_count = 0
+    import jax
+
+    # the chunk scan DONATES its carry: the second run needs its own copy of
+    # the buffers, taken before the first run consumes them
+    state2 = jax.tree_util.tree_map(lambda x: x.copy(), state)
+    state, _ = trainer.run_chunks(state, batch_fn, num_steps, chunk=chunk)
+    first = trainer.chunk_trace_count
+    trainer.run_chunks(state2, batch_fn, num_steps, chunk=chunk)
+    total = trainer.chunk_trace_count
+    ok = first <= budget and total == first
+    return CheckResult(
+        contract=contract.name, kind="retrace", program="flat",
+        status="PASS" if ok else "FAIL",
+        detail=(f"{first} trace(s) for {num_steps} steps in chunks of "
+                f"{chunk}; re-run added {total - first}"
+                if ok else
+                f"{first} trace(s) on first run (budget {budget}), "
+                f"{total - first} more on an identically-shaped re-run — "
+                f"the chunk scan is retracing"))
+
+
+def check_grid_set_cells(contract, engine, state_fn, batches) -> CheckResult:
+    """A generation update (`set_cells` at fixed structure) must not retrace:
+    `trace_count` is identical before and after the swapped-cell run."""
+    state = state_fn()
+    engine.run(state, batches)
+    baseline = engine.trace_count
+    # a new generation: same structure, different per-cell data
+    swapped = [c._replace(seed=c.seed + 100) for c in engine.cells]
+    engine.set_cells(swapped)
+    try:
+        with guard(engine, "trace_count", budget=0):
+            engine.run(state_fn(), batches)
+    except RetraceError as e:
+        return CheckResult(contract=contract.name, kind="retrace",
+                           program="grid", status="FAIL", detail=str(e))
+    return CheckResult(
+        contract=contract.name, kind="retrace", program="grid",
+        status="PASS",
+        detail=f"trace_count stayed {baseline} across a set_cells "
+               f"generation swap ({engine.num_cells} cells)")

@@ -67,7 +67,7 @@ def restore(ckpt_dir: str, template: Any, step: int | None = None) -> tuple[Any,
             f"checkpoint has {len(stored)} leaves, template has {len(leaves)}"
         )
     new_leaves = []
-    for tmpl, d in zip(leaves, stored):
+    for tmpl, d in zip(leaves, stored, strict=True):
         arr = _unpack_leaf(d)
         if tuple(arr.shape) != tuple(np.shape(tmpl)):
             raise ValueError(f"shape mismatch: ckpt {arr.shape} vs template {np.shape(tmpl)}")

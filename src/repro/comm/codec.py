@@ -42,7 +42,8 @@ import dataclasses
 import functools
 import math
 import re
-from typing import NamedTuple, Sequence
+from collections.abc import Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

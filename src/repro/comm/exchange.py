@@ -45,7 +45,8 @@ fed back; the dropped *reconstruction* simply never reaches the mailbox).
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Sequence
+from collections.abc import Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -31,7 +31,7 @@ def get_config(arch: str, **overrides) -> ModelConfig:
     try:
         cfg = ARCHS[arch]
     except KeyError:
-        raise ValueError(f"unknown arch {arch!r}; options: {sorted(ARCHS)}")
+        raise ValueError(f"unknown arch {arch!r}; options: {sorted(ARCHS)}") from None
     return dataclasses.replace(cfg, **overrides) if overrides else cfg
 
 

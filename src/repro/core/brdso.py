@@ -16,7 +16,8 @@ baseline exactly where the paper does.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from collections.abc import Callable
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

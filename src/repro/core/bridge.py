@@ -17,7 +17,8 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Any, Callable, NamedTuple
+from collections.abc import Callable
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -211,7 +212,7 @@ def stack_flatten(params: Any) -> tuple[jax.Array, Callable[[jax.Array], Any]]:
 
     def unflatten(w: jax.Array) -> Any:
         outs, off = [], 0
-        for shape, size, dtype in zip(shapes, sizes, dtypes):
+        for shape, size, dtype in zip(shapes, sizes, dtypes, strict=True):
             outs.append(w[:, off : off + size].reshape((m,) + shape).astype(dtype))
             off += size
         return jax.tree_util.tree_unflatten(treedef, outs)
@@ -965,6 +966,10 @@ class BridgeTrainer:
             raw = self._raw_step
 
             def scan_chunk(cell, st, xs):
+                # Python side effect: executes only while tracing — the
+                # retrace guard (`repro.analysis.retrace`) reads this counter
+                # to prove a run cost one trace per distinct chunk length
+                self.chunk_trace_count = getattr(self, "chunk_trace_count", 0) + 1
                 return jax.lax.scan(lambda s, b: raw(cell, s, b), st, xs)
 
             fn = self._chunk_scan_fn = jax.jit(scan_chunk, donate_argnums=(1,))
@@ -1043,7 +1048,54 @@ def replicate(params: Any, num_nodes: int, *, perturb: float = 0.0, key=None) ->
         keys = jax.random.split(key, len(leaves))
         leaves = [
             l + perturb * jax.random.normal(k, l.shape, l.dtype)
-            for l, k in zip(leaves, keys)
+            for l, k in zip(leaves, keys, strict=True)
         ]
         stacked = jax.tree_util.tree_unflatten(treedef, leaves)
     return stacked
+
+
+# ---------------------------------------------------------------------------
+# static-analysis contracts (checked by `python -m repro.analysis`)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import Contract  # noqa: E402  (dependency-light)
+
+CONTRACTS: tuple[Contract, ...] = (
+    Contract(
+        "bridge.prng.single_use", "prng",
+        "no PRNG key in a compiled step feeds two distinct random draws "
+        "without an intervening split/fold_in — per-edge wire-roundtrip and "
+        "per-step subkey independence, statically (flat, sparse, net, and "
+        "metrics-on canonical programs)",
+        params=(("programs", ("flat", "sparse", "net", "metrics")),),
+    ),
+    Contract(
+        "bridge.salts.distinct", "lint",
+        "the stream salts (attack / channel / codec / wire / adversary / "
+        "trust) are pairwise distinct, so streams folded from one step "
+        "subkey never correlate",
+        params=(("check", "salts_distinct"),
+                ("salts", ("NET_SALT", "COMM_SALT", "WIRE_SALT", "ADV_SALT",
+                           "TRUST_SALT"))),
+    ),
+    Contract(
+        "bridge.sparse.no_dense_mmd", "memory",
+        "the sparse (neighbor-indexed) step never materializes a tensor as "
+        "large as the dense [M, M, d] float layout it replaces",
+        params=(("programs", ("sparse",)), ("budget", "dense_mmd")),
+    ),
+    Contract(
+        "bridge.run_chunks.single_trace", "retrace",
+        "a uniform-chunk run_chunks costs exactly one trace, and an "
+        "identically-shaped re-run costs zero (compilations are cached per "
+        "chunk length)",
+        params=(("max_traces", 1),),
+    ),
+    Contract(
+        "bridge.chunk_carry.donated", "memory",
+        "the chunk scan's donated state carry survives into the compiled "
+        "module's input_output_alias table (donation honored, not silently "
+        "copied)",
+        params=(("check", "donation"),),
+    ),
+)

@@ -17,7 +17,8 @@ are a controlled approximation whose communication accounting stays exact
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, NamedTuple
+from collections.abc import Callable
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

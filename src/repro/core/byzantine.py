@@ -22,7 +22,7 @@ Two attack granularities:
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Sequence
+from collections.abc import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -436,8 +436,8 @@ def get_attack(name: str) -> Attack:
                 f"attack {name!r} crafts per-link messages and needs the network "
                 f"runtime (repro.net / BridgeTrainer(runtime=...)); broadcast-path "
                 f"options: {sorted(ATTACKS)}"
-            )
-        raise ValueError(f"unknown attack {name!r}; options: {attack_names()}")
+            ) from None
+        raise ValueError(f"unknown attack {name!r}; options: {attack_names()}") from None
 
 
 def get_message_attack(name: str) -> MessageAttack:
@@ -446,7 +446,7 @@ def get_message_attack(name: str) -> MessageAttack:
     try:
         return MESSAGE_ATTACKS[name]
     except KeyError:
-        raise ValueError(f"unknown attack {name!r}; options: {attack_names()}")
+        raise ValueError(f"unknown attack {name!r}; options: {attack_names()}") from None
 
 
 def pick_byzantine_mask(num_nodes: int, num_byzantine: int, seed: int = 0) -> jnp.ndarray:

@@ -14,7 +14,7 @@ verifies the source-component condition on each sample via SCC condensation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from collections.abc import Sequence
 
 import numpy as np
 

@@ -31,7 +31,7 @@ top); NaN payloads would poison the sort order and are explicitly guarded to
 from __future__ import annotations
 
 import functools
-from typing import Callable, Sequence
+from collections.abc import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -621,7 +621,8 @@ def get_rule(name: str) -> Callable:
     try:
         return RULES[name]
     except KeyError:
-        raise ValueError(f"unknown screening rule {name!r}; options: {sorted(RULES)}")
+        raise ValueError(
+            f"unknown screening rule {name!r}; options: {sorted(RULES)}") from None
 
 
 # Minimum in-neighborhood size each rule needs to tolerate b Byzantine nodes
@@ -648,7 +649,8 @@ def min_neighbors(rule: str, b: int) -> int:
     try:
         return MIN_NEIGHBORS[rule](b)
     except KeyError:
-        raise ValueError(f"unknown screening rule {rule!r}; options: {sorted(MIN_NEIGHBORS)}")
+        raise ValueError(
+            f"unknown screening rule {rule!r}; options: {sorted(MIN_NEIGHBORS)}") from None
 
 
 # Traceable twins of MIN_NEIGHBORS: ``b`` may be a traced int32 scalar (the
@@ -701,6 +703,13 @@ def _streams(rule: str, d: int, chunk: int | None) -> bool:
 # rules here are purely per-coordinate, so block results are bitwise equal.
 STREAMABLE_RULES: frozenset = frozenset(
     {"trimmed_mean", "median", "mean", "rep_trimmed_mean", "rep_median"})
+
+# The complement, spelled out rather than computed: `repro.analysis.lint`
+# asserts {STREAMABLE_RULES, STREAM_REJECTED_RULES} is an exact partition of
+# RULES, so adding a rule forces an explicit streamability decision — a rule
+# left out of both sets is a lint failure, not a silent default.
+STREAM_REJECTED_RULES: frozenset = frozenset(
+    {"krum", "bulyan", "geomedian", "clipped_mean"})
 
 
 def check_streamable(rules: Sequence[str]) -> None:
@@ -1014,3 +1023,39 @@ def screen_views_decide_banked(
     if len(branches) == 1:
         return branches[0](views, mask, self_vals, b)
     return jax.lax.switch(rule_idx, branches, views, mask, self_vals, b)
+
+
+# ---------------------------------------------------------------------------
+# static-analysis contracts (checked by `python -m repro.analysis`)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import Contract  # noqa: E402  (dependency-light)
+
+CONTRACTS: tuple[Contract, ...] = (
+    Contract(
+        "screening.fence.survives", "fence",
+        "every `fence` site survives the optimized HLO as a trip-count-2 "
+        "while loop (XLA unrolls trip-count-<=1 loops, which would re-fuse "
+        "the producer and void the storage-precision rounding)",
+        params=(("min_fences", 1),),
+    ),
+    Contract(
+        "screening.metrics.gradnorm_unfused", "fence",
+        "the metrics-on program keeps exactly one more fence than its "
+        "metrics-off twin: the grad-norm reduction stays un-CSE'd from the "
+        "loss reduction (metrics-on bit-inertness)",
+        params=(("delta", 1),),
+    ),
+    Contract(
+        "screening.stream.partition", "lint",
+        "every rule in RULES sits in exactly one of STREAMABLE_RULES / "
+        "STREAM_REJECTED_RULES",
+        params=(("check", "stream_partition"),),
+    ),
+    Contract(
+        "screening.registries.complete", "lint",
+        "MIN_NEIGHBORS, its traceable twin, and RULES_WITH_DECISIONS cover "
+        "exactly RULES's keys; WEIGHTED_RULES is a subset",
+        params=(("check", "registry_completeness"),),
+    ),
+)

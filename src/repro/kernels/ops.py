@@ -69,3 +69,20 @@ def dequant_median(q, scale, mask, self_value, *, use_pallas: bool = True, **kw)
         if use_pallas:
             return dequant_median_pallas(q, scale, mask, self_value, **kw)
         return ref.dequant_median_ref(q, scale, mask, self_value)
+
+
+# ---------------------------------------------------------------------------
+# static-analysis contracts (checked by `python -m repro.analysis`)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import Contract  # noqa: E402  (dependency-light)
+
+CONTRACTS: tuple[Contract, ...] = (
+    Contract(
+        "kernels.dispatch.ref_twin", "lint",
+        "every public kernel dispatcher routes to BOTH a `_pallas` "
+        "implementation and a `ref.` twin — the parity surface that lets "
+        "interpret-mode CPU CI stand in for the TPU path",
+        params=(("check", "kernel_ref_twins"), ("module", "repro.kernels.ops")),
+    ),
+)

@@ -331,6 +331,86 @@ def analyze(text: str) -> Cost:
     return comp_cost(entry, False)
 
 
+# ---------------------------------------------------------------------------
+# structural queries (the static-analysis surface: repro.analysis.hlo)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WhileLoop:
+    """One while instruction in the optimized program."""
+
+    name: str        # "<computation>/<instruction>"
+    trip_count: int  # largest s32 constant in the condition (scan trip count)
+    carry_type: str  # the loop-carried tuple's type string
+
+
+def while_loops(text: str) -> list[WhileLoop]:
+    """Catalog every while loop with its trip count and carry type.
+
+    The fence-integrity pass counts trip-count-2 loops here: a
+    `repro.core.screening.fence` site that survived optimization is exactly
+    a while whose condition bounds a length-2 scan (XLA's simplifier unrolls
+    trip-count-<=1 loops, which would void the fence — so survival IS the
+    property being checked)."""
+    comps = parse_hlo(text)
+    out = []
+    for cname, instrs in comps.items():
+        for ins in instrs:
+            if ins.opcode != "while":
+                continue
+            refs = _called(ins)
+            cond = refs.get("condition", [None])[0]
+            trips = _trip_count(comps.get(cond, [])) if cond else 1
+            out.append(WhileLoop(f"{cname}/{ins.name}", trips, ins.result_type))
+    return out
+
+
+def donated_params(text: str) -> list[tuple[tuple[int, ...], int]]:
+    """``(output_index, parameter_number)`` pairs from the module header's
+    ``input_output_alias`` table — empty when the compiler honored no
+    donation.  This is the ground truth for ``donate_argnums``: jax warns-
+    and-copies when donation is dropped, so the analysis pass asserts the
+    alias survived END-TO-END rather than trusting the python-level flag."""
+    m = re.search(r"input_output_alias=\{", text)
+    if m is None:
+        return []
+    start = m.end() - 1
+    depth = 0
+    end = start
+    for end in range(start, len(text)):
+        if text[end] == "{":
+            depth += 1
+        elif text[end] == "}":
+            depth -= 1
+            if depth == 0:
+                break
+    segment = text[start:end + 1]
+    out = []
+    for out_idx, pnum in re.findall(r"\{([\d,\s]*)\}\s*:\s*\((\d+)", segment):
+        idx = tuple(int(x) for x in out_idx.replace(" ", "").split(",") if x)
+        out.append((idx, int(pnum)))
+    return out
+
+
+def largest_tensors(text: str, top: int = 5) -> list[tuple[int, str, tuple[int, ...]]]:
+    """The ``top`` largest distinct array types in the HLO text as
+    ``(bytes, dtype, dims)``, descending — the memory-contract pass's
+    evidence when a budget is exceeded (*which* tensor blew it)."""
+    seen: dict[tuple[str, tuple[int, ...]], int] = {}
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+        n = 1
+        for d in shape:
+            n *= d
+        seen[(dt, shape)] = n * _DTYPE_BYTES[dt]
+    ranked = sorted(((b, dt, shape) for (dt, shape), b in seen.items()),
+                    key=lambda t: -t[0])
+    return ranked[:top]
+
+
 def largest_tensor_bytes(text: str) -> int:
     """The largest single array (in bytes) typed anywhere in the HLO text —
     parameters, instruction results, tuple elements.

@@ -20,7 +20,8 @@ SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
 def load(dir_: str):
     rows = {}
     for f in glob.glob(os.path.join(dir_, "*.json")):
-        d = json.load(open(f))
+        with open(f) as fh:
+            d = json.load(fh)
         extra = ""
         base = os.path.basename(f)[:-5]
         parts = base.split("_")

@@ -272,7 +272,7 @@ def run_grid_mode(args) -> None:
     print(f"{len(pending)} cells in {wall:.1f}s "
           f"({result.meta['cells_per_sec']:.2f} cells/s, "
           f"{engine.trace_count} compilation(s))")
-    for rec, row in zip(result.cells, result.rows()):
+    for rec, row in zip(result.cells, result.rows(), strict=True):
         print(f"  {row[0]:60s} acc={rec['accuracy']:.4f} loss={rec['final_loss']:.4f}")
 
 

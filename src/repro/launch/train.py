@@ -374,3 +374,32 @@ def main(argv=None):
 
 if __name__ == "__main__":
     main()
+
+
+# ---------------------------------------------------------------------------
+# static-analysis contracts (checked by `python -m repro.analysis`)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import Contract  # noqa: E402  (dependency-light)
+
+CONTRACTS: tuple[Contract, ...] = (
+    Contract(
+        "launch.prng.seed_plumbing", "lint",
+        "no naked jax.random.PRNGKey in src/ outside seed plumbing: every "
+        "key descends from a plumbed seed argument, or the site carries an "
+        "explicit (file, function) waiver below",
+        params=(
+            ("check", "seed_plumbing"),
+            ("waivers", (
+                # documented default init key (the paper's common-ball init)
+                ("repro/core/bridge.py", "replicate"),
+                # keyless leaf screening falls back to a fixed public key
+                ("repro/core/gossip.py", "coordwise_gossip_leaf"),
+                # shape-only lowering: the key is never run
+                ("repro/launch/dryrun.py", "build_lowerable"),
+                # eval_shape parameter count: abstract, nothing drawn
+                ("repro/models/api.py", "param_count"),
+            )),
+        ),
+    ),
+)

@@ -11,7 +11,7 @@ BRIDGE trainer, launcher, dry-run and smoke tests all go through this.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from collections.abc import Callable
 
 import jax
 

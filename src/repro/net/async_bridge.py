@@ -22,7 +22,8 @@ one jitted scan body — no Python event loop, no per-tick dispatch.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import numpy as np

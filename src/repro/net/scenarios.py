@@ -81,7 +81,8 @@ def get_scenario(name: str) -> NetScenario:
     try:
         return NET_SCENARIOS[name]
     except KeyError:
-        raise ValueError(f"unknown net scenario {name!r}; options: {sorted(NET_SCENARIOS)}")
+        raise ValueError(
+            f"unknown net scenario {name!r}; options: {sorted(NET_SCENARIOS)}") from None
 
 
 def build_schedule(scenario: NetScenario, topology, num_ticks: int, *, seed: int = 0) -> np.ndarray:

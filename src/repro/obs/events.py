@@ -52,7 +52,7 @@ class EventLog:
         parent = os.path.dirname(os.path.abspath(path))
         os.makedirs(parent, exist_ok=True)
         self.path = path
-        self._f = open(path, "a")
+        self._f = open(path, "a")  # noqa: SIM115  (lives until .close())
         self._t0 = time.perf_counter()
         self._q: queue.Queue = queue.Queue()
         self._closed = False

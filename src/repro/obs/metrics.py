@@ -142,7 +142,7 @@ def rows_of(buf, count, *, after: int = -1) -> list[dict]:
         if tick <= after:
             continue
         rec: dict[str, Any] = {"tick": tick}
-        for name, v in zip(COLUMNS[1:], row[1:]):
+        for name, v in zip(COLUMNS[1:], row[1:], strict=True):
             rec[name] = float(v) if math.isfinite(float(v)) else None
         rows.append(rec)
     return rows
@@ -249,7 +249,7 @@ class MetricWriter:
         parent = os.path.dirname(os.path.abspath(path))
         os.makedirs(parent, exist_ok=True)
         self.path = path
-        self._f = open(path, "a")
+        self._f = open(path, "a")  # noqa: SIM115  (lives until .close())
         self._t0 = time.perf_counter()
         self._q: queue.Queue = queue.Queue()
         self._closed = False

@@ -22,6 +22,7 @@ bytes; a ``metrics.jsonl`` being written concurrently is safe to tail
 from __future__ import annotations
 
 import argparse
+import contextlib
 import json
 import os
 import threading
@@ -193,17 +194,16 @@ def main(argv: list[str] | None = None) -> int:
     rules = AlertRules(wire_budget_bytes=args.wire_budget_bytes)
     if args.once:
         tail = RunTail(args.run_dir, rules=rules)
-        try:
+        # BrokenPipeError: `--once | head` is a legitimate use
+        with contextlib.suppress(BrokenPipeError):
             print(json.dumps(tail.snapshot(), indent=2, default=repr))
-        except BrokenPipeError:  # `--once | head` is a legitimate use
-            pass
         return 0
     server = serve(args.run_dir, host=args.host, port=args.port, rules=rules)
     print(f"monitoring {args.run_dir} at http://{args.host}:{server.server_address[1]}/")
     try:
-        server.serve_forever()
-    except KeyboardInterrupt:
-        pass
+        # ctrl-C is the supported shutdown; fall through to close
+        with contextlib.suppress(KeyboardInterrupt):
+            server.serve_forever()
     finally:
         server.server_close()
     return 0

@@ -27,7 +27,8 @@ from __future__ import annotations
 import argparse
 import json
 import os
-from typing import Any, Iterable
+from collections.abc import Iterable
+from typing import Any
 
 # event tags -> the field holding their duration in seconds (everything
 # else renders as an instant)
@@ -155,7 +156,8 @@ def main(argv: list[str] | None = None) -> int:
     p.add_argument("--out", default=None, help="output path (default RUN_DIR/trace.json)")
     args = p.parse_args(argv)
     path = export(args.run_dir, args.out)
-    n = len(json.load(open(path)).get("traceEvents", []))
+    with open(path) as f:
+        n = len(json.load(f).get("traceEvents", []))
     print(f"wrote {path} ({n} trace events)")
     return 0
 

@@ -17,7 +17,7 @@ from repro.obs.events import read_events
 
 
 def _fmt_row(cols, widths):
-    return "  ".join(str(c).ljust(w) for c, w in zip(cols, widths))
+    return "  ".join(str(c).ljust(w) for c, w in zip(cols, widths, strict=True))
 
 
 def _table(header, rows) -> list[str]:

@@ -34,7 +34,7 @@ per-experiment trainer run.
 from __future__ import annotations
 
 import time
-from typing import Callable, Iterable, Sequence
+from collections.abc import Callable, Iterable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -104,7 +104,7 @@ class GridNetRuntime:
             self.neighbors = NeighborTable.from_schedule(
                 np.concatenate([np.asarray(s, bool) for s in scheds], axis=0))
         runtimes = []
-        for s, sched in zip(self._specs, scheds):
+        for s, sched in zip(self._specs, scheds, strict=True):
             if sparse:
                 runtimes.append(SparseUnreliableRuntime(
                     sched, s.channel, staleness_bound=s.staleness_bound,
@@ -308,7 +308,7 @@ class GridEngine:
             self.trace_count += 1  # Python side effect: runs only while tracing
             tree = jax.tree_util.tree_map
             finals, mss = [], []
-            for vstep, (glo, ghi) in zip(self._vsteps, self._bounds):
+            for vstep, (glo, ghi) in zip(self._vsteps, self._bounds, strict=True):
                 cp = tree(lambda x: x[glo:ghi], cells_p)
                 st = tree(lambda x: x[glo:ghi], state_p)
                 f, ms = jax.lax.scan(lambda s, b: vstep(cp, s, b), st, batches)
@@ -402,7 +402,7 @@ class GridEngine:
                 "set_cells cells must keep the per-position (rule, attack, "
                 "adversary, codec) group keys; rebuild a GridEngine to change "
                 "the grid's structure")
-        for c_old, c_new in zip(self.cells, cells):
+        for c_old, c_new in zip(self.cells, cells, strict=True):
             if (c_new.scenario is None) != (c_old.scenario is None):
                 raise ValueError("set_cells cannot move cells across the sync/net split")
         if not self._adv_engaged and any(c.adversary != "none" for c in cells):
@@ -625,3 +625,29 @@ class GridEngine:
             return obs_trace.sender_grid(m, neighbors=self.neighbors)
         return obs_trace.sender_grid(
             m, adjacency=None if self.net_mode else self.grid.topology.adjacency)
+
+
+# ---------------------------------------------------------------------------
+# static-analysis contracts (checked by `python -m repro.analysis`)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import Contract  # noqa: E402  (dependency-light)
+
+CONTRACTS: tuple[Contract, ...] = (
+    Contract(
+        "grid.set_cells.zero_retrace", "retrace",
+        "swapping a generation of cells at fixed structure (set_cells) and "
+        "re-running hits the existing compilation: trace_count is unchanged "
+        "(the adversary-search zero-retrace contract)",
+    ),
+    Contract(
+        "grid.specs.zero_leaf", "lint",
+        "the obs/trust/metric specs carried by CellParams are zero-leaf "
+        "pytrees (pure jit structure) — a leaf would be vmapped across "
+        "cells and retrace per generation",
+        params=(("check", "zero_leaf_specs"),
+                ("classes", ("repro.obs.trace:TraceSpec",
+                             "repro.obs.metrics:MetricSpec",
+                             "repro.trust.reputation:TrustSpec"))),
+    ),
+)

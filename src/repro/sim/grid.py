@@ -12,7 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import NamedTuple, Sequence
+from collections.abc import Sequence
+from typing import NamedTuple
 
 import numpy as np
 

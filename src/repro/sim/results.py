@@ -16,7 +16,7 @@ import dataclasses
 import json
 import os
 import warnings
-from typing import Callable, Sequence
+from collections.abc import Callable, Sequence
 
 import numpy as np
 

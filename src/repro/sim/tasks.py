@@ -9,7 +9,8 @@ task — they had already begun to drift apart as inline copies.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, NamedTuple
+from collections.abc import Callable
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -64,8 +65,8 @@ def linear_task(num_nodes: int, ticks: int, *, partition: str = "extreme",
     def grad_fn(params, b):
         return jax.value_and_grad(lambda p: small.linear_loss(p, b))(params)
 
-    def init_fn(s):
-        key = jax.random.PRNGKey(s)
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
         return replicate(small.init_linear(key), num_nodes, perturb=0.01, key=key)
 
     def eval_accuracy(params, honest_mask):

@@ -118,7 +118,7 @@ class BlockSpec(NamedTuple):
         are whatever the matrices carry — the streaming step writes each
         leaf's buffer in its own storage dtype)."""
         outs = [mat.reshape((self.num_nodes,) + p.shape)
-                for mat, p in zip(mats, self.leaves)]
+                for mat, p in zip(mats, self.leaves, strict=True)]
         return jax.tree_util.tree_unflatten(self.treedef, outs)
 
 

@@ -389,3 +389,27 @@ def build_stream_cell_step(grad_fn, spec: BlockSpec, adjacency, rules, attacks, 
                            state.adv, new_obs, new_trust, new_mets), metrics
 
     return step
+
+
+# ---------------------------------------------------------------------------
+# static-analysis contracts (checked by `python -m repro.analysis`)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import Contract  # noqa: E402  (dependency-light)
+
+CONTRACTS: tuple[Contract, ...] = (
+    Contract(
+        "stream.peak_memory.flat_bound", "memory",
+        "the streaming step's largest tensor is strictly smaller than the "
+        "flat [M, d] float matrix it exists to avoid (peak live state is "
+        "one gathered [M, K, c] block plus the model's own leaves)",
+        params=(("programs", ("stream",)), ("budget", "flat_md")),
+    ),
+    Contract(
+        "stream.prng.per_block_keys", "prng",
+        "every block draws from its own folded key (block i folds i into "
+        "the step subkey): no key feeds two distinct draws anywhere in the "
+        "streaming program",
+        params=(("programs", ("stream",)),),
+    ),
+)

@@ -14,7 +14,8 @@ with a structurally different pytree rebuild the step.
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from collections.abc import Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -117,7 +117,7 @@ def test_theta_specs_well_formed():
     for name, adv in ADVERSARIES.items():
         assert len(adv.default_theta) == THETA_DIM, name
         assert len(adv.theta_bounds) == THETA_DIM, name
-        for x, (lo, hi) in zip(adv.default_theta, adv.theta_bounds):
+        for x, (lo, hi) in zip(adv.default_theta, adv.theta_bounds, strict=True):
             if hi > lo:
                 assert lo <= x <= hi or x == 0.0, (name, x, lo, hi)
 

@@ -1,0 +1,305 @@
+"""Static-analysis subsystem (`repro.analysis`): every pass PASSes on the
+current tree and demonstrably FAILs on a seeded violation.
+
+The seeded violations, one per pass:
+
+* prng    — one key feeding two distinct draws (``normal`` + ``uniform``);
+* fence   — `screening.fence` monkeypatched to identity, so the optimized
+  flat program keeps zero trip-2 while loops;
+* memory  — the canonical sparse config compiled with ``sparse=False``:
+  the dense twin materializes the full ``[M, M, d]`` and busts the budget;
+* retrace — a ragged chunk schedule (chunk lengths 4 and 2) against a
+  single-trace budget;
+* lint    — the stream partition broken by overlapping a rejected rule into
+  ``STREAMABLE_RULES``, plus a duplicated contract name at collect().
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import contracts as C
+from repro.analysis import hlo as analysis_hlo
+from repro.analysis import lint
+from repro.analysis import prng
+from repro.analysis import programs as programs_lib
+from repro.analysis import retrace
+from repro.core import screening
+
+
+def _contract(kind, **params):
+    return C.Contract(f"test.{kind}.contract", kind, "test fixture",
+                      params=tuple(params.items()))
+
+
+# ---------------------------------------------------------------------------
+# prng pass
+# ---------------------------------------------------------------------------
+
+
+def test_prng_clean_split_discipline():
+    def f(key):
+        k1, k2 = jax.random.split(key)
+        return jax.random.normal(k1, (3,)) + jax.random.normal(k2, (3,))
+
+    assert prng.check(f, jax.random.PRNGKey(0)) == []
+
+
+def test_prng_reused_key_flagged():
+    def f(key):
+        return (jnp.sum(jax.random.normal(key, (3,)))
+                + jnp.sum(jax.random.normal(key, (5,))))
+
+    reuse = prng.check(f, jax.random.PRNGKey(0))
+    assert len(reuse) == 1
+    assert reuse[0].uses == 2
+
+
+def test_prng_cross_distribution_reuse_flagged():
+    # normal and uniform draw IDENTICAL raw bits from the same key — the
+    # insidious correlated-sample bug the sampler-frame discrimination exists
+    # to catch
+    def f(key):
+        return jax.random.normal(key, ()) + jax.random.uniform(key, ())
+
+    assert len(prng.check(f, jax.random.PRNGKey(0))) == 1
+
+
+def test_prng_shared_coin_idiom_not_flagged():
+    # two textually separate but identical draws are ONE value (the public
+    # shared-coin idiom) — value numbering must unify them
+    def f(key):
+        a = jax.random.normal(key, (3,))
+        b = jax.random.normal(key, (3,))
+        return a + b
+
+    assert prng.check(f, jax.random.PRNGKey(0)) == []
+
+
+def test_prng_exclusive_branches_not_flagged():
+    def f(key, p):
+        return jax.lax.cond(p > 0,
+                            lambda k: jax.random.normal(k, (3,)),
+                            lambda k: jax.random.normal(k, (3,)) * 2.0,
+                            key)
+
+    assert prng.check(f, jax.random.PRNGKey(0), jnp.float32(0.5)) == []
+
+
+def test_prng_reuse_inside_scan_flagged():
+    def f(key):
+        def body(c, _):
+            return c + jax.random.normal(key, ()) * jax.random.uniform(key, ()), None
+
+        out, _ = jax.lax.scan(body, 0.0, None, length=3)
+        return out
+
+    assert len(prng.check(f, jax.random.PRNGKey(0))) == 1
+
+
+# ---------------------------------------------------------------------------
+# fence pass
+# ---------------------------------------------------------------------------
+
+
+def test_fence_survives_alone():
+    text = (jax.jit(screening.fence)
+            .lower(jnp.zeros((8,), jnp.float32)).compile().as_text())
+    assert analysis_hlo.count_fences(text) == 1
+
+
+def test_stripped_fence_fails(monkeypatch):
+    # strip every fence: the length-2 scan becomes identity, XLA sees no
+    # while loops, and the floor contract must fire
+    monkeypatch.setattr(screening, "fence", lambda x: x)
+    prog = programs_lib.build_flat()
+    res = analysis_hlo.check_fence_floor(
+        _contract("fence", min_fences=1), prog.name, prog.hlo, min_fences=1)
+    assert res.status == "FAIL"
+    assert "stripped or unrolled" in res.detail
+
+
+# ---------------------------------------------------------------------------
+# memory pass
+# ---------------------------------------------------------------------------
+
+
+def test_dense_twin_busts_sparse_budget():
+    # the same topology/model as the canonical sparse program, compiled on
+    # the DENSE path: the [M, M, d] broadcast matrix materializes and the
+    # dense_mmd budget must fire
+    from repro.core.bridge import BridgeConfig, BridgeTrainer, replicate
+    from repro.core.graph import erdos_renyi
+
+    m, d = 12, 16
+    topo = erdos_renyi(m, 0.45, 1, seed=3)
+    cfg = BridgeConfig(topology=topo, rule="median", num_byzantine=1,
+                       attack="sign_flip", codec="identity", lam=1.0, t0=10.0)
+    trainer = BridgeTrainer(cfg, programs_lib.quad_grad_fn)
+    seed = 0
+    params = replicate({"w": jnp.zeros(d)}, m, perturb=0.1,
+                       key=jax.random.PRNGKey(seed))
+    state = trainer.init(params, seed=seed)
+    batch = jnp.zeros((m, d), jnp.float32)
+    text = (jax.jit(trainer._raw_step)
+            .lower(trainer._cell, state, batch).compile().as_text())
+    res = analysis_hlo.check_budget(
+        _contract("memory", budget="dense_mmd"), "dense-twin", text,
+        m * m * d * 4, "dense [M,M,d]")
+    assert res.status == "FAIL"
+    assert "materialized" in res.detail
+
+
+def test_donation_dropped_fails_on_empty_alias_table():
+    no_alias = "HloModule chunk\n\nENTRY %main (p: f32[4]) -> f32[4] {\n" \
+               "  ROOT %p = f32[4]{0} parameter(0)\n}\n"
+    res = analysis_hlo.check_donation(
+        _contract("memory", check="donation"), "flat", no_alias,
+        backend_supports=True)
+    assert res.status == "FAIL"
+    assert "silently copied" in res.detail
+
+
+def test_donation_unsupported_backend_skips():
+    res = analysis_hlo.check_donation(
+        _contract("memory", check="donation"), "flat", "HloModule chunk",
+        backend_supports=False)
+    assert res.status == "SKIP"
+
+
+# ---------------------------------------------------------------------------
+# retrace pass
+# ---------------------------------------------------------------------------
+
+
+def test_guard_raises_on_growth():
+    class Engine:
+        trace_count = 0
+
+    eng = Engine()
+    with pytest.raises(retrace.RetraceError, match="went cold"):
+        with retrace.guard(eng, "trace_count", budget=0):
+            eng.trace_count += 1
+
+
+def test_guard_allows_within_budget():
+    class Engine:
+        trace_count = 0
+
+    eng = Engine()
+    with retrace.guard(eng, "trace_count", budget=2):
+        eng.trace_count += 2
+
+
+def test_ragged_chunks_exceed_single_trace_budget():
+    # 10 steps in chunks of 4 -> chunk lengths 4, 4, 2: two distinct scan
+    # shapes, two traces, over the single-trace budget
+    prog = programs_lib.build_flat()
+    res = retrace.check_run_chunks(
+        _contract("retrace", max_traces=1), prog.trainer, prog.state,
+        prog.batch_fn, num_steps=10, chunk=4)
+    assert res.status == "FAIL"
+    assert "retracing" in res.detail or "budget" in res.detail
+
+
+# ---------------------------------------------------------------------------
+# lint pass
+# ---------------------------------------------------------------------------
+
+
+def test_stream_partition_overlap_fails(monkeypatch):
+    # a duplicated registry entry: "krum" homed in BOTH partitions
+    monkeypatch.setattr(screening, "STREAMABLE_RULES",
+                        screening.STREAMABLE_RULES | {"krum"})
+    res = lint.check_stream_partition(_contract("lint", check="stream_partition"))
+    assert res.status == "FAIL"
+    assert "krum" in res.detail
+
+
+def test_stream_partition_unassigned_fails(monkeypatch):
+    monkeypatch.setattr(screening, "STREAM_REJECTED_RULES",
+                        screening.STREAM_REJECTED_RULES - {"bulyan"})
+    res = lint.check_stream_partition(_contract("lint", check="stream_partition"))
+    assert res.status == "FAIL"
+    assert "bulyan" in res.detail
+
+
+def test_duplicate_contract_name_rejected():
+    # the same module collected twice duplicates every contract name
+    with pytest.raises(ValueError, match="exactly one home"):
+        C.collect(("repro.core.screening", "repro.core.screening"))
+
+
+def test_seed_plumbing_flags_naked_key(tmp_path):
+    pkg = tmp_path / "repro"
+    pkg.mkdir()
+    (pkg / "bad.py").write_text(
+        "import jax\n\n\ndef init():\n    return jax.random.PRNGKey(42)\n")
+    res = lint.check_seed_plumbing(
+        _contract("lint", check="seed_plumbing"), tmp_path)
+    assert res.status == "FAIL"
+    assert "bad.py" in res.detail and "init" in res.detail
+
+
+def test_seed_plumbing_stale_waiver_fails(tmp_path):
+    (tmp_path / "repro").mkdir()
+    res = lint.check_seed_plumbing(
+        _contract("lint", check="seed_plumbing",
+                  waivers=(("repro/gone.py", "nobody"),)), tmp_path)
+    assert res.status == "FAIL"
+    assert "stale" in res.detail
+
+
+def test_unknown_lint_check_skips():
+    out = lint.run_lint([_contract("lint", check="no_such_check")], ".")
+    assert out[0].status == "SKIP"
+
+
+# ---------------------------------------------------------------------------
+# contracts / driver plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_collect_finds_all_governed_modules():
+    contracts = C.collect()
+    homes = {c.name.split(".")[0] for c in contracts}
+    assert {"bridge", "screening", "grid", "stream", "kernels",
+            "launch", "adversary"} <= homes
+    kinds = {c.kind for c in contracts}
+    assert kinds == set(C.KINDS)
+
+
+def test_contract_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown kind"):
+        C.Contract("x.y", "vibes", "not a pass")
+
+
+def test_summarize_counts_and_orders():
+    results = [
+        C.CheckResult("b.two", "lint", "FAIL", detail="boom"),
+        C.CheckResult("a.one", "prng", "PASS", program="flat"),
+        C.CheckResult("c.three", "fence", "SKIP"),
+    ]
+    text = C.summarize(results)
+    lines = text.splitlines()
+    assert lines[0].startswith("PASS prng")  # KINDS order, not input order
+    assert "[flat]" in lines[0]
+    assert lines[-1] == "1 passed, 1 failed, 1 skipped"
+
+
+def test_driver_lint_pass_green_on_tree():
+    from repro.analysis import driver
+
+    results = driver.run_all(kinds=("lint",))
+    lint_results = [r for r in results if r.kind == "lint"]
+    assert lint_results and all(r.ok for r in lint_results)
+    # deselected passes surface as SKIP, never vanish
+    assert any(r.status == "SKIP" for r in results)
+
+
+def test_driver_prng_pass_green_on_canonical_programs():
+    from repro.analysis import driver
+
+    results = driver.run_all(kinds=("prng",))
+    checked = [r for r in results if r.kind == "prng"]
+    assert {r.program for r in checked} == set(programs_lib.PROGRAM_NAMES)
+    assert all(r.status == "PASS" for r in checked)

@@ -17,7 +17,7 @@ def test_roundtrip(tmp_path):
     checkpoint.save(str(tmp_path), 3, tree)
     out, step = checkpoint.restore(str(tmp_path), jax.tree_util.tree_map(jnp.zeros_like, tree))
     assert step == 3
-    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out)):
+    for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(out), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

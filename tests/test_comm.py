@@ -109,7 +109,7 @@ def test_sparse_codecs_keep_exactly_k(name):
     assert (np.count_nonzero(out, axis=-1) <= k).all()
     if name == "topk25":
         # exact top-|x| selection survives the float32 round trip
-        for row_out, row_in in zip(out, np.asarray(x)):
+        for row_out, row_in in zip(out, np.asarray(x), strict=True):
             kept = np.nonzero(row_out)[0]
             top = np.argsort(-np.abs(row_in))[:k]
             assert set(kept) == set(top)

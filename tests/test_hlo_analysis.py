@@ -71,3 +71,137 @@ ENTRY %main (p: f32[4]) -> (f32[4], s32[]) {
     assert "main" in comps
     ops = [i.opcode for i in comps["main"]]
     assert "tuple" in ops
+
+
+# ---------------------------------------------------------------------------
+# golden-text tests for the catalog helpers (while_loops / donated_params /
+# largest_tensors) feeding the static-analysis passes
+# ---------------------------------------------------------------------------
+
+GOLDEN_WHILE = """
+HloModule golden
+
+%cond (arg: (s32[], f32[4])) -> pred[] {
+  %arg = (s32[], f32[4]{0}) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %k = s32[] constant(7)
+  ROOT %lt = pred[] compare(%i, %k), direction=LT
+}
+
+%body (barg: (s32[], f32[4])) -> (s32[], f32[4]) {
+  %barg = (s32[], f32[4]{0}) parameter(0)
+  %j = s32[] get-tuple-element(%barg), index=0
+  %one = s32[] constant(1)
+  %j1 = s32[] add(%j, %one)
+  %v = f32[4]{0} get-tuple-element(%barg), index=1
+  ROOT %out = (s32[], f32[4]{0}) tuple(%j1, %v)
+}
+
+ENTRY %main (p: f32[4]) -> (s32[], f32[4]) {
+  %p = f32[4]{0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[4]{0}) tuple(%z, %p)
+  ROOT %w = (s32[], f32[4]{0}) while(%init), condition=%cond, body=%body
+}
+"""
+
+
+def test_while_loops_golden_trip_count():
+    loops = H.while_loops(GOLDEN_WHILE)
+    assert len(loops) == 1
+    assert loops[0].trip_count == 7
+    assert "s32[]" in loops[0].carry_type
+
+
+def test_while_loops_real_scan_trip_counts():
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci * 1.0001 + 1.0, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        out, _ = jax.lax.scan(outer, x, None, length=5)
+        return out
+
+    text = jax.jit(f).lower(jnp.zeros((4,))).compile().as_text()
+    trips = sorted(w.trip_count for w in H.while_loops(text))
+    assert trips == [3, 5]
+
+
+def test_largest_tensors_golden_dtype_table():
+    text = """
+HloModule sizes
+
+ENTRY %main (a: f32[12,9,16]) -> bf16[100] {
+  %a = f32[12,9,16]{2,1,0} parameter(0)
+  %b = s8[12,12,16]{2,1,0} constant(0)
+  %p = pred[64]{0} constant(0)
+  ROOT %r = bf16[100]{0} constant(0)
+}
+"""
+    top = H.largest_tensors(text, top=4)
+    # f32[12,9,16]=6912 > s8[12,12,16]=2304 > bf16[100]=200 > pred[64]=64
+    assert [(b, dt) for b, dt, _ in top] == [
+        (6912, "f32"), (2304, "s8"), (200, "bf16"), (64, "pred")]
+    assert top[0][2] == (12, 9, 16)
+    assert H.largest_tensor_bytes(text) == 6912
+
+
+def test_collective_wire_multipliers_golden():
+    text = """
+HloModule coll
+
+ENTRY %main (a: f32[1024]) -> f32[1024] {
+  %a = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%a), to_apply=%add
+}
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+"""
+    cost = H.analyze(text)
+    # ring all-reduce moves ~2x the operand bytes over the wire
+    assert cost.coll_wire == pytest.approx(2.0 * 1024 * 4)
+
+    gathered = text.replace(
+        "ROOT %ar = f32[1024]{0} all-reduce(%a), to_apply=%add",
+        "ROOT %ag = f32[4096]{0} all-gather(%a), dimensions={0}")
+    cost = H.analyze(gathered)
+    # all-gather is counted on RESULT bytes with a 1x multiplier
+    assert cost.coll_wire == pytest.approx(4096 * 4)
+
+
+GOLDEN_ALIAS_HEADER = (
+    "HloModule chunk, input_output_alias={ {0}: (4, {}, may-alias), "
+    "{1}: (2, {}, may-alias), {2, 1}: (3, {}, must-alias) }, "
+    "entry_computation_layout={(f32[4])->f32[4]}\n\n"
+    "ENTRY %main (p: f32[4]) -> f32[4] {\n"
+    "  ROOT %p = f32[4]{0} parameter(0)\n"
+    "}\n"
+)
+
+
+def test_donated_params_golden():
+    pairs = H.donated_params(GOLDEN_ALIAS_HEADER)
+    assert ((0,), 4) in pairs
+    assert ((1,), 2) in pairs
+    assert ((2, 1), 3) in pairs
+    assert len(pairs) == 3
+
+
+def test_donated_params_absent_when_no_donation():
+    text = jax.jit(lambda x: x + 1.0).lower(jnp.zeros((4,))).compile().as_text()
+    assert H.donated_params(text) == []
+
+
+def test_donated_params_real_donation():
+    from repro.analysis.hlo import donation_supported
+
+    if not donation_supported():
+        pytest.skip("backend drops donations; aliasing table never emitted")
+    text = (jax.jit(lambda x: x * 2.0, donate_argnums=(0,))
+            .lower(jnp.zeros((8,), jnp.float32)).compile().as_text())
+    assert H.donated_params(text) != []

@@ -49,7 +49,7 @@ def test_sharded_gossip_matches_reference():
                 out = gossip_screen_params(sharded, specs, mesh=mesh, node_axes="data",
                                            rule=rule, b=1, adjacency=adj, schedule=sched)
                 err = max(float(jnp.max(jnp.abs(x-y))) for x,y in
-                          zip(jax.tree.leaves(out), jax.tree.leaves(ref)))
+                          zip(jax.tree.leaves(out), jax.tree.leaves(ref), strict=True))
                 assert err < 1e-5, (rule, sched, err)
         print("OK")
     """)

@@ -238,7 +238,7 @@ def test_trainer_dense_sparse_bit_identity_lossy_channel(topo, targets):
         st, ms = tr.run_ticks(tr.init(init_fn(0), seed=0), lambda i: targets, 2 * T)
         outs.append((st.params, ms["loss"], ms["delivered_frac"], ms["usable_in"]))
     assert tree_bitwise_equal(outs[0][0], outs[1][0])
-    for a, b in zip(outs[0][1:], outs[1][1:]):
+    for a, b in zip(outs[0][1:], outs[1][1:], strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

@@ -178,7 +178,7 @@ def test_multi_block_bitwise_deterministic_attacks(attack):
     # dtypes preserved leaf-for-leaf (the streaming path inherits the
     # stack_flatten mixed-dtype guarantee by construction)
     for fl, sl in zip(jax.tree_util.tree_leaves(fs.params),
-                      jax.tree_util.tree_leaves(ss.params)):
+                      jax.tree_util.tree_leaves(ss.params), strict=True):
         assert fl.dtype == sl.dtype
 
 
@@ -235,7 +235,7 @@ def test_trust_multi_block_deterministic_bitwise():
         params, attack="sign_flip", rule="rep_trimmed_mean", sparse=True,
         trust=TrustSpec(echo=False), screen_chunk=4, flat_chunk=1 << 20)
     for fl, sl in zip(jax.tree_util.tree_leaves(fs.params),
-                      jax.tree_util.tree_leaves(ss.params)):
+                      jax.tree_util.tree_leaves(ss.params), strict=True):
         np.testing.assert_allclose(np.asarray(fl, np.float32),
                                    np.asarray(sl, np.float32),
                                    rtol=2e-5, atol=2e-5)

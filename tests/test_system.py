@@ -90,5 +90,5 @@ def test_checkpoint_resume_matches(tmp_path):
         st2, _ = trainer.step(st2, jax.tree_util.tree_map(jnp.asarray, pipe.batch(step)))
     a = jax.tree_util.tree_leaves(state.params)
     b = jax.tree_util.tree_leaves(st2.params)
-    err = max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(a, b))
+    err = max(float(jnp.max(jnp.abs(x - y))) for x, y in zip(a, b, strict=True))
     assert err < 1e-5
